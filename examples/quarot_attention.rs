@@ -1,0 +1,130 @@
+//! End-to-end QuaRot-style quantised-attention serving (experiment E9).
+//!
+//! The full three-layer path on a realistic workload: the Rust runtime
+//! loads the AOT-compiled attention artifacts (whose graphs embed the L1
+//! Pallas HadaCore rotation), serves a stream of batched attention
+//! requests per numerics variant, and reports latency/throughput plus the
+//! numerical-fidelity comparison the paper's §4.2 makes.
+//!
+//! Run: `cargo run --release --example quarot_attention` (needs artifacts)
+
+use std::path::Path;
+use std::time::Instant;
+
+use hadacore::runtime::{literal_f32, literal_to_f32, Runtime};
+use hadacore::util::bench::percentile;
+use hadacore::util::cli::Args;
+use hadacore::util::prop::rel_l2;
+use hadacore::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("quarot_attention", "serve quantised attention end-to-end")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("requests", "64", "attention batches to serve per variant")
+        .parse();
+    let dir = Path::new(&args.get("artifacts")).to_path_buf();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    let requests: usize = args.get_as("requests");
+    let rt = Runtime::open(&dir)?;
+    let meta = rt.manifest().model.clone();
+    let (b, t, d) = (meta.attn_batch, meta.seq_len, meta.dim);
+    println!(
+        "serving attention batches of shape ({b}, {t}, {d}) on {}",
+        rt.platform()
+    );
+
+    // projection weights with channel-structured outliers (the LLM
+    // activation regime rotations target — see DESIGN.md)
+    let mut rng = Rng::new(42);
+    let weights: Vec<Vec<f32>> = (0..4)
+        .map(|wi| {
+            let mut m: Vec<f32> = (0..d * d)
+                .map(|_| rng.normal_f32() / (d as f32).sqrt())
+                .collect();
+            if wi < 3 {
+                for c in [5usize, 21, 77] {
+                    for r in 0..d {
+                        m[r * d + c] *= 25.0;
+                    }
+                }
+            }
+            m
+        })
+        .collect();
+    let weight_lits: Vec<xla::Literal> = weights
+        .iter()
+        .map(|w| literal_f32(w, &[d, d]).unwrap())
+        .collect::<Vec<_>>();
+
+    let variants = [
+        ("fp16", "attn_fp16"),
+        ("fp8 no-rot", "attn_fp8_norot"),
+        ("fp8 + hadacore", "attn_fp8_rot_hadacore"),
+        ("fp8 + exact", "attn_fp8_rot_butterfly"),
+        ("int8 no-rot", "attn_int8_norot"),
+        ("int8 + hadacore", "attn_int8_rot_hadacore"),
+        ("int8 + exact", "attn_int8_rot_butterfly"),
+    ];
+
+    // one shared request stream so fidelity is comparable across variants
+    let inputs: Vec<Vec<f32>> = (0..requests)
+        .map(|_| (0..b * t * d).map(|_| rng.normal_f32()).collect())
+        .collect();
+
+    println!(
+        "\n{:<16} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "variant", "p50 ms", "p95 ms", "req/s", "tok/s", "err vs fp16"
+    );
+    println!("{}", "-".repeat(76));
+
+    let mut clean_outputs: Vec<Vec<f32>> = Vec::new();
+    for (label, artifact) in variants {
+        let art = rt.load(artifact)?;
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(requests);
+        let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(requests);
+        let t_all = Instant::now();
+        for x in &inputs {
+            let x_lit = literal_f32(x, &[b, t, d])?;
+            let mut lits: Vec<&xla::Literal> = vec![&x_lit];
+            lits.extend(weight_lits.iter());
+            let t0 = Instant::now();
+            let outs = art.execute_refs(&lits)?;
+            lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            outputs.push(literal_to_f32(&outs[0])?);
+        }
+        let wall = t_all.elapsed().as_secs_f64();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let err = if clean_outputs.is_empty() {
+            0.0
+        } else {
+            let num: f64 = outputs
+                .iter()
+                .zip(clean_outputs.iter())
+                .map(|(a, c)| rel_l2(a, c))
+                .sum();
+            num / outputs.len() as f64
+        };
+        println!(
+            "{:<16} {:>10.2} {:>10.2} {:>10.1} {:>12.0} {:>12.5}",
+            label,
+            percentile(&lat_ms, 50.0),
+            percentile(&lat_ms, 95.0),
+            requests as f64 / wall,
+            (requests * b * t) as f64 / wall,
+            err
+        );
+        if clean_outputs.is_empty() {
+            clean_outputs = outputs; // fp16 is the reference
+        }
+    }
+
+    println!(
+        "\nclaims checked: rotation kernels (hadacore vs exact) agree; int8\n\
+         error drops with rotation; fp8 is rotation-neutral (float format).\n\
+         Latency differences between variants show the rotation's serving\n\
+         cost — the L1 kernel inside the compiled graph."
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the three ways to run a Hadamard transform with this crate.
+//!
+//! 1. Direct kernel call (library API) — no server, no artifacts.
+//! 2. Through the coordinator (native backend) — batching + metrics.
+//! 3. Through the coordinator + PJRT (AOT artifacts) — the full
+//!    three-layer path (requires `make artifacts`).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hadacore::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use hadacore::hadamard::{fwht_hadacore_f32, FwhtOptions, KernelKind};
+use hadacore::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n = 1024;
+    let rows = 4;
+    let mut rng = Rng::new(7);
+
+    // -- 1. direct kernel call ---------------------------------------
+    let mut data = rng.normal_vec(rows * n);
+    let original = data.clone();
+    fwht_hadacore_f32(&mut data, n, &FwhtOptions::normalized(n));
+    println!("[1] direct kernel: transformed {rows}x{n}");
+
+    // orthonormal transform preserves norms and is its own inverse
+    let norm_in: f32 = original.iter().map(|v| v * v).sum();
+    let norm_out: f32 = data.iter().map(|v| v * v).sum();
+    println!("    norm preserved: {:.4} -> {:.4}", norm_in, norm_out);
+    fwht_hadacore_f32(&mut data, n, &FwhtOptions::normalized(n));
+    let max_err = data
+        .iter()
+        .zip(original.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("    involution max error: {max_err:.2e}");
+
+    // -- 2. coordinator, native backend -------------------------------
+    let coord = Coordinator::start(None, CoordinatorConfig::default())?;
+    let mut req = TransformRequest::new(1, n, rng.normal_vec(2 * n));
+    req.kernel = KernelKind::HadaCore;
+    let resp = coord.transform(req)?;
+    println!(
+        "[2] coordinator/native: id={} backend={} exec={}us",
+        resp.id, resp.backend, resp.exec_us
+    );
+    coord.shutdown();
+
+    // -- 3. coordinator + PJRT artifacts -------------------------------
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let coord = Coordinator::start(Some(dir.into()), CoordinatorConfig::default())?;
+        let req = TransformRequest::new(2, 256, rng.normal_vec(8 * 256));
+        let resp = coord.transform(req)?;
+        println!(
+            "[3] coordinator/pjrt: id={} backend={} exec={}us batch_rows={}",
+            resp.id, resp.backend, resp.exec_us, resp.batch_rows
+        );
+        coord.shutdown();
+    } else {
+        println!("[3] skipped (run `make artifacts` to enable the PJRT path)");
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Serving demo: the coordinator under a mixed-size transform workload.
+//!
+//! Drives the dynamic batcher with open-loop request arrivals across a mix
+//! of Hadamard sizes and both backends (PJRT artifacts where available,
+//! native kernels elsewhere), then prints the full metrics report —
+//! batching efficiency, padding overhead, and queue/exec/e2e percentiles.
+//!
+//! Run: `cargo run --release --example serve -- --requests 5000`
+
+use std::path::Path;
+use std::time::Instant;
+
+use hadacore::coordinator::{Coordinator, CoordinatorConfig};
+use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
+use hadacore::hadamard::KernelKind;
+use hadacore::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("serve", "mixed workload serving demo")
+        .opt("requests", "5000", "total requests")
+        .opt("artifacts", "artifacts", "artifact directory ('' = native only)")
+        .opt("workers", "4", "worker threads")
+        .opt("kernel", "hadacore", "kernel: hadacore|dao|scalar")
+        .switch("native", "force native backend for all requests")
+        .parse();
+    let total: usize = args.get_as("requests");
+    let force_native = args.flag("native");
+    let dirs = args.get("artifacts");
+    let artifact_dir = if dirs.is_empty() || force_native {
+        None
+    } else {
+        let p = Path::new(&dirs);
+        p.join("manifest.json").exists().then(|| p.to_path_buf())
+    };
+    println!(
+        "backend: {}",
+        if artifact_dir.is_some() { "pjrt + native" } else { "native only" }
+    );
+
+    let coord = Coordinator::start(
+        artifact_dir,
+        CoordinatorConfig { workers: args.get_as("workers"), ..Default::default() },
+    )?;
+    let mut wl = ServingWorkload::new(WorkloadConfig {
+        sizes: vec![128, 256, 512, 1024, 4096],
+        kernel: KernelKind::parse(&args.get("kernel")).unwrap_or(KernelKind::HadaCore),
+        ..Default::default()
+    });
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(total);
+    for _ in 0..total {
+        let mut req = wl.next_request();
+        req.force_native = force_native;
+        pending.push(coord.submit(req).map_err(|e| anyhow::anyhow!(e))?);
+    }
+    let submit_dt = t0.elapsed();
+    let mut elems = 0usize;
+    for rx in pending {
+        elems += rx.recv()??.data.len();
+    }
+    let dt = t0.elapsed();
+
+    println!(
+        "{total} requests ({:.1} M elements) in {dt:?} (submit {submit_dt:?})",
+        elems as f64 / 1e6
+    );
+    println!(
+        "throughput: {:.0} req/s, {:.1} M elem/s",
+        total as f64 / dt.as_secs_f64(),
+        elems as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!("\n{}", coord.metrics().snapshot().report());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,91 @@
+"""L1 kernel structure analysis (perf-pass instrumentation).
+
+interpret=True Pallas gives CPU-numpy timings only — not a TPU proxy — so
+the L1 performance story is *structural* (DESIGN.md §Perf): per-tile VMEM
+footprint implied by the BlockSpec, the matmul-round count, and the op mix
+of the lowered HLO (matrix-unit work vs data movement). This script
+derives those numbers for every fwht artifact and for a sweep of
+block_rows choices; its output is recorded in EXPERIMENTS.md §Perf.
+
+Usage: cd python && python -m compile.analyze [--artifacts ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+
+from .kernels.hadacore import default_block_rows
+from .kernels.ref import factor_16
+
+VMEM_BYTES = 16 << 20  # per-core VMEM on current TPU generations
+
+
+def hlo_op_histogram(text: str) -> dict[str, int]:
+    """Count HLO instruction kinds in an HLO text module (all
+    computations, including called subcomputations)."""
+    ops: dict[str, int] = {}
+    for m in re.finditer(r"\b([a-z][a-z-]*[a-z])\(", text):
+        op = m.group(1)
+        ops[op] = ops.get(op, 0) + 1
+    return ops
+
+
+def kernel_structure(n: int, rows: int) -> dict:
+    """Static structure of one (rows, n) hadacore tile."""
+    m, r = factor_16(n)
+    rounds = r + (1 if m else 0)
+    br = default_block_rows(rows, n)
+    tile_bytes = br * n * 4
+    # per round: (tile elements / 16) 16x16(x16) MAC tiles on the MXU
+    mxu_tiles_per_round = br * n // 16
+    # matmul flops per tile vs bytes staged HBM->VMEM per tile
+    flops = 2 * 16 * br * n * rounds
+    bytes_moved = 2 * br * n * 4
+    return {
+        "n": n,
+        "rows": rows,
+        "block_rows": br,
+        "rounds": rounds,
+        "tile_vmem_bytes": tile_bytes,
+        "tile_vmem_frac": tile_bytes / VMEM_BYTES,
+        "mxu_tiles_per_round": mxu_tiles_per_round,
+        "arith_intensity_flops_per_byte": flops / bytes_moved,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    with open(f"{args.artifacts}/manifest.json") as f:
+        manifest = json.load(f)
+
+    print(f"{'artifact':<28} {'rounds':>6} {'blk':>5} {'VMEM/tile':>10} "
+          f"{'%VMEM':>6} {'dots':>5} {'transp':>6} {'reshape':>8} {'total_ops':>9}")
+    for a in manifest["artifacts"]:
+        if a["op"] != "fwht" or a.get("kernel") != "hadacore":
+            continue
+        n, rows = a["n"], a["rows"]
+        s = kernel_structure(n, rows)
+        text = open(f"{args.artifacts}/{a['file']}").read()
+        ops = hlo_op_histogram(text)
+        print(
+            f"{a['name']:<28} {s['rounds']:>6} {s['block_rows']:>5} "
+            f"{s['tile_vmem_bytes']:>10} {s['tile_vmem_frac']:>6.1%} "
+            f"{ops.get('dot', 0):>5} {ops.get('transpose', 0):>6} "
+            f"{ops.get('reshape', 0):>8} {sum(ops.values()):>9}"
+        )
+
+    print("\nblock_rows sweep (n=4096): VMEM fraction vs MXU tiles in flight")
+    for br in [1, 4, 16, 64, 128]:
+        tile = br * 4096 * 4
+        print(f"  block_rows={br:>4}: tile {tile/1e6:6.2f} MB "
+              f"({tile/VMEM_BYTES:5.1%} of VMEM), "
+              f"{br*4096//16:>6} MXU tiles/round")
+
+
+if __name__ == "__main__":
+    main()

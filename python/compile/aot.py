@@ -1,0 +1,238 @@
+"""AOT pipeline: lower every Layer-1/Layer-2 entry point to HLO *text*.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits ``HloModuleProto``s with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+* ``fwht_{kernel}_{n}x{rows}.hlo.txt`` — the transform kernels at every
+  serving bucket shape (HadaCore for the full size grid, butterfly for the
+  baseline comparison points).
+* ``attn_{variant}.hlo.txt`` — the standalone QuaRot attention block per
+  numerics variant.
+* ``lm_{variant}.hlo.txt`` — the full LM forward per variant (the
+  MMLU-analog accuracy study scores these).
+* ``weights.bin`` / ``train_log.json`` / ``eval.json`` — build-time
+  training outputs (see ``train.py``).
+* ``manifest.json`` — machine-readable index the Rust registry loads.
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import train as train_mod
+from .model import (
+    VARIANTS,
+    ModelConfig,
+    default_config,
+    flatten_params,
+    init_params,
+    make_attn_fn,
+    make_fwht_fn,
+    make_lm_fn,
+)
+
+# serving bucket shapes: (n, rows) — rows chosen so a bucket is one
+# "batch" the coordinator pads to. Grid covers the paper's size axis.
+FWHT_BUCKETS = [
+    (128, 256),
+    (256, 128),
+    (512, 64),
+    (1024, 32),
+    (2048, 16),
+    (4096, 8),
+    (8192, 4),
+    (16384, 2),
+    (32768, 1),
+]
+BASELINE_BUCKETS = [(1024, 32), (4096, 8)]
+
+ATTN_BATCH = 4
+LM_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_to_file(fn, args, path: str) -> int:
+    """Lower ``fn(*args)`` and write HLO text; returns byte count."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def dtype_name(d) -> str:
+    return jnp.dtype(d).name
+
+
+def build_fwht_artifacts(out_dir: str) -> list[dict]:
+    entries = []
+    jobs = [("hadacore", n, r) for n, r in FWHT_BUCKETS] + [
+        ("butterfly", n, r) for n, r in BASELINE_BUCKETS
+    ]
+    for kernel, n, rows in jobs:
+        name = f"fwht_{kernel}_{n}x{rows}"
+        path = f"{out_dir}/{name}.hlo.txt"
+        size = lower_to_file(
+            make_fwht_fn(n, rows, kernel), (spec((rows, n)),), path
+        )
+        print(f"[aot] {name}: {size} bytes")
+        entries.append(
+            {
+                "name": name,
+                "op": "fwht",
+                "kernel": kernel,
+                "file": f"{name}.hlo.txt",
+                "inputs": [{"shape": [rows, n], "dtype": "float32"}],
+                "outputs": [{"shape": [rows, n], "dtype": "float32"}],
+                "n": n,
+                "rows": rows,
+            }
+        )
+    return entries
+
+
+def build_attn_artifacts(out_dir: str, cfg: ModelConfig) -> list[dict]:
+    entries = []
+    d = cfg.dim
+    x = spec((ATTN_BATCH, cfg.seq_len, d))
+    w = spec((d, d))
+    for variant in VARIANTS:
+        name = f"attn_{variant.name}"
+        path = f"{out_dir}/{name}.hlo.txt"
+        size = lower_to_file(make_attn_fn(cfg, variant), (x, w, w, w, w), path)
+        print(f"[aot] {name}: {size} bytes")
+        entries.append(
+            {
+                "name": name,
+                "op": "attention",
+                "variant": variant.name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    {"shape": [ATTN_BATCH, cfg.seq_len, d], "dtype": "float32"},
+                    {"shape": [d, d], "dtype": "float32"},
+                    {"shape": [d, d], "dtype": "float32"},
+                    {"shape": [d, d], "dtype": "float32"},
+                    {"shape": [d, d], "dtype": "float32"},
+                ],
+                "outputs": [
+                    {"shape": [ATTN_BATCH, cfg.seq_len, d], "dtype": "float32"}
+                ],
+            }
+        )
+    return entries
+
+
+def build_lm_artifacts(out_dir: str, cfg: ModelConfig) -> list[dict]:
+    entries = []
+    # weight input specs in flatten order (shapes from a throwaway init)
+    shapes = [
+        tuple(a.shape) for _, a in flatten_params(
+            init_params(jax.random.PRNGKey(0), cfg), cfg
+        )
+    ]
+    names = [
+        n for n, _ in flatten_params(init_params(jax.random.PRNGKey(0), cfg), cfg)
+    ]
+    tokens = spec((LM_BATCH, cfg.seq_len), jnp.int32)
+    weight_specs = [spec(s) for s in shapes]
+    for variant in VARIANTS:
+        name = f"lm_{variant.name}"
+        path = f"{out_dir}/{name}.hlo.txt"
+        size = lower_to_file(
+            make_lm_fn(cfg, variant), (tokens, *weight_specs), path
+        )
+        print(f"[aot] {name}: {size} bytes")
+        entries.append(
+            {
+                "name": name,
+                "op": "lm_forward",
+                "variant": variant.name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    {"shape": [LM_BATCH, cfg.seq_len], "dtype": "int32"},
+                    *[
+                        {"shape": list(s), "dtype": "float32", "weight": n}
+                        for s, n in zip(shapes, names)
+                    ],
+                ],
+                "outputs": [
+                    {
+                        "shape": [LM_BATCH, cfg.seq_len, cfg.vocab],
+                        "dtype": "float32",
+                    }
+                ],
+            }
+        )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--skip-train", action="store_true",
+                    help="reuse existing weights.bin if present")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = default_config()
+    manifest: dict = {
+        "version": 1,
+        "model": {
+            "vocab": cfg.vocab,
+            "dim": cfg.dim,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "seq_len": cfg.seq_len,
+            "lm_batch": LM_BATCH,
+            "attn_batch": ATTN_BATCH,
+        },
+        "artifacts": [],
+    }
+
+    manifest["artifacts"] += build_fwht_artifacts(out_dir)
+    manifest["artifacts"] += build_attn_artifacts(out_dir, cfg)
+    manifest["artifacts"] += build_lm_artifacts(out_dir, cfg)
+
+    weights_path = f"{out_dir}/weights.bin"
+    if args.skip_train and os.path.exists(weights_path):
+        print("[aot] --skip-train: reusing existing weights.bin")
+        with open(f"{out_dir}/manifest.json") as f:
+            manifest["weights"] = json.load(f)["weights"]
+    else:
+        result = train_mod.run(cfg, out_dir, steps=args.train_steps)
+        manifest["weights"] = result["weights"]
+        manifest["final_train_loss"] = result["final_loss"]
+
+    with open(f"{out_dir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts + manifest")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Baseline butterfly FWHT as a Pallas kernel (the Dao-kernel algorithm).
+
+The Dao AI Lab ``fast-hadamard-transform`` CUDA kernel executes the classic
+2-point-butterfly recursion with a carefully staged data exchange
+(8 elements per thread -> warp shuffles -> two threadblock syncs through
+shared memory, paper §2.4).  On the Pallas/TPU side all of that staging
+collapses into VMEM-resident reshapes, so the faithful analogue is the
+butterfly recursion itself applied to a row tile: ``log2(n)`` vector
+add/sub stages — vector-unit (VPU) work, no matrix unit involvement.
+
+This kernel exists as the *measured baseline* for the paper's comparisons:
+HadaCore (``hadacore.py``, matrix-unit rounds) vs the original algorithm
+(this file, butterfly stages).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .hadacore import MAX_HADAMARD_SIZE, default_block_rows
+from .ref import is_pow2
+
+__all__ = ["fwht_baseline", "butterfly_rounds"]
+
+
+def butterfly_rounds(x, n: int):
+    """``log2(n)`` butterfly stages on a ``(R, n)`` block (unnormalised)."""
+    rows = x.shape[0]
+    t = x
+    h = 1
+    while h < n:
+        t = t.reshape(rows, n // (2 * h), 2, h)
+        a = t[:, :, 0, :]
+        b = t[:, :, 1, :]
+        t = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return t.reshape(rows, n)
+
+
+def _kernel(x_ref, o_ref, *, n: int, scale: float, accum_dtype):
+    x = x_ref[...].astype(accum_dtype)
+    y = butterfly_rounds(x, n)
+    o_ref[...] = (y * jnp.asarray(scale, accum_dtype)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_rows", "accum_dtype", "interpret"),
+)
+def fwht_baseline(
+    x,
+    scale: float | None = None,
+    *,
+    block_rows: int | None = None,
+    accum_dtype=jnp.float32,
+    interpret: bool = True,
+):
+    """Right Walsh-Hadamard transform via the butterfly algorithm.
+
+    Same contract as :func:`hadacore.hadacore`; used as the measured
+    baseline ("Dao AI Lab kernel" analogue) in benchmarks and tests.
+    """
+    n = x.shape[-1]
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    if n > MAX_HADAMARD_SIZE:
+        raise ValueError(
+            f"Hadamard size {n} exceeds supported maximum {MAX_HADAMARD_SIZE}"
+        )
+    if scale is None:
+        scale = 1.0 / math.sqrt(n)
+
+    lead = x.shape[:-1]
+    rows = 1
+    for d in lead:
+        rows *= int(d)
+    x2 = x.reshape(rows, n)
+
+    br = block_rows or default_block_rows(rows, n)
+    br = min(br, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, n), x2.dtype)], axis=0)
+    padded_rows = rows + pad
+
+    kernel = functools.partial(
+        _kernel, n=n, scale=float(scale), accum_dtype=accum_dtype
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid=(padded_rows // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, n), x.dtype),
+        interpret=interpret,
+    )(x2)
+    if pad:
+        y = y[:rows]
+    return y.reshape(*lead, n)

@@ -1,0 +1,251 @@
+"""HadaCore: matrix-unit-accelerated Fast Walsh-Hadamard Transform (Pallas).
+
+This is the paper's Layer-1 contribution adapted from CUDA Tensor Cores to
+the TPU MXU model (see DESIGN.md §Hardware-Adaptation):
+
+* The CUDA kernel performs each FWHT round as a pair of Tensor Core
+  ``mma.m16n8k16`` ops, i.e. a dense 16x16 matmul against the constant
+  ``H_16``.  Here each round is a ``jnp.matmul`` with a 16-sized contracted
+  axis — exactly the shape the MXU systolic array consumes.  Under
+  ``interpret=True`` (required for CPU PJRT) the same HLO-level structure
+  is produced, so numerics and op structure are validated even though the
+  Mosaic TPU lowering is not exercised.
+* The CUDA kernel's shared-memory transposes between 256-element fragments
+  become in-VMEM ``reshape``/``moveaxis`` on the row tile — the BlockSpec
+  already staged the whole tile from HBM to VMEM, so "transpose through
+  shared memory" degenerates to a layout change of the VMEM block.
+* The threadblock grid over rows becomes the Pallas ``grid`` over row
+  blocks, with ``block_rows`` chosen to keep a tile within a VMEM budget.
+
+Mathematics (paper §3.4): for ``n = 2**m * 16**r`` (``0 <= m < 4``),
+
+    ``H_n = H_16^{(x r)} (Kron) H_{2^m}``
+
+because Kronecker products of Sylvester factors associate.  Viewing each
+row as an ``r+1``-dimensional tensor of shape ``(16,)*r + (2**m,)`` and
+contracting each axis with the corresponding Hadamard factor performs the
+full transform in ``ceil(log16 n)`` matmul rounds.
+
+The paper's §3.3 block-diagonal trick (the final ``2^m`` factor applied as
+a 16x16 matrix ``I kron H_{2^m}`` so the Tensor Core path is uniform) is
+implemented literally by :func:`block_diagonal_hadamard` and used when
+``use_block_diagonal=True`` (the default, matching the paper); the plain
+small-matrix contraction is kept as an equivalent alternative and the test
+suite asserts both paths agree bit-for-bit in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import factor_16, hadamard_matrix, is_pow2
+
+__all__ = [
+    "hadacore",
+    "hadacore_rounds",
+    "block_diagonal_hadamard",
+    "MAX_HADAMARD_SIZE",
+    "default_block_rows",
+]
+
+# The paper supports up to 2^15 = 256 * 128 (one threadblock's shared
+# memory / sync budget).  We keep the same ceiling so configuration space
+# matches the evaluation grid.
+MAX_HADAMARD_SIZE = 1 << 15
+
+# VMEM budget per row tile, in bytes (f32 working precision).  Real TPU
+# cores have ~16 MiB VMEM; a 2 MiB input tile leaves room for the output
+# tile, the H16 constant and intermediates with double-buffering margin.
+_VMEM_TILE_BYTES = 2 << 20
+
+
+def default_block_rows(rows: int, n: int) -> int:
+    """Rows per grid step such that a f32 tile stays within the VMEM budget."""
+    cap = max(1, _VMEM_TILE_BYTES // (4 * n))
+    return max(1, min(rows, cap))
+
+
+def block_diagonal_hadamard(m: int, dtype=jnp.float32):
+    """The paper's §3.3 matrix: ``H_{2^m}`` tiled along the diagonal of 16x16.
+
+    Equals ``I_{16/2^m} kron H_{2^m}`` (unnormalised, entries in {-1,0,1}).
+    For ``m == 0`` this is the identity (no residual factor).
+    """
+    if not 0 <= m < 4:
+        raise ValueError(f"block-diagonal exponent must be in [0,4), got {m}")
+    sub = 1 << m
+    h = hadamard_matrix(sub, dtype=jnp.float32)
+    eye = jnp.eye(16 // sub, dtype=jnp.float32)
+    return jnp.kron(eye, h).astype(dtype)
+
+
+def _traced_hadamard(size: int, sub: int, dtype):
+    """Hadamard factor built from traced ops (no captured constants).
+
+    Pallas kernels may not close over constant arrays, and — like the CUDA
+    kernel, which synthesises H16 fragments in registers — we never want the
+    factor resident in HBM anyway.  Uses the closed form
+    ``H[i, j] = (-1)^popcount(i & j)`` for the Sylvester/Walsh-Hadamard
+    matrix, restricted to diagonal blocks of size ``sub`` (``sub == size``
+    gives the plain Hadamard; ``sub < size`` gives the paper's §3.3
+    block-diagonal tiling ``I kron H_sub``).
+    """
+    i = jax.lax.broadcasted_iota(jnp.int32, (size, size), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (size, size), 1)
+    same_block = (i // sub) == (j // sub)
+    bits = jax.lax.population_count((i % sub) & (j % sub))
+    sign = (1 - 2 * (bits & 1)).astype(dtype)
+    return jnp.where(same_block, sign, jnp.zeros((), dtype))
+
+
+def _apply_last(t, h):
+    """Contract the last axis of ``t`` with (symmetric) Hadamard factor ``h``."""
+    return jnp.matmul(t, h, preferred_element_type=t.dtype)
+
+
+def hadacore_rounds(x, n: int, *, use_block_diagonal: bool = True):
+    """The HadaCore round structure on a ``(R, n)`` f32 block (unnormalised).
+
+    This is the kernel body shared by the Pallas kernel and the pure-jnp
+    fallback: ``ceil(log16 n)`` rounds, each a matmul with a 16x16 factor
+    (or the residual ``H_{2^m}``), with reshape/moveaxis standing in for
+    the CUDA kernel's register/shared-memory transposes.
+    """
+    if not is_pow2(n) or n < 2:
+        raise ValueError(f"Hadamard size must be a power of 2 >= 2, got {n}")
+    if n > MAX_HADAMARD_SIZE:
+        raise ValueError(
+            f"Hadamard size {n} exceeds supported maximum {MAX_HADAMARD_SIZE}"
+        )
+    rows = x.shape[0]
+    m, r = factor_16(n)
+    h16 = _traced_hadamard(16, 16, x.dtype)
+
+    t = x
+    if m and use_block_diagonal and n >= 16:
+        # Paper §3.3: fold the residual 2^m factor into one uniform 16x16
+        # round using the block-diagonal tiling.  Viewing the fastest 16
+        # elements as (16/2^m, 2^m), ``I kron H_{2^m}`` transforms the
+        # fastest 2^m-axis.
+        bd = _traced_hadamard(16, 1 << m, x.dtype)
+        t = t.reshape(rows * (n // 16), 16)
+        t = _apply_last(t, bd)
+        t = t.reshape(rows, n)
+        m_left = 0
+    else:
+        m_left = m
+
+    # Tensor view: (rows, a_{r-1}..a_0 of 16, [fastest 2^m]) — the 2^m axis
+    # was already handled above when folded into the block-diagonal round.
+    axes = [16] * r + ([1 << m_left] if m_left else [])
+    if m and not m_left:
+        axes = [16] * r + [1 << m]  # keep the axis in the view, untouched
+    if not axes:  # n < 16 handled by the caller via direct small matmul
+        axes = [n]
+    t = t.reshape((rows, *axes))
+    for i, sz in enumerate(axes):
+        if sz == 16:
+            h = h16
+        elif m_left and sz == (1 << m_left):
+            h = _traced_hadamard(sz, sz, x.dtype)
+        else:
+            continue  # residual axis already transformed block-diagonally
+        ax = 1 + i
+        t = jnp.moveaxis(t, ax, -1)
+        t = _apply_last(t, h)
+        t = jnp.moveaxis(t, -1, ax)
+    if r == 0 and not m_left and n < 16:
+        # n in {2,4,8}: single small round (no 16-axis exists to fold into)
+        t = _apply_last(t.reshape(rows, n), _traced_hadamard(n, n, x.dtype))
+    return t.reshape(rows, n)
+
+
+def _kernel(x_ref, o_ref, *, n: int, scale: float, use_block_diagonal: bool,
+            accum_dtype):
+    """Pallas kernel body: one row tile, full transform, scaled write-back."""
+    x = x_ref[...].astype(accum_dtype)
+    y = hadacore_rounds(x, n, use_block_diagonal=use_block_diagonal)
+    o_ref[...] = (y * jnp.asarray(scale, accum_dtype)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "block_rows", "use_block_diagonal", "accum_dtype", "interpret",
+    ),
+)
+def hadacore(
+    x,
+    scale: float | None = None,
+    *,
+    block_rows: int | None = None,
+    use_block_diagonal: bool = True,
+    accum_dtype=jnp.float32,
+    interpret: bool = True,
+):
+    """Right Walsh-Hadamard transform of the last axis: ``x @ H_n * scale``.
+
+    Args:
+      x: ``(..., n)`` array, ``n`` a power of two, ``n <= 2**15``.  f32,
+        bf16 and f16 inputs are supported; compute runs in ``accum_dtype``
+        (f32 by default — the paper's BF16 path accumulates in FP32 and
+        converts back, which is exactly what happens here for 16-bit
+        inputs).
+      scale: output scaling; defaults to ``1/sqrt(n)`` (orthonormal).
+      block_rows: rows per Pallas grid step; default fits the VMEM budget.
+      use_block_diagonal: apply the residual non-power-of-16 factor as the
+        paper's block-diagonal 16x16 round (True) or as a direct small
+        contraction (False).  Numerically identical.
+      interpret: run the Pallas kernel in interpret mode (required on CPU;
+        set False only when lowering for a real TPU).
+
+    Returns an array of the same shape/dtype as ``x``.
+    """
+    if x.ndim == 0:
+        raise ValueError("input must have at least one dimension")
+    n = x.shape[-1]
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    if n > MAX_HADAMARD_SIZE:
+        raise ValueError(
+            f"Hadamard size {n} exceeds supported maximum {MAX_HADAMARD_SIZE}"
+        )
+    if scale is None:
+        scale = 1.0 / math.sqrt(n)
+
+    lead = x.shape[:-1]
+    rows = 1
+    for d in lead:
+        rows *= int(d)
+    x2 = x.reshape(rows, n)
+
+    br = block_rows or default_block_rows(rows, n)
+    br = min(br, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, n), x2.dtype)], axis=0)
+    padded_rows = rows + pad
+
+    kernel = functools.partial(
+        _kernel,
+        n=n,
+        scale=float(scale),
+        use_block_diagonal=use_block_diagonal,
+        accum_dtype=accum_dtype,
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid=(padded_rows // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, n), x.dtype),
+        interpret=interpret,
+    )(x2)
+    if pad:
+        y = y[:rows]
+    return y.reshape(*lead, n)

@@ -1,0 +1,114 @@
+"""Pure-jnp correctness oracles for the Hadamard transform kernels.
+
+Two independent references:
+
+* :func:`fwht_matmul` — materialises the Walsh-Hadamard matrix via
+  Sylvester's construction and performs an explicit matmul.  This is the
+  ground truth the paper's own unit tests use ("basic unit tests that check
+  the output of HadaCore against the output of an explicit Hadamard matrix
+  multiplication").
+* :func:`fwht_butterfly` — the textbook in-place Fast Walsh-Hadamard
+  Transform loop (the algorithm the Dao AI Lab CUDA kernel implements),
+  expressed with vectorised jnp ops, one butterfly stage per level.
+
+Both operate on the last axis of an ``(rows, n)`` array, matching the
+right-Hadamard-transform convention of the fast-hadamard-transform library
+(``out = x @ H_n * scale``; Walsh-Hadamard matrices are symmetric).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "hadamard_matrix",
+    "fwht_matmul",
+    "fwht_butterfly",
+    "is_pow2",
+    "factor_16",
+]
+
+
+def is_pow2(n: int) -> bool:
+    """True iff ``n`` is a positive power of two."""
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def factor_16(n: int) -> tuple[int, int]:
+    """Factor ``n = 2**m * 16**r`` with ``0 <= m < 4``.
+
+    This is the decomposition HadaCore §3.3 uses: ``r`` full 16-size
+    Hadamard rounds plus one final round with a block-diagonal tiling of
+    ``H_{2^m}`` when ``m > 0``.
+    """
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    k = n.bit_length() - 1
+    return k % 4, k // 4
+
+
+@lru_cache(maxsize=None)
+def _hadamard_np(n: int) -> np.ndarray:
+    """Unnormalised Walsh-Hadamard matrix (entries ±1) as float64 numpy."""
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    h = np.array([[1.0]])
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def hadamard_matrix(n: int, dtype=jnp.float32, normalized: bool = False):
+    """Walsh-Hadamard matrix ``H_n`` (Sylvester construction).
+
+    ``normalized=True`` scales by ``1/sqrt(n)`` so the matrix is orthogonal.
+    """
+    h = _hadamard_np(n)
+    if normalized:
+        h = h / math.sqrt(n)
+    return jnp.asarray(h, dtype=dtype)
+
+
+def fwht_matmul(x, scale: float | None = None):
+    """Reference right-Hadamard transform via explicit matmul.
+
+    ``x``: (..., n).  ``scale`` defaults to ``1/sqrt(n)`` (the orthogonal /
+    norm-preserving convention used throughout the paper).
+    """
+    n = x.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(n)
+    h = _hadamard_np(n)
+    y = np.asarray(x, dtype=np.float64) @ h * scale
+    return jnp.asarray(y, dtype=x.dtype)
+
+
+def fwht_butterfly(x, scale: float | None = None):
+    """Reference FWHT via the classic butterfly recursion (vectorised).
+
+    Matches the inner loop of the Dao AI Lab kernel / the Wikipedia
+    pseudocode in the paper §2.2: ``log2(n)`` stages of pairwise
+    add/subtract on elements ``h`` apart.
+    """
+    n = x.shape[-1]
+    if not is_pow2(n):
+        raise ValueError(f"Hadamard size must be a power of 2, got {n}")
+    if scale is None:
+        scale = 1.0 / math.sqrt(n)
+    orig_dtype = x.dtype
+    lead = x.shape[:-1]
+    y = jnp.asarray(x, dtype=jnp.float32)
+    h = 1
+    while h < n:
+        # view the last axis as (n // (2h), 2, h): pairs are h apart
+        y = y.reshape(*lead, n // (2 * h), 2, h)
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    y = y.reshape(*lead, n) * scale
+    return y.astype(orig_dtype)

@@ -1,0 +1,100 @@
+"""AOT pipeline tests: HLO-text lowering invariants (the interchange
+contract with the Rust runtime) and manifest construction."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import (
+    ATTN_BATCH,
+    BASELINE_BUCKETS,
+    FWHT_BUCKETS,
+    LM_BATCH,
+    dtype_name,
+    spec,
+    to_hlo_text,
+)
+from compile.model import default_config, make_attn_fn, make_fwht_fn, VARIANTS
+
+
+def test_to_hlo_text_produces_parseable_module():
+    lowered = jax.jit(lambda x, y: (x @ y + 1.0,)).lower(
+        spec((4, 4)), spec((4, 4))
+    )
+    text = to_hlo_text(lowered)
+    # HLO text essentials the Rust-side parser relies on
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+    # return_tuple=True => tupled root
+    assert "tuple(" in text or "(f32[4,4])" in text
+
+
+def test_fwht_lowering_has_one_dot_per_round():
+    """The kernel's HLO must contain exactly ceil(log16 n) dot ops —
+    the matrix-unit round structure the paper defines."""
+    import math
+
+    for n, rows in [(256, 8), (1024, 4), (8192, 2)]:
+        fn = make_fwht_fn(n, rows, "hadacore")
+        text = to_hlo_text(jax.jit(fn).lower(spec((rows, n))))
+        dots = text.count(" dot(")
+        want = math.ceil(math.log(n, 16))
+        assert dots == want, f"n={n}: {dots} dots, want {want}"
+
+
+def test_butterfly_lowering_has_no_dots():
+    fn = make_fwht_fn(1024, 4, "butterfly")
+    text = to_hlo_text(jax.jit(fn).lower(spec((4, 1024))))
+    assert text.count(" dot(") == 0  # pure add/sub data flow
+
+
+def test_no_f8_dtypes_on_the_wire():
+    """xla_extension 0.5.1 cannot parse f8 types; fake-quant must lower
+    to basic ops only (design constraint)."""
+    cfg = default_config()
+    for variant in VARIANTS:
+        fn = make_attn_fn(cfg, variant)
+        x = spec((ATTN_BATCH, cfg.seq_len, cfg.dim))
+        w = spec((cfg.dim, cfg.dim))
+        text = to_hlo_text(jax.jit(fn).lower(x, w, w, w, w))
+        assert "f8e" not in text, f"{variant.name} leaked an f8 dtype"
+
+
+def test_bucket_tables_cover_paper_sizes():
+    sizes = [n for n, _ in FWHT_BUCKETS]
+    assert sizes == [128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768]
+    # element budget per bucket is constant (rows * n), keeping batch
+    # execution cost uniform across sizes
+    budgets = {n * r for n, r in FWHT_BUCKETS}
+    assert len(budgets) == 1
+    for n, r in BASELINE_BUCKETS:
+        assert (n, r) in FWHT_BUCKETS
+
+
+def test_dtype_name():
+    assert dtype_name(jnp.float32) == "float32"
+    assert dtype_name(jnp.int32) == "int32"
+
+
+def test_built_manifest_is_wellformed():
+    man_path = os.path.join(
+        os.path.dirname(__file__), "../../artifacts/manifest.json"
+    )
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(man_path))
+    names = [a["name"] for a in man["artifacts"]]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for a in man["artifacts"]:
+        path = os.path.join(os.path.dirname(man_path), a["file"])
+        assert os.path.exists(path), f"missing artifact file {a['file']}"
+        head = open(path).read(64)
+        assert head.startswith("HloModule"), f"{a['file']} is not HLO text"
+        assert a["op"] in ("fwht", "attention", "lm_forward")
+        for t in a["inputs"] + a["outputs"]:
+            assert all(d > 0 for d in t["shape"])
+            assert t["dtype"] in ("float32", "int32")

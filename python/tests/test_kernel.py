@@ -1,0 +1,240 @@
+"""Kernel-vs-oracle correctness: the CORE numerical signal of the repo.
+
+``hadacore`` (matrix-unit rounds) and ``fwht_baseline`` (butterfly rounds)
+must both match the explicit-Hadamard-matmul oracle across every supported
+size, dtype, batch shape and configuration — plus hypothesis sweeps over
+random shapes/seeds/scales.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fwht import fwht_baseline
+from compile.kernels.hadacore import (
+    MAX_HADAMARD_SIZE,
+    block_diagonal_hadamard,
+    default_block_rows,
+    hadacore,
+)
+
+ALL_SIZES = [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768]
+PAPER_SIZES = [128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768]
+
+
+def _rand(rows, n, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((rows, n)), dtype=dtype)
+
+
+@pytest.mark.parametrize("n", ALL_SIZES)
+def test_hadacore_matches_oracle_f32(n):
+    rows = 4 if n >= 8192 else 16
+    x = _rand(rows, n, seed=n)
+    got = hadacore(x)
+    want = ref.fwht_matmul(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", ALL_SIZES)
+def test_baseline_matches_oracle_f32(n):
+    rows = 4 if n >= 8192 else 16
+    x = _rand(rows, n, seed=n + 1)
+    got = fwht_baseline(x)
+    want = ref.fwht_matmul(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", PAPER_SIZES)
+def test_hadacore_matches_baseline(n):
+    """The paper's kernel and the Dao-style kernel compute the same transform."""
+    x = _rand(8, n, seed=n + 2)
+    np.testing.assert_allclose(
+        np.asarray(hadacore(x)),
+        np.asarray(fwht_baseline(x)),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+@pytest.mark.parametrize("n", [128, 512, 2048, 8192])
+def test_block_diagonal_path_equals_direct(n):
+    """Paper §3.3 block-diagonal final round == direct small contraction."""
+    x = _rand(8, n, seed=n)
+    a = hadacore(x, use_block_diagonal=True)
+    b = hadacore(x, use_block_diagonal=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m", [0, 1, 2, 3])
+def test_block_diagonal_matrix_structure(m):
+    bd = np.asarray(block_diagonal_hadamard(m))
+    assert bd.shape == (16, 16)
+    sub = 1 << m
+    h = np.asarray(ref.hadamard_matrix(sub))
+    for b in range(16 // sub):
+        blk = bd[b * sub:(b + 1) * sub, b * sub:(b + 1) * sub]
+        np.testing.assert_array_equal(blk, h)
+    # off-diagonal blocks are zero
+    mask = np.kron(np.eye(16 // sub), np.ones((sub, sub)))
+    np.testing.assert_array_equal(bd * (1 - mask), np.zeros((16, 16)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+@pytest.mark.parametrize("n", [128, 256, 1024, 4096])
+def test_hadacore_16bit_dtypes(n, dtype):
+    """Paper appendix C: BF16 (FP32 accumulate + convert) stays accurate."""
+    x = _rand(8, n, seed=n, dtype=dtype)
+    got = np.asarray(hadacore(x), dtype=np.float32)
+    want = np.asarray(ref.fwht_matmul(x), dtype=np.float32)
+    # 16-bit storage: tolerance scaled to the format's epsilon
+    eps = 0.008 if dtype == jnp.bfloat16 else 0.001
+    scale = np.abs(want).max() + 1.0
+    np.testing.assert_allclose(got, want, atol=eps * scale * 4, rtol=0.05)
+
+
+@pytest.mark.parametrize("n", [256, 1024])
+def test_hadacore_fp16_accumulation_mode(n):
+    """Paper FP16 path accumulates in FP16; we expose accum_dtype for parity."""
+    x = _rand(8, n, seed=n, dtype=jnp.float16)
+    got = np.asarray(hadacore(x, accum_dtype=jnp.float32), dtype=np.float32)
+    want = np.asarray(ref.fwht_matmul(x), dtype=np.float32)
+    scale = np.abs(want).max() + 1.0
+    np.testing.assert_allclose(got, want, atol=0.004 * scale, rtol=0.05)
+
+
+def test_scale_semantics():
+    x = _rand(4, 256, seed=3)
+    raw = hadacore(x, scale=1.0)
+    normed = hadacore(x)
+    np.testing.assert_allclose(
+        np.asarray(raw) / math.sqrt(256), np.asarray(normed), rtol=1e-5, atol=1e-5
+    )
+    doubled = hadacore(x, scale=2.0)
+    np.testing.assert_allclose(
+        np.asarray(doubled), 2 * np.asarray(raw) / 1.0, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_batch_shapes():
+    """Leading axes of any rank are flattened and restored."""
+    x = _rand(24, 128, seed=5).reshape(2, 3, 4, 128)
+    got = hadacore(x)
+    assert got.shape == (2, 3, 4, 128)
+    want = ref.fwht_matmul(x.reshape(24, 128)).reshape(2, 3, 4, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_single_row():
+    x = _rand(1, 512, seed=9)
+    np.testing.assert_allclose(
+        np.asarray(hadacore(x)), np.asarray(ref.fwht_matmul(x)), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_block_rows_padding():
+    """rows not divisible by block_rows exercises the pad/slice path."""
+    x = _rand(7, 256, seed=13)
+    got = hadacore(x, block_rows=4)
+    want = ref.fwht_matmul(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_default_block_rows_vmem_budget():
+    # A f32 tile must stay within the 2 MiB budget
+    for n in [128, 4096, 32768]:
+        br = default_block_rows(10_000, n)
+        assert br * n * 4 <= (2 << 20) or br == 1
+        assert br >= 1
+
+
+def test_rejects_non_pow2():
+    x = jnp.zeros((2, 48), jnp.float32)
+    with pytest.raises(ValueError):
+        hadacore(x)
+    with pytest.raises(ValueError):
+        fwht_baseline(x)
+
+
+def test_rejects_oversize():
+    x = jnp.zeros((1, MAX_HADAMARD_SIZE * 2), jnp.float32)
+    with pytest.raises(ValueError):
+        hadacore(x)
+
+
+# ---------------------------------------------------------------- hypothesis
+
+pow2 = st.integers(min_value=1, max_value=12).map(lambda k: 1 << k)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=pow2,
+    rows=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_hadacore_vs_oracle(n, rows, seed):
+    x = _rand(rows, n, seed=seed)
+    got = hadacore(x)
+    want = ref.fwht_matmul(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=11).map(lambda k: 1 << k),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_involution(n, seed):
+    """Normalised transform applied twice is the identity (orthogonality)."""
+    x = _rand(4, n, seed=seed)
+    y = hadacore(hadacore(x))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=11).map(lambda k: 1 << k),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    alpha=st.floats(min_value=-3, max_value=3, allow_nan=False),
+)
+def test_hypothesis_linearity(n, seed, alpha):
+    x = _rand(3, n, seed=seed)
+    y = _rand(3, n, seed=seed + 1)
+    lhs = hadacore(x + alpha * y)
+    rhs = hadacore(x) + alpha * hadacore(y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=11).map(lambda k: 1 << k),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_norm_preservation(n, seed):
+    x = _rand(4, n, seed=seed)
+    y = hadacore(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-3,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=10).map(lambda k: 1 << k),
+    rows=st.integers(min_value=1, max_value=8),
+    br=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_block_rows_invariance(n, rows, br, seed):
+    """Result must not depend on the grid decomposition."""
+    x = _rand(rows, n, seed=seed)
+    a = hadacore(x, block_rows=br)
+    b = hadacore(x, block_rows=rows)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,252 @@
+"""L2 model tests: quantisation numerics, rotation invariances, attention
+variants, training step, and the flatten/unflatten weight contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    VARIANTS,
+    AttnVariant,
+    ModelConfig,
+    attention,
+    fake_quant,
+    fake_quant_fp8,
+    fake_quant_int8,
+    flatten_params,
+    init_params,
+    lm_forward,
+    lm_loss,
+    make_attn_fn,
+    param_count,
+    rmsnorm,
+    rotate_last,
+    unflatten_params,
+)
+
+CFG = ModelConfig()
+
+
+def _params(seed=0):
+    return init_params(jax.random.PRNGKey(seed), CFG)
+
+
+# ------------------------------------------------------------- quantisation
+
+
+def test_fp8_exact_small_integers():
+    x = jnp.asarray([0.0, 1.0, -2.0, 8.0, 448.0])
+    np.testing.assert_allclose(np.asarray(fake_quant_fp8(x)), np.asarray(x), rtol=1e-6)
+
+
+def test_fp8_saturates_not_overflows():
+    x = jnp.asarray([1e9, -1e9, 1.0])
+    q = np.asarray(fake_quant_fp8(x))
+    assert np.isfinite(q).all()
+
+
+def test_fp8_relative_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32)) * 10
+    q = np.asarray(fake_quant_fp8(x))
+    rel = np.abs(q - np.asarray(x)) / (np.abs(np.asarray(x)) + 1e-3)
+    # e4m3: 3 mantissa bits -> rel err <= 2^-4 in the normal range
+    assert np.quantile(rel, 0.99) < 0.07
+
+
+def test_int8_error_bounded_by_half_step():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    q = np.asarray(fake_quant_int8(x))
+    step = float(jnp.max(jnp.abs(x))) / 127.0
+    assert np.abs(q - np.asarray(x)).max() <= step * 0.5 + 1e-6
+
+
+def test_fake_quant_dispatch():
+    x = jnp.ones((4,))
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, "none")), np.ones(4))
+    with pytest.raises(ValueError):
+        fake_quant(x, "fp4")
+
+
+def test_rotation_reduces_int8_error_on_outlier_channels():
+    """The QuaRot mechanism, measured at the tensor level."""
+    rng = np.random.default_rng(2)
+    v = rng.standard_normal((256, 32)).astype(np.float32)
+    v[:, 5] *= 40.0  # outlier channel
+    x = jnp.asarray(v)
+    direct = np.asarray(fake_quant_int8(x))
+    rot = rotate_last(x, "hadacore")
+    rotated = np.asarray(rotate_last(fake_quant_int8(rot), "hadacore"))
+    e_direct = np.linalg.norm(direct - v) / np.linalg.norm(v)
+    e_rot = np.linalg.norm(rotated - v) / np.linalg.norm(v)
+    assert e_rot < e_direct * 0.5, f"{e_rot} vs {e_direct}"
+
+
+# ---------------------------------------------------------------- rotations
+
+
+def test_rotate_last_is_involution():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 4, 32)).astype(np.float32))
+    y = rotate_last(rotate_last(x, "hadacore"), "hadacore")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+
+
+def test_rotation_kernels_agree():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((8, 64)).astype(np.float32))
+    a = np.asarray(rotate_last(x, "hadacore"))
+    b = np.asarray(rotate_last(x, "butterfly"))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_rotate_rejects_unknown_kernel():
+    with pytest.raises(ValueError):
+        rotate_last(jnp.ones((2, 16)), "fft")
+
+
+def test_rmsnorm_unit_scale():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((3, 8)).astype(np.float32)) * 7
+    y = np.asarray(rmsnorm(x, jnp.ones(8)))
+    ms = (y**2).mean(axis=-1)
+    np.testing.assert_allclose(ms, 1.0, rtol=1e-3)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def test_attention_shapes():
+    p = _params()["layers"][0]["attn"]
+    x = jnp.zeros((2, CFG.seq_len, CFG.dim))
+    for v in VARIANTS:
+        out = attention(p, x, CFG, v)
+        assert out.shape == (2, CFG.seq_len, CFG.dim)
+
+
+def test_rotation_is_function_preserving_without_quant():
+    """Rotations are identity transforms when nothing is quantised."""
+    p = _params()["layers"][0]["attn"]
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((2, 16, CFG.dim)).astype(np.float32))
+    clean = attention(p, x, CFG, AttnVariant("none", "none"))
+    rotated = attention(p, x, CFG, AttnVariant("none", "hadacore"))
+    np.testing.assert_allclose(
+        np.asarray(rotated), np.asarray(clean), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_attention_is_causal():
+    """Future tokens must not influence earlier outputs."""
+    p = _params()["layers"][0]["attn"]
+    rng = np.random.default_rng(7)
+    x1 = rng.standard_normal((1, CFG.seq_len, CFG.dim)).astype(np.float32)
+    x2 = x1.copy()
+    x2[0, -1, :] = rng.standard_normal(CFG.dim)  # change only the last token
+    v = AttnVariant("none", "none")
+    o1 = np.asarray(attention(p, jnp.asarray(x1), CFG, v))
+    o2 = np.asarray(attention(p, jnp.asarray(x2), CFG, v))
+    np.testing.assert_allclose(o1[0, :-1], o2[0, :-1], atol=1e-5)
+    assert np.abs(o1[0, -1] - o2[0, -1]).max() > 1e-4
+
+
+def test_variant_names():
+    assert AttnVariant("none", "none").name == "fp16"
+    assert AttnVariant("fp8", "none").name == "fp8_norot"
+    assert AttnVariant("int8", "hadacore").name == "int8_rot_hadacore"
+    assert len({v.name for v in VARIANTS}) == 7
+
+
+# --------------------------------------------------------------- LM + train
+
+
+def test_lm_forward_shapes_and_finite():
+    params = _params()
+    tokens = jnp.zeros((2, CFG.seq_len), jnp.int32)
+    logits = lm_forward(params, tokens, CFG, VARIANTS[0])
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_lm_loss_near_uniform_at_init():
+    params = _params()
+    rng = np.random.default_rng(8)
+    tokens = jnp.asarray(
+        rng.integers(0, CFG.vocab, (4, CFG.seq_len + 1)), jnp.int32
+    )
+    loss = float(lm_loss(params, tokens, CFG, VARIANTS[0]))
+    assert abs(loss - np.log(CFG.vocab)) < 1.0
+
+
+def test_grads_flow_to_all_params():
+    params = _params()
+    rng = np.random.default_rng(9)
+    tokens = jnp.asarray(
+        rng.integers(0, CFG.vocab, (2, CFG.seq_len + 1)), jnp.int32
+    )
+    grads = jax.grad(lambda p: lm_loss(p, tokens, CFG, VARIANTS[0]))(params)
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(leaf).all())
+        assert float(jnp.abs(leaf).max()) > 0.0
+
+
+def test_param_count_formula():
+    params = _params()
+    d, m, v = CFG.dim, CFG.dim * CFG.mlp_mult, CFG.vocab
+    expected = v * d + d + CFG.n_layers * (4 * d * d + 2 * d * m + m * d + 2 * d)
+    assert param_count(params) == expected
+
+
+def test_flatten_unflatten_roundtrip():
+    params = _params(3)
+    flat = flatten_params(params, CFG)
+    rebuilt = unflatten_params([a for _, a in flat], CFG)
+    tokens = jnp.zeros((1, CFG.seq_len), jnp.int32)
+    a = lm_forward(params, tokens, CFG, VARIANTS[0])
+    b = lm_forward(rebuilt, tokens, CFG, VARIANTS[0])
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # names are unique and ordered deterministically
+    names = [n for n, _ in flat]
+    assert len(set(names)) == len(names)
+    assert names[0] == "embed"
+
+
+def test_make_attn_fn_lowers():
+    fn = make_attn_fn(CFG, VARIANTS[2])
+    spec = jax.ShapeDtypeStruct((2, CFG.seq_len, CFG.dim), jnp.float32)
+    w = jax.ShapeDtypeStruct((CFG.dim, CFG.dim), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, w, w, w, w)
+    assert "func" in str(lowered.compiler_ir("stablehlo"))
+
+
+# ---------------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_fp8_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(512).astype(np.float32)) * 30
+    q1 = fake_quant_fp8(x)
+    q2 = fake_quant_fp8(q1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    hd=st.sampled_from([16, 32, 64]),
+)
+def test_hypothesis_qk_rotation_preserves_scores(seed, hd):
+    """softmax(QK^T) is invariant under joint Q/K rotation (no quant)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((6, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((6, hd)).astype(np.float32))
+    s0 = np.asarray(q @ k.T)
+    qr = rotate_last(q, "hadacore")
+    kr = rotate_last(k, "hadacore")
+    s1 = np.asarray(qr @ kr.T)
+    np.testing.assert_allclose(s1, s0, rtol=1e-3, atol=1e-3)

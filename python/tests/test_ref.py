@@ -1,0 +1,99 @@
+"""Oracle self-consistency: the two references must agree with each other
+and with first-principles Hadamard properties before they may judge the
+kernels."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+SIZES = [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+
+
+def test_hadamard_matrix_entries():
+    for n in [2, 4, 16, 64]:
+        h = np.asarray(ref.hadamard_matrix(n))
+        assert set(np.unique(h)) <= {-1.0, 1.0}
+        assert h.shape == (n, n)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_hadamard_matrix_orthogonal(n):
+    h = np.asarray(ref.hadamard_matrix(n), dtype=np.float64)
+    np.testing.assert_allclose(h @ h.T, n * np.eye(n), atol=1e-9)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_hadamard_matrix_symmetric(n):
+    h = np.asarray(ref.hadamard_matrix(n))
+    np.testing.assert_array_equal(h, h.T)
+
+
+def test_hadamard_sylvester_recursion():
+    for n in [4, 8, 16, 32]:
+        h = np.asarray(ref.hadamard_matrix(n))
+        half = np.asarray(ref.hadamard_matrix(n // 2))
+        top = np.hstack([half, half])
+        bot = np.hstack([half, -half])
+        np.testing.assert_array_equal(h, np.vstack([top, bot]))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_butterfly_matches_matmul(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal((5, n)), dtype=jnp.float32)
+    a = ref.fwht_matmul(x)
+    b = ref.fwht_butterfly(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [16, 128, 256])
+def test_butterfly_scale_override(n):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, n)), dtype=jnp.float32)
+    raw = ref.fwht_butterfly(x, scale=1.0)
+    normed = ref.fwht_butterfly(x)
+    np.testing.assert_allclose(
+        np.asarray(raw) / math.sqrt(n), np.asarray(normed), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_normalized_transform_is_involution(n):
+    """H/sqrt(n) is orthogonal and symmetric => applying twice = identity."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((4, n)), dtype=jnp.float32)
+    y = ref.fwht_matmul(ref.fwht_matmul(x))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [64, 256])
+def test_normalized_transform_preserves_norm(n):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((4, n)), dtype=jnp.float32)
+    y = ref.fwht_butterfly(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-4,
+    )
+
+
+def test_factor_16():
+    assert ref.factor_16(16) == (0, 1)
+    assert ref.factor_16(256) == (0, 2)
+    assert ref.factor_16(128) == (3, 1)
+    assert ref.factor_16(512) == (1, 2)
+    assert ref.factor_16(2048) == (3, 2)
+    assert ref.factor_16(32768) == (3, 3)
+    assert ref.factor_16(2) == (1, 0)
+    with pytest.raises(ValueError):
+        ref.factor_16(48)
+
+
+def test_is_pow2():
+    assert ref.is_pow2(1) and ref.is_pow2(2) and ref.is_pow2(32768)
+    assert not ref.is_pow2(0) and not ref.is_pow2(12) and not ref.is_pow2(-4)

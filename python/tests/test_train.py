@@ -1,0 +1,133 @@
+"""Build-time training pipeline tests: corpus statistics, eval-set
+construction, Adam, weight serialisation layout."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import ModelConfig, flatten_params, init_params
+from compile.train import (
+    adam_init,
+    adam_update,
+    make_batches,
+    make_eval_set,
+    markov_table,
+    sample_chain,
+    save_weights,
+    train,
+)
+
+CFG = ModelConfig()
+
+
+def test_markov_table_is_stochastic():
+    t = markov_table(CFG.vocab)
+    assert t.shape == (CFG.vocab, CFG.vocab)
+    np.testing.assert_allclose(t.sum(axis=1), 1.0, atol=1e-12)
+    assert (t >= 0).all()
+    # sparse structure: each row has a few dominant successors
+    top4 = np.sort(t, axis=1)[:, -4:].sum(axis=1)
+    assert (top4 > 0.85).all()
+
+
+def test_markov_table_deterministic():
+    np.testing.assert_array_equal(markov_table(64, seed=1), markov_table(64, seed=1))
+    assert not np.array_equal(markov_table(64, seed=1), markov_table(64, seed=2))
+
+
+def test_sample_chain_tokens_in_range():
+    t = markov_table(CFG.vocab)
+    rng = np.random.default_rng(0)
+    seq = sample_chain(t, 100, rng)
+    assert seq.shape == (100,)
+    assert seq.dtype == np.int32
+    assert (seq >= 0).all() and (seq < CFG.vocab).all()
+
+
+def test_make_batches_shapes():
+    batches = list(make_batches(CFG, steps=3, batch=4, seed=0))
+    assert len(batches) == 3
+    for b in batches:
+        assert b.shape == (4, CFG.seq_len + 1)
+
+
+def test_eval_set_structure():
+    es = make_eval_set(CFG, n_questions=12, seed=5)
+    assert es["prefix_len"] + es["cont_len"] == CFG.seq_len
+    assert len(es["questions"]) == 12
+    for q in es["questions"]:
+        assert len(q["prefix"]) == es["prefix_len"]
+        assert len(q["choices"]) == es["k_choices"]
+        assert 0 <= q["answer"] < es["k_choices"]
+        correct = q["choices"][q["answer"]]
+        for i, ch in enumerate(q["choices"]):
+            assert len(ch) == es["cont_len"]
+            if i != q["answer"]:
+                # distractor differs from the correct one only at the end
+                assert ch[:-1] == correct[:-1]
+                assert ch[-1] != correct[-1]
+
+
+def test_eval_answers_are_distributed():
+    es = make_eval_set(CFG, n_questions=100, seed=6)
+    answers = [q["answer"] for q in es["questions"]]
+    # all four positions used
+    assert len(set(answers)) == es["k_choices"]
+
+
+def test_adam_decreases_quadratic_loss():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adam_init(params)
+    for _ in range(400):
+        grads = {"w": 2 * params["w"]}  # d/dw of w^2
+        params, opt = adam_update(params, grads, opt, lr=3e-2)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_short_training_reduces_loss():
+    params, log = train(CFG, steps=12, batch=8, seed=1, log_every=11)
+    assert log[0]["loss"] > log[-1]["loss"]
+    assert np.isfinite(log[-1]["loss"])
+
+
+def test_save_weights_layout():
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "weights.bin")
+        entries = save_weights(params, CFG, path)
+        flat = flatten_params(params, CFG)
+        assert len(entries) == len(flat)
+        raw = np.fromfile(path, dtype="<f4")
+        total = sum(e["numel"] for e in entries)
+        assert raw.size == total
+        # offsets are contiguous and data round-trips
+        off = 0
+        for e, (name, arr) in zip(entries, flat):
+            assert e["name"] == name
+            assert e["offset"] == off
+            got = raw[off:off + e["numel"]].reshape(e["shape"])
+            np.testing.assert_array_equal(got, np.asarray(arr))
+            off += e["numel"]
+
+
+def test_manifest_contract_with_rust():
+    """The artifact manifest (if built) matches the weight file."""
+    man_path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(man_path):
+        return
+    man = json.load(open(man_path))
+    raw = np.fromfile(
+        os.path.join(os.path.dirname(man_path), "weights.bin"), dtype="<f4"
+    )
+    total = sum(w["numel"] for w in man["weights"])
+    assert raw.size == total
+    assert man["model"]["dim"] == 128
+    lm = [a for a in man["artifacts"] if a["op"] == "lm_forward"]
+    assert len(lm) == 7
+    # each lm artifact takes tokens + one input per weight tensor
+    for a in lm:
+        assert len(a["inputs"]) == 1 + len(man["weights"])

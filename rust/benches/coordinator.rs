@@ -1,0 +1,183 @@
+//! Coordinator serving benchmarks: batching efficiency, per-request
+//! overhead, and backend comparison (experiment E9's performance side).
+//!
+//! `cargo bench --bench coordinator`
+
+use std::time::{Duration, Instant};
+
+use hadacore::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, RouterConfig, TransformRequest,
+};
+use hadacore::hadamard::{fwht_hadacore_f32, FwhtOptions, KernelKind};
+use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
+use hadacore::util::bench::percentile;
+use hadacore::util::rng::Rng;
+
+fn native(workers: usize, delay_us: u64) -> Coordinator {
+    Coordinator::start(
+        None,
+        CoordinatorConfig {
+            workers,
+            batcher: BatcherConfig { max_delay: Duration::from_micros(delay_us), ..Default::default() },
+            router: RouterConfig::default(),
+            idle_timeout: Duration::from_millis(5),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn main() {
+    println!("# coordinator — serving-path benchmarks\n");
+
+    // -- 1. per-request overhead: coordinator vs direct kernel call -----
+    let n = 1024;
+    let mut rng = Rng::new(1);
+    let payload = rng.normal_vec(n);
+    let opts = FwhtOptions::normalized(n);
+
+    let iters = 2000;
+    let mut direct = payload.clone();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        direct.copy_from_slice(&payload);
+        fwht_hadacore_f32(&mut direct, n, &opts);
+    }
+    let t_direct_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    let coord = native(2, 50);
+    let mut lat = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t1 = Instant::now();
+        let _ = coord
+            .transform(TransformRequest::new(i as u64, n, payload.clone()))
+            .unwrap();
+        lat.push(t1.elapsed().as_secs_f64() * 1e6);
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = percentile(&lat, 50.0);
+    println!("## per-request overhead (n={n}, closed loop)");
+    println!("direct kernel call:        {t_direct_us:>8.1} µs");
+    println!("through coordinator (p50): {p50:>8.1} µs");
+    println!("overhead:                  {:>8.1} µs\n", p50 - t_direct_us);
+    coord.shutdown();
+
+    // -- 2. throughput scaling with workers ------------------------------
+    // requests are pre-generated: the first version of this bench timed
+    // the Box-Muller payload generation and was generator-bound (§Perf).
+    println!("## open-loop throughput vs worker count (mixed sizes)");
+    for workers in [1usize, 2, 4, 8] {
+        let coord = native(workers, 200);
+        let mut wl = ServingWorkload::new(WorkloadConfig {
+            sizes: vec![128, 256, 1024, 4096],
+            kernel: KernelKind::HadaCore,
+            ..Default::default()
+        });
+        let total = 4000;
+        let requests = wl.take(total);
+        let t0 = Instant::now();
+        let handles: Vec<_> = requests
+            .into_iter()
+            .map(|r| coord.submit(r).unwrap())
+            .collect();
+        let mut elems = 0usize;
+        for h in handles {
+            elems += h.recv().unwrap().unwrap().data.len();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics().snapshot();
+        println!(
+            "workers={workers}: {:>7.0} req/s  {:>6.1} M elem/s  batches={} (avg {:.1} reqs/batch)",
+            total as f64 / dt,
+            elems as f64 / dt / 1e6,
+            snap.batches,
+            snap.completed as f64 / snap.batches.max(1) as f64,
+        );
+        coord.shutdown();
+    }
+
+    // -- 3. batching deadline sweep: latency/throughput trade ------------
+    println!("\n## batching deadline sweep (n=256, 4000 open-loop requests)");
+    println!(
+        "{:>12} {:>10} {:>12} {:>14}",
+        "deadline µs", "req/s", "e2e p50 µs", "reqs/batch"
+    );
+    for delay in [0u64, 100, 500, 2000] {
+        let coord = native(4, delay);
+        let mut wl = ServingWorkload::new(WorkloadConfig {
+            sizes: vec![256],
+            rows_min: 1,
+            rows_max: 1,
+            ..Default::default()
+        });
+        let total = 4000;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..total)
+            .map(|_| coord.submit(wl.next_request()).unwrap())
+            .collect();
+        for h in handles {
+            h.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics().snapshot();
+        println!(
+            "{:>12} {:>10.0} {:>12} {:>14.1}",
+            delay,
+            total as f64 / dt,
+            snap.e2e_p50_us,
+            snap.completed as f64 / snap.batches.max(1) as f64,
+        );
+        coord.shutdown();
+    }
+
+    // -- 4. PJRT backend (when artifacts exist) ---------------------------
+    // requests carry 64 rows each so two requests fill the 128-row n=256
+    // bucket: the pjrt arm genuinely executes on PJRT (under-filled
+    // batches would fall back to native by policy).
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        println!("\n## pjrt vs native backend (n=256, 64-row requests)");
+        for force_native in [false, true] {
+            let coord = Coordinator::start(
+                Some(dir.into()),
+                CoordinatorConfig {
+                    workers: 2,
+                    batcher: BatcherConfig { max_delay: Duration::from_micros(300), ..Default::default() },
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let total = 200;
+            let rows = 64;
+            let mut rng = Rng::new(5);
+            let payloads: Vec<Vec<f32>> =
+                (0..total).map(|_| rng.normal_vec(rows * 256)).collect();
+            let t0 = Instant::now();
+            let handles: Vec<_> = payloads
+                .into_iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let mut req = TransformRequest::new(i as u64, 256, p);
+                    req.force_native = force_native;
+                    coord.submit(req).unwrap()
+                })
+                .collect();
+            let mut backend = "";
+            for h in handles {
+                backend = h.recv().unwrap().unwrap().backend;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let snap = coord.metrics().snapshot();
+            println!(
+                "backend={backend:<7} {:>8.0} req/s  {:>6.1} M elem/s  (exec p50 {} µs, pjrt batches {})",
+                total as f64 / dt,
+                (total * rows * 256) as f64 / dt / 1e6,
+                snap.exec_p50_us,
+                snap.pjrt_batches,
+            );
+            coord.shutdown();
+        }
+    } else {
+        println!("\n(pjrt comparison skipped: artifacts not built)");
+    }
+}

@@ -1,0 +1,171 @@
+//! Kernel micro-benchmarks: measured CPU wall-clock for every transform
+//! implementation across the paper's size axis.
+//!
+//! `cargo bench --bench fwht_kernels` — prints µs/iter medians plus the
+//! HadaCore-vs-baseline speedup summary. The absolute numbers are CPU
+//! numbers (the GPU grids are modelled — see examples/paper_tables.rs);
+//! what must *hold* here is the algorithmic comparison: the 16x16-block
+//! algorithm beating the butterfly through matrix-unit-friendly inner
+//! loops, growing with transform size.
+
+use hadacore::hadamard::{
+    fwht_dao_f32, fwht_generic, fwht_hadacore_f32, fwht_scalar_f32, FwhtOptions,
+    KernelKind,
+};
+use hadacore::util::bench::{bench, BenchConfig, Stats};
+use hadacore::util::f16::{BF16, Element};
+use hadacore::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+
+    println!("# fwht_kernels — native kernel micro-benchmarks (CPU)\n");
+
+    // -- scalar vs dao vs hadacore across sizes ------------------------
+    let elems = 1 << 18; // 256K elements per call
+    println!("## f32 kernels, {} elements/call", elems);
+    let mut rows_speedup: Vec<(usize, f64, f64)> = Vec::new();
+    for k in [7usize, 8, 9, 10, 11, 12, 13, 14, 15] {
+        let n = 1usize << k;
+        let rows = elems / n;
+        let mut rng = Rng::new(n as u64);
+        let base = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+
+        let mut run = |kind: KernelKind| -> Stats {
+            let label = format!("{}_{}", kind.name(), n);
+            let b = base.clone();
+            let mut data = base.clone();
+            bench(&label, &cfg, move |_| {
+                data.copy_from_slice(&b);
+                match kind {
+                    KernelKind::Scalar => fwht_scalar_f32(&mut data, n, &opts),
+                    KernelKind::Dao => fwht_dao_f32(&mut data, n, &opts),
+                    KernelKind::HadaCore => fwht_hadacore_f32(&mut data, n, &opts),
+                }
+                data[0]
+            })
+        };
+        let s_scalar = run(KernelKind::Scalar);
+        let s_dao = run(KernelKind::Dao);
+        let s_hc = run(KernelKind::HadaCore);
+        println!("{}", s_scalar.line());
+        println!("{}", s_dao.line());
+        println!("{}", s_hc.line());
+        rows_speedup.push((
+            n,
+            s_dao.median_ns / s_hc.median_ns,
+            s_scalar.median_ns / s_hc.median_ns,
+        ));
+    }
+    println!("\n## speedup summary (measured, this CPU)");
+    println!("{:>8} {:>18} {:>18}", "size", "hadacore/dao", "hadacore/scalar");
+    for (n, vs_dao, vs_scalar) in &rows_speedup {
+        println!("{:>8} {:>17.2}x {:>17.2}x", n, vs_dao, vs_scalar);
+    }
+
+    // -- bf16 (paper appendix C) ---------------------------------------
+    println!("\n## bf16 path (fp32 accumulate + convert)");
+    for n in [256usize, 4096] {
+        let rows = (1 << 16) / n;
+        let mut rng = Rng::new(3);
+        let f32_data = rng.normal_vec(rows * n);
+        let bf_base: Vec<BF16> = f32_data.iter().map(|&v| BF16::from_f32(v)).collect();
+        let opts = FwhtOptions::normalized(n);
+        for kind in [KernelKind::Dao, KernelKind::HadaCore] {
+            let label = format!("bf16_{}_{}", kind.name(), n);
+            let mut buf = bf_base.clone();
+            let b = bf_base.clone();
+            let s: Stats = bench(&label, &cfg, move |_| {
+                buf.copy_from_slice(&b);
+                fwht_generic(kind, &mut buf, n, &opts);
+                buf[0]
+            });
+            println!("{}", s.line());
+        }
+    }
+
+    // -- residual-mode ablation (DESIGN.md design-choice bench) ----------
+    // BlockDiagonal (paper §3.3, uniform 16x16 rounds) vs SmallFactor
+    // (direct small contraction): equal math, different pass structure.
+    println!("\n## residual-mode ablation (non-power-of-16 sizes)");
+    {
+        use hadacore::hadamard::hadacore::{
+            fwht_hadacore_f32_cfg, HadaCoreConfig, ResidualMode,
+        };
+        for n in [128usize, 512, 2048, 8192] {
+            let rows = (1 << 17) / n;
+            let mut rng = Rng::new(n as u64);
+            let base = rng.normal_vec(rows * n);
+            let opts = FwhtOptions::normalized(n);
+            for (label, mode) in [
+                ("blockdiag", ResidualMode::BlockDiagonal),
+                ("smallfactor", ResidualMode::SmallFactor),
+            ] {
+                let b = base.clone();
+                let mut buf = base.clone();
+                let cfg_k = HadaCoreConfig { residual: mode };
+                let s = bench(&format!("{label}_{n}"), &cfg, move |_| {
+                    buf.copy_from_slice(&b);
+                    fwht_hadacore_f32_cfg(&mut buf, n, &opts, &cfg_k);
+                    buf[0]
+                });
+                println!("{}", s.line());
+            }
+        }
+    }
+
+    // -- per-group quantisation sweep (QuaRot granularity) ----------------
+    println!("\n## int4 per-group quantisation error (outlier tensor, n=4096)");
+    {
+        use hadacore::quant::{group_size_sweep, IntBits};
+        let mut rng = Rng::new(77);
+        let mut x = rng.normal_vec(4096);
+        for i in (0..4096).step_by(64) {
+            x[i] *= 40.0;
+        }
+        for (g, err) in group_size_sweep(&x, &[32, 128, 1024, 4096], IntBits::Int4) {
+            println!("group={g:>5}: rel_l2 {err:.5}");
+        }
+        let mut rot = x.clone();
+        let opts = FwhtOptions::normalized(4096);
+        fwht_hadacore_f32(&mut rot, 4096, &opts);
+        for (g, err) in group_size_sweep(&rot, &[128, 4096], IntBits::Int4) {
+            println!("rotated, group={g:>5}: rel_l2 {err:.5}");
+        }
+    }
+
+    // -- in-place vs out-of-place (paper appendix B) ---------------------
+    println!("\n## in-place vs out-of-place (cache-footprint ablation)");
+    for log_e in [16usize, 21, 24] {
+        let elems = 1usize << log_e;
+        let n = 1024;
+        let rows = elems / n;
+        let mut rng = Rng::new(9);
+        let base = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+
+        let mut ip_buf = base.clone();
+        let b1 = base.clone();
+        let s_ip = bench(&format!("inplace_{}K", elems >> 10), &cfg, move |_| {
+            ip_buf.copy_from_slice(&b1);
+            fwht_hadacore_f32(&mut ip_buf, n, &opts);
+            ip_buf[0]
+        });
+        let b2 = base.clone();
+        let s_oop = bench(&format!("outofplace_{}K", elems >> 10), &cfg, move |_| {
+            // out-of-place: fresh destination allocation + copy + transform
+            let mut dst = b2.clone();
+            fwht_hadacore_f32(&mut dst, n, &opts);
+            dst[0]
+        });
+        println!("{}", s_ip.line());
+        println!("{}", s_oop.line());
+        println!(
+            "    in-place gain at {}K elements: {:.2}x",
+            elems >> 10,
+            s_oop.median_ns / s_ip.median_ns
+        );
+    }
+}

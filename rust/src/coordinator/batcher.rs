@@ -1,0 +1,347 @@
+//! Bucketed dynamic batching.
+//!
+//! Requests are grouped by [`BucketKey`] (kernel, size, backend class).
+//! A bucket flushes when its accumulated rows reach the bucket capacity
+//! or when the oldest request has waited `max_delay`. Workers block on a
+//! condvar whose timeout is the nearest deadline, so flushes happen
+//! within one scheduler quantum of the deadline without busy-waiting.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::hadamard::KernelKind;
+
+use super::router::Route;
+use super::Pending;
+
+/// Batch grouping key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    /// Kernel implementation.
+    pub kernel: KernelKind,
+    /// Hadamard size.
+    pub n: usize,
+    /// Whether this bucket executes on PJRT (fixed shape) or native.
+    pub pjrt: bool,
+    /// Scale bits (None-scale buckets batch together; custom scales are
+    /// per-value buckets so one batch has one scale).
+    pub scale_bits: u32,
+}
+
+impl BucketKey {
+    /// Build a key from a request + its route.
+    pub fn of(req: &super::TransformRequest, route: &Route) -> BucketKey {
+        BucketKey {
+            kernel: req.kernel,
+            n: req.n,
+            pjrt: matches!(route.backend, super::Backend::Pjrt(_)),
+            scale_bits: req.scale.map(f32::to_bits).unwrap_or(0x7fc0_0001),
+        }
+    }
+}
+
+/// A flushed batch ready for execution.
+pub struct Batch {
+    /// Grouping key.
+    pub key: BucketKey,
+    /// The route shared by every request in the batch.
+    pub route: Route,
+    /// Requests, in arrival order.
+    pub items: Vec<Pending>,
+    /// Total data rows (<= route.capacity_rows).
+    pub rows: usize,
+}
+
+struct Bucket {
+    route: Route,
+    items: Vec<Pending>,
+    rows: usize,
+    oldest: Instant,
+}
+
+/// Batcher configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Max time the oldest request may wait before a partial flush.
+    pub max_delay: Duration,
+    /// Work-conserving mode (§Perf): an idle worker flushes a non-empty
+    /// *native* bucket immediately instead of sleeping on the deadline.
+    /// Under load, batches still form naturally (requests accumulate
+    /// while workers execute — vLLM-style continuous batching); at low
+    /// load, requests stop paying the deadline as pure latency. PJRT
+    /// buckets keep the deadline: their fixed shapes only pay off when
+    /// reasonably filled.
+    pub work_conserving: bool,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_delay: Duration::from_micros(500),
+            work_conserving: true,
+        }
+    }
+}
+
+/// The shared batching state.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    state: Mutex<State>,
+    ready: Condvar,
+}
+
+struct State {
+    buckets: HashMap<BucketKey, Bucket>,
+    shutdown: bool,
+}
+
+impl Batcher {
+    /// Empty batcher.
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            state: Mutex::new(State { buckets: HashMap::new(), shutdown: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a pending request under its route.
+    pub fn push(&self, key: BucketKey, route: Route, item: Pending) {
+        let mut st = self.state.lock().unwrap();
+        let rows = item.req.rows;
+        let bucket = st.buckets.entry(key).or_insert_with(|| Bucket {
+            route: route.clone(),
+            items: Vec::new(),
+            rows: 0,
+            oldest: Instant::now(),
+        });
+        if bucket.items.is_empty() {
+            bucket.oldest = item.enqueued;
+        }
+        bucket.items.push(item);
+        bucket.rows += rows;
+        let full = bucket.rows >= bucket.route.capacity_rows;
+        drop(st);
+        if full {
+            self.ready.notify_all();
+        } else {
+            // a worker may be sleeping until an earlier deadline; waking one
+            // lets it recompute (cheap, and only on request arrival)
+            self.ready.notify_one();
+        }
+    }
+
+    /// Worker call: block until a batch is ready (full or expired), the
+    /// shutdown flag is set (returns remaining batches until drained, then
+    /// `None`), or `idle_timeout` passes with nothing to do.
+    pub fn next_batch(&self, idle_timeout: Duration) -> Option<Batch> {
+        let deadline_cap = Instant::now() + idle_timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            // pick: any full/expired bucket; else (work-conserving) the
+            // fullest native bucket; else wait until the nearest deadline
+            let mut chosen: Option<BucketKey> = None;
+            let mut nearest: Option<Instant> = None;
+            let mut fallback: Option<(BucketKey, usize)> = None;
+            for (k, b) in st.buckets.iter() {
+                if b.items.is_empty() {
+                    continue;
+                }
+                let expires = b.oldest + self.cfg.max_delay;
+                if b.rows >= b.route.capacity_rows || expires <= now || st.shutdown {
+                    chosen = Some(*k);
+                    break;
+                }
+                if self.cfg.work_conserving && !k.pjrt {
+                    match fallback {
+                        Some((_, rows)) if rows >= b.rows => {}
+                        _ => fallback = Some((*k, b.rows)),
+                    }
+                }
+                nearest = Some(match nearest {
+                    Some(t) if t < expires => t,
+                    _ => expires,
+                });
+            }
+            let chosen = chosen.or(fallback.map(|(k, _)| k));
+            if let Some(key) = chosen {
+                let bucket = st.buckets.get_mut(&key).unwrap();
+                // flush up to capacity rows, keeping arrival order; requests
+                // beyond capacity stay queued for the next batch
+                let cap = bucket.route.capacity_rows;
+                let mut rows = 0;
+                let mut take = 0;
+                for p in bucket.items.iter() {
+                    if take > 0 && rows + p.req.rows > cap {
+                        break;
+                    }
+                    rows += p.req.rows;
+                    take += 1;
+                }
+                let items: Vec<Pending> = bucket.items.drain(..take).collect();
+                bucket.rows -= rows;
+                if !bucket.items.is_empty() {
+                    bucket.oldest = items
+                        .last()
+                        .map(|_| bucket.items[0].enqueued)
+                        .unwrap_or_else(Instant::now);
+                }
+                let route = bucket.route.clone();
+                return Some(Batch { key, route, items, rows });
+            }
+            if st.shutdown {
+                return None;
+            }
+            let wait_until = nearest.unwrap_or(deadline_cap).min(deadline_cap);
+            let now = Instant::now();
+            if wait_until <= now {
+                if nearest.is_none() {
+                    return None; // idle timeout with empty queues
+                }
+                continue;
+            }
+            let (guard, _timeout) =
+                self.ready.wait_timeout(st, wait_until - now).unwrap();
+            st = guard;
+            if st.shutdown && st.buckets.values().all(|b| b.items.is_empty()) {
+                return None;
+            }
+        }
+    }
+
+    /// Signal shutdown; workers drain remaining items then return `None`.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.ready.notify_all();
+    }
+
+    /// Rows currently queued across all buckets.
+    pub fn queued_rows(&self) -> usize {
+        self.state.lock().unwrap().buckets.values().map(|b| b.rows).sum()
+    }
+
+    /// True once [`Batcher::shutdown`] has been called.
+    pub fn is_shutdown(&self) -> bool {
+        self.state.lock().unwrap().shutdown
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, TransformRequest};
+    use std::sync::mpsc;
+
+    fn pending(id: u64, n: usize, rows: usize) -> (Pending, mpsc::Receiver<anyhow::Result<crate::coordinator::TransformResponse>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                req: TransformRequest::new(id, n, vec![0.0; n * rows]),
+                tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn key_route(n: usize, cap: usize) -> (BucketKey, Route) {
+        let route = Route { backend: Backend::Native, capacity_rows: cap };
+        let req = TransformRequest::new(0, n, vec![0.0; n]);
+        (BucketKey::of(&req, &route), route)
+    }
+
+    #[test]
+    fn full_bucket_flushes_immediately() {
+        let b = Batcher::new(BatcherConfig { max_delay: Duration::from_secs(10), work_conserving: false });
+        let (key, route) = key_route(64, 4);
+        for i in 0..4 {
+            let (p, _rx) = pending(i, 64, 1);
+            b.push(key, route.clone(), p);
+        }
+        let batch = b.next_batch(Duration::from_millis(100)).expect("batch");
+        assert_eq!(batch.rows, 4);
+        assert_eq!(batch.items.len(), 4);
+        assert_eq!(b.queued_rows(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let b = Batcher::new(BatcherConfig { max_delay: Duration::from_millis(5), work_conserving: false });
+        let (key, route) = key_route(64, 100);
+        let (p, _rx) = pending(1, 64, 2);
+        b.push(key, route, p);
+        let t0 = Instant::now();
+        let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
+        assert_eq!(batch.rows, 2);
+        assert!(t0.elapsed() >= Duration::from_millis(4), "flushed too early");
+        assert!(t0.elapsed() < Duration::from_millis(300), "flushed too late");
+    }
+
+    #[test]
+    fn capacity_splits_across_batches() {
+        let b = Batcher::new(BatcherConfig { max_delay: Duration::from_millis(1), work_conserving: false });
+        let (key, route) = key_route(32, 4);
+        for i in 0..3 {
+            let (p, _rx) = pending(i, 32, 3); // 3 rows each, cap 4
+            b.push(key, route.clone(), p);
+        }
+        // each batch takes one 3-row request (3+3 > 4)... first batch takes
+        // request 0 only (3 rows); adding request 1 would exceed cap.
+        let b1 = b.next_batch(Duration::from_millis(100)).unwrap();
+        assert_eq!(b1.rows, 3);
+        let b2 = b.next_batch(Duration::from_millis(100)).unwrap();
+        assert_eq!(b2.rows, 3);
+        let b3 = b.next_batch(Duration::from_millis(100)).unwrap();
+        assert_eq!(b3.rows, 3);
+        assert_eq!(b.queued_rows(), 0);
+    }
+
+    #[test]
+    fn oversized_request_flushes_alone() {
+        let b = Batcher::new(BatcherConfig { max_delay: Duration::from_secs(1), work_conserving: false });
+        let (key, route) = key_route(32, 4);
+        let (p, _rx) = pending(9, 32, 10); // exceeds capacity
+        b.push(key, route, p);
+        let batch = b.next_batch(Duration::from_millis(200)).unwrap();
+        assert_eq!(batch.rows, 10);
+        assert_eq!(batch.items.len(), 1);
+    }
+
+    #[test]
+    fn shutdown_drains_then_none() {
+        let b = Batcher::new(BatcherConfig { max_delay: Duration::from_secs(10), work_conserving: false });
+        let (key, route) = key_route(16, 100);
+        let (p, _rx) = pending(1, 16, 1);
+        b.push(key, route, p);
+        b.shutdown();
+        assert!(b.next_batch(Duration::from_millis(50)).is_some());
+        assert!(b.next_batch(Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn idle_timeout_returns_none() {
+        let b = Batcher::new(BatcherConfig::default());
+        let t0 = Instant::now();
+        assert!(b.next_batch(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn distinct_buckets_do_not_mix() {
+        let b = Batcher::new(BatcherConfig { max_delay: Duration::from_millis(1), work_conserving: false });
+        let (k1, r1) = key_route(64, 8);
+        let (k2, r2) = key_route(128, 8);
+        assert_ne!(k1, k2);
+        let (p1, _rx1) = pending(1, 64, 1);
+        let (p2, _rx2) = pending(2, 128, 1);
+        b.push(k1, r1, p1);
+        b.push(k2, r2, p2);
+        let b1 = b.next_batch(Duration::from_millis(100)).unwrap();
+        let b2 = b.next_batch(Duration::from_millis(100)).unwrap();
+        assert_ne!(b1.key.n, b2.key.n);
+        assert_eq!(b1.items.len(), 1);
+        assert_eq!(b2.items.len(), 1);
+    }
+}

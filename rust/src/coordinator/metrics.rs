@@ -1,0 +1,244 @@
+//! Serving metrics: counters + fixed-bucket latency histograms.
+//!
+//! Lock-free on the hot path (atomics only); snapshots are consistent
+//! enough for reporting (individual counters are exact, cross-counter
+//! skew is bounded by in-flight work).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram: 1us .. ~17min in 48 buckets
+/// (geometric, x2 per bucket after the first 16 linear us buckets).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const LINEAR: u64 = 16; // 0..16us in 1us steps
+const TOTAL_BUCKETS: usize = 48;
+
+fn bucket_index(us: u64) -> usize {
+    if us < LINEAR {
+        us as usize
+    } else {
+        let extra = (64 - (us / LINEAR).leading_zeros()) as usize;
+        (LINEAR as usize + extra - 1).min(TOTAL_BUCKETS - 1)
+    }
+}
+
+/// Upper bound (µs) of a bucket, for percentile reconstruction.
+fn bucket_upper(idx: usize) -> u64 {
+    if (idx as u64) < LINEAR {
+        idx as u64 + 1
+    } else {
+        LINEAR << (idx - LINEAR as usize + 1)
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..TOTAL_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency observation in microseconds.
+    pub fn record(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in µs (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Maximum observed latency in µs.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile (0..100) in µs via bucket upper bounds.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_upper(i);
+            }
+        }
+        self.max_us()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// All coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted by the router.
+    pub submitted: AtomicU64,
+    /// Requests completed (responses delivered).
+    pub completed: AtomicU64,
+    /// Requests rejected at admission.
+    pub rejected: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Total data rows executed (excluding padding).
+    pub rows: AtomicU64,
+    /// Padding rows added to fill PJRT bucket shapes.
+    pub padded_rows: AtomicU64,
+    /// Batches executed on the native backend.
+    pub native_batches: AtomicU64,
+    /// Batches executed on the PJRT backend.
+    pub pjrt_batches: AtomicU64,
+    /// Queue-wait latency.
+    pub queue: Histogram,
+    /// Kernel execution latency (per batch).
+    pub exec: Histogram,
+    /// End-to-end request latency.
+    pub e2e: Histogram,
+}
+
+/// Point-in-time copy of the counters for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub rows: u64,
+    pub padded_rows: u64,
+    pub native_batches: u64,
+    pub pjrt_batches: u64,
+    pub queue_p50_us: u64,
+    pub queue_p99_us: u64,
+    pub exec_p50_us: u64,
+    pub exec_p99_us: u64,
+    pub e2e_p50_us: u64,
+    pub e2e_p95_us: u64,
+    pub e2e_p99_us: u64,
+    pub e2e_mean_us: f64,
+}
+
+impl Metrics {
+    /// Take a snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            native_batches: self.native_batches.load(Ordering::Relaxed),
+            pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
+            queue_p50_us: self.queue.percentile_us(50.0),
+            queue_p99_us: self.queue.percentile_us(99.0),
+            exec_p50_us: self.exec.percentile_us(50.0),
+            exec_p99_us: self.exec.percentile_us(99.0),
+            e2e_p50_us: self.e2e.percentile_us(50.0),
+            e2e_p95_us: self.e2e.percentile_us(95.0),
+            e2e_p99_us: self.e2e.percentile_us(99.0),
+            e2e_mean_us: self.e2e.mean_us(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} submitted, {} completed, {} rejected\n\
+             batches:  {} total ({} native, {} pjrt), {} rows + {} pad rows\n\
+             queue:    p50 {}us  p99 {}us\n\
+             exec:     p50 {}us  p99 {}us\n\
+             e2e:      p50 {}us  p95 {}us  p99 {}us  mean {:.1}us",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.batches,
+            self.native_batches,
+            self.pjrt_batches,
+            self.rows,
+            self.padded_rows,
+            self.queue_p50_us,
+            self.queue_p99_us,
+            self.exec_p50_us,
+            self.exec_p99_us,
+            self.e2e_p50_us,
+            self.e2e_p95_us,
+            self.e2e_p99_us,
+            self.e2e_mean_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_monotone() {
+        let mut last = 0;
+        for us in [0u64, 1, 5, 15, 16, 31, 32, 100, 1000, 10_000, 1_000_000] {
+            let b = bucket_index(us);
+            assert!(b >= last, "us={us}");
+            last = b;
+            assert!(bucket_upper(b) >= us.min(bucket_upper(TOTAL_BUCKETS - 1)));
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = Histogram::new();
+        for us in 0..100u64 {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.percentile_us(50.0) >= 40 && h.percentile_us(50.0) <= 64);
+        assert!(h.percentile_us(99.0) >= 90);
+        assert!(h.mean_us() > 40.0 && h.mean_us() < 60.0);
+        assert_eq!(h.max_us(), 99);
+        let empty = Histogram::new();
+        assert_eq!(empty.percentile_us(50.0), 0);
+        assert_eq!(empty.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_report_formats() {
+        let m = Metrics::default();
+        m.submitted.store(10, Ordering::Relaxed);
+        m.e2e.record(120);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 10);
+        assert!(s.report().contains("10 submitted"));
+    }
+}

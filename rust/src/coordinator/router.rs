@@ -1,0 +1,280 @@
+//! Request admission and backend routing.
+//!
+//! A request for `(kernel, n)` routes to:
+//! * the **PJRT backend** when a matching AOT artifact exists and the
+//!   request doesn't force native execution — the production path of the
+//!   three-layer architecture. PJRT executables are `Rc`-based (not
+//!   `Send`), so the route carries the artifact *name*; a dedicated
+//!   executor thread owns the `Runtime` and resolves names locally.
+//! * the **native backend** (in-process Rust kernel) otherwise — the
+//!   substrate path, also used by benchmarks to measure kernel cost
+//!   without PJRT dispatch overhead.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::hadamard::{is_pow2, KernelKind};
+use crate::runtime::Manifest;
+use crate::MAX_HADAMARD_SIZE;
+
+use super::TransformRequest;
+
+/// A PJRT bucket descriptor (artifact identity + fixed shape).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PjrtBucket {
+    /// Manifest artifact name.
+    pub artifact: Arc<str>,
+    /// Fixed row count of the compiled module.
+    pub rows: usize,
+}
+
+/// Execution backend chosen for a bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// In-process Rust kernel.
+    Native,
+    /// Compiled PJRT executable with a fixed `(rows, n)` shape.
+    Pjrt(PjrtBucket),
+}
+
+impl Backend {
+    /// Short label for metrics/responses.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// The routing decision for a request.
+#[derive(Clone, Debug)]
+pub struct Route {
+    /// Backend to execute on.
+    pub backend: Backend,
+    /// Row capacity of the bucket (PJRT: the artifact's fixed rows;
+    /// native: the configured max batch rows).
+    pub capacity_rows: usize,
+}
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Max rows per native batch (PJRT batches are fixed by the artifact).
+    pub native_batch_rows: usize,
+    /// Reject requests with more rows than this.
+    pub max_request_rows: usize,
+    /// Disable the PJRT backend entirely (native-only serving).
+    pub native_only: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            native_batch_rows: 64,
+            max_request_rows: 1 << 16,
+            native_only: false,
+        }
+    }
+}
+
+/// Admission + dispatch table. Built once at server start from the
+/// manifest (no PJRT handles held here — names only).
+pub struct Router {
+    cfg: RouterConfig,
+    pjrt: HashMap<(KernelKind, usize), PjrtBucket>,
+}
+
+impl Router {
+    /// Build a router over the manifest's fwht artifacts. Pass `None` to
+    /// run native-only (no artifacts needed).
+    pub fn new(manifest: Option<&Manifest>, cfg: RouterConfig) -> Router {
+        let mut pjrt = HashMap::new();
+        if let Some(m) = manifest {
+            if !cfg.native_only {
+                for e in m.artifacts.iter().filter(|e| e.op == "fwht") {
+                    let kernel = e
+                        .kernel
+                        .as_deref()
+                        .and_then(KernelKind::parse)
+                        .unwrap_or(KernelKind::HadaCore);
+                    let n = e.n.unwrap_or(0);
+                    pjrt.insert(
+                        (kernel, n),
+                        PjrtBucket {
+                            artifact: Arc::from(e.name.as_str()),
+                            rows: e.rows.unwrap_or(1),
+                        },
+                    );
+                }
+            }
+        }
+        Router { cfg, pjrt }
+    }
+
+    /// Validate a request; `Err` carries the rejection reason.
+    pub fn admit(&self, req: &TransformRequest) -> Result<(), String> {
+        if !is_pow2(req.n) {
+            return Err(format!("n={} is not a power of 2", req.n));
+        }
+        if req.n > MAX_HADAMARD_SIZE {
+            return Err(format!(
+                "n={} exceeds max supported size {}",
+                req.n, MAX_HADAMARD_SIZE
+            ));
+        }
+        if req.data.len() != req.rows * req.n {
+            return Err(format!(
+                "payload length {} != rows {} * n {}",
+                req.data.len(),
+                req.rows,
+                req.n
+            ));
+        }
+        if req.rows == 0 {
+            return Err("empty request".to_string());
+        }
+        if req.rows > self.cfg.max_request_rows {
+            return Err(format!(
+                "rows {} exceeds per-request limit {}",
+                req.rows, self.cfg.max_request_rows
+            ));
+        }
+        Ok(())
+    }
+
+    /// Choose the backend + bucket for an admitted request.
+    ///
+    /// PJRT buckets are only usable when the request's scale is the
+    /// artifact's baked-in orthonormal scale and its rows fit the bucket.
+    pub fn route(&self, req: &TransformRequest) -> Route {
+        if !req.force_native && req.scale.is_none() {
+            if let Some(bucket) = self.pjrt.get(&(req.kernel, req.n)) {
+                if req.rows <= bucket.rows {
+                    return Route {
+                        backend: Backend::Pjrt(bucket.clone()),
+                        capacity_rows: bucket.rows,
+                    };
+                }
+            }
+        }
+        Route {
+            backend: Backend::Native,
+            capacity_rows: self.cfg.native_batch_rows.max(req.rows),
+        }
+    }
+
+    /// Number of PJRT-backed (kernel, n) buckets.
+    pub fn pjrt_bucket_count(&self) -> usize {
+        self.pjrt.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TransformRequest;
+    use crate::runtime::Manifest;
+
+    fn native_router() -> Router {
+        Router::new(None, RouterConfig::default())
+    }
+
+    fn manifest_router() -> Router {
+        let m = Manifest::parse(
+            r#"{"artifacts": [
+                {"name": "fwht_hadacore_256x128", "op": "fwht",
+                 "kernel": "hadacore", "file": "x.hlo.txt",
+                 "n": 256, "rows": 128,
+                 "inputs": [{"shape": [128, 256], "dtype": "float32"}],
+                 "outputs": [{"shape": [128, 256], "dtype": "float32"}]}
+               ],
+               "weights": [], "model": {}}"#,
+        )
+        .unwrap();
+        Router::new(Some(&m), RouterConfig::default())
+    }
+
+    #[test]
+    fn admits_valid_rejects_invalid() {
+        let r = native_router();
+        let ok = TransformRequest::new(1, 256, vec![0.0; 256 * 2]);
+        assert!(r.admit(&ok).is_ok());
+
+        let bad_n = TransformRequest::new(2, 100, vec![0.0; 100]);
+        assert!(r.admit(&bad_n).is_err());
+
+        let too_big = TransformRequest::new(3, 1 << 16, vec![0.0; 1 << 16]);
+        assert!(r.admit(&too_big).is_err());
+
+        let mut mismatched = TransformRequest::new(4, 256, vec![0.0; 256]);
+        mismatched.rows = 7;
+        assert!(r.admit(&mismatched).is_err());
+
+        let mut empty = TransformRequest::new(5, 256, vec![]);
+        empty.rows = 0;
+        assert!(r.admit(&empty).is_err());
+    }
+
+    #[test]
+    fn native_only_routes_native() {
+        let r = native_router();
+        let req = TransformRequest::new(1, 512, vec![0.0; 512]);
+        let route = r.route(&req);
+        assert!(matches!(route.backend, Backend::Native));
+        assert_eq!(route.capacity_rows, 64);
+        assert_eq!(r.pjrt_bucket_count(), 0);
+    }
+
+    #[test]
+    fn manifest_buckets_route_to_pjrt() {
+        let r = manifest_router();
+        assert_eq!(r.pjrt_bucket_count(), 1);
+        let req = TransformRequest::new(1, 256, vec![0.0; 256 * 4]);
+        let route = r.route(&req);
+        match route.backend {
+            Backend::Pjrt(b) => {
+                assert_eq!(&*b.artifact, "fwht_hadacore_256x128");
+                assert_eq!(b.rows, 128);
+            }
+            Backend::Native => panic!("expected pjrt route"),
+        }
+        // unmatched size falls back to native
+        let other = TransformRequest::new(2, 64, vec![0.0; 64]);
+        assert!(matches!(r.route(&other).backend, Backend::Native));
+    }
+
+    #[test]
+    fn custom_scale_or_force_native_bypasses_pjrt() {
+        let r = manifest_router();
+        let mut req = TransformRequest::new(1, 256, vec![0.0; 256]);
+        req.scale = Some(2.0);
+        assert!(matches!(r.route(&req).backend, Backend::Native));
+
+        let mut req2 = TransformRequest::new(2, 256, vec![0.0; 256]);
+        req2.force_native = true;
+        assert!(matches!(r.route(&req2).backend, Backend::Native));
+    }
+
+    #[test]
+    fn rows_exceeding_bucket_fall_back_to_native() {
+        let r = manifest_router();
+        let req = TransformRequest::new(1, 256, vec![0.0; 256 * 500]);
+        let route = r.route(&req);
+        assert!(matches!(route.backend, Backend::Native));
+        assert_eq!(route.capacity_rows, 500);
+    }
+
+    #[test]
+    fn native_only_flag_disables_pjrt() {
+        let m = Manifest::parse(
+            r#"{"artifacts": [], "weights": [], "model": {}}"#,
+        )
+        .unwrap();
+        let r = Router::new(
+            Some(&m),
+            RouterConfig { native_only: true, ..Default::default() },
+        );
+        assert_eq!(r.pjrt_bucket_count(), 0);
+    }
+}

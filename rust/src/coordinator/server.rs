@@ -1,0 +1,504 @@
+//! The coordinator server: worker pool + dedicated PJRT executor thread.
+//!
+//! `Coordinator::submit` is the client API: admission via the router,
+//! enqueue into the batcher, and a receiver handle for the response.
+//!
+//! Threading model: PJRT executables are `Rc`-based (not `Send`), so one
+//! **executor thread** owns the `Runtime` and performs every PJRT
+//! execution (the CPU analogue of a GPU-owning executor). The worker pool
+//! drains the batcher: native batches execute inline on the worker;
+//! PJRT batches are forwarded to the executor over a channel. Responses
+//! complete per-request channels either way.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::hadamard::{fwht_f32, FwhtOptions};
+use crate::runtime::{literal_f32, literal_to_f32, Manifest, Runtime};
+
+use super::batcher::{Batch, Batcher, BatcherConfig, BucketKey};
+use super::metrics::Metrics;
+use super::router::{Backend, Router, RouterConfig};
+use super::{Pending, TransformRequest, TransformResponse};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker thread count (native execution + batch assembly).
+    pub workers: usize,
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+    /// Routing policy.
+    pub router: RouterConfig,
+    /// Worker idle poll interval (shutdown latency bound).
+    pub idle_timeout: Duration,
+    /// Compile all fwht artifacts at startup (vs lazily on first use).
+    /// Keeps compile stalls off the serving hot path.
+    pub preload_pjrt: bool,
+    /// Deadline-flushed PJRT batches whose fill fraction is below this
+    /// threshold execute on the native kernel instead — padding a 128-row
+    /// module to transform 4 rows costs more than doing the 4 rows on the
+    /// CPU kernel directly.
+    pub min_pjrt_fill: f64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+            batcher: BatcherConfig::default(),
+            router: RouterConfig::default(),
+            idle_timeout: Duration::from_millis(50),
+            preload_pjrt: true,
+            min_pjrt_fill: 0.25,
+        }
+    }
+}
+
+/// Submission failure (admission rejection).
+#[derive(Debug, thiserror::Error)]
+#[error("request rejected: {0}")]
+pub struct SubmitError(pub String);
+
+/// Response receiver handle.
+pub type ResponseRx = mpsc::Receiver<anyhow::Result<TransformResponse>>;
+
+/// The running coordinator.
+pub struct Coordinator {
+    router: Arc<Router>,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    pjrt_tx: Option<mpsc::Sender<Batch>>,
+    pjrt_thread: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the coordinator. `artifact_dir` enables the PJRT backend
+    /// (the executor thread opens the `Runtime` there); `None` runs
+    /// native-only.
+    pub fn start(
+        artifact_dir: Option<PathBuf>,
+        cfg: CoordinatorConfig,
+    ) -> anyhow::Result<Coordinator> {
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Arc::new(Batcher::new(cfg.batcher));
+
+        // PJRT executor thread (owns the non-Send Runtime)
+        let mut pjrt_tx = None;
+        let mut pjrt_thread = None;
+        let mut manifest: Option<Manifest> = None;
+        if let Some(dir) = artifact_dir {
+            manifest = Some(Manifest::load(&dir.join("manifest.json"))?);
+            let (tx, rx) = mpsc::channel::<Batch>();
+            let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+            let m = Arc::clone(&metrics);
+            let preload = cfg.preload_pjrt;
+            let handle = std::thread::Builder::new()
+                .name("hadacore-pjrt-executor".to_string())
+                .spawn(move || pjrt_executor_loop(dir, rx, ready_tx, &m, preload))
+                .expect("spawn pjrt executor");
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("pjrt executor died during startup"))??;
+            pjrt_tx = Some(tx);
+            pjrt_thread = Some(handle);
+        }
+
+        let router = Arc::new(Router::new(manifest.as_ref(), cfg.router.clone()));
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for wid in 0..cfg.workers {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let fwd = pjrt_tx.clone();
+            let idle = cfg.idle_timeout;
+            let min_fill = cfg.min_pjrt_fill;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hadacore-worker-{wid}"))
+                    .spawn(move || worker_loop(&batcher, &metrics, fwd, idle, min_fill))
+                    .expect("spawn worker"),
+            );
+        }
+        Ok(Coordinator { router, batcher, metrics, workers, pjrt_tx, pjrt_thread })
+    }
+
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, req: TransformRequest) -> Result<ResponseRx, SubmitError> {
+        if let Err(reason) = self.router.admit(&req) {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError(reason));
+        }
+        let route = self.router.route(&req);
+        let key = BucketKey::of(&req, &route);
+        let (tx, rx) = mpsc::channel();
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.batcher.push(key, route, Pending { req, tx, enqueued: Instant::now() });
+        Ok(rx)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn transform(
+        &self,
+        req: TransformRequest,
+    ) -> anyhow::Result<TransformResponse> {
+        let rx = self.submit(req).map_err(|e| anyhow!(e.to_string()))?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped response"))?
+    }
+
+    /// Metrics handle.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Router handle (for observability).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Drain queues and stop all threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.batcher.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // workers have drained the batcher; closing the channel stops the
+        // executor after it finishes forwarded batches
+        self.pjrt_tx = None;
+        if let Some(h) = self.pjrt_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(
+    batcher: &Batcher,
+    metrics: &Metrics,
+    pjrt_tx: Option<mpsc::Sender<Batch>>,
+    idle: Duration,
+    min_pjrt_fill: f64,
+) {
+    loop {
+        match batcher.next_batch(idle) {
+            Some(batch) => match &batch.route.backend {
+                Backend::Native => execute_native_batch(batch, metrics),
+                Backend::Pjrt(_) => {
+                    // under-filled deadline flush: padding a fixed-shape
+                    // module costs more than running the rows natively
+                    let fill =
+                        batch.rows as f64 / batch.route.capacity_rows.max(1) as f64;
+                    if fill < min_pjrt_fill || pjrt_tx.is_none() {
+                        execute_native_batch(batch, metrics);
+                    } else if let Some(tx) = &pjrt_tx {
+                        if let Err(mpsc::SendError(batch)) = tx.send(batch) {
+                            fail_batch(batch, "pjrt executor unavailable");
+                        }
+                    }
+                }
+            },
+            // None = idle timeout (keep polling) or shutdown (exit)
+            None if batcher.is_shutdown() => return,
+            None => {}
+        }
+    }
+}
+
+/// The PJRT executor: opens the Runtime, signals readiness, then executes
+/// forwarded batches until every sender is dropped.
+fn pjrt_executor_loop(
+    dir: PathBuf,
+    rx: mpsc::Receiver<Batch>,
+    ready_tx: mpsc::Sender<anyhow::Result<()>>,
+    metrics: &Metrics,
+    preload: bool,
+) {
+    let runtime = match Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    if preload {
+        // compile every fwht module now so no request pays the compile
+        let names: Vec<String> = runtime
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|e| e.op == "fwht")
+            .map(|e| e.name.clone())
+            .collect();
+        for name in names {
+            if let Err(e) = runtime.load(&name) {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        }
+    }
+    let _ = ready_tx.send(Ok(()));
+    while let Ok(batch) = rx.recv() {
+        execute_pjrt_batch(batch, &runtime, metrics);
+    }
+}
+
+fn gather(items: &[Pending], rows: usize, n: usize) -> Vec<f32> {
+    let mut data = Vec::with_capacity(rows * n);
+    for p in items {
+        data.extend_from_slice(&p.req.data);
+    }
+    data
+}
+
+fn complete(
+    items: Vec<Pending>,
+    out: &[f32],
+    n: usize,
+    exec_start: Instant,
+    exec_us: u64,
+    batch_rows: usize,
+    backend: &'static str,
+    metrics: &Metrics,
+) {
+    let mut offset = 0;
+    for p in items {
+        let len = p.req.rows * n;
+        let queue_us = exec_start
+            .saturating_duration_since(p.enqueued)
+            .as_micros() as u64;
+        let resp = TransformResponse {
+            id: p.req.id,
+            data: out[offset..offset + len].to_vec(),
+            queue_us,
+            exec_us,
+            batch_rows,
+            backend,
+        };
+        offset += len;
+        metrics.queue.record(queue_us);
+        metrics.e2e.record(p.enqueued.elapsed().as_micros() as u64);
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
+        let _ = p.tx.send(Ok(resp));
+    }
+}
+
+fn fail_batch(batch: Batch, msg: &str) {
+    for p in batch.items {
+        let _ = p.tx.send(Err(anyhow!("{msg}")));
+    }
+}
+
+fn execute_native_batch(batch: Batch, metrics: &Metrics) {
+    let Batch { key, items, rows, .. } = batch;
+    let n = key.n;
+    let t0 = Instant::now();
+    let mut data = gather(&items, rows, n);
+    let opts = match items[0].req.scale {
+        Some(s) => FwhtOptions::with_scale(s),
+        None => FwhtOptions::normalized(n),
+    };
+    fwht_f32(key.kernel, &mut data, n, &opts);
+    let exec_us = t0.elapsed().as_micros() as u64;
+
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.native_batches.fetch_add(1, Ordering::Relaxed);
+    metrics.rows.fetch_add(rows as u64, Ordering::Relaxed);
+    metrics.exec.record(exec_us);
+    complete(items, &data, n, t0, exec_us, rows, "native", metrics);
+}
+
+fn execute_pjrt_batch(batch: Batch, runtime: &Runtime, metrics: &Metrics) {
+    let Batch { key, route, items, rows } = batch;
+    let n = key.n;
+    let Backend::Pjrt(bucket) = &route.backend else {
+        fail_batch(Batch { key, route: route.clone(), items, rows }, "route mismatch");
+        return;
+    };
+    let t0 = Instant::now();
+    let result: anyhow::Result<Vec<f32>> = (|| {
+        let art = runtime.load(&bucket.artifact)?;
+        let cap = art.entry.rows.unwrap_or(rows);
+        let mut data = gather(&items, rows, n);
+        data.resize(cap * n, 0.0);
+        let lit = literal_f32(&data, &[cap, n])?;
+        let outs = art.execute(&[lit])?;
+        let mut out = literal_to_f32(&outs[0])?;
+        out.truncate(rows * n);
+        Ok(out)
+    })();
+    let exec_us = t0.elapsed().as_micros() as u64;
+
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.pjrt_batches.fetch_add(1, Ordering::Relaxed);
+    metrics.rows.fetch_add(rows as u64, Ordering::Relaxed);
+    metrics
+        .padded_rows
+        .fetch_add(bucket.rows.saturating_sub(rows) as u64, Ordering::Relaxed);
+    metrics.exec.record(exec_us);
+
+    match result {
+        Ok(out) => complete(
+            items,
+            &out,
+            n,
+            t0,
+            exec_us,
+            bucket.rows,
+            "pjrt",
+            metrics,
+        ),
+        Err(e) => {
+            let msg = e.to_string();
+            for p in items {
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = p.tx.send(Err(anyhow!("batch execution failed: {msg}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::{fwht_scalar_f32, KernelKind};
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn native_coordinator(workers: usize) -> Coordinator {
+        Coordinator::start(
+            None,
+            CoordinatorConfig {
+                workers,
+                batcher: BatcherConfig { max_delay: Duration::from_micros(200), work_conserving: false },
+                router: RouterConfig::default(),
+                idle_timeout: Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = native_coordinator(2);
+        let mut rng = Rng::new(1);
+        let n = 256;
+        let x = rng.normal_vec(n);
+        let resp = c.transform(TransformRequest::new(7, n, x.clone())).unwrap();
+        assert_eq!(resp.id, 7);
+        let mut want = x;
+        fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
+        assert_close(&resp.data, &want, 1e-3, 1e-3);
+        assert_eq!(resp.backend, "native");
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete_correctly() {
+        let c = native_coordinator(4);
+        let mut rng = Rng::new(2);
+        let n = 128;
+        let mut handles = Vec::new();
+        let mut expected = Vec::new();
+        for id in 0..50u64 {
+            let rows = rng.range(1, 3);
+            let x = rng.normal_vec(rows * n);
+            let mut want = x.clone();
+            fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
+            expected.push(want);
+            handles.push(c.submit(TransformRequest::new(id, n, x)).unwrap());
+        }
+        for (id, (h, want)) in handles.into_iter().zip(expected.iter()).enumerate() {
+            let resp = h.recv().unwrap().unwrap();
+            assert_eq!(resp.id, id as u64);
+            assert_close(&resp.data, want, 1e-3, 1e-3);
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.completed, 50);
+        assert!(snap.batches <= 50);
+        c.shutdown();
+    }
+
+    #[test]
+    fn rejects_invalid_requests() {
+        let c = native_coordinator(1);
+        let err = c.submit(TransformRequest::new(1, 100, vec![0.0; 100]));
+        assert!(err.is_err());
+        assert_eq!(c.metrics().snapshot().rejected, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn custom_scale_respected() {
+        let c = native_coordinator(2);
+        let n = 64;
+        let mut req = TransformRequest::new(3, n, vec![1.0; n]);
+        req.scale = Some(1.0);
+        req.kernel = KernelKind::Dao;
+        let resp = c.transform(req).unwrap();
+        // raw transform of all-ones: first element = n, rest 0
+        assert!((resp.data[0] - n as f32).abs() < 1e-3);
+        assert!(resp.data[1..].iter().all(|v| v.abs() < 1e-3));
+        c.shutdown();
+    }
+
+    #[test]
+    fn different_kernels_agree_through_server() {
+        let c = native_coordinator(2);
+        let mut rng = Rng::new(5);
+        let n = 2048;
+        let x = rng.normal_vec(n);
+        let mut a = TransformRequest::new(1, n, x.clone());
+        a.kernel = KernelKind::HadaCore;
+        let mut b = TransformRequest::new(2, n, x);
+        b.kernel = KernelKind::Dao;
+        let ra = c.transform(a).unwrap();
+        let rb = c.transform(b).unwrap();
+        assert_close(&ra.data, &rb.data, 1e-3, 1e-3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_completes_inflight() {
+        let c = native_coordinator(2);
+        let n = 512;
+        let mut rxs = Vec::new();
+        for id in 0..20 {
+            rxs.push(c.submit(TransformRequest::new(id, n, vec![1.0; n])).unwrap());
+        }
+        c.shutdown();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn metrics_track_latency() {
+        let c = native_coordinator(2);
+        for id in 0..10 {
+            c.transform(TransformRequest::new(id, 64, vec![1.0; 64])).unwrap();
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.completed, 10);
+        assert!(snap.e2e_p50_us > 0);
+        assert!(snap.e2e_p99_us >= snap.e2e_p50_us);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,215 @@
+//! The paper's evaluation grids (Figures 4-11).
+//!
+//! Sizes 128..32768 x element counts 512..33.5M — every (size, count)
+//! cell with `count >= 4*size` (the paper's tables leave the top-left
+//! triangle empty where fewer than a handful of rows exist).
+
+use super::kernels::{dao_time_us, hadacore_time_us, KernelParams, Placement};
+use super::specs::{DeviceSpec, GpuDType};
+
+/// The paper's Hadamard-size axis.
+pub const PAPER_SIZES: [usize; 9] =
+    [128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768];
+
+/// The paper's element-count axis (2^9 .. 2^25).
+pub const PAPER_ELEMENT_COUNTS: [usize; 17] = [
+    512, 1024, 2048, 4096, 8192, 16384, 32768, 65536, 131072, 262144, 524288,
+    1048576, 2097152, 4194304, 8388608, 16777216, 33554432,
+];
+
+/// One grid cell.
+#[derive(Clone, Copy, Debug)]
+pub struct GridCell {
+    /// Hadamard size.
+    pub n: usize,
+    /// Total element count.
+    pub elems: usize,
+    /// Baseline (Dao) modelled runtime, µs.
+    pub dao_us: f64,
+    /// HadaCore modelled runtime, µs.
+    pub hadacore_us: f64,
+}
+
+impl GridCell {
+    /// Speedup of HadaCore over the baseline (>1 = HadaCore faster).
+    pub fn speedup(&self) -> f64 {
+        self.dao_us / self.hadacore_us
+    }
+}
+
+/// Grid generation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GridConfig {
+    /// Element dtype for both kernels.
+    pub dtype: GpuDType,
+    /// Baseline placement (the stock library is out-of-place; Fig 8/9
+    /// patch it to in-place).
+    pub dao_placement: Placement,
+    /// HadaCore placement (in-place by default).
+    pub hadacore_placement: Placement,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            dtype: GpuDType::F16,
+            dao_placement: Placement::OutOfPlace,
+            hadacore_placement: Placement::InPlace,
+        }
+    }
+}
+
+/// Generate the full evaluation grid for a device.
+pub fn speedup_grid(dev: &DeviceSpec, cfg: GridConfig) -> Vec<GridCell> {
+    let mut cells = Vec::new();
+    for &n in &PAPER_SIZES {
+        for &elems in &PAPER_ELEMENT_COUNTS {
+            if elems < 4 * n {
+                continue; // paper leaves these cells empty
+            }
+            let dao = dao_time_us(
+                dev,
+                n,
+                elems,
+                KernelParams { dtype: cfg.dtype, placement: cfg.dao_placement },
+            );
+            let hc = hadacore_time_us(
+                dev,
+                n,
+                elems,
+                KernelParams { dtype: cfg.dtype, placement: cfg.hadacore_placement },
+            );
+            cells.push(GridCell { n, elems, dao_us: dao, hadacore_us: hc });
+        }
+    }
+    cells
+}
+
+/// In-place ablation grid (Fig 8/9): stock out-of-place baseline vs the
+/// same baseline patched to in-place. Returns (n, elems, speedup) cells.
+pub fn inplace_ablation_grid(
+    dev: &DeviceSpec,
+    dtype: GpuDType,
+) -> Vec<(usize, usize, f64)> {
+    let mut cells = Vec::new();
+    for &n in &PAPER_SIZES {
+        for &elems in &PAPER_ELEMENT_COUNTS {
+            if elems < 4 * n {
+                continue;
+            }
+            let oop = dao_time_us(
+                dev,
+                n,
+                elems,
+                KernelParams { dtype, placement: Placement::OutOfPlace },
+            );
+            let ip = dao_time_us(
+                dev,
+                n,
+                elems,
+                KernelParams { dtype, placement: Placement::InPlace },
+            );
+            cells.push((n, elems, oop / ip));
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_model::specs::{A100_PCIE, H100_PCIE};
+
+    #[test]
+    fn grid_covers_paper_cells() {
+        let g = speedup_grid(&A100_PCIE, GridConfig::default());
+        // 9 sizes x 17 counts minus the empty triangle
+        let empty: usize = PAPER_SIZES
+            .iter()
+            .map(|&n| PAPER_ELEMENT_COUNTS.iter().filter(|&&e| e < 4 * n).count())
+            .sum();
+        assert_eq!(g.len(), 9 * 17 - empty);
+        assert!(g.iter().all(|c| c.dao_us > 0.0 && c.hadacore_us > 0.0));
+    }
+
+    #[test]
+    fn speedups_mostly_above_one_a100() {
+        // paper Fig 6b: HadaCore wins nearly everywhere on A100
+        let g = speedup_grid(&A100_PCIE, GridConfig::default());
+        let wins = g.iter().filter(|c| c.speedup() > 0.97).count();
+        assert!(
+            wins as f64 / g.len() as f64 > 0.85,
+            "only {wins}/{} cells at >=0.97x",
+            g.len()
+        );
+        // and in the paper's typical band on the median cell
+        let mut speedups: Vec<f64> = g.iter().map(|c| c.speedup()).collect();
+        speedups.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = speedups[speedups.len() / 2];
+        assert!(
+            (0.95..2.2).contains(&median),
+            "median speedup {median:.2} outside the paper's typical band"
+        );
+    }
+
+    #[test]
+    fn peak_speedup_at_size_128_large_counts() {
+        let g = speedup_grid(&A100_PCIE, GridConfig::default());
+        let peak = g
+            .iter()
+            .max_by(|a, b| a.speedup().partial_cmp(&b.speedup()).unwrap())
+            .unwrap();
+        assert_eq!(peak.n, 128, "paper's peak is the 128 row");
+        assert!(peak.elems >= 1 << 22, "peak at large element counts");
+        assert!(peak.speedup() > 2.5 && peak.speedup() < 6.0);
+    }
+
+    #[test]
+    fn h100_grid_weaker_overall() {
+        let a = speedup_grid(&A100_PCIE, GridConfig::default());
+        let h = speedup_grid(&H100_PCIE, GridConfig::default());
+        let mean = |g: &[GridCell]| {
+            g.iter().map(|c| c.speedup()).sum::<f64>() / g.len() as f64
+        };
+        assert!(mean(&h) < mean(&a), "H100 {:.2} vs A100 {:.2}", mean(&h), mean(&a));
+    }
+
+    #[test]
+    fn bf16_grid_same_shape_as_fp16() {
+        let f = speedup_grid(&A100_PCIE, GridConfig::default());
+        let b = speedup_grid(
+            &A100_PCIE,
+            GridConfig { dtype: GpuDType::BF16, ..Default::default() },
+        );
+        assert_eq!(f.len(), b.len());
+        // paper appendix C: similar speedups for bf16
+        for (cf, cb) in f.iter().zip(b.iter()) {
+            assert!(
+                (cf.speedup() / cb.speedup() - 1.0).abs() < 0.35,
+                "n={} e={}: fp16 {:.2} vs bf16 {:.2}",
+                cf.n,
+                cf.elems,
+                cf.speedup(),
+                cb.speedup()
+            );
+        }
+    }
+
+    #[test]
+    fn inplace_ablation_peaks_near_l2_capacity() {
+        let cells = inplace_ablation_grid(&A100_PCIE, GpuDType::F16);
+        // Appendix B: the in-place gain appears at 8M elements on A100
+        // (16 MB in-place working set fits usable L2; the out-of-place
+        // 32 MB one thrashes)
+        let best = cells
+            .iter()
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        assert_eq!(best.1, 8_388_608, "peak at 8M elements, got {}", best.1);
+        assert!(best.2 > 1.3, "peak in-place gain {:.2}", best.2);
+        // small workloads see no benefit
+        let small: Vec<&(usize, usize, f64)> =
+            cells.iter().filter(|c| c.1 <= 1 << 16).collect();
+        assert!(small.iter().all(|c| (c.2 - 1.0).abs() < 0.05));
+    }
+}

@@ -1,0 +1,34 @@
+//! Analytical GPU performance model for the paper's evaluation grids.
+//!
+//! **Why this exists** (DESIGN.md §Substitutions): the paper's evaluation
+//! is wall-clock on A100-PCIe / H100-PCIe hardware that this environment
+//! does not have (repro band 0/5). Rather than skip the experiments, this
+//! module models both kernels' execution from first principles on
+//! published device parameters and regenerates *every* table and figure.
+//! The model is calibrated to reproduce the paper's qualitative structure,
+//! not its exact cells:
+//!
+//! * launch-overhead floor (~1.6-2.3 µs) at small element counts;
+//! * memory-bound linear scaling at large element counts (33.5M fp16
+//!   elements ≈ 134 MB moved ≈ 87 µs at 1.56 TB/s — the table's corner);
+//! * the L2-capacity cliff: the out-of-place baseline carries 2x the
+//!   cache footprint, so it falls off L2 one octave of element count
+//!   earlier than the in-place HadaCore — the paper's 8M (A100) / 16M
+//!   (H100) speedup spike (Appendix B);
+//! * the occupancy penalty of the baseline at small Hadamard sizes
+//!   (`threads_per_row = n/8 <= 256`), which produces the paper's peak
+//!   3.5x speedup at size 128;
+//! * HadaCore's `ceil(log16 n)` round count, which produces the weak
+//!   512 row and the 8K-pays-like-32K effect the paper's results notes
+//!   call out;
+//! * the BF16 conversion overhead on HadaCore (FP32 accumulate +
+//!   down-convert, Appendix C).
+
+pub mod grid;
+pub mod kernels;
+pub mod roofline;
+pub mod specs;
+
+pub use grid::{speedup_grid, GridCell, GridConfig, PAPER_ELEMENT_COUNTS, PAPER_SIZES};
+pub use kernels::{dao_time_us, hadacore_time_us, KernelParams, Placement};
+pub use specs::{DeviceSpec, GpuDType, A100_PCIE, H100_PCIE, L40S};

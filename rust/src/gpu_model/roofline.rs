@@ -1,0 +1,131 @@
+//! FLOP accounting and roofline analysis (paper §3.4, experiment E8).
+//!
+//! The paper's argument: HadaCore spends >= 2x the flops of the butterfly
+//! (`16 m n ceil(log16 n)` vs `2 m n log2 n`) but wins because tensor
+//! cores supply ~8x the throughput and the work needs far less shuffle
+//! ALU traffic. This module derives those numbers for any configuration
+//! and classifies each cell of the grid as memory- or compute-bound.
+
+use super::specs::DeviceSpec;
+
+/// FLOP counts for one (n, elems) configuration (paper §3.4 formulas).
+#[derive(Clone, Copy, Debug)]
+pub struct FlopReport {
+    /// Hadamard size.
+    pub n: usize,
+    /// Total elements.
+    pub elems: usize,
+    /// Butterfly algorithm flops: `2 E log2 n`.
+    pub butterfly_flops: f64,
+    /// HadaCore flops: `32 E ceil(log16 n)` (two flops per MAC).
+    pub hadacore_flops: f64,
+}
+
+impl FlopReport {
+    /// Compute the report.
+    pub fn new(n: usize, elems: usize) -> FlopReport {
+        let e = elems as f64;
+        let k = n.trailing_zeros();
+        let rounds = (k / 4 + u32::from(k % 4 != 0)) as f64;
+        FlopReport {
+            n,
+            elems,
+            butterfly_flops: 2.0 * e * k as f64,
+            hadacore_flops: 32.0 * e * rounds,
+        }
+    }
+
+    /// HadaCore's flop overhead ratio (paper: >= 2x at power-of-16 sizes).
+    pub fn flop_ratio(&self) -> f64 {
+        self.hadacore_flops / self.butterfly_flops
+    }
+}
+
+/// Bound classification of a kernel execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    /// Limited by DRAM/L2 bandwidth.
+    Memory,
+    /// Limited by arithmetic throughput.
+    Compute,
+}
+
+/// Roofline classification for HadaCore at a given configuration.
+pub fn hadacore_bound(dev: &DeviceSpec, n: usize, elems: usize) -> Bound {
+    let r = FlopReport::new(n, elems);
+    let bytes = 2.0 * elems as f64 * 2.0; // fp16 read+write
+    let t_mem = bytes / dev.dram_bw;
+    let t_comp = r.hadacore_flops / (dev.tensor_flops * 0.5);
+    if t_mem >= t_comp {
+        Bound::Memory
+    } else {
+        Bound::Compute
+    }
+}
+
+/// Arithmetic intensity (flops/byte) of HadaCore at size n, fp16.
+pub fn hadacore_intensity(n: usize) -> f64 {
+    let r = FlopReport::new(n, n); // per-element basis
+    r.hadacore_flops / (2.0 * n as f64 * 2.0)
+}
+
+/// The efficiency ratio the perf pass targets: achieved fraction of the
+/// memory roofline for a measured runtime (µs) at a given configuration.
+pub fn roofline_fraction(dev: &DeviceSpec, elems: usize, measured_us: f64) -> f64 {
+    let bytes = 2.0 * elems as f64 * 2.0;
+    let ideal_us = bytes / dev.dram_bw * 1e6;
+    ideal_us / measured_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_model::specs::A100_PCIE;
+
+    #[test]
+    fn paper_flop_formulas() {
+        // at power-of-16 sizes the ratio is exactly 16/log2(n) * log16(n)*2
+        let r256 = FlopReport::new(256, 1 << 20);
+        // butterfly: 2*E*8; hadacore: 32*E*2 => ratio 4
+        assert!((r256.flop_ratio() - 4.0).abs() < 1e-12);
+        let r4096 = FlopReport::new(4096, 1 << 20);
+        // butterfly: 2*E*12; hadacore: 32*E*3 => ratio 4
+        assert!((r4096.flop_ratio() - 4.0).abs() < 1e-12);
+        // paper: "at least 2x the floating-point operations"
+        for n in [128usize, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768] {
+            assert!(FlopReport::new(n, 4096).flop_ratio() >= 2.0, "n={n}");
+        }
+    }
+
+    #[test]
+    fn hadacore_is_memory_bound_on_a100() {
+        // the transform is streaming: on A100 every paper size is
+        // memory-bound for HadaCore (tensor cores idle most of the time) —
+        // which is exactly why beating the baseline requires bandwidth
+        // efficiency, not flops
+        for n in [256usize, 4096, 32768] {
+            assert_eq!(
+                hadacore_bound(&A100_PCIE, n, 1 << 22),
+                Bound::Memory,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn intensity_grows_with_rounds() {
+        assert!(hadacore_intensity(32768) > hadacore_intensity(256));
+        // but stays tiny compared to GEMM-class intensity (~100s)
+        assert!(hadacore_intensity(32768) < 64.0);
+    }
+
+    #[test]
+    fn roofline_fraction_sane() {
+        // measured == ideal => fraction 1
+        let bytes = 2.0 * (1 << 20) as f64 * 2.0;
+        let ideal_us = bytes / A100_PCIE.dram_bw * 1e6;
+        let f = roofline_fraction(&A100_PCIE, 1 << 20, ideal_us);
+        assert!((f - 1.0).abs() < 1e-9);
+        assert!(roofline_fraction(&A100_PCIE, 1 << 20, ideal_us * 2.0) < 0.51);
+    }
+}

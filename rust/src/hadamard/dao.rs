@@ -1,0 +1,178 @@
+//! Dao-style optimised butterfly FWHT — the measured baseline.
+//!
+//! The Dao AI Lab `fast-hadamard-transform` CUDA kernel (paper §2.4)
+//! organises the butterfly recursion as:
+//!
+//! 1. each thread owns 8 contiguous elements and completes the first three
+//!    levels entirely in registers;
+//! 2. warp shuffles carry the next five levels;
+//! 3. two threadblock-wide shared-memory transposes carry the rest.
+//!
+//! On a CPU the same hierarchy maps onto the memory system instead of the
+//! thread hierarchy: the first three levels run unrolled on 8-element
+//! register blocks, and the remaining levels are contiguous-run butterfly
+//! passes whose inner loops auto-vectorise (the "warp/block exchange" is
+//! free — it's just addressing). This gives the baseline the same
+//! algorithmic structure and op count (`2 m n log2 n` flops) the paper
+//! attributes to it.
+
+use super::{validate_dims, FwhtOptions};
+
+/// First three butterfly levels of one 8-element block, fully unrolled
+/// (the "8 elements per thread" register stage).
+#[inline]
+fn fwht8(b: &mut [f32]) {
+    // level h=1
+    let (a0, a1) = (b[0] + b[1], b[0] - b[1]);
+    let (a2, a3) = (b[2] + b[3], b[2] - b[3]);
+    let (a4, a5) = (b[4] + b[5], b[4] - b[5]);
+    let (a6, a7) = (b[6] + b[7], b[6] - b[7]);
+    // level h=2
+    let (c0, c2) = (a0 + a2, a0 - a2);
+    let (c1, c3) = (a1 + a3, a1 - a3);
+    let (c4, c6) = (a4 + a6, a4 - a6);
+    let (c5, c7) = (a5 + a7, a5 - a7);
+    // level h=4
+    b[0] = c0 + c4;
+    b[1] = c1 + c5;
+    b[2] = c2 + c6;
+    b[3] = c3 + c7;
+    b[4] = c0 - c4;
+    b[5] = c1 - c5;
+    b[6] = c2 - c6;
+    b[7] = c3 - c7;
+}
+
+/// One butterfly level with pair distance `h >= 8`: contiguous runs of
+/// length `h` vectorise cleanly.
+#[inline]
+fn butterfly_level(row: &mut [f32], h: usize) {
+    let n = row.len();
+    let mut i = 0;
+    while i < n {
+        let (lo, hi) = row[i..i + 2 * h].split_at_mut(h);
+        for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+            let a = *x;
+            let b = *y;
+            *x = a + b;
+            *y = a - b;
+        }
+        i += 2 * h;
+    }
+}
+
+/// In-place Dao-style FWHT of every `n`-sized row in `data`.
+pub fn fwht_dao_f32(data: &mut [f32], n: usize, opts: &FwhtOptions) {
+    let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+    for r in 0..rows {
+        let row = &mut data[r * n..(r + 1) * n];
+        if n < 8 {
+            // sizes 2 and 4: plain levels (no 8-block stage available)
+            let mut h = 1;
+            while h < n {
+                let mut i = 0;
+                while i < n {
+                    for j in i..i + h {
+                        let x = row[j];
+                        let y = row[j + h];
+                        row[j] = x + y;
+                        row[j + h] = x - y;
+                    }
+                    i += 2 * h;
+                }
+                h *= 2;
+            }
+        } else {
+            // register stage: 3 levels per 8-element block
+            for blk in row.chunks_exact_mut(8) {
+                fwht8(blk);
+            }
+            // exchange stages: levels h = 8 .. n/2
+            let mut h = 8;
+            while h < n {
+                butterfly_level(row, h);
+                h *= 2;
+            }
+        }
+        if opts.scale != 1.0 {
+            for v in row.iter_mut() {
+                *v *= opts.scale;
+            }
+        }
+    }
+}
+
+/// Out-of-place variant: copies then transforms (the library's default
+/// mode before the paper's Appendix B in-place patch; benchmarked in the
+/// in-place ablation).
+pub fn fwht_dao_f32_out_of_place(
+    src: &[f32],
+    dst: &mut [f32],
+    n: usize,
+    opts: &FwhtOptions,
+) {
+    assert_eq!(src.len(), dst.len());
+    dst.copy_from_slice(src);
+    fwht_dao_f32(dst, n, opts);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::scalar::fwht_scalar_f32;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_scalar_all_sizes() {
+        let mut rng = Rng::new(1);
+        for k in 1..=15 {
+            let n = 1usize << k;
+            let rows = if n > 4096 { 2 } else { 4 };
+            let x = rng.normal_vec(rows * n);
+            let mut got = x.clone();
+            let mut want = x.clone();
+            fwht_dao_f32(&mut got, n, &FwhtOptions::normalized(n));
+            fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
+            assert_close(&got, &want, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn fwht8_is_h8() {
+        // single 8-block equals a size-8 scalar transform
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec(8);
+        let mut got = x.clone();
+        fwht8(&mut got);
+        let mut want = x;
+        fwht_scalar_f32(&mut want, 8, &FwhtOptions::raw());
+        assert_close(&got, &want, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn property_matches_scalar_random_shapes() {
+        check("dao vs scalar", 30, |rng| {
+            let n = 1usize << rng.range(1, 13);
+            let rows = rng.range(1, 4);
+            let x = rng.normal_vec(rows * n);
+            let mut got = x.clone();
+            let mut want = x;
+            fwht_dao_f32(&mut got, n, &FwhtOptions::raw());
+            fwht_scalar_f32(&mut want, n, &FwhtOptions::raw());
+            assert_close(&got, &want, 1e-4, 1e-3);
+        });
+    }
+
+    #[test]
+    fn out_of_place_matches_in_place() {
+        let mut rng = Rng::new(3);
+        let n = 256;
+        let src = rng.normal_vec(4 * n);
+        let mut oop = vec![0.0f32; src.len()];
+        fwht_dao_f32_out_of_place(&src, &mut oop, n, &FwhtOptions::normalized(n));
+        let mut ip = src.clone();
+        fwht_dao_f32(&mut ip, n, &FwhtOptions::normalized(n));
+        assert_eq!(oop, ip);
+    }
+}

@@ -1,0 +1,299 @@
+//! HadaCore: the paper's FWHT as rounds of 16x16 matrix multiplications.
+//!
+//! Every round multiplies one 16-sized axis of the reshaped input by the
+//! constant `H_16` (or, on the final round for non-power-of-16 sizes, by
+//! the §3.3 block-diagonal tiling of `H_{2^m}`), using the [`super::mma`]
+//! microkernel as the matrix-unit stand-in. For `n = 2^m * 16^r` the
+//! transform completes in `ceil(log16 n)` rounds instead of `log2 n`
+//! butterfly levels — the paper's core trade: `16 m n ceil(log16 n)` flops
+//! on matrix hardware vs `2 m n log2 n` flops on scalar hardware.
+//!
+//! Memory layout of the rounds (per row of length `n`, fastest axis
+//! first): `[2^m | 16 | 16 | ... | 16]`. Round 0 transforms the fastest
+//! 16 contiguous elements (one `right_mul_h` over the whole buffer — the
+//! analogue of the CUDA kernel transforming each 16x16 register fragment);
+//! round `i` transforms the 16-axis with inner stride `2^m * 16^(i-1)`
+//! via strided left-multiplies (the analogue of the transpose-through-
+//! shared-memory step: on CPU the "transpose" is pure addressing).
+//!
+//! Two residual-factor strategies are implemented (and benchmarked as an
+//! ablation — DESIGN.md E8):
+//!
+//! * [`ResidualMode::BlockDiagonal`] (default, paper-faithful): the `2^m`
+//!   factor is one extra full 16x16 round with `I kron H_{2^m}`. This
+//!   reproduces the paper's cost structure — e.g. size 512 pays the same
+//!   number of rounds as 4096, the effect visible in its results tables.
+//! * [`ResidualMode::SmallFactor`]: contract the `2^m` axis directly with
+//!   the small `H_{2^m}` matrix (cheaper; what a CPU would actually do).
+
+use super::matrices::factor_16;
+use super::mma::{
+    left_mul_h16_strided_fast, left_mul_small_strided_fast,
+    right_mul_fused_chunk_fast, right_mul_h16_fast,
+};
+use super::{validate_dims, FwhtOptions};
+
+/// Strategy for the non-power-of-16 residual factor (paper §3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidualMode {
+    /// Full 16x16 round with the block-diagonal tiling (paper-faithful).
+    BlockDiagonal,
+    /// Direct contraction with the small `H_{2^m}` factor.
+    SmallFactor,
+}
+
+/// HadaCore kernel configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HadaCoreConfig {
+    /// Residual-factor strategy.
+    pub residual: ResidualMode,
+}
+
+impl Default for HadaCoreConfig {
+    fn default() -> Self {
+        HadaCoreConfig { residual: ResidualMode::BlockDiagonal }
+    }
+}
+
+/// In-place HadaCore FWHT of every `n`-sized row (default configuration).
+pub fn fwht_hadacore_f32(data: &mut [f32], n: usize, opts: &FwhtOptions) {
+    fwht_hadacore_f32_cfg(data, n, opts, &HadaCoreConfig::default());
+}
+
+/// In-place HadaCore FWHT with an explicit configuration.
+pub fn fwht_hadacore_f32_cfg(
+    data: &mut [f32],
+    n: usize,
+    opts: &FwhtOptions,
+    cfg: &HadaCoreConfig,
+) {
+    let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+    let (m, r) = factor_16(n);
+
+    if n < 16 {
+        // base case: n in {2,4,8} — one small round per row
+        for row in data.chunks_exact_mut(n) {
+            left_mul_small_strided_fast(row, n, 1);
+        }
+        apply_scale(data, opts.scale);
+        return;
+    }
+
+    match cfg.residual {
+        ResidualMode::BlockDiagonal => {
+            // Round 0: fastest 16 elements x (BD residual fused when m>0,
+            // plain H16 when m==0 — in that case round 0 IS the first
+            // 16-round).
+            if m > 0 {
+                // fused: BD round + first 16-round = one contiguous
+                // butterfly over chunks of 16 * 2^m (see mma.rs §Perf)
+                let chunk = (1usize << m) * 16;
+                right_mul_fused_chunk_fast(data, chunk.min(n));
+                // remaining 16-rounds at inner = 2^m * 16^i for i in 1..r
+                for i in 1..r {
+                    let inner = (1usize << m) * 16usize.pow(i);
+                    strided_round(data, rows, n, inner);
+                }
+            } else {
+                right_mul_h16_fast(data);
+                for i in 1..r {
+                    let inner = 16usize.pow(i);
+                    strided_round(data, rows, n, inner);
+                }
+            }
+        }
+        ResidualMode::SmallFactor => {
+            // 16-rounds at inner = 16^i, then the small residual factor
+            // on the slowest axis.
+            right_mul_h16_fast(data);
+            for i in 1..r {
+                let inner = 16usize.pow(i);
+                strided_round(data, rows, n, inner);
+            }
+            if m > 0 {
+                let inner = 16usize.pow(r);
+                for row in data.chunks_exact_mut(n) {
+                    left_mul_small_strided_fast(row, 1 << m, inner);
+                }
+            }
+        }
+    }
+    apply_scale(data, opts.scale);
+}
+
+/// One 16-round on the axis with inner stride `inner` (> 1): for every row
+/// and every outer block, left-multiply the `(16, inner)` view by `H16`.
+#[inline]
+fn strided_round(data: &mut [f32], rows: usize, n: usize, inner: usize) {
+    debug_assert!(inner >= 1);
+    if inner == 1 {
+        right_mul_h16_fast(data);
+        return;
+    }
+    let block = 16 * inner;
+    let blocks_per_row = n / block;
+    for row_i in 0..rows {
+        let row = &mut data[row_i * n..(row_i + 1) * n];
+        for b in 0..blocks_per_row {
+            left_mul_h16_strided_fast(&mut row[b * block..(b + 1) * block], inner);
+        }
+    }
+}
+
+#[inline]
+fn apply_scale(data: &mut [f32], scale: f32) {
+    if scale != 1.0 {
+        for v in data.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+/// FLOP count of the HadaCore algorithm for an `(rows, n)` transform —
+/// `16 * rows * n * ceil(log16 n)` (paper §3.4). Used by the GPU model
+/// and the roofline report.
+pub fn hadacore_flops(rows: usize, n: usize) -> u64 {
+    let (m, r) = factor_16(n);
+    let rounds = r + u32::from(m > 0);
+    // each round: (rows*n/16) 16x16x16-vector products = rows*n*16 MACs = 2*16*rows*n flops
+    2 * 16 * rows as u64 * n as u64 * rounds as u64 / 2
+}
+
+/// FLOP count of the butterfly algorithm — `2 * rows * n * log2 n`.
+pub fn butterfly_flops(rows: usize, n: usize) -> u64 {
+    2 * rows as u64 * n as u64 * n.trailing_zeros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::scalar::fwht_scalar_f32;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_scalar_all_sizes() {
+        let mut rng = Rng::new(1);
+        for k in 1..=15 {
+            let n = 1usize << k;
+            let rows = if n > 4096 { 2 } else { 5 };
+            let x = rng.normal_vec(rows * n);
+            let mut got = x.clone();
+            let mut want = x.clone();
+            fwht_hadacore_f32(&mut got, n, &FwhtOptions::normalized(n));
+            fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
+            assert_close(&got, &want, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn residual_modes_agree() {
+        let mut rng = Rng::new(2);
+        for n in [32usize, 128, 512, 2048, 8192] {
+            let x = rng.normal_vec(3 * n);
+            let mut a = x.clone();
+            let mut b = x;
+            fwht_hadacore_f32_cfg(
+                &mut a,
+                n,
+                &FwhtOptions::raw(),
+                &HadaCoreConfig { residual: ResidualMode::BlockDiagonal },
+            );
+            fwht_hadacore_f32_cfg(
+                &mut b,
+                n,
+                &FwhtOptions::raw(),
+                &HadaCoreConfig { residual: ResidualMode::SmallFactor },
+            );
+            assert_close(&a, &b, 1e-4, 1e-3);
+        }
+    }
+
+    #[test]
+    fn paper_grid_sizes_match_dao() {
+        let mut rng = Rng::new(3);
+        for n in [128usize, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768] {
+            let x = rng.normal_vec(2 * n);
+            let mut got = x.clone();
+            let mut want = x;
+            fwht_hadacore_f32(&mut got, n, &FwhtOptions::normalized(n));
+            crate::hadamard::dao::fwht_dao_f32(
+                &mut want,
+                n,
+                &FwhtOptions::normalized(n),
+            );
+            assert_close(&got, &want, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn property_matches_scalar() {
+        check("hadacore vs scalar", 30, |rng| {
+            let n = 1usize << rng.range(1, 13);
+            let rows = rng.range(1, 4);
+            let x = rng.normal_vec(rows * n);
+            let mut got = x.clone();
+            let mut want = x;
+            fwht_hadacore_f32(&mut got, n, &FwhtOptions::raw());
+            fwht_scalar_f32(&mut want, n, &FwhtOptions::raw());
+            assert_close(&got, &want, 1e-3, 1e-2);
+        });
+    }
+
+    #[test]
+    fn property_involution_and_linearity() {
+        check("hadacore involution", 15, |rng| {
+            let n = 1usize << rng.range(4, 12);
+            let x = rng.normal_vec(n);
+            let mut y = x.clone();
+            let opts = FwhtOptions::normalized(n);
+            fwht_hadacore_f32(&mut y, n, &opts);
+            fwht_hadacore_f32(&mut y, n, &opts);
+            assert_close(&y, &x, 1e-4, 1e-4);
+        });
+        check("hadacore linearity", 15, |rng| {
+            let n = 1usize << rng.range(4, 10);
+            let alpha = (rng.f32() - 0.5) * 4.0;
+            let x = rng.normal_vec(n);
+            let z: Vec<f32> = x.iter().map(|v| v * alpha).collect();
+            let mut tx = x.clone();
+            let mut tz = z;
+            let opts = FwhtOptions::raw();
+            fwht_hadacore_f32(&mut tx, n, &opts);
+            fwht_hadacore_f32(&mut tz, n, &opts);
+            let scaled: Vec<f32> = tx.iter().map(|v| v * alpha).collect();
+            assert_close(&tz, &scaled, 1e-3, 1e-2);
+        });
+    }
+
+    #[test]
+    fn flop_counts_match_paper_formulas() {
+        // paper §3.4: hadacore >= 2x butterfly flops at power-of-16 sizes
+        assert_eq!(butterfly_flops(1, 256), 2 * 256 * 8);
+        assert_eq!(hadacore_flops(1, 256), 16 * 256 * 2);
+        assert_eq!(hadacore_flops(1, 4096), 16 * 4096 * 3);
+        // ceil(log16): 512 pays 3 rounds like 4096
+        assert_eq!(hadacore_flops(1, 512), 16 * 512 * 3);
+        // 8K pays 4 rounds, same as 32K (paper results note)
+        assert_eq!(hadacore_flops(1, 8192), 16 * 8192 * 4);
+        assert_eq!(hadacore_flops(1, 32768), 16 * 32768 * 4);
+    }
+
+    #[test]
+    fn impulse_gives_hadamard_row() {
+        // transform of e_k is the k-th row of H_n
+        let n = 64;
+        for k in [0usize, 1, 37] {
+            let mut x = vec![0.0f32; n];
+            x[k] = 1.0;
+            fwht_hadacore_f32(&mut x, n, &FwhtOptions::raw());
+            for j in 0..n {
+                assert_eq!(
+                    x[j],
+                    crate::hadamard::matrices::hadamard_entry(k, j),
+                    "row {k} col {j}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Walsh-Hadamard matrix construction and factorisation helpers.
+//!
+//! Sylvester/Walsh-Hadamard matrices in natural (Hadamard) ordering:
+//! `H[i][j] = (-1)^popcount(i & j)` — the closed form of the recursive
+//! construction `H_{2n} = [[H_n, H_n], [H_n, -H_n]]`. `H16` is the constant
+//! factor every HadaCore round multiplies by (the CUDA kernel keeps it in
+//! registers; here it is a compile-time table).
+
+/// True iff `n` is a positive power of two.
+pub fn is_pow2(n: usize) -> bool {
+    n > 0 && (n & (n - 1)) == 0
+}
+
+/// Factor `n = 2^m * 16^r` with `0 <= m < 4` (paper §3.3).
+///
+/// Panics if `n` is not a power of two.
+pub fn factor_16(n: usize) -> (u32, u32) {
+    assert!(is_pow2(n), "Hadamard size must be a power of 2, got {n}");
+    let k = n.trailing_zeros();
+    (k % 4, k / 4)
+}
+
+/// Entry of the Walsh-Hadamard matrix in natural order: ±1.
+#[inline]
+pub fn hadamard_entry(i: usize, j: usize) -> f32 {
+    if ((i & j).count_ones() & 1) == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Dense unnormalised `n x n` Walsh-Hadamard matrix (row-major).
+pub fn hadamard_dense(n: usize) -> Vec<f32> {
+    assert!(is_pow2(n), "Hadamard size must be a power of 2, got {n}");
+    let mut h = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            h[i * n + j] = hadamard_entry(i, j);
+        }
+    }
+    h
+}
+
+/// The 16x16 Hadamard factor as a flat row-major table.
+///
+/// Built at first use; entries are exactly ±1.0 so no numerical concerns.
+pub static H16: once_cell::sync::Lazy<[f32; 256]> = once_cell::sync::Lazy::new(|| {
+    let mut h = [0.0f32; 256];
+    for i in 0..16 {
+        for j in 0..16 {
+            h[i * 16 + j] = hadamard_entry(i, j);
+        }
+    }
+    h
+});
+
+/// Paper §3.3 block-diagonal residual factor: `I_{16/2^m} (kron) H_{2^m}`
+/// as a 16x16 row-major table. `m == 0` gives the identity.
+pub fn block_diagonal(m: u32) -> [f32; 256] {
+    assert!(m < 4, "block-diagonal exponent must be < 4, got {m}");
+    let sub = 1usize << m;
+    let mut bd = [0.0f32; 256];
+    for i in 0..16 {
+        for j in 0..16 {
+            if i / sub == j / sub {
+                bd[i * 16 + j] = hadamard_entry(i % sub, j % sub);
+            }
+        }
+    }
+    bd
+}
+
+/// Multiply a dense row-vector by a dense matrix: `y = x @ M` (n x n).
+/// Test helper — O(n^2), used only to validate kernels at small sizes.
+pub fn matvec_right(x: &[f32], m: &[f32], n: usize, y: &mut [f32]) {
+    assert_eq!(x.len(), n);
+    assert_eq!(m.len(), n * n);
+    assert_eq!(y.len(), n);
+    for j in 0..n {
+        let mut acc = 0.0f64;
+        for k in 0..n {
+            acc += x[k] as f64 * m[k * n + j] as f64;
+        }
+        y[j] = acc as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_16_cases() {
+        assert_eq!(factor_16(16), (0, 1));
+        assert_eq!(factor_16(256), (0, 2));
+        assert_eq!(factor_16(128), (3, 1));
+        assert_eq!(factor_16(512), (1, 2));
+        assert_eq!(factor_16(2048), (3, 2));
+        assert_eq!(factor_16(4096), (0, 3));
+        assert_eq!(factor_16(32768), (3, 3));
+        assert_eq!(factor_16(2), (1, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "power of 2")]
+    fn factor_16_rejects_non_pow2() {
+        factor_16(48);
+    }
+
+    #[test]
+    fn h16_matches_sylvester_recursion() {
+        // H_16 from the closed form must satisfy the 2x2 block recursion.
+        let h16 = &*H16;
+        let h8 = hadamard_dense(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                let v = h8[i * 8 + j];
+                assert_eq!(h16[i * 16 + j], v);
+                assert_eq!(h16[i * 16 + (j + 8)], v);
+                assert_eq!(h16[(i + 8) * 16 + j], v);
+                assert_eq!(h16[(i + 8) * 16 + (j + 8)], -v);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_orthogonality() {
+        for n in [2usize, 4, 16, 64] {
+            let h = hadamard_dense(n);
+            for i in 0..n {
+                for j in 0..n {
+                    let dot: f32 =
+                        (0..n).map(|k| h[i * n + k] * h[j * n + k]).sum();
+                    let want = if i == j { n as f32 } else { 0.0 };
+                    assert_eq!(dot, want, "rows {i},{j} of H_{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_symmetric() {
+        for n in [4usize, 32, 128] {
+            let h = hadamard_dense(n);
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(h[i * n + j], h[j * n + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_diagonal_structure() {
+        for m in 0..4u32 {
+            let bd = block_diagonal(m);
+            let sub = 1usize << m;
+            for i in 0..16 {
+                for j in 0..16 {
+                    let v = bd[i * 16 + j];
+                    if i / sub == j / sub {
+                        assert_eq!(v, hadamard_entry(i % sub, j % sub));
+                    } else {
+                        assert_eq!(v, 0.0);
+                    }
+                }
+            }
+        }
+        // m=0 is the identity
+        let id = block_diagonal(0);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(id[i * 16 + j], if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_right_identity() {
+        let n = 8;
+        let mut id = vec![0.0f32; n * n];
+        for i in 0..n {
+            id[i * n + i] = 1.0;
+        }
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut y = vec![0.0f32; n];
+        matvec_right(&x, &id, n, &mut y);
+        assert_eq!(x, y);
+    }
+}

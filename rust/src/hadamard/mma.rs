@@ -1,0 +1,487 @@
+//! 16x16 tile matrix-multiply microkernel — the CPU stand-in for one
+//! Tensor Core `mma` pair / one MXU tile op.
+//!
+//! The paper performs a 16x16 x 16x16 product with two
+//! `mma.m16n8k16` instructions. On CPU the analogous primitive is a fully
+//! unrolled 16x16 kernel that LLVM auto-vectorises to AVX/NEON lanes: the
+//! inner dimension (16 f32 = 64 B = one cache line) maps onto SIMD
+//! registers, and the `k` loop accumulates fused multiply-adds.
+//!
+//! Three shapes cover every use in the HadaCore rounds:
+//!
+//! * [`right_mul_h`]  — `X (R x 16, row-major) <- X @ M` for tall-skinny X
+//!   (the fast-axis round; R is `rows * n / 16`).
+//! * [`left_mul_h_strided`] — `B (16 x inner) <- M @ B` where B's rows are
+//!   `inner` apart in memory (the strided rounds; vectorises over `inner`).
+//! * [`mm16`] — plain 16x16 x 16x16 product used by tests and the padded
+//!   cross-chunk round.
+
+/// C = A @ B for 16x16 row-major tiles (f32, FP32 accumulate).
+#[inline]
+pub fn mm16(a: &[f32; 256], b: &[f32; 256], c: &mut [f32; 256]) {
+    for i in 0..16 {
+        let mut acc = [0.0f32; 16];
+        for k in 0..16 {
+            let aik = a[i * 16 + k];
+            let brow = &b[k * 16..k * 16 + 16];
+            for j in 0..16 {
+                acc[j] += aik * brow[j];
+            }
+        }
+        c[i * 16..i * 16 + 16].copy_from_slice(&acc);
+    }
+}
+
+/// In-place `X <- X @ M` where `x` is `(rows, 16)` row-major contiguous
+/// and `m` is a 16x16 row-major factor (H16 or a block-diagonal tile).
+///
+/// This is the fast-axis HadaCore round: every contiguous group of 16
+/// elements is one row of X. Rows are processed in blocks of 4 to give
+/// the compiler independent accumulator chains.
+pub fn right_mul_h(x: &mut [f32], m: &[f32; 256]) {
+    debug_assert!(x.len() % 16 == 0);
+    let rows = x.len() / 16;
+    let mut i = 0;
+    // unrolled pairs of rows: two independent accumulator sets
+    while i + 2 <= rows {
+        let (r0, rest) = x[i * 16..].split_at_mut(16);
+        let r1 = &mut rest[..16];
+        let mut acc0 = [0.0f32; 16];
+        let mut acc1 = [0.0f32; 16];
+        for k in 0..16 {
+            let a0 = r0[k];
+            let a1 = r1[k];
+            let mrow = &m[k * 16..k * 16 + 16];
+            for j in 0..16 {
+                acc0[j] += a0 * mrow[j];
+                acc1[j] += a1 * mrow[j];
+            }
+        }
+        r0.copy_from_slice(&acc0);
+        r1.copy_from_slice(&acc1);
+        i += 2;
+    }
+    if i < rows {
+        let r = &mut x[i * 16..i * 16 + 16];
+        let mut acc = [0.0f32; 16];
+        for k in 0..16 {
+            let a = r[k];
+            let mrow = &m[k * 16..k * 16 + 16];
+            for j in 0..16 {
+                acc[j] += a * mrow[j];
+            }
+        }
+        r.copy_from_slice(&acc);
+    }
+}
+
+/// In-place `B <- M @ B` where `b` views a `(16, inner)` block whose rows
+/// are `inner` elements apart starting at `b[0]` (so `b.len() == 16*inner`),
+/// and `m` is a 16x16 row-major factor.
+///
+/// This is the strided HadaCore round: the contraction runs over the 16
+/// strided rows while the arithmetic vectorises over the contiguous
+/// `inner` axis. Since `M` entries are ±1 (or 0 on the block-diagonal
+/// tile) the products still compile to mul+add chains over full SIMD
+/// width; specialising to add/sub is the job of the perf pass if the
+/// profile asks for it.
+///
+/// Works column-tile by column-tile (64 columns = 4 cache lines) to stay
+/// in registers/L1 for very large `inner`.
+pub fn left_mul_h_strided(b: &mut [f32], inner: usize, m: &[f32; 256]) {
+    debug_assert_eq!(b.len(), 16 * inner);
+    const TILE: usize = 64;
+    let mut col = 0;
+    let mut tmp = [0.0f32; 16 * TILE];
+    while col < inner {
+        let w = TILE.min(inner - col);
+        // gather-compute-scatter on a (16, w) column tile
+        for i in 0..16 {
+            let out = &mut tmp[i * w..(i + 1) * w];
+            out.iter_mut().for_each(|v| *v = 0.0);
+            for k in 0..16 {
+                let mik = m[i * 16 + k];
+                if mik == 0.0 {
+                    continue; // block-diagonal tiles are mostly zero
+                }
+                let src = &b[k * inner + col..k * inner + col + w];
+                for (o, s) in out.iter_mut().zip(src.iter()) {
+                    *o += mik * s;
+                }
+            }
+        }
+        for i in 0..16 {
+            b[i * inner + col..i * inner + col + w]
+                .copy_from_slice(&tmp[i * w..(i + 1) * w]);
+        }
+        col += w;
+    }
+}
+
+/// In-place `B <- M @ B` for a `(size, inner)` block with `size < 16`
+/// (the small cross-chunk factor for n/256 < 16, and the n<16 base case).
+/// `m` is `size x size` row-major.
+pub fn left_mul_small_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    debug_assert_eq!(b.len(), size * inner);
+    debug_assert_eq!(m.len(), size * size);
+    const TILE: usize = 64;
+    let mut tmp = vec![0.0f32; size * TILE];
+    let mut col = 0;
+    while col < inner {
+        let w = TILE.min(inner - col);
+        for i in 0..size {
+            let out = &mut tmp[i * w..(i + 1) * w];
+            out.iter_mut().for_each(|v| *v = 0.0);
+            for k in 0..size {
+                let mik = m[i * size + k];
+                let src = &b[k * inner + col..k * inner + col + w];
+                for (o, s) in out.iter_mut().zip(src.iter()) {
+                    *o += mik * s;
+                }
+            }
+        }
+        for i in 0..size {
+            b[i * inner + col..i * inner + col + w]
+                .copy_from_slice(&tmp[i * w..(i + 1) * w]);
+        }
+        col += w;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fast constant-factor paths (§Perf).
+//
+// The generic tile kernels above multiply by an arbitrary 16x16 matrix —
+// the faithful stand-in for a Tensor Core/MXU `mma`, and what the tests
+// verify against. For the *constant* Hadamard factors the product has a
+// closed butterfly form (H16 = 4 radix-2 stages; the §3.3 block-diagonal
+// tile = m stages), which removes the mul-by-±1 generality the
+// auto-vectoriser cannot see through. Profiling showed the generic path
+// ran ~10-30x below the butterfly baseline because the `m[i*16+k]`
+// branch-and-multiply pattern defeats SLP vectorisation; these
+// specialisations are the optimisation the perf pass landed
+// (EXPERIMENTS.md §Perf has the before/after).
+
+/// Butterfly stages `h = 1,2,..,2^(stages-1)` on one contiguous 16-group.
+#[inline(always)]
+fn fwht16_stages(c: &mut [f32], stages: u32) {
+    let mut h = 1usize;
+    for _ in 0..stages {
+        let mut i = 0;
+        while i < 16 {
+            for j in i..i + h {
+                let a = c[j];
+                let b = c[j + h];
+                c[j] = a + b;
+                c[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Fast `X <- X @ H16` over a `(rows, 16)` contiguous buffer:
+/// the 16x16 constant product realised as 4 radix-2 stages per row.
+pub fn right_mul_h16_fast(x: &mut [f32]) {
+    debug_assert!(x.len() % 16 == 0);
+    for chunk in x.chunks_exact_mut(16) {
+        fwht16_stages(chunk, 4);
+    }
+}
+
+/// Fast `X <- X @ (I kron H_{2^m})` over a `(rows, 16)` contiguous buffer
+/// (the paper's §3.3 block-diagonal residual round): m stages per group.
+pub fn right_mul_bd_fast(x: &mut [f32], m: u32) {
+    debug_assert!(m < 4);
+    if m == 0 {
+        return; // identity
+    }
+    for chunk in x.chunks_exact_mut(16) {
+        fwht16_stages(chunk, m);
+    }
+}
+
+/// Fused round 0 for the block-diagonal path (§Perf iteration 2): the BD
+/// residual round (m stages on the fastest 2^m axis) followed by the
+/// first 16-round (4 stages at stride 2^m) equals one contiguous
+/// butterfly of size `16 * 2^m` — `H_{2^m}` fast kron `H16` next is
+/// `H_{16*2^m}` on the fastest contiguous chunk. One memory pass instead
+/// of two, and no short-stride stage.
+pub fn right_mul_fused_chunk_fast(x: &mut [f32], chunk: usize) {
+    debug_assert!(chunk.is_power_of_two() && (16..=128).contains(&chunk));
+    debug_assert!(x.len() % chunk == 0);
+    // stages 1..4 as fully-unrolled 16-groups (H16 fast-axis; the
+    // fixed-16 bound lets LLVM unroll + SLP-vectorise) ...
+    for g in x.chunks_exact_mut(16) {
+        fwht16_stages(g, 4);
+    }
+    // ... then the 2^m factor as levels h = 16,32,64: contiguous runs of
+    // h elements, which vectorise at full width (Kronecker factors on
+    // disjoint axes commute, so the order swap is exact).
+    for c in x.chunks_exact_mut(chunk) {
+        let mut h = 16usize;
+        while h < chunk {
+            let mut i = 0;
+            while i < chunk {
+                let (lo, hi) = c[i..i + 2 * h].split_at_mut(h);
+                for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let xa = *a;
+                    let xb = *b;
+                    *a = xa + xb;
+                    *b = xa - xb;
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+    }
+}
+
+/// Fast `B <- H16 @ B` for a `(16, inner)` block with row stride `inner`:
+/// 4 butterfly stages over the row index; each stage is a pair of
+/// contiguous `inner`-length vector add/subs, which vectorises at full
+/// width.
+///
+/// §Perf note: a register-tiled single-pass variant (load a 16x16 tile,
+/// run all 4 stages in registers, store — the CUDA kernel's fragment
+/// pattern) was tried and measured *slower* on this CPU (0.45-0.9x vs
+/// 0.6-1.1x against the baseline): the strided 16-float tile loads defeat
+/// the hardware prefetcher, while the stage-pass form streams whole rows.
+/// Run-to-run noise on this machine is ~±30-40% at large working sets;
+/// medians over 12 samples were compared. See EXPERIMENTS.md §Perf.
+pub fn left_mul_h16_strided_fast(b: &mut [f32], inner: usize) {
+    debug_assert_eq!(b.len(), 16 * inner);
+    let mut h = 1usize;
+    for _ in 0..4 {
+        let mut i = 0;
+        while i < 16 {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                let row_a = &mut head[j * inner..j * inner + inner];
+                let row_b = &mut tail[..inner];
+                for (a, v) in row_a.iter_mut().zip(row_b.iter_mut()) {
+                    let x = *a;
+                    let y = *v;
+                    *a = x + y;
+                    *v = x - y;
+                }
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// Fast `B <- H_size @ B` for a small `(size, inner)` block (size in
+/// {2,4,8}): log2(size) row-stages.
+pub fn left_mul_small_strided_fast(b: &mut [f32], size: usize, inner: usize) {
+    debug_assert_eq!(b.len(), size * inner);
+    debug_assert!(size.is_power_of_two() && size <= 16);
+    let mut h = 1usize;
+    while h < size {
+        let mut i = 0;
+        while i < size {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                let row_a = &mut head[j * inner..j * inner + inner];
+                let row_b = &mut tail[..inner];
+                for (a, v) in row_a.iter_mut().zip(row_b.iter_mut()) {
+                    let x = *a;
+                    let y = *v;
+                    *a = x + y;
+                    *v = x - y;
+                }
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::matrices::{block_diagonal, hadamard_dense, H16};
+    use crate::util::rng::Rng;
+
+    fn naive_mm(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                for j in 0..n {
+                    c[i * n + j] += a[i * n + k] * b[k * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn mm16_matches_naive() {
+        let mut rng = Rng::new(1);
+        let mut a = [0.0f32; 256];
+        let mut b = [0.0f32; 256];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        let mut c = [0.0f32; 256];
+        mm16(&a, &b, &mut c);
+        let want = naive_mm(&a, &b, 16);
+        for (g, w) in c.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mm16_h16_squared_is_16_identity() {
+        // H16 @ H16 = 16 * I
+        let mut c = [0.0f32; 256];
+        mm16(&H16, &H16, &mut c);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 16.0 } else { 0.0 };
+                assert_eq!(c[i * 16 + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn right_mul_matches_naive_rows() {
+        let mut rng = Rng::new(2);
+        for rows in [1usize, 2, 3, 7, 16] {
+            let mut x = rng.normal_vec(rows * 16);
+            let orig = x.clone();
+            right_mul_h(&mut x, &H16);
+            for r in 0..rows {
+                for j in 0..16 {
+                    let want: f32 =
+                        (0..16).map(|k| orig[r * 16 + k] * H16[k * 16 + j]).sum();
+                    assert!((x[r * 16 + j] - want).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn left_mul_strided_matches_naive() {
+        let mut rng = Rng::new(3);
+        for inner in [1usize, 5, 16, 64, 100, 256] {
+            let mut b = rng.normal_vec(16 * inner);
+            let orig = b.clone();
+            left_mul_h_strided(&mut b, inner, &H16);
+            for i in 0..16 {
+                for c in 0..inner {
+                    let want: f32 = (0..16)
+                        .map(|k| H16[i * 16 + k] * orig[k * inner + c])
+                        .sum();
+                    assert!(
+                        (b[i * inner + c] - want).abs() < 1e-3,
+                        "inner={inner} i={i} c={c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn left_mul_strided_block_diagonal_skips_zeros() {
+        let bd = block_diagonal(2); // H4 tiled: 75% zeros
+        let mut rng = Rng::new(4);
+        let inner = 32;
+        let mut b = rng.normal_vec(16 * inner);
+        let orig = b.clone();
+        left_mul_h_strided(&mut b, inner, &bd);
+        for i in 0..16 {
+            for c in 0..inner {
+                let want: f32 =
+                    (0..16).map(|k| bd[i * 16 + k] * orig[k * inner + c]).sum();
+                assert!((b[i * inner + c] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_right_mul_matches_generic() {
+        let mut rng = Rng::new(21);
+        for rows in [1usize, 3, 8] {
+            let x = rng.normal_vec(rows * 16);
+            let mut fast = x.clone();
+            let mut generic = x;
+            right_mul_h16_fast(&mut fast);
+            right_mul_h(&mut generic, &H16);
+            for (a, b) in fast.iter().zip(generic.iter()) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_right_mul_bd_matches_generic() {
+        let mut rng = Rng::new(22);
+        for m in 0..4u32 {
+            let bd = block_diagonal(m);
+            let x = rng.normal_vec(4 * 16);
+            let mut fast = x.clone();
+            let mut generic = x;
+            right_mul_bd_fast(&mut fast, m);
+            right_mul_h(&mut generic, &bd);
+            for (a, b) in fast.iter().zip(generic.iter()) {
+                assert!((a - b).abs() < 1e-4, "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_left_mul_matches_generic() {
+        let mut rng = Rng::new(23);
+        for inner in [1usize, 2, 8, 37, 256] {
+            let x = rng.normal_vec(16 * inner);
+            let mut fast = x.clone();
+            let mut generic = x;
+            left_mul_h16_strided_fast(&mut fast, inner);
+            left_mul_h_strided(&mut generic, inner, &H16);
+            for (a, b) in fast.iter().zip(generic.iter()) {
+                assert!((a - b).abs() < 1e-3, "inner={inner}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_left_small_matches_generic() {
+        let mut rng = Rng::new(24);
+        for size in [2usize, 4, 8] {
+            let h = hadamard_dense(size);
+            for inner in [1usize, 5, 64] {
+                let x = rng.normal_vec(size * inner);
+                let mut fast = x.clone();
+                let mut generic = x;
+                left_mul_small_strided_fast(&mut fast, size, inner);
+                left_mul_small_strided(&mut generic, size, inner, &h);
+                for (a, b) in fast.iter().zip(generic.iter()) {
+                    assert!((a - b).abs() < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn left_mul_small_matches_naive() {
+        let mut rng = Rng::new(5);
+        for size in [2usize, 4, 8] {
+            let h = hadamard_dense(size);
+            for inner in [1usize, 17, 64, 80] {
+                let mut b = rng.normal_vec(size * inner);
+                let orig = b.clone();
+                left_mul_small_strided(&mut b, size, inner, &h);
+                for i in 0..size {
+                    for c in 0..inner {
+                        let want: f32 = (0..size)
+                            .map(|k| h[i * size + k] * orig[k * inner + c])
+                            .sum();
+                        assert!((b[i * inner + c] - want).abs() < 1e-3);
+                    }
+                }
+            }
+        }
+    }
+}

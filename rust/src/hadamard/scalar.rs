@@ -1,0 +1,128 @@
+//! Textbook in-place butterfly FWHT — the correctness oracle.
+//!
+//! Direct transcription of the paper's §2.2 pseudocode (per row): `log2(n)`
+//! levels, each pairing elements `h` apart with an add/sub. Deliberately
+//! unoptimised — every other kernel is validated against this one, which
+//! in turn is validated against the dense Hadamard matmul in tests.
+
+use super::{validate_dims, FwhtOptions};
+
+/// In-place scalar FWHT of every `n`-sized row in `data`.
+///
+/// Panics on invalid dimensions (see [`validate_dims`]).
+pub fn fwht_scalar_f32(data: &mut [f32], n: usize, opts: &FwhtOptions) {
+    let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+    for r in 0..rows {
+        let row = &mut data[r * n..(r + 1) * n];
+        let mut h = 1;
+        while h < n {
+            let mut i = 0;
+            while i < n {
+                for j in i..i + h {
+                    let x = row[j];
+                    let y = row[j + h];
+                    row[j] = x + y;
+                    row[j + h] = x - y;
+                }
+                i += h * 2;
+            }
+            h *= 2;
+        }
+        if opts.scale != 1.0 {
+            for v in row.iter_mut() {
+                *v *= opts.scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::matrices::{hadamard_dense, matvec_right};
+    use crate::util::prop::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn size_2_by_hand() {
+        let mut d = vec![3.0f32, 1.0];
+        fwht_scalar_f32(&mut d, 2, &FwhtOptions::raw());
+        assert_eq!(d, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn size_4_by_hand() {
+        // H4 @ [1,0,0,0] = first row of H4 = [1,1,1,1]
+        let mut d = vec![1.0f32, 0.0, 0.0, 0.0];
+        fwht_scalar_f32(&mut d, 4, &FwhtOptions::raw());
+        assert_eq!(d, vec![1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn matches_dense_matmul_all_small_sizes() {
+        let mut rng = Rng::new(42);
+        for n in [2usize, 4, 8, 16, 32, 64, 128, 256, 512] {
+            let h = hadamard_dense(n);
+            let x = rng.normal_vec(n);
+            let mut got = x.clone();
+            fwht_scalar_f32(&mut got, n, &FwhtOptions::raw());
+            let mut want = vec![0.0f32; n];
+            matvec_right(&x, &h, n, &mut want);
+            assert_close(&got, &want, 1e-4, 1e-3);
+        }
+    }
+
+    #[test]
+    fn multi_row_independent() {
+        let mut rng = Rng::new(7);
+        let n = 64;
+        let rows = 5;
+        let data = rng.normal_vec(rows * n);
+        // transform all rows at once
+        let mut all = data.clone();
+        fwht_scalar_f32(&mut all, n, &FwhtOptions::raw());
+        // transform each row separately
+        for r in 0..rows {
+            let mut one = data[r * n..(r + 1) * n].to_vec();
+            fwht_scalar_f32(&mut one, n, &FwhtOptions::raw());
+            assert_eq!(&all[r * n..(r + 1) * n], &one[..]);
+        }
+    }
+
+    #[test]
+    fn normalized_is_involution() {
+        check("scalar involution", 20, |rng| {
+            let k = rng.range(1, 10);
+            let n = 1usize << k;
+            let x = rng.normal_vec(2 * n);
+            let mut y = x.clone();
+            let opts = FwhtOptions::normalized(n);
+            fwht_scalar_f32(&mut y, n, &opts);
+            fwht_scalar_f32(&mut y, n, &opts);
+            assert_close(&y, &x, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn preserves_norm_when_normalized() {
+        check("scalar norm", 20, |rng| {
+            let n = 1usize << rng.range(1, 12);
+            let x = rng.normal_vec(n);
+            let mut y = x.clone();
+            fwht_scalar_f32(&mut y, n, &FwhtOptions::normalized(n));
+            let nx: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            let ny: f64 = y.iter().map(|v| (*v as f64).powi(2)).sum();
+            assert!(
+                ((nx - ny).abs() / nx.max(1e-12)) < 1e-4,
+                "norm drift: {nx} vs {ny}"
+            );
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid dimensions")]
+    fn rejects_bad_len() {
+        let mut d = vec![0.0f32; 100];
+        fwht_scalar_f32(&mut d, 64, &FwhtOptions::raw());
+    }
+}

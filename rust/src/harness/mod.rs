@@ -1,0 +1,12 @@
+//! Experiment harness: workload generation + table/figure regeneration.
+//!
+//! Everything the bench binaries and `examples/paper_tables.rs` need to
+//! print the paper's tables: grid formatting in the paper's layout
+//! (sizes down, element counts across; runtime in µs, speedup in %),
+//! CSV export for plotting, and serving workload generators.
+
+pub mod tables;
+pub mod workload;
+
+pub use tables::{format_runtime_table, format_speedup_table, to_csv, Table};
+pub use workload::{ServingWorkload, WorkloadConfig};

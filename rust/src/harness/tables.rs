@@ -1,0 +1,144 @@
+//! Paper-layout table formatting.
+//!
+//! The paper's appendix tables put Hadamard sizes down the rows and
+//! element counts across the columns; runtimes in µs, speedups as
+//! percentages (Fig 6/7 style). These helpers render any grid of cells in
+//! that layout for terminal output and CSV export.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+/// A generic (row, col) -> value table with the paper's axes.
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Title printed above the table.
+    pub title: String,
+    /// (n, elems, value) triples.
+    pub cells: Vec<(usize, usize, f64)>,
+}
+
+impl Table {
+    /// Build from triples.
+    pub fn new(title: impl Into<String>, cells: Vec<(usize, usize, f64)>) -> Table {
+        Table { title: title.into(), cells }
+    }
+
+    fn axes(&self) -> (Vec<usize>, Vec<usize>) {
+        let rows: BTreeSet<usize> = self.cells.iter().map(|c| c.0).collect();
+        let cols: BTreeSet<usize> = self.cells.iter().map(|c| c.1).collect();
+        (rows.into_iter().collect(), cols.into_iter().collect())
+    }
+
+    fn get(&self, n: usize, e: usize) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.0 == n && c.1 == e)
+            .map(|c| c.2)
+    }
+
+    /// Render with a per-cell formatter.
+    pub fn render(&self, fmt: impl Fn(f64) -> String) -> String {
+        let (rows, cols) = self.axes();
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let _ = write!(out, "{:>9} |", "size\\elems");
+        for c in &cols {
+            let _ = write!(out, "{:>10}", human_count(*c));
+        }
+        let _ = writeln!(out);
+        let _ = writeln!(out, "{}", "-".repeat(12 + 10 * cols.len()));
+        for r in &rows {
+            let _ = write!(out, "{:>9} |", r);
+            for c in &cols {
+                match self.get(*r, *c) {
+                    Some(v) => {
+                        let _ = write!(out, "{:>10}", fmt(v));
+                    }
+                    None => {
+                        let _ = write!(out, "{:>10}", "");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+}
+
+/// 33554432 -> "32M", 512 -> "512".
+pub fn human_count(v: usize) -> String {
+    if v >= 1 << 20 && v % (1 << 20) == 0 {
+        format!("{}M", v >> 20)
+    } else if v >= 1 << 10 && v % (1 << 10) == 0 {
+        format!("{}K", v >> 10)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Runtime table in µs (paper Fig 6a/7a style).
+pub fn format_runtime_table(title: &str, cells: Vec<(usize, usize, f64)>) -> String {
+    Table::new(title, cells).render(|v| format!("{v:.2}"))
+}
+
+/// Speedup table in percent (paper Fig 6b/7b style).
+pub fn format_speedup_table(title: &str, cells: Vec<(usize, usize, f64)>) -> String {
+    Table::new(title, cells).render(|v| format!("{:.0}%", v * 100.0))
+}
+
+/// CSV export: `n,elems,value` lines with a header.
+pub fn to_csv(header: &str, cells: &[(usize, usize, f64)]) -> String {
+    let mut out = format!("n,elems,{header}\n");
+    for (n, e, v) in cells {
+        let _ = writeln!(out, "{n},{e},{v:.6}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<(usize, usize, f64)> {
+        vec![
+            (128, 512, 1.65),
+            (128, 1024, 2.05),
+            (256, 1024, 2.05),
+            (256, 33554432, 86.93),
+        ]
+    }
+
+    #[test]
+    fn renders_paper_layout() {
+        let s = format_runtime_table("A100 runtime (µs)", sample());
+        assert!(s.contains("## A100 runtime"));
+        assert!(s.contains("128"));
+        assert!(s.contains("86.93"));
+        assert!(s.contains("32M"));
+        // empty cell for (128, 33M): row 128 line must end without a value
+        let row128 = s.lines().find(|l| l.trim_start().starts_with("128")).unwrap();
+        assert!(!row128.contains("86.93"));
+    }
+
+    #[test]
+    fn speedup_format_percent() {
+        let s = format_speedup_table("x", vec![(128, 512, 1.2621)]);
+        assert!(s.contains("126%"));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let csv = to_csv("us", &sample());
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("n,elems,us\n"));
+        assert!(csv.contains("256,33554432,86.93"));
+    }
+
+    #[test]
+    fn human_counts() {
+        assert_eq!(human_count(512), "512");
+        assert_eq!(human_count(2048), "2K");
+        assert_eq!(human_count(33554432), "32M");
+        assert_eq!(human_count(1000), "1000");
+    }
+}

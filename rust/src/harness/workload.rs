@@ -1,0 +1,117 @@
+//! Serving workload generation for the coordinator benchmarks.
+//!
+//! Produces deterministic streams of transform requests with a
+//! configurable size mix and payload distribution — the serving-side
+//! analogue of the paper's element-count axis. Used by the e2e example
+//! and the coordinator benches.
+
+use crate::coordinator::TransformRequest;
+use crate::hadamard::KernelKind;
+use crate::util::rng::Rng;
+
+/// Workload configuration.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Hadamard sizes to draw from (uniform mix).
+    pub sizes: Vec<usize>,
+    /// Rows per request: uniform in [min, max].
+    pub rows_min: usize,
+    /// Upper bound (inclusive).
+    pub rows_max: usize,
+    /// Kernel to request.
+    pub kernel: KernelKind,
+    /// Probability a payload is heavy-tailed (outlier-bearing), the
+    /// activation regime the paper's rotations target.
+    pub outlier_fraction: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            sizes: vec![128, 256, 1024, 4096],
+            rows_min: 1,
+            rows_max: 8,
+            kernel: KernelKind::HadaCore,
+            outlier_fraction: 0.2,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Deterministic request stream.
+pub struct ServingWorkload {
+    cfg: WorkloadConfig,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl ServingWorkload {
+    /// New stream from a config.
+    pub fn new(cfg: WorkloadConfig) -> ServingWorkload {
+        let rng = Rng::new(cfg.seed);
+        ServingWorkload { cfg, rng, next_id: 0 }
+    }
+
+    /// Generate the next request.
+    pub fn next_request(&mut self) -> TransformRequest {
+        let n = self.cfg.sizes[self.rng.below(self.cfg.sizes.len())];
+        let rows = self.rng.range(self.cfg.rows_min, self.cfg.rows_max);
+        let heavy = self.rng.chance(self.cfg.outlier_fraction);
+        let mut data = vec![0.0f32; rows * n];
+        for v in data.iter_mut() {
+            *v = if heavy {
+                self.rng.outlier_normal(0.02, 30.0)
+            } else {
+                self.rng.normal_f32()
+            };
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut req = TransformRequest::new(id, n, data);
+        req.kernel = self.cfg.kernel;
+        req
+    }
+
+    /// Generate a batch of requests.
+    pub fn take(&mut self, count: usize) -> Vec<TransformRequest> {
+        (0..count).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ServingWorkload::new(WorkloadConfig::default());
+        let mut b = ServingWorkload::new(WorkloadConfig::default());
+        for _ in 0..10 {
+            let ra = a.next_request();
+            let rb = b.next_request();
+            assert_eq!(ra.n, rb.n);
+            assert_eq!(ra.data, rb.data);
+        }
+    }
+
+    #[test]
+    fn requests_well_formed() {
+        let mut w = ServingWorkload::new(WorkloadConfig::default());
+        for req in w.take(100) {
+            assert!(req.data.len() == req.rows * req.n);
+            assert!(WorkloadConfig::default().sizes.contains(&req.n));
+            assert!(req.rows >= 1 && req.rows <= 8);
+        }
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let mut w = ServingWorkload::new(WorkloadConfig::default());
+        let reqs = w.take(5);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+}

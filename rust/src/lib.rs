@@ -1,0 +1,57 @@
+//! # HadaCore — matrix-unit-accelerated Fast Walsh-Hadamard Transform
+//!
+//! Reproduction of *HadaCore: Tensor Core Accelerated Hadamard Transform
+//! Kernel* (Agarwal, Astra, Hoque, Srivatsa, Ganti, Wright, Chen; 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): the transform as a Pallas
+//!   kernel whose rounds are 16x16 matmuls (MXU-shaped), AOT-lowered to HLO
+//!   text.
+//! * **Layer 2** (`python/compile/model.py`): QuaRot-style quantised
+//!   attention / transformer blocks that call the kernel, lowered the same
+//!   way.
+//! * **Layer 3** (this crate): the serving coordinator — artifact registry,
+//!   request router, dynamic batcher, PJRT runtime — plus the natively
+//!   implemented transform substrate, the quantisation substrate, and the
+//!   analytical GPU model that regenerates every table/figure of the
+//!   paper's evaluation.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`hadamard`] | native FWHT kernels: scalar oracle, Dao-style baseline, HadaCore 16x16-block algorithm, f16/bf16 |
+//! | [`quant`] | FP8/INT8/INT4 simulated quantisation + error metrics |
+//! | [`gpu_model`] | analytical A100/H100 simulator for the paper's evaluation grids |
+//! | [`runtime`] | PJRT wrapper: load AOT HLO-text artifacts, compile, execute |
+//! | [`coordinator`] | request router, bucketed dynamic batcher, metrics, server loop |
+//! | [`harness`] | workload generation + table/figure regeneration |
+//! | [`util`] | std-only support: JSON, f16/bf16 bits, PRNG, CLI, micro-bench, mini-proptest |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath; see examples/quickstart.rs
+//! // for the executed version of this snippet)
+//! use hadacore::hadamard::{fwht_hadacore_f32, FwhtOptions};
+//!
+//! let n = 1024;
+//! let mut data = vec![1.0f32; 4 * n];
+//! fwht_hadacore_f32(&mut data, n, &FwhtOptions::normalized(n));
+//! ```
+
+pub mod coordinator;
+pub mod gpu_model;
+pub mod hadamard;
+pub mod harness;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use hadamard::{fwht_dao_f32, fwht_hadacore_f32, fwht_scalar_f32, FwhtOptions};
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Maximum supported Hadamard size, `2^15` — same ceiling as the paper.
+pub const MAX_HADAMARD_SIZE: usize = 1 << 15;

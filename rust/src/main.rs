@@ -1,0 +1,185 @@
+//! `hadacore` — the coordinator binary.
+//!
+//! Subcommands:
+//!
+//! * `info`      — artifact inventory, platform, weight stats.
+//! * `transform` — one-off transform from the CLI (native or PJRT).
+//! * `serve`     — run the coordinator against a synthetic workload and
+//!                 print the serving metrics (the e2e smoke path).
+//! * `tables`    — regenerate the paper's evaluation tables from the GPU
+//!                 model (see also `examples/paper_tables.rs`).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use hadacore::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use hadacore::gpu_model::{speedup_grid, GridConfig, A100_PCIE, H100_PCIE};
+use hadacore::hadamard::KernelKind;
+use hadacore::harness::tables::{format_runtime_table, format_speedup_table};
+use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
+use hadacore::runtime::Runtime;
+use hadacore::util::cli::Args;
+use hadacore::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    match cmd.as_str() {
+        "info" => info(argv),
+        "transform" => transform(argv),
+        "serve" => serve(argv),
+        "tables" => tables(argv),
+        _ => {
+            println!(
+                "hadacore {} — matrix-unit-accelerated Hadamard transform server\n\n\
+                 usage: hadacore <info|transform|serve|tables> [flags]\n\
+                 run `hadacore <cmd> --help` for per-command flags",
+                hadacore::VERSION
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_flag(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts"))
+}
+
+fn info(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("hadacore info", "artifact + runtime inventory")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::open(artifacts_flag(&args))?;
+    println!("platform: {}", rt.platform());
+    let m = rt.manifest();
+    println!(
+        "model: dim={} heads={} layers={} vocab={} seq={}",
+        m.model.dim, m.model.n_heads, m.model.n_layers, m.model.vocab, m.model.seq_len
+    );
+    let w = rt.weights()?;
+    println!("weights: {} tensors, {} params", w.len(), w.param_count());
+    println!("artifacts ({}):", m.artifacts.len());
+    for a in &m.artifacts {
+        println!(
+            "  {:<28} op={:<11} inputs={} outputs={}",
+            a.name,
+            a.op,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn transform(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("hadacore transform", "one-off Hadamard transform")
+        .opt("n", "256", "Hadamard size")
+        .opt("rows", "4", "rows to transform")
+        .opt("kernel", "hadacore", "kernel: hadacore|dao|scalar")
+        .opt("artifacts", "artifacts", "artifact directory ('' = native only)")
+        .switch("native", "force the native backend")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let n: usize = args.get_as("n");
+    let rows: usize = args.get_as("rows");
+    let kernel = KernelKind::parse(&args.get("kernel"))
+        .ok_or_else(|| anyhow::anyhow!("bad --kernel"))?;
+
+    let dir = args.get("artifacts");
+    let artifact_dir = if dir.is_empty() { None } else { Some(PathBuf::from(dir)) };
+    let coord = Coordinator::start(artifact_dir, CoordinatorConfig::default())?;
+
+    let mut rng = Rng::new(0);
+    let mut req = TransformRequest::new(0, n, rng.normal_vec(rows * n));
+    req.kernel = kernel;
+    req.force_native = args.flag("native");
+    let t0 = Instant::now();
+    let resp = coord.transform(req)?;
+    println!(
+        "transformed {rows}x{n} via {} in {:?} (queue {}us, exec {}us, batch rows {})",
+        resp.backend,
+        t0.elapsed(),
+        resp.queue_us,
+        resp.exec_us,
+        resp.batch_rows
+    );
+    println!("first 8 outputs: {:?}", &resp.data[..8.min(resp.data.len())]);
+    coord.shutdown();
+    Ok(())
+}
+
+fn serve(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("hadacore serve", "synthetic serving workload")
+        .opt("requests", "2000", "number of requests")
+        .opt("artifacts", "artifacts", "artifact directory ('' = native only)")
+        .opt("sizes", "128,256,1024,4096", "Hadamard size mix")
+        .opt("workers", "4", "worker threads")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let total: usize = args.get_as("requests");
+    let dir = args.get("artifacts");
+    let artifact_dir = if dir.is_empty() { None } else { Some(PathBuf::from(dir)) };
+
+    let coord = Coordinator::start(
+        artifact_dir,
+        CoordinatorConfig { workers: args.get_as("workers"), ..Default::default() },
+    )?;
+    let mut wl = ServingWorkload::new(WorkloadConfig {
+        sizes: args.get_list("sizes"),
+        ..Default::default()
+    });
+
+    println!("serving {total} requests...");
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(total);
+    for _ in 0..total {
+        handles.push(coord.submit(wl.next_request()).map_err(|e| anyhow::anyhow!(e))?);
+    }
+    let mut elems = 0usize;
+    for h in handles {
+        let resp = h.recv()??;
+        elems += resp.data.len();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done: {total} requests / {:.2} M elements in {:?} = {:.0} req/s",
+        elems as f64 / 1e6,
+        dt,
+        total as f64 / dt.as_secs_f64()
+    );
+    println!("{}", coord.metrics().snapshot().report());
+    coord.shutdown();
+    Ok(())
+}
+
+fn tables(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("hadacore tables", "modelled paper tables")
+        .opt("device", "a100", "a100|h100")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let dev = match args.get("device").as_str() {
+        "h100" => &H100_PCIE,
+        _ => &A100_PCIE,
+    };
+    let grid = speedup_grid(dev, GridConfig::default());
+    let runtime: Vec<(usize, usize, f64)> =
+        grid.iter().map(|c| (c.n, c.elems, c.hadacore_us)).collect();
+    let speedup: Vec<(usize, usize, f64)> =
+        grid.iter().map(|c| (c.n, c.elems, c.speedup())).collect();
+    println!(
+        "{}",
+        format_runtime_table(
+            &format!("{} HadaCore runtime (µs, modelled)", dev.name),
+            runtime
+        )
+    );
+    println!(
+        "{}",
+        format_speedup_table(
+            &format!("{} speedup vs baseline (modelled)", dev.name),
+            speedup
+        )
+    );
+    Ok(())
+}

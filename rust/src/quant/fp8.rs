@@ -1,0 +1,192 @@
+//! Bit-exact software FP8 (e4m3 / e5m2) with round-to-nearest-even.
+//!
+//! e4m3 follows the OCP FP8 / Nvidia `float8_e4m3fn` convention: no
+//! infinities, max finite 448, NaN at 0x7f/0xff. e5m2 is IEEE-like with
+//! infinities and max finite 57344. These are the formats FP8 attention
+//! (FlashAttention-3, the paper's end-to-end setting) quantises to.
+
+/// FP8 format selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fp8Format {
+    /// 4 exponent bits, 3 mantissa bits, bias 7, finite-only (fn variant).
+    E4M3,
+    /// 5 exponent bits, 2 mantissa bits, bias 15, IEEE-style inf.
+    E5M2,
+}
+
+impl Fp8Format {
+    /// Largest representable finite magnitude.
+    pub fn max_finite(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 448.0,
+            Fp8Format::E5M2 => 57344.0,
+        }
+    }
+
+    fn mant_bits(self) -> i32 {
+        match self {
+            Fp8Format::E4M3 => 3,
+            Fp8Format::E5M2 => 2,
+        }
+    }
+
+    fn min_exp(self) -> i32 {
+        // minimum normal exponent (unbiased)
+        match self {
+            Fp8Format::E4M3 => -6,
+            Fp8Format::E5M2 => -14,
+        }
+    }
+}
+
+/// Round `v` to the nearest representable FP8 value (ties to even),
+/// saturating at max finite (the `fn` convention used by ML stacks).
+pub fn fp8_round(v: f32, fmt: Fp8Format) -> f32 {
+    if v.is_nan() {
+        return f32::NAN;
+    }
+    if v == 0.0 {
+        return v; // preserves signed zero
+    }
+    let max = fmt.max_finite();
+    let mant_bits = fmt.mant_bits();
+    let min_exp = fmt.min_exp();
+
+    let a = v.abs();
+    if a >= max {
+        return max.copysign(v); // saturate (fn convention)
+    }
+    // exponent of the value
+    let e = a.log2().floor() as i32;
+    let e = e.max(min_exp); // subnormal range quantises at fixed step
+    // quantum = 2^(e - mant_bits)
+    let q = (e - mant_bits) as f32;
+    let quantum = q.exp2();
+    let scaled = a / quantum;
+    // round half to even
+    let r = round_ties_even(scaled);
+    let out = r * quantum;
+    if out > max {
+        return max.copysign(v);
+    }
+    out.copysign(v)
+}
+
+#[inline]
+fn round_ties_even(x: f32) -> f32 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Fake-quantise a slice through FP8 with a per-tensor symmetric scale
+/// mapping max-abs to the format's max finite value. Returns the scale
+/// (`x_quantised = fp8(x / scale) * scale`).
+pub fn fp8_quantize_slice(x: &mut [f32], fmt: Fp8Format) -> f32 {
+    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if amax == 0.0 {
+        return 1.0;
+    }
+    let scale = amax / fmt.max_finite();
+    for v in x.iter_mut() {
+        *v = fp8_round(*v / scale, fmt) * scale;
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_e4m3() {
+        // all integers up to 8 are exactly representable in e4m3
+        for i in 0..=8 {
+            let v = i as f32;
+            assert_eq!(fp8_round(v, Fp8Format::E4M3), v);
+            assert_eq!(fp8_round(-v, Fp8Format::E4M3), -v);
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(fp8_round(1e9, Fp8Format::E4M3), 448.0);
+        assert_eq!(fp8_round(-1e9, Fp8Format::E4M3), -448.0);
+        assert_eq!(fp8_round(1e9, Fp8Format::E5M2), 57344.0);
+    }
+
+    #[test]
+    fn e4m3_quantum_above_one() {
+        // in [16, 32) the e4m3 quantum is 2; 17 is not representable
+        let q = fp8_round(17.0, Fp8Format::E4M3);
+        assert!(q == 16.0 || q == 18.0);
+        // ties to even: 17 is exactly halfway -> 16 (even multiple of 2)
+        assert_eq!(q, 16.0);
+    }
+
+    #[test]
+    fn e5m2_coarser_than_e4m3_near_one() {
+        // near 1.0: e4m3 step 0.125, e5m2 step 0.25
+        assert_eq!(fp8_round(1.125, Fp8Format::E4M3), 1.125);
+        assert_eq!(fp8_round(1.125, Fp8Format::E5M2), 1.0); // tie to even
+        assert_eq!(fp8_round(1.25, Fp8Format::E5M2), 1.25);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            for _ in 0..2000 {
+                let v = rng.normal_f32() * 50.0;
+                let q = fp8_round(v, fmt);
+                assert_eq!(fp8_round(q, fmt), q, "fmt {fmt:?} v {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_bound_normal_range() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        for _ in 0..5000 {
+            let v = rng.normal_f32() * 10.0;
+            if v.abs() < 0.02 {
+                continue; // subnormal range has absolute, not relative bound
+            }
+            let q = fp8_round(v, Fp8Format::E4M3);
+            let rel = ((q - v) / v).abs();
+            assert!(rel <= 0.0625 + 1e-6, "v={v} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn quantize_slice_scales_to_max() {
+        let mut x = vec![1.0f32, -2.0, 448.0, 0.5];
+        let scale = fp8_quantize_slice(&mut x, Fp8Format::E4M3);
+        assert!((scale - 1.0).abs() < 1e-6);
+        assert_eq!(x[2], 448.0);
+        let mut y = vec![0.0f32; 8];
+        assert_eq!(fp8_quantize_slice(&mut y, Fp8Format::E4M3), 1.0);
+    }
+
+    #[test]
+    fn nan_passthrough() {
+        assert!(fp8_round(f32::NAN, Fp8Format::E4M3).is_nan());
+    }
+
+    #[test]
+    fn signed_zero_preserved() {
+        assert_eq!(fp8_round(0.0, Fp8Format::E4M3).to_bits(), 0.0f32.to_bits());
+        assert_eq!(
+            fp8_round(-0.0, Fp8Format::E4M3).to_bits(),
+            (-0.0f32).to_bits()
+        );
+    }
+}

@@ -1,0 +1,126 @@
+//! Per-group (block-wise) quantisation — the granularity QuaRot/QuIP#
+//! actually deploy (per-tensor scales are the worst case for outliers;
+//! per-group scales of 32-128 elements bound the blast radius of each
+//! outlier to its own group, and rotation then flattens *within* groups).
+
+use super::int::{int_round, IntBits};
+
+/// Per-group symmetric INT quantisation of the last axis.
+///
+/// `x` is `(rows, n)` row-major; each contiguous `group` elements share a
+/// max-abs scale. Returns the scales, `(rows * n / group)` of them.
+pub fn int_quantize_grouped(
+    x: &mut [f32],
+    group: usize,
+    bits: IntBits,
+) -> Vec<f32> {
+    assert!(group > 0 && x.len() % group == 0, "bad group size");
+    let mut scales = Vec::with_capacity(x.len() / group);
+    for g in x.chunks_exact_mut(group) {
+        let amax = g.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / bits.qmax() as f32 };
+        for v in g.iter_mut() {
+            *v = int_round(*v, scale, bits);
+        }
+        scales.push(scale);
+    }
+    scales
+}
+
+/// Error statistics comparing per-tensor vs per-group quantisation of the
+/// same data, used by the ablation bench and tests.
+pub fn group_size_sweep(
+    x: &[f32],
+    sizes: &[usize],
+    bits: IntBits,
+) -> Vec<(usize, f64)> {
+    sizes
+        .iter()
+        .map(|&g| {
+            let mut q = x.to_vec();
+            int_quantize_grouped(&mut q, g, bits);
+            (g, crate::util::prop::rel_l2(&q, x))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::{fwht_hadacore_f32, FwhtOptions};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn group_of_full_length_equals_per_tensor() {
+        let mut rng = Rng::new(1);
+        let x = rng.normal_vec(256);
+        let mut grouped = x.clone();
+        int_quantize_grouped(&mut grouped, 256, IntBits::Int8);
+        let mut tensor = x;
+        crate::quant::int::int_quantize_slice(&mut tensor, IntBits::Int8);
+        assert_eq!(grouped, tensor);
+    }
+
+    #[test]
+    fn smaller_groups_reduce_outlier_damage() {
+        let mut rng = Rng::new(2);
+        let mut x = rng.normal_vec(4096);
+        x[17] = 500.0; // one outlier
+        let sweep = group_size_sweep(&x, &[32, 256, 4096], IntBits::Int4);
+        // error must be monotone non-decreasing with group size
+        assert!(sweep[0].1 <= sweep[1].1);
+        assert!(sweep[1].1 <= sweep[2].1);
+        // and the improvement should be substantial for int4
+        assert!(
+            sweep[0].1 < sweep[2].1 * 0.5,
+            "per-group should beat per-tensor: {sweep:?}"
+        );
+    }
+
+    #[test]
+    fn scales_are_per_group() {
+        let mut x = vec![1.0f32; 64];
+        x[32] = 100.0; // second group carries the outlier
+        let scales = int_quantize_grouped(&mut x, 32, IntBits::Int8);
+        assert_eq!(scales.len(), 2);
+        assert!(scales[1] > scales[0] * 10.0);
+        // first group is untouched by the outlier
+        assert!((x[0] - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn rotation_plus_grouping_compose() {
+        // rotation flattens within groups, grouping bounds across groups:
+        // the combination beats either alone on clustered outliers
+        let mut rng = Rng::new(3);
+        let n = 4096;
+        let mut x = rng.normal_vec(n);
+        for i in (0..n).step_by(64) {
+            x[i] *= 40.0;
+        }
+        let err = |v: &[f32]| crate::util::prop::rel_l2(v, &x);
+
+        let mut per_tensor = x.clone();
+        int_quantize_grouped(&mut per_tensor, n, IntBits::Int4);
+
+        let mut rotated = x.clone();
+        let opts = FwhtOptions::normalized(n);
+        fwht_hadacore_f32(&mut rotated, n, &opts);
+        int_quantize_grouped(&mut rotated, 128, IntBits::Int4);
+        fwht_hadacore_f32(&mut rotated, n, &opts);
+
+        assert!(
+            err(&rotated) < err(&per_tensor) * 0.6,
+            "rot+group {} vs per-tensor {}",
+            err(&rotated),
+            err(&per_tensor)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "bad group size")]
+    fn rejects_misaligned_group() {
+        let mut x = vec![0.0f32; 100];
+        int_quantize_grouped(&mut x, 64, IntBits::Int8);
+    }
+}

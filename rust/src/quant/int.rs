@@ -1,0 +1,111 @@
+//! Symmetric integer quantisation (INT8 / INT4) — QuaRot's precisions.
+
+/// Integer bit-width selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntBits {
+    /// 8-bit symmetric: levels -127..=127.
+    Int8,
+    /// 4-bit symmetric: levels -7..=7.
+    Int4,
+}
+
+impl IntBits {
+    /// Largest positive level.
+    pub fn qmax(self) -> i32 {
+        match self {
+            IntBits::Int8 => 127,
+            IntBits::Int4 => 7,
+        }
+    }
+}
+
+/// Round-to-nearest-even quantisation of one value under `scale`.
+#[inline]
+pub fn int_round(v: f32, scale: f32, bits: IntBits) -> f32 {
+    let qmax = bits.qmax() as f32;
+    let q = (v / scale).clamp(-qmax, qmax);
+    let r = {
+        // ties-to-even
+        let f = q.floor();
+        let d = q - f;
+        if d > 0.5 {
+            f + 1.0
+        } else if d < 0.5 {
+            f
+        } else if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    };
+    r * scale
+}
+
+/// Fake-quantise a slice with a per-tensor symmetric max-abs scale.
+/// Returns the scale.
+pub fn int_quantize_slice(x: &mut [f32], bits: IntBits) -> f32 {
+    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if amax == 0.0 {
+        return 1.0;
+    }
+    let scale = amax / bits.qmax() as f32;
+    for v in x.iter_mut() {
+        *v = int_round(*v, scale, bits);
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_levels() {
+        // scale 1.0: integers round-trip exactly within range
+        for i in -127..=127 {
+            assert_eq!(int_round(i as f32, 1.0, IntBits::Int8), i as f32);
+        }
+        assert_eq!(int_round(200.0, 1.0, IntBits::Int8), 127.0);
+        assert_eq!(int_round(-200.0, 1.0, IntBits::Int8), -127.0);
+    }
+
+    #[test]
+    fn int4_is_very_coarse() {
+        assert_eq!(IntBits::Int4.qmax(), 7);
+        assert_eq!(int_round(0.6, 1.0, IntBits::Int4), 1.0);
+        assert_eq!(int_round(0.4, 1.0, IntBits::Int4), 0.0);
+        // tie at 0.5 -> even (0)
+        assert_eq!(int_round(0.5, 1.0, IntBits::Int4), 0.0);
+        assert_eq!(int_round(1.5, 1.0, IntBits::Int4), 2.0);
+    }
+
+    #[test]
+    fn slice_quantisation_error_bounded_by_half_step() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let x = rng.normal_vec(1000);
+        let mut q = x.clone();
+        let scale = int_quantize_slice(&mut q, IntBits::Int8);
+        for (a, b) in x.iter().zip(q.iter()) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn outliers_blow_up_int4_error() {
+        // one huge outlier forces a large scale -> everything else crushed;
+        // this is exactly the failure mode Hadamard rotation fixes.
+        let mut x = vec![0.1f32; 255];
+        x.push(100.0);
+        let mut q = x.clone();
+        int_quantize_slice(&mut q, IntBits::Int4);
+        // all the small values quantise to zero
+        assert!(q[..255].iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn zero_slice_noop() {
+        let mut z = vec![0.0f32; 16];
+        assert_eq!(int_quantize_slice(&mut z, IntBits::Int4), 1.0);
+        assert!(z.iter().all(|v| *v == 0.0));
+    }
+}

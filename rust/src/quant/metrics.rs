@@ -1,0 +1,152 @@
+//! Quantisation-error statistics: the numbers that explain why rotation
+//! helps (QuaRot §1, QuIP# incoherence processing).
+
+use super::Scheme;
+
+/// Summary of a quantisation experiment on one tensor.
+#[derive(Clone, Debug)]
+pub struct QuantReport {
+    /// Scheme applied.
+    pub scheme: &'static str,
+    /// Mean squared quantisation error.
+    pub mse: f64,
+    /// Relative L2 error.
+    pub rel_l2: f64,
+    /// Fraction of total mass in elements > 4 sigma (outlier mass).
+    pub outlier_mass: f64,
+    /// Incoherence mu = max|x| * sqrt(n) / ||x||  (QuIP# definition).
+    pub incoherence: f64,
+}
+
+/// Incoherence `mu = max|x| * sqrt(n) / ||x||_2`. Lower = flatter = easier
+/// to quantise; a random rotation drives mu toward O(sqrt(log n)).
+pub fn incoherence(x: &[f32]) -> f64 {
+    let n = x.len() as f64;
+    let amax = x.iter().fold(0.0f64, |m, v| m.max(v.abs() as f64));
+    let l2: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    if l2 == 0.0 {
+        return 0.0;
+    }
+    amax * n.sqrt() / l2
+}
+
+/// Fraction of squared mass carried by elements beyond `k` standard
+/// deviations of the empirical distribution.
+pub fn outlier_mass(x: &[f32], k: f64) -> f64 {
+    let n = x.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mean: f64 = x.iter().map(|v| *v as f64).sum::<f64>() / n;
+    let var: f64 = x.iter().map(|v| (*v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let sd = var.sqrt();
+    if sd == 0.0 {
+        return 0.0;
+    }
+    let total: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+    let tail: f64 = x
+        .iter()
+        .filter(|v| ((**v as f64) - mean).abs() > k * sd)
+        .map(|v| (*v as f64).powi(2))
+        .sum();
+    if total == 0.0 {
+        0.0
+    } else {
+        tail / total
+    }
+}
+
+/// Mean squared error between original and quantised tensors.
+pub fn quant_mse(orig: &[f32], quant: &[f32]) -> f64 {
+    assert_eq!(orig.len(), quant.len());
+    orig.iter()
+        .zip(quant.iter())
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / orig.len().max(1) as f64
+}
+
+/// Quantise a copy of `x` under `scheme` and report the error statistics.
+pub fn evaluate(x: &[f32], scheme: Scheme) -> QuantReport {
+    let mut q = x.to_vec();
+    super::fake_quantize(&mut q, scheme);
+    QuantReport {
+        scheme: scheme.name(),
+        mse: quant_mse(x, &q),
+        rel_l2: crate::util::prop::rel_l2(&q, x),
+        outlier_mass: outlier_mass(x, 4.0),
+        incoherence: incoherence(x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::{fwht_hadacore_f32, FwhtOptions};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn incoherence_of_flat_vector_is_one() {
+        let x = vec![1.0f32; 64];
+        assert!((incoherence(&x) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incoherence_of_impulse_is_sqrt_n() {
+        let mut x = vec![0.0f32; 64];
+        x[3] = 5.0;
+        assert!((incoherence(&x) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rotation_reduces_incoherence_of_outlier_vectors() {
+        // This is the paper's core motivation measured directly: a heavy-
+        // tailed activation vector becomes "flat" after a Hadamard rotation,
+        // so its max-abs scale stops crushing the small values.
+        let mut rng = Rng::new(11);
+        let n = 1024;
+        let mut x: Vec<f32> = (0..n).map(|_| rng.outlier_normal(0.01, 50.0)).collect();
+        let mu_before = incoherence(&x);
+        fwht_hadacore_f32(&mut x, n, &FwhtOptions::normalized(n));
+        let mu_after = incoherence(&x);
+        assert!(
+            mu_after < mu_before * 0.5,
+            "rotation should flatten: before {mu_before}, after {mu_after}"
+        );
+    }
+
+    #[test]
+    fn rotation_reduces_int4_quant_error() {
+        let mut rng = Rng::new(13);
+        let n = 4096;
+        let x: Vec<f32> = (0..n).map(|_| rng.outlier_normal(0.005, 40.0)).collect();
+        let direct = evaluate(&x, Scheme::Int4);
+        let mut rot = x.clone();
+        fwht_hadacore_f32(&mut rot, n, &FwhtOptions::normalized(n));
+        let rotated = evaluate(&rot, Scheme::Int4);
+        assert!(
+            rotated.rel_l2 < direct.rel_l2 * 0.6,
+            "rotation should cut INT4 error: direct {}, rotated {}",
+            direct.rel_l2,
+            rotated.rel_l2
+        );
+    }
+
+    #[test]
+    fn outlier_mass_detects_tails() {
+        let mut rng = Rng::new(15);
+        let flat: Vec<f32> = (0..4096).map(|_| rng.normal_f32()).collect();
+        let mut heavy = flat.clone();
+        heavy[0] = 1000.0;
+        assert!(outlier_mass(&heavy, 4.0) > 0.9);
+        assert!(outlier_mass(&flat, 4.0) < 0.05);
+        assert_eq!(outlier_mass(&[], 4.0), 0.0);
+        assert_eq!(outlier_mass(&[1.0, 1.0], 4.0), 0.0); // sd == 0
+    }
+
+    #[test]
+    fn quant_mse_basics() {
+        assert_eq!(quant_mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((quant_mse(&[1.0, 2.0], &[1.5, 2.0]) - 0.125).abs() < 1e-12);
+    }
+}

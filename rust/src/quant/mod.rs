@@ -1,0 +1,94 @@
+//! Simulated low-precision quantisation + the error metrics that motivate
+//! Hadamard rotations (QuaRot / SpinQuant / QuIP#, paper §1).
+//!
+//! The paper's end-to-end evaluation runs Llama-3.1 with FP8 attention and
+//! measures MMLU accuracy with/without rotation. This module provides the
+//! numerical substrate for the analogous experiment in this repo: bit-exact
+//! software emulation of FP8 (e4m3/e5m2) and symmetric INT8/INT4
+//! round-to-nearest quantisation, plus the statistics (outlier mass,
+//! incoherence, quantisation MSE) that explain *why* rotation helps.
+
+pub mod fp8;
+pub mod group;
+pub mod int;
+pub mod metrics;
+
+pub use fp8::{fp8_quantize_slice, Fp8Format};
+pub use group::{group_size_sweep, int_quantize_grouped};
+pub use int::{int_quantize_slice, IntBits};
+pub use metrics::{incoherence, outlier_mass, quant_mse, QuantReport};
+
+/// A quantisation scheme applied per-tensor with a symmetric scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// FP8 e4m3 (the FlashAttention-3 / paper FP8-attention format).
+    Fp8E4m3,
+    /// FP8 e5m2.
+    Fp8E5m2,
+    /// INT8 symmetric round-to-nearest.
+    Int8,
+    /// INT4 symmetric round-to-nearest (QuaRot's headline precision).
+    Int4,
+}
+
+impl Scheme {
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Fp8E4m3 => "fp8_e4m3",
+            Scheme::Fp8E5m2 => "fp8_e5m2",
+            Scheme::Int8 => "int8",
+            Scheme::Int4 => "int4",
+        }
+    }
+
+    /// Parse a scheme name.
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "fp8_e4m3" | "fp8" => Some(Scheme::Fp8E4m3),
+            "fp8_e5m2" => Some(Scheme::Fp8E5m2),
+            "int8" => Some(Scheme::Int8),
+            "int4" => Some(Scheme::Int4),
+            _ => None,
+        }
+    }
+}
+
+/// Fake-quantise `x` in place under `scheme` with a per-tensor symmetric
+/// scale chosen from the max-abs value (the paper's setting: per-tensor
+/// FP8 attention). Returns the scale used.
+pub fn fake_quantize(x: &mut [f32], scheme: Scheme) -> f32 {
+    match scheme {
+        Scheme::Fp8E4m3 => fp8_quantize_slice(x, Fp8Format::E4M3),
+        Scheme::Fp8E5m2 => fp8_quantize_slice(x, Fp8Format::E5M2),
+        Scheme::Int8 => int_quantize_slice(x, IntBits::Int8),
+        Scheme::Int4 => int_quantize_slice(x, IntBits::Int4),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for s in [Scheme::Fp8E4m3, Scheme::Fp8E5m2, Scheme::Int8, Scheme::Int4] {
+            assert_eq!(Scheme::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::parse("fp8"), Some(Scheme::Fp8E4m3));
+        assert_eq!(Scheme::parse("fp7"), None);
+    }
+
+    #[test]
+    fn fake_quantize_reduces_precision_but_preserves_scale() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for scheme in [Scheme::Fp8E4m3, Scheme::Int8, Scheme::Int4] {
+            let x = rng.normal_vec(4096);
+            let mut q = x.clone();
+            fake_quantize(&mut q, scheme);
+            let err = crate::util::prop::rel_l2(&q, &x);
+            assert!(err > 1e-5, "{scheme:?} should not be lossless: {err}");
+            assert!(err < 0.3, "{scheme:?} error too large: {err}");
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! The Rust side of the AOT bridge (see `python/compile/aot.py`): at startup
+//! the [`Runtime`] reads `artifacts/manifest.json`, compiles each HLO-text
+//! module on the PJRT CPU client, and exposes typed `execute_*` calls used
+//! by the coordinator's hot path. Python never runs here.
+
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use manifest::{ArtifactEntry, Manifest, ModelMeta, TensorSpec};
+pub use tensor::{literal_f32, literal_i32, literal_to_f32, Tensor};
+pub use weights::Weights;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled PJRT executable plus its manifest entry.
+pub struct LoadedArtifact {
+    /// Manifest metadata (shapes, op kind, bucket geometry).
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with raw literals; returns the tupled result unpacked into
+    /// one literal per output.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.execute_refs(&refs)
+    }
+
+    /// Execute with borrowed literals (lets callers reuse large inputs —
+    /// e.g. the LM weights — across calls without copying).
+    pub fn execute_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("pjrt execute failed: {e:?}"))?;
+        let first = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("pjrt returned no buffers"))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal_sync failed: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("result untuple failed: {e:?}"))?;
+        Ok(parts)
+    }
+
+    /// Execute a single-f32-input / single-f32-output artifact.
+    pub fn execute_f32(&self, input: &Tensor) -> Result<Tensor> {
+        let lit = literal_f32(&input.data, &input.shape)?;
+        let outs = self.execute(&[lit])?;
+        let out = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("artifact produced no outputs"))?;
+        let spec = &self.entry.outputs[0];
+        Ok(Tensor { shape: spec.shape.clone(), data: literal_to_f32(&out)? })
+    }
+}
+
+/// The PJRT runtime: one CPU client + all compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    // compiled lazily: HLO-text parse+compile costs ~10-100ms per module,
+    // and most tools touch only a few artifacts.
+    compiled: Mutex<HashMap<String, &'static LoadedArtifact>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifact directory path.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) an artifact by manifest name.
+    ///
+    /// Returns a `'static` reference: compiled executables are leaked
+    /// intentionally — they live for the process lifetime and are shared
+    /// across worker threads without refcounting on the hot path.
+    pub fn load(&self, name: &str) -> Result<&'static LoadedArtifact> {
+        if let Some(a) = self.compiled.lock().unwrap().get(name) {
+            return Ok(a);
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?} in manifest"))?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let leaked: &'static LoadedArtifact =
+            Box::leak(Box::new(LoadedArtifact { entry, exe }));
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), leaked);
+        Ok(leaked)
+    }
+
+    /// Eagerly compile every artifact (server startup path). Returns count.
+    pub fn load_all(&self) -> Result<usize> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|e| e.name.clone()).collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Load the trained weights referenced by the manifest.
+    pub fn weights(&self) -> Result<Weights> {
+        Weights::load(&self.dir, &self.manifest)
+    }
+
+    /// Find the fwht artifact entry for (kernel, n) if one was built.
+    pub fn find_fwht(&self, kernel: &str, n: usize) -> Option<&ArtifactEntry> {
+        self.manifest.artifacts.iter().find(|e| {
+            e.op == "fwht" && e.kernel.as_deref() == Some(kernel) && e.n == Some(n)
+        })
+    }
+}

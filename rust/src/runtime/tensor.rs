@@ -1,0 +1,97 @@
+//! Host tensors and Literal conversion helpers.
+
+use anyhow::{anyhow, Result};
+
+/// A host-side f32 tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    /// Dimension sizes.
+    pub shape: Vec<usize>,
+    /// Row-major contents; `data.len() == shape.iter().product()`.
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct, validating the element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(anyhow!(
+                "shape {:?} implies {} elements, got {}",
+                shape,
+                numel,
+                data.len()
+            ));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape, data: vec![0.0; numel] }
+    }
+
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Build an f32 literal with the given shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    if numel != data.len() {
+        return Err(anyhow!("literal shape/data mismatch"));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape failed: {e:?}"))
+}
+
+/// Build an i32 literal with the given shape (token inputs).
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    if numel != data.len() {
+        return Err(anyhow!("literal shape/data mismatch"));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape failed: {e:?}"))
+}
+
+/// Copy a literal's contents out as f32.
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec failed: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let z = Tensor::zeros(vec![4, 4]);
+        assert_eq!(z.numel(), 16);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let lit = literal_f32(&data, &[3, 4]).unwrap();
+        assert_eq!(literal_to_f32(&lit).unwrap(), data);
+        assert!(literal_f32(&data, &[5, 5]).is_err());
+    }
+
+    #[test]
+    fn literal_i32_builds() {
+        let toks: Vec<i32> = vec![1, 2, 3, 4];
+        let lit = literal_i32(&toks, &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), toks);
+    }
+}

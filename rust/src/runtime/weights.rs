@@ -1,0 +1,147 @@
+//! Trained-weight loading (`artifacts/weights.bin`).
+//!
+//! Layout contract with `python/compile/train.py::save_weights`:
+//! concatenated little-endian f32 tensors in `flatten_params` order, with
+//! per-tensor (name, shape, offset, numel) recorded in the manifest.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+/// All trained weights, addressable by name and in manifest order.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    ordered: Vec<(String, Tensor)>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Weights {
+    /// Load `weights.bin` using the manifest's layout.
+    pub fn load(dir: &Path, manifest: &Manifest) -> Result<Weights> {
+        let path = dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            return Err(anyhow!("weights.bin length {} not /4", bytes.len()));
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut ordered = Vec::with_capacity(manifest.weights.len());
+        let mut by_name = HashMap::new();
+        for w in &manifest.weights {
+            let end = w.offset + w.numel;
+            if end > floats.len() {
+                return Err(anyhow!(
+                    "weight {} spans [{}, {}) beyond file ({} floats)",
+                    w.name,
+                    w.offset,
+                    end,
+                    floats.len()
+                ));
+            }
+            let numel: usize = w.shape.iter().product();
+            if numel != w.numel {
+                return Err(anyhow!("weight {} shape/numel mismatch", w.name));
+            }
+            by_name.insert(w.name.clone(), ordered.len());
+            ordered.push((
+                w.name.clone(),
+                Tensor { shape: w.shape.clone(), data: floats[w.offset..end].to_vec() },
+            ));
+        }
+        Ok(Weights { ordered, by_name })
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.ordered.len()
+    }
+
+    /// True when no tensors were loaded.
+    pub fn is_empty(&self) -> bool {
+        self.ordered.is_empty()
+    }
+
+    /// Tensor by dotted name.
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.by_name.get(name).map(|&i| &self.ordered[i].1)
+    }
+
+    /// Tensors in manifest (= artifact-input) order.
+    pub fn ordered(&self) -> &[(String, Tensor)] {
+        &self.ordered
+    }
+
+    /// Total scalar parameter count.
+    pub fn param_count(&self) -> usize {
+        self.ordered.iter().map(|(_, t)| t.numel()).sum()
+    }
+
+    /// Build the literal list an LM artifact expects after the token input:
+    /// one literal per weight in order.
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.ordered
+            .iter()
+            .map(|(_, t)| super::tensor::literal_f32(&t.data, &t.shape))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn tiny_manifest(numel: usize) -> Manifest {
+        Manifest::parse(&format!(
+            r#"{{"artifacts": [],
+                 "weights": [{{"name": "w", "shape": [{numel}], "offset": 0,
+                               "numel": {numel}}}],
+                 "model": {{}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join(format!("hc_w_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights.bin"), &bytes).unwrap();
+
+        let w = Weights::load(&dir, &tiny_manifest(8)).unwrap();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.param_count(), 8);
+        assert_eq!(w.get("w").unwrap().data, vals);
+        assert!(w.get("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_overrun() {
+        let dir = std::env::temp_dir().join(format!("hc_w2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("weights.bin"), [0u8; 8]).unwrap(); // 2 floats
+        assert!(Weights::load(&dir, &tiny_manifest(8)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_weights_load_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("weights.bin").exists() {
+            let m = Manifest::load(&dir.join("manifest.json")).unwrap();
+            let w = Weights::load(&dir, &m).unwrap();
+            assert!(w.param_count() > 100_000);
+            assert!(w.get("embed").is_some());
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Micro-benchmark timer: warmup, calibrated iteration counts, robust stats.
+//!
+//! Criterion is unavailable offline; this provides the subset the paper's
+//! evaluation needs — median / mean / MAD over repeated timed batches with
+//! black-box protection — and a stable text report format that the bench
+//! binaries (`cargo bench`, `harness = false`) print.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case (all values in nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub mad_ns: f64,
+}
+
+impl Stats {
+    /// Median in microseconds (the unit the paper reports).
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+
+    /// Human-readable single-line summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12.3} µs/iter  (min {:>10.3}, mad {:>8.3}, {} iters x {} samples)",
+            self.name,
+            self.median_ns / 1e3,
+            self.min_ns / 1e3,
+            self.mad_ns / 1e3,
+            self.iters,
+            self.samples,
+        )
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Target wall time per sample batch.
+    pub sample_time: Duration,
+    /// Number of sample batches.
+    pub samples: usize,
+    /// Warmup time before calibration.
+    pub warmup: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            sample_time: Duration::from_millis(40),
+            samples: 12,
+            warmup: Duration::from_millis(60),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster configuration for CI-style smoke benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            sample_time: Duration::from_millis(10),
+            samples: 6,
+            warmup: Duration::from_millis(15),
+        }
+    }
+}
+
+/// Time `f` repeatedly and return robust statistics.
+///
+/// `f` receives the iteration index; its return value is black-boxed so the
+/// optimiser cannot elide the work.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut(u64) -> T) -> Stats {
+    // Warmup + calibration: find iters such that one batch ~ sample_time.
+    let warm_start = Instant::now();
+    let mut calib_iters = 0u64;
+    while warm_start.elapsed() < cfg.warmup {
+        black_box(f(calib_iters));
+        calib_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+    let iters = ((cfg.sample_time.as_secs_f64() / per_iter.max(1e-9)) as u64).clamp(1, 1 << 24);
+
+    let mut batch_ns: Vec<f64> = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for i in 0..iters {
+            black_box(f(i));
+        }
+        batch_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    batch_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = percentile(&batch_ns, 50.0);
+    let min = batch_ns[0];
+    let mean = batch_ns.iter().sum::<f64>() / batch_ns.len() as f64;
+    let mut devs: Vec<f64> = batch_ns.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = percentile(&devs, 50.0);
+
+    Stats {
+        name: name.to_string(),
+        iters,
+        samples: cfg.samples,
+        mean_ns: mean,
+        median_ns: median,
+        min_ns: min,
+        mad_ns: mad,
+    }
+}
+
+/// Percentile (0..=100) of a sorted slice via linear interpolation.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Convenience: run + print one benchmark case.
+pub fn run_case<T>(name: &str, cfg: &BenchConfig, f: impl FnMut(u64) -> T) -> Stats {
+    let s = bench(name, cfg, f);
+    println!("{}", s.line());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let cfg = BenchConfig {
+            sample_time: Duration::from_millis(2),
+            samples: 3,
+            warmup: Duration::from_millis(2),
+        };
+        let s = bench("spin", &cfg, |i| {
+            let mut acc = i;
+            for k in 0..100 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            acc
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn stats_line_formats() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 10,
+            samples: 3,
+            mean_ns: 1500.0,
+            median_ns: 1400.0,
+            min_ns: 1200.0,
+            mad_ns: 50.0,
+        };
+        let line = s.line();
+        assert!(line.contains("µs/iter"));
+        assert!((s.median_us() - 1.4).abs() < 1e-9);
+    }
+}

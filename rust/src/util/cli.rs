@@ -1,0 +1,239 @@
+//! Tiny declarative CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generated `--help` text. Used by the main binary, the
+//! examples and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Start a parser description.
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a valued option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (false unless present).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Parse from an iterator (first element is NOT the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        mut self,
+        args: I,
+    ) -> Result<Self, String> {
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let decl = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?
+                    .clone();
+                let value = if decl.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                    }
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(a);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse the process arguments; print help/error and exit on failure.
+    pub fn parse(self) -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("error: {e}\n");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Generated help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let default = match (&o.default, o.is_bool) {
+                (Some(d), false) => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, default));
+        }
+        s
+    }
+
+    /// Raw string value of an option (declared default if absent).
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_default()
+    }
+
+    /// Parse an option as any `FromStr` type; panics with context on error.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name);
+        raw.parse().unwrap_or_else(|e| {
+            eprintln!("error: --{name}={raw}: {e}");
+            std::process::exit(2);
+        })
+    }
+
+    /// Boolean switch state.
+    pub fn flag(&self, name: &str) -> bool {
+        self.values
+            .get(name)
+            .map(|v| v == "true" || v == "1")
+            .unwrap_or(false)
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Comma-separated list option parsed into numbers.
+    pub fn get_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("error: --{name}: bad list element {s:?}");
+                    std::process::exit(2);
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Args {
+        Args::new("t", "test")
+            .opt("size", "256", "hadamard size")
+            .opt("sizes", "1,2", "list")
+            .switch("inplace", "transform in place")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = base().parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.get("size"), "256");
+        assert!(!a.flag("inplace"));
+        assert_eq!(a.get_as::<usize>("size"), 256);
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = base()
+            .parse_from(
+                ["--size", "512", "--inplace", "pos1"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        assert_eq!(a.get_as::<usize>("size"), 512);
+        assert!(a.flag("inplace"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+
+        let b = base()
+            .parse_from(["--size=1024".to_string()])
+            .unwrap();
+        assert_eq!(b.get_as::<usize>("size"), 1024);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = base()
+            .parse_from(["--sizes=128,256,512".to_string()])
+            .unwrap();
+        assert_eq!(a.get_list("sizes"), vec![128, 256, 512]);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(base().parse_from(["--nope".to_string()]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(base().parse_from(["--size".to_string()]).is_err());
+    }
+
+    #[test]
+    fn help_text_lists_options() {
+        let h = base().help_text();
+        assert!(h.contains("--size"));
+        assert!(h.contains("--inplace"));
+    }
+}

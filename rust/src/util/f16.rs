@@ -1,0 +1,337 @@
+//! IEEE binary16 (`F16`) and bfloat16 (`BF16`) with bit-exact conversions.
+//!
+//! The paper evaluates FP16 and BF16 variants of both kernels (Appendix C);
+//! the runtime exchanges 16-bit buffers with PJRT executables. The `half`
+//! crate is unavailable offline, so conversions are implemented here with
+//! correct round-to-nearest-even semantics (the rounding Tensor Cores and
+//! the MXU use when down-converting from an FP32 accumulator).
+
+/// Common behaviour of storage element types used by kernels and buffers.
+pub trait Element: Copy + Send + Sync + 'static {
+    /// dtype tag used by artifact manifests and the registry.
+    const DTYPE: DType;
+    /// Widen to f32 (exact for all three formats).
+    fn to_f32(self) -> f32;
+    /// Narrow from f32 with round-to-nearest-even.
+    fn from_f32(v: f32) -> Self;
+}
+
+/// Element dtype tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::BF16 => 2,
+        }
+    }
+
+    /// Canonical lowercase name (matches the python manifest).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::F16 => "float16",
+            DType::BF16 => "bfloat16",
+        }
+    }
+
+    /// Parse a manifest dtype name.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "float32" | "f32" => Some(DType::F32),
+            "float16" | "f16" => Some(DType::F16),
+            "bfloat16" | "bf16" => Some(DType::BF16),
+            _ => None,
+        }
+    }
+
+    /// Unit roundoff (half the distance between 1.0 and the next value).
+    pub fn epsilon(self) -> f32 {
+        match self {
+            DType::F32 => f32::EPSILON,
+            DType::F16 => 9.765_625e-4,  // 2^-10
+            DType::BF16 => 7.812_5e-3,   // 2^-7
+        }
+    }
+}
+
+/// IEEE 754 binary16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+/// bfloat16 (truncated-exponent-preserving 16-bit float).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct BF16(pub u16);
+
+/// f32 -> binary16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        return if mant == 0 {
+            sign | 0x7c00
+        } else {
+            sign | 0x7e00 // quiet NaN
+        };
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal half
+        let half_exp = (e + 15) as u32;
+        // 23 -> 10 bits: round bit at position 12
+        let mant10 = mant >> 13;
+        let round = mant & 0x1fff;
+        let mut h = (half_exp << 10) as u16 | mant10 as u16;
+        if round > 0x1000 || (round == 0x1000 && (mant10 & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent — still correct
+        }
+        return sign | h;
+    }
+    if e >= -25 {
+        // subnormal half
+        let full = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - e) + 13; // total right shift to 10-bit subnormal
+        let mant10 = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = mant10 as u16;
+        if rem > halfway || (rem == halfway && (h & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return sign | h;
+    }
+    sign // underflow to signed zero
+}
+
+/// binary16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalise. value = mant * 2^-24; with p the
+            // highest set bit, that's 2^(p-24) * 1.fraction.
+            let lz = mant.leading_zeros() - 21; // = 10 - p
+            let mant_norm = (mant << lz) & 0x3ff;
+            let e = 113 - lz; // biased f32 exponent: 127 + (p - 24)
+            sign | (e << 23) | (mant_norm << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> bfloat16 bits with round-to-nearest-even.
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // keep sign, force quiet
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb);
+    // detect rounding overflow into inf is naturally handled: exponent
+    // increments to 0xff and mantissa clears -> inf, the correct result.
+    let _ = round_bit;
+    (rounded >> 16) as u16
+}
+
+/// bfloat16 bits -> f32 (exact).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+impl Element for f32 {
+    const DTYPE: DType = DType::F32;
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl Element for F16 {
+    const DTYPE: DType = DType::F16;
+    #[inline]
+    fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+    #[inline]
+    fn from_f32(v: f32) -> Self {
+        F16(f32_to_f16_bits(v))
+    }
+}
+
+impl Element for BF16 {
+    const DTYPE: DType = DType::BF16;
+    #[inline]
+    fn to_f32(self) -> f32 {
+        bf16_bits_to_f32(self.0)
+    }
+    #[inline]
+    fn from_f32(v: f32) -> Self {
+        BF16(f32_to_bf16_bits(v))
+    }
+}
+
+/// Convert a f32 slice into 16-bit storage.
+pub fn narrow_slice<E: Element>(src: &[f32]) -> Vec<E> {
+    src.iter().map(|&v| E::from_f32(v)).collect()
+}
+
+/// Convert 16-bit storage back to f32.
+pub fn widen_slice<E: Element>(src: &[E]) -> Vec<f32> {
+    src.iter().map(|v| v.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.099975586] {
+            let h = f32_to_f16_bits(v);
+            let back = f16_bits_to_f32(h);
+            let again = f32_to_f16_bits(back);
+            assert_eq!(h, again, "unstable roundtrip for {v}");
+        }
+    }
+
+    #[test]
+    fn f16_known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // max finite half
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00); // overflow -> +inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8); // min subnormal
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: ties-to-even
+        // must round down to 1.0 (even mantissa).
+        let v = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(v), 0x3c00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: rounds up to even.
+        let v2 = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(v2), 0x3c02);
+    }
+
+    #[test]
+    fn f16_subnormals_roundtrip() {
+        for i in 1u16..=0x3ff {
+            let f = f16_bits_to_f32(i);
+            assert_eq!(f32_to_f16_bits(f), i, "subnormal bits {i:#x}");
+        }
+    }
+
+    #[test]
+    fn f16_nan_stays_nan() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn f16_exhaustive_monotone_roundtrip() {
+        // every finite half value round-trips bit-exactly through f32
+        for bits in 0u16..=0xffff {
+            let exp = (bits >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan handled elsewhere
+            }
+            let f = f16_bits_to_f32(bits);
+            let rt = f32_to_f16_bits(f);
+            // -0.0 and 0.0 keep their sign bit
+            assert_eq!(rt, bits, "bits {bits:#x} -> {f} -> {rt:#x}");
+        }
+    }
+
+    #[test]
+    fn bf16_known_patterns() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(-1.0), 0xbf80);
+        assert_eq!(bf16_bits_to_f32(0x3f80), 1.0);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+    }
+
+    #[test]
+    fn bf16_round_to_nearest_even() {
+        // 1 + 2^-8 is halfway between 1.0 (0x3f80) and 1+2^-7 (0x3f81):
+        // ties-to-even keeps 0x3f80.
+        let v = 1.0 + 2f32.powi(-8);
+        assert_eq!(f32_to_bf16_bits(v), 0x3f80);
+        // 1 + 3*2^-8 is halfway between 0x3f81 and 0x3f82: rounds to even 0x3f82.
+        let v2 = 1.0 + 3.0 * 2f32.powi(-8);
+        assert_eq!(f32_to_bf16_bits(v2), 0x3f82);
+    }
+
+    #[test]
+    fn bf16_roundtrip_stability() {
+        let mut r = crate::util::rng::Rng::new(3);
+        for _ in 0..10_000 {
+            let v = (r.f64() as f32 - 0.5) * 1e4;
+            let b = f32_to_bf16_bits(v);
+            assert_eq!(f32_to_bf16_bits(bf16_bits_to_f32(b)), b);
+        }
+    }
+
+    #[test]
+    fn bf16_nan_preserved() {
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn element_trait_roundtrip() {
+        let xs = [0.25f32, -3.5, 1000.0];
+        let f16s = narrow_slice::<F16>(&xs);
+        let back = widen_slice(&f16s);
+        for (a, b) in xs.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= 0.5 + a.abs() * 1e-3);
+        }
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::F32.name(), "float32");
+        assert_eq!(DType::parse("bfloat16"), Some(DType::BF16));
+    }
+
+    #[test]
+    fn f16_error_bound_random() {
+        let mut r = crate::util::rng::Rng::new(5);
+        for _ in 0..20_000 {
+            let v = r.normal_f32() * 100.0;
+            let e = (F16::from_f32(v).to_f32() - v).abs();
+            // relative error bounded by 2^-11 for normals in range
+            assert!(e <= v.abs() * 4.9e-4 + 1e-7, "v={v} e={e}");
+        }
+    }
+}

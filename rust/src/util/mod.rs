@@ -1,0 +1,20 @@
+//! Std-only support utilities.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (serde, clap, criterion, proptest, half,
+//! rand) are unavailable. Each submodule is a small, tested, purpose-built
+//! replacement:
+//!
+//! * [`json`] — minimal JSON value model + parser + writer (manifest I/O).
+//! * [`f16`] — IEEE binary16 and bfloat16 with correct round-to-nearest-even.
+//! * [`rng`] — SplitMix64/xoshiro256++ deterministic PRNG.
+//! * [`cli`] — tiny declarative flag parser for the binary and examples.
+//! * [`bench`] — micro-benchmark timer (warmup, iterations, robust stats).
+//! * [`prop`] — mini property-based test driver (random cases + replay seed).
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,108 @@
+//! Mini property-based testing driver (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on
+//! failure it reports the case seed so the exact input can be replayed by
+//! seeding a [`crate::util::rng::Rng`]. The environment variable
+//! `PROP_CASES` scales the case count (e.g. in a longer CI run).
+
+use crate::util::rng::Rng;
+
+/// Number of cases to run, honouring the `PROP_CASES` override.
+pub fn case_count(default_cases: usize) -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+///
+/// The property receives a fresh deterministic RNG per case. Any panic
+/// inside the property is attributed to the case seed for replay.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    let cases = case_count(cases);
+    let mut meta = Rng::new(0xC0FFEE ^ name.len() as u64);
+    for case in 0..cases {
+        let seed = meta.next_u64() ^ case as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case}/{cases} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+#[track_caller]
+pub fn assert_close(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "index {i}: got {g}, want {w} (|diff| {} > tol {tol})",
+            (g - w).abs()
+        );
+    }
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Relative L2 error `||a-b|| / ||b||`.
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum();
+    let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum();
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 25, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn check_reports_seed_on_failure() {
+        check("failing", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-5);
+        assert!(max_abs_diff(&[1.0, 5.0], &[1.5, 5.0]) == 0.5);
+        assert!(rel_l2(&[1.0, 0.0], &[1.0, 0.0]) == 0.0);
+        assert!(rel_l2(&[2.0], &[1.0]) > 0.9);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn close_rejects_length_mismatch() {
+        assert_close(&[1.0], &[1.0, 2.0], 0.1, 0.1);
+    }
+}

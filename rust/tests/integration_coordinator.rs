@@ -1,0 +1,211 @@
+//! Integration: the coordinator serving through both backends, mixed
+//! workloads, failure injection, and property-style checks of the
+//! batching invariants under concurrency.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hadacore::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, RouterConfig, TransformRequest,
+};
+use hadacore::hadamard::{fwht_scalar_f32, FwhtOptions, KernelKind};
+use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
+use hadacore::util::prop::assert_close;
+use hadacore::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn cfg(workers: usize, delay_us: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        batcher: BatcherConfig { max_delay: Duration::from_micros(delay_us), work_conserving: false },
+        router: RouterConfig::default(),
+        idle_timeout: Duration::from_millis(10),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pjrt_backend_results_match_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Coordinator::start(Some(dir), cfg(2, 100)).unwrap();
+    let mut rng = Rng::new(1);
+    for n in [256usize, 1024, 4096] {
+        let rows = 4;
+        let x = rng.normal_vec(rows * n);
+
+        let pjrt_resp = coord
+            .transform(TransformRequest::new(1, n, x.clone()))
+            .unwrap();
+
+        let mut native_req = TransformRequest::new(2, n, x.clone());
+        native_req.force_native = true;
+        let native_resp = coord.transform(native_req).unwrap();
+        assert_eq!(native_resp.backend, "native");
+
+        let mut want = x;
+        fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
+        assert_close(&pjrt_resp.data, &want, 2e-3, 2e-3);
+        assert_close(&native_resp.data, &want, 2e-3, 2e-3);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_workload_under_concurrency() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Arc::new(Coordinator::start(Some(dir), cfg(4, 300)).unwrap());
+    let total_per_thread = 100;
+    let threads = 4;
+
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let coord = Arc::clone(&coord);
+        joins.push(std::thread::spawn(move || {
+            let mut wl = ServingWorkload::new(WorkloadConfig {
+                sizes: vec![128, 256, 1024, 4096],
+                kernel: KernelKind::HadaCore,
+                seed: t as u64,
+                ..Default::default()
+            });
+            let mut checked = 0;
+            for _ in 0..total_per_thread {
+                let req = wl.next_request();
+                let n = req.n;
+                let input = req.data.clone();
+                let resp = coord.transform(req).unwrap();
+                // verify a sample of responses against the oracle
+                if checked < 10 {
+                    let mut want = input;
+                    fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
+                    assert_close(&resp.data, &want, 2e-3, 2e-3);
+                    checked += 1;
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.completed, (threads * total_per_thread) as u64);
+    assert_eq!(snap.rejected, 0);
+    assert!(snap.batches > 0);
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}
+
+#[test]
+fn underfilled_pjrt_batches_fall_back_to_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // single tiny request into a 256-row bucket with a short deadline:
+    // fill fraction 1/256 << min_pjrt_fill, so it must execute natively
+    let coord = Coordinator::start(Some(dir), cfg(2, 50)).unwrap();
+    let resp = coord
+        .transform(TransformRequest::new(1, 128, vec![1.0; 128]))
+        .unwrap();
+    assert_eq!(resp.backend, "native");
+    coord.shutdown();
+}
+
+#[test]
+fn full_buckets_use_pjrt() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Coordinator::start(Some(dir), cfg(2, 5_000)).unwrap();
+    // n=32768 bucket has rows=1: a single 1-row request fills it entirely
+    let mut rng = Rng::new(3);
+    let resp = coord
+        .transform(TransformRequest::new(1, 32768, rng.normal_vec(32768)))
+        .unwrap();
+    assert_eq!(resp.backend, "pjrt");
+    assert_eq!(resp.batch_rows, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn scalar_kernel_requests_route_native_and_agree() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Coordinator::start(Some(dir), cfg(2, 100)).unwrap();
+    let mut rng = Rng::new(4);
+    let x = rng.normal_vec(512);
+    let mut req = TransformRequest::new(1, 512, x.clone());
+    req.kernel = KernelKind::Scalar; // no scalar artifacts exist
+    let resp = coord.transform(req).unwrap();
+    assert_eq!(resp.backend, "native");
+    let mut want = x;
+    fwht_scalar_f32(&mut want, 512, &FwhtOptions::normalized(512));
+    assert_close(&resp.data, &want, 1e-3, 1e-3);
+    coord.shutdown();
+}
+
+#[test]
+fn rejection_does_not_poison_the_pipeline() {
+    let coord = Coordinator::start(None, cfg(2, 100)).unwrap();
+    // invalid, valid, invalid, valid...
+    for i in 0..20u64 {
+        if i % 2 == 0 {
+            assert!(coord
+                .submit(TransformRequest::new(i, 100, vec![0.0; 100]))
+                .is_err());
+        } else {
+            let resp = coord
+                .transform(TransformRequest::new(i, 64, vec![1.0; 64]))
+                .unwrap();
+            assert_eq!(resp.id, i);
+        }
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.rejected, 10);
+    assert_eq!(snap.completed, 10);
+    coord.shutdown();
+}
+
+#[test]
+fn throughput_scales_with_batching() {
+    // sanity: open-loop load must coalesce into fewer batches than requests
+    let coord = Coordinator::start(None, cfg(4, 300)).unwrap();
+    let mut wl = ServingWorkload::new(WorkloadConfig {
+        sizes: vec![256],
+        rows_min: 1,
+        rows_max: 1,
+        ..Default::default()
+    });
+    let total = 500;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..total)
+        .map(|_| coord.submit(wl.next_request()).unwrap())
+        .collect();
+    for h in handles {
+        h.recv().unwrap().unwrap();
+    }
+    let elapsed = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.completed, total as u64);
+    assert!(
+        snap.batches < total as u64,
+        "expected coalescing: {} batches for {} requests",
+        snap.batches,
+        total
+    );
+    assert!(elapsed < Duration::from_secs(30));
+    coord.shutdown();
+}

@@ -1,0 +1,232 @@
+//! Property-based tests over coordinator + kernel invariants (the brief's
+//! L3 requirement: routing, batching, state under randomised inputs).
+//!
+//! Uses the in-repo `util::prop` driver (proptest is unavailable offline):
+//! randomised cases with replayable seeds, `PROP_CASES` scales depth.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use hadacore::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, RouterConfig, TransformRequest,
+};
+use hadacore::hadamard::{
+    fwht_dao_f32, fwht_f32, fwht_hadacore_f32, fwht_scalar_f32, FwhtOptions,
+    KernelKind,
+};
+use hadacore::quant::{fake_quantize, Scheme};
+use hadacore::util::prop::{assert_close, check, max_abs_diff, rel_l2};
+use hadacore::util::rng::Rng;
+
+fn coordinator(workers: usize) -> Coordinator {
+    Coordinator::start(
+        None,
+        CoordinatorConfig {
+            workers,
+            batcher: BatcherConfig {
+                max_delay: Duration::from_micros(100),
+                work_conserving: true,
+            },
+            router: RouterConfig::default(),
+            idle_timeout: Duration::from_millis(5),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_responses_match_requests_exactly() {
+    // no request is lost, duplicated, or mismatched under random mixes of
+    // sizes, rows, kernels and scales
+    let coord = coordinator(4);
+    check("request/response bijection", 12, |rng| {
+        let count = rng.range(5, 40);
+        let mut expected: HashMap<u64, Vec<f32>> = HashMap::new();
+        let mut handles = Vec::new();
+        for i in 0..count {
+            let n = 1usize << rng.range(4, 12);
+            let rows = rng.range(1, 4);
+            let data = rng.normal_vec(rows * n);
+            let kernel = match rng.below(3) {
+                0 => KernelKind::Scalar,
+                1 => KernelKind::Dao,
+                _ => KernelKind::HadaCore,
+            };
+            let scale = if rng.chance(0.3) { Some(rng.f32() + 0.5) } else { None };
+            let mut want = data.clone();
+            fwht_f32(
+                kernel,
+                &mut want,
+                n,
+                &match scale {
+                    Some(s) => FwhtOptions::with_scale(s),
+                    None => FwhtOptions::normalized(n),
+                },
+            );
+            let id = rng.next_u64() ^ i as u64;
+            expected.insert(id, want);
+            let mut req = TransformRequest::new(id, n, data);
+            req.kernel = kernel;
+            req.scale = scale;
+            handles.push(coord.submit(req).unwrap());
+        }
+        for h in handles {
+            let resp = h.recv().unwrap().unwrap();
+            let want = expected.remove(&resp.id).expect("unknown or duplicate id");
+            assert_close(&resp.data, &want, 1e-3, 1e-2);
+        }
+        assert!(expected.is_empty(), "lost responses: {}", expected.len());
+    });
+    coord.shutdown();
+}
+
+#[test]
+fn prop_kernels_agree_on_random_inputs() {
+    check("three kernels agree", 40, |rng| {
+        let n = 1usize << rng.range(1, 15);
+        let rows = rng.range(1, 3);
+        let x = rng.normal_vec(rows * n);
+        let mut a = x.clone();
+        let mut b = x.clone();
+        let mut c = x;
+        let opts = FwhtOptions::normalized(n);
+        fwht_scalar_f32(&mut a, n, &opts);
+        fwht_dao_f32(&mut b, n, &opts);
+        fwht_hadacore_f32(&mut c, n, &opts);
+        assert_close(&b, &a, 1e-3, 1e-3);
+        assert_close(&c, &a, 1e-3, 1e-3);
+    });
+}
+
+#[test]
+fn prop_transform_is_orthogonal_on_adversarial_inputs() {
+    // norm preservation + involution must hold for heavy-tailed, constant,
+    // sparse and alternating inputs — not just Gaussians
+    check("orthogonality on adversarial inputs", 30, |rng| {
+        let n = 1usize << rng.range(2, 13);
+        let kind_sel = rng.below(4);
+        let x: Vec<f32> = (0..n)
+            .map(|i| match kind_sel {
+                0 => rng.outlier_normal(0.05, 100.0),
+                1 => 3.25,
+                2 => {
+                    if rng.chance(0.05) {
+                        rng.normal_f32() * 50.0
+                    } else {
+                        0.0
+                    }
+                }
+                _ => if i % 2 == 0 { 1.0 } else { -1.0 },
+            })
+            .collect();
+        let mut y = x.clone();
+        let opts = FwhtOptions::normalized(n);
+        fwht_hadacore_f32(&mut y, n, &opts);
+        let nx: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        let ny: f64 = y.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!(
+            (nx - ny).abs() <= nx.max(1e-9) * 1e-3,
+            "norm drift {nx} -> {ny}"
+        );
+        fwht_hadacore_f32(&mut y, n, &opts);
+        assert!(
+            max_abs_diff(&y, &x)
+                <= 1e-3 * (1.0 + x.iter().fold(0.0f32, |m, v| m.max(v.abs()))),
+            "involution failed"
+        );
+    });
+}
+
+#[test]
+fn prop_parseval_energy_concentration() {
+    // a constant vector concentrates all energy in coefficient 0; a
+    // Walsh function (row k of H) concentrates it in coefficient k
+    check("parseval concentration", 20, |rng| {
+        let n = 1usize << rng.range(2, 10);
+        let k = rng.below(n);
+        let x: Vec<f32> = (0..n)
+            .map(|j| hadacore::hadamard::matrices::hadamard_entry(k, j))
+            .collect();
+        let mut y = x;
+        fwht_hadacore_f32(&mut y, n, &FwhtOptions::normalized(n));
+        for (j, v) in y.iter().enumerate() {
+            if j == k {
+                assert!((v - (n as f32).sqrt()).abs() < 1e-2, "peak at {j}: {v}");
+            } else {
+                assert!(v.abs() < 1e-2, "leakage at {j}: {v}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_quantisation_error_bounded_and_rotation_helps() {
+    check("quant error bounds", 25, |rng| {
+        let n = 1usize << rng.range(6, 12);
+        let mut x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        // random outlier channel pattern
+        let stride = 1 << rng.range(3, 5);
+        for i in (0..n).step_by(stride) {
+            x[i] *= 30.0;
+        }
+        let mut direct = x.clone();
+        fake_quantize(&mut direct, Scheme::Int8);
+        let e_direct = rel_l2(&direct, &x);
+
+        let opts = FwhtOptions::normalized(n);
+        let mut rot = x.clone();
+        fwht_hadacore_f32(&mut rot, n, &opts);
+        fake_quantize(&mut rot, Scheme::Int8);
+        fwht_hadacore_f32(&mut rot, n, &opts);
+        let e_rot = rel_l2(&rot, &x);
+
+        assert!(e_direct < 0.5, "int8 error blew up: {e_direct}");
+        assert!(
+            e_rot < e_direct * 1.05,
+            "rotation should not hurt int8: {e_rot} vs {e_direct}"
+        );
+    });
+}
+
+#[test]
+fn prop_batcher_state_never_leaks_rows() {
+    // after any request pattern completes, the batcher holds zero rows
+    let coord = coordinator(2);
+    check("no queued rows after drain", 10, |rng| {
+        let count = rng.range(1, 30);
+        let handles: Vec<_> = (0..count)
+            .map(|i| {
+                let n = 1usize << rng.range(4, 10);
+                coord
+                    .submit(TransformRequest::new(i as u64, n, vec![1.0; n]))
+                    .unwrap()
+            })
+            .collect();
+        for h in handles {
+            h.recv().unwrap().unwrap();
+        }
+    });
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.submitted, snap.completed);
+    coord.shutdown();
+}
+
+#[test]
+fn prop_scale_linearity_through_server() {
+    let coord = coordinator(2);
+    check("scale linearity", 10, |rng| {
+        let n = 1usize << rng.range(4, 10);
+        let x = rng.normal_vec(n);
+        let s = rng.f32() * 3.0 + 0.1;
+        let mut a = TransformRequest::new(1, n, x.clone());
+        a.scale = Some(s);
+        let mut b = TransformRequest::new(2, n, x);
+        b.scale = Some(1.0);
+        let ra = coord.transform(a).unwrap();
+        let rb = coord.transform(b).unwrap();
+        let scaled: Vec<f32> = rb.data.iter().map(|v| v * s).collect();
+        assert_close(&ra.data, &scaled, 1e-3, 1e-2);
+    });
+    coord.shutdown();
+}
