@@ -19,7 +19,9 @@
 use std::path::Path;
 
 use hadacore::runtime::{literal_f32, literal_i32, literal_to_f32, Runtime, Tensor};
+use hadacore::runtime::xla;
 use hadacore::util::cli::Args;
+use hadacore::util::error as anyhow;
 use hadacore::util::json::Json;
 
 /// Scale-invariant outlier injection (DESIGN.md §Substitutions).

@@ -19,6 +19,7 @@ use hadacore::gpu_model::{
 };
 use hadacore::harness::tables::{format_runtime_table, format_speedup_table, to_csv};
 use hadacore::util::cli::Args;
+use hadacore::util::error as anyhow;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::new("paper_tables", "regenerate the paper's evaluation tables")

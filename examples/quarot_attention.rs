@@ -11,9 +11,11 @@
 use std::path::Path;
 use std::time::Instant;
 
+use hadacore::runtime::xla;
 use hadacore::runtime::{literal_f32, literal_to_f32, Runtime};
 use hadacore::util::bench::percentile;
 use hadacore::util::cli::Args;
+use hadacore::util::error as anyhow;
 use hadacore::util::prop::rel_l2;
 use hadacore::util::rng::Rng;
 

@@ -1,14 +1,18 @@
-//! Quickstart: the three ways to run a Hadamard transform with this crate.
+//! Quickstart: the four ways to run a Hadamard transform with this crate.
 //!
 //! 1. Direct kernel call (library API) — no server, no artifacts.
-//! 2. Through the coordinator (native backend) — batching + metrics.
-//! 3. Through the coordinator + PJRT (AOT artifacts) — the full
+//! 2. Batched execution engine — the same transform sharded across all
+//!    cores with cached plans and reusable workspaces.
+//! 3. Through the coordinator (native backend) — batching + metrics.
+//! 4. Through the coordinator + PJRT (AOT artifacts) — the full
 //!    three-layer path (requires `make artifacts`).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use hadacore::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use hadacore::exec::ExecEngine;
 use hadacore::hadamard::{fwht_hadacore_f32, FwhtOptions, KernelKind};
+use hadacore::util::error as anyhow;
 use hadacore::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -34,30 +38,51 @@ fn main() -> anyhow::Result<()> {
         .fold(0.0f32, f32::max);
     println!("    involution max error: {max_err:.2e}");
 
-    // -- 2. coordinator, native backend -------------------------------
+    // -- 2. batched multi-threaded engine ------------------------------
+    let engine = ExecEngine::default();
+    let big_rows = 512;
+    let mut batch = rng.normal_vec(big_rows * n);
+    let reference = {
+        let mut r = batch.clone();
+        fwht_hadacore_f32(&mut r, n, &FwhtOptions::normalized(n));
+        r
+    };
+    let t0 = std::time::Instant::now();
+    engine.run(KernelKind::HadaCore, &mut batch, n, &FwhtOptions::normalized(n));
+    let dt = t0.elapsed();
+    assert_eq!(batch, reference, "sharded execution is bit-identical");
+    let stats = engine.stats();
+    println!(
+        "[2] exec engine: {big_rows}x{n} across {} lanes in {dt:?} \
+         ({} chunks, bit-identical to the direct call)",
+        engine.threads(),
+        stats.chunks
+    );
+
+    // -- 3. coordinator, native backend -------------------------------
     let coord = Coordinator::start(None, CoordinatorConfig::default())?;
     let mut req = TransformRequest::new(1, n, rng.normal_vec(2 * n));
     req.kernel = KernelKind::HadaCore;
     let resp = coord.transform(req)?;
     println!(
-        "[2] coordinator/native: id={} backend={} exec={}us",
+        "[3] coordinator/native: id={} backend={} exec={}us",
         resp.id, resp.backend, resp.exec_us
     );
     coord.shutdown();
 
-    // -- 3. coordinator + PJRT artifacts -------------------------------
+    // -- 4. coordinator + PJRT artifacts -------------------------------
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.json").exists() {
         let coord = Coordinator::start(Some(dir.into()), CoordinatorConfig::default())?;
         let req = TransformRequest::new(2, 256, rng.normal_vec(8 * 256));
         let resp = coord.transform(req)?;
         println!(
-            "[3] coordinator/pjrt: id={} backend={} exec={}us batch_rows={}",
+            "[4] coordinator/pjrt: id={} backend={} exec={}us batch_rows={}",
             resp.id, resp.backend, resp.exec_us, resp.batch_rows
         );
         coord.shutdown();
     } else {
-        println!("[3] skipped (run `make artifacts` to enable the PJRT path)");
+        println!("[4] skipped (run `make artifacts` to enable the PJRT path)");
     }
     Ok(())
 }

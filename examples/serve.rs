@@ -11,15 +11,18 @@ use std::path::Path;
 use std::time::Instant;
 
 use hadacore::coordinator::{Coordinator, CoordinatorConfig};
+use hadacore::exec::ExecConfig;
 use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
 use hadacore::hadamard::KernelKind;
 use hadacore::util::cli::Args;
+use hadacore::util::error as anyhow;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::new("serve", "mixed workload serving demo")
         .opt("requests", "5000", "total requests")
         .opt("artifacts", "artifacts", "artifact directory ('' = native only)")
-        .opt("workers", "4", "worker threads")
+        .opt("workers", "4", "batcher worker threads")
+        .opt("exec-threads", "0", "engine compute lanes (0 = default: per-core, capped at 16)")
         .opt("kernel", "hadacore", "kernel: hadacore|dao|scalar")
         .switch("native", "force native backend for all requests")
         .parse();
@@ -37,9 +40,19 @@ fn main() -> anyhow::Result<()> {
         if artifact_dir.is_some() { "pjrt + native" } else { "native only" }
     );
 
+    let lanes: usize = args.get_as("exec-threads");
+    let exec = if lanes == 0 {
+        ExecConfig::default()
+    } else {
+        ExecConfig { threads: lanes, ..ExecConfig::default() }
+    };
     let coord = Coordinator::start(
         artifact_dir,
-        CoordinatorConfig { workers: args.get_as("workers"), ..Default::default() },
+        CoordinatorConfig {
+            workers: args.get_as("workers"),
+            exec,
+            ..Default::default()
+        },
     )?;
     let mut wl = ServingWorkload::new(WorkloadConfig {
         sizes: vec![128, 256, 512, 1024, 4096],
@@ -71,6 +84,15 @@ fn main() -> anyhow::Result<()> {
         elems as f64 / dt.as_secs_f64() / 1e6
     );
     println!("\n{}", coord.metrics().snapshot().report());
+    let es = coord.exec_engine().stats();
+    println!(
+        "engine:   {} lanes, {} sharded jobs ({} chunks), {} inline runs, {} scratch grows",
+        coord.exec_engine().threads(),
+        es.jobs,
+        es.chunks,
+        es.inline_runs,
+        es.scratch_grows
+    );
     coord.shutdown();
     Ok(())
 }

@@ -232,6 +232,7 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::coordinator::{Backend, TransformRequest};
+    use crate::util::error as anyhow;
     use std::sync::mpsc;
 
     fn pending(id: u64, n: usize, rows: usize) -> (Pending, mpsc::Receiver<anyhow::Result<crate::coordinator::TransformResponse>>) {

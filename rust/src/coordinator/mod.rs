@@ -34,14 +34,21 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::hadamard::KernelKind;
+use crate::util::error as anyhow;
 
 /// A transform request: `rows` rows of size `n`, transformed in place
 /// semantically (the response carries the transformed buffer back).
+///
+/// Every backend computes the same operation per row:
+/// `x <- (x @ H_n) * scale` — the right-Hadamard-transform convention of
+/// the fast-hadamard-transform library (`H_n` is symmetric, so left and
+/// right transforms coincide; see [`crate::hadamard`]).
 #[derive(Debug)]
 pub struct TransformRequest {
     /// Client-assigned id, echoed in the response.
     pub id: u64,
-    /// Hadamard size (row length).
+    /// Hadamard size (row length). Must be a power of two within
+    /// [`crate::MAX_HADAMARD_SIZE`].
     pub n: usize,
     /// Number of rows in `data` (`data.len() == rows * n`).
     pub rows: usize,
@@ -49,7 +56,12 @@ pub struct TransformRequest {
     pub data: Vec<f32>,
     /// Which kernel implementation to use.
     pub kernel: KernelKind,
-    /// Output scaling (`None` = orthonormal `1/sqrt(n)`).
+    /// Output scaling, matching [`crate::hadamard::FwhtOptions`]:
+    /// `None` applies the orthonormal `1/sqrt(n)` (the paper's
+    /// convention, making the transform its own inverse);
+    /// `Some(s)` applies `s` verbatim (`Some(1.0)` = the raw ±1
+    /// transform). Custom-scale requests batch separately and always
+    /// execute natively — PJRT artifacts bake the orthonormal scale in.
     pub scale: Option<f32>,
     /// Force the native backend even when an artifact exists.
     pub force_native: bool,
@@ -76,7 +88,8 @@ impl TransformRequest {
 pub struct TransformResponse {
     /// Echoed request id.
     pub id: u64,
-    /// Transformed rows (same shape as the request payload).
+    /// Transformed rows (same shape as the request payload):
+    /// `data[r*n..][..n] = (request.data[r*n..][..n] @ H_n) * scale`.
     pub data: Vec<f32>,
     /// Time spent queued before execution.
     pub queue_us: u64,

@@ -6,9 +6,12 @@
 //! Threading model: PJRT executables are `Rc`-based (not `Send`), so one
 //! **executor thread** owns the `Runtime` and performs every PJRT
 //! execution (the CPU analogue of a GPU-owning executor). The worker pool
-//! drains the batcher: native batches execute inline on the worker;
-//! PJRT batches are forwarded to the executor over a channel. Responses
-//! complete per-request channels either way.
+//! drains the batcher; native batches execute on the shared
+//! [`ExecEngine`], which shards each batch's rows across *its* worker
+//! pool — batcher workers handle assembly/completion concurrency, the
+//! engine handles compute parallelism. PJRT batches are forwarded to the
+//! executor over a channel. Responses complete per-request channels
+//! either way.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -16,10 +19,10 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::anyhow;
-
-use crate::hadamard::{fwht_f32, FwhtOptions};
+use crate::exec::{ExecConfig, ExecEngine};
+use crate::hadamard::FwhtOptions;
 use crate::runtime::{literal_f32, literal_to_f32, Manifest, Runtime};
+use crate::util::error::{self as anyhow, anyhow};
 
 use super::batcher::{Batch, Batcher, BatcherConfig, BucketKey};
 use super::metrics::Metrics;
@@ -29,12 +32,15 @@ use super::{Pending, TransformRequest, TransformResponse};
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Worker thread count (native execution + batch assembly).
+    /// Worker thread count (batch assembly + response completion; the
+    /// compute itself parallelises on the [`ExecEngine`] lanes).
     pub workers: usize,
     /// Batching policy.
     pub batcher: BatcherConfig,
     /// Routing policy.
     pub router: RouterConfig,
+    /// Execution-engine geometry (compute lanes, chunking).
+    pub exec: ExecConfig,
     /// Worker idle poll interval (shutdown latency bound).
     pub idle_timeout: Duration,
     /// Compile all fwht artifacts at startup (vs lazily on first use).
@@ -55,6 +61,7 @@ impl Default for CoordinatorConfig {
                 .unwrap_or(4),
             batcher: BatcherConfig::default(),
             router: RouterConfig::default(),
+            exec: ExecConfig::default(),
             idle_timeout: Duration::from_millis(50),
             preload_pjrt: true,
             min_pjrt_fill: 0.25,
@@ -63,9 +70,16 @@ impl Default for CoordinatorConfig {
 }
 
 /// Submission failure (admission rejection).
-#[derive(Debug, thiserror::Error)]
-#[error("request rejected: {0}")]
+#[derive(Debug)]
 pub struct SubmitError(pub String);
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request rejected: {}", self.0)
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Response receiver handle.
 pub type ResponseRx = mpsc::Receiver<anyhow::Result<TransformResponse>>;
@@ -75,6 +89,7 @@ pub struct Coordinator {
     router: Arc<Router>,
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
+    engine: Arc<ExecEngine>,
     workers: Vec<JoinHandle<()>>,
     pjrt_tx: Option<mpsc::Sender<Batch>>,
     pjrt_thread: Option<JoinHandle<()>>,
@@ -90,6 +105,7 @@ impl Coordinator {
     ) -> anyhow::Result<Coordinator> {
         let metrics = Arc::new(Metrics::default());
         let batcher = Arc::new(Batcher::new(cfg.batcher));
+        let engine = Arc::new(ExecEngine::new(cfg.exec));
 
         // PJRT executor thread (owns the non-Send Runtime)
         let mut pjrt_tx = None;
@@ -118,17 +134,28 @@ impl Coordinator {
         for wid in 0..cfg.workers {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
+            let engine = Arc::clone(&engine);
             let fwd = pjrt_tx.clone();
             let idle = cfg.idle_timeout;
             let min_fill = cfg.min_pjrt_fill;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("hadacore-worker-{wid}"))
-                    .spawn(move || worker_loop(&batcher, &metrics, fwd, idle, min_fill))
+                    .spawn(move || {
+                        worker_loop(&batcher, &metrics, &engine, fwd, idle, min_fill)
+                    })
                     .expect("spawn worker"),
             );
         }
-        Ok(Coordinator { router, batcher, metrics, workers, pjrt_tx, pjrt_thread })
+        Ok(Coordinator {
+            router,
+            batcher,
+            metrics,
+            engine,
+            workers,
+            pjrt_tx,
+            pjrt_thread,
+        })
     }
 
     /// Submit a request; returns the response receiver.
@@ -164,6 +191,12 @@ impl Coordinator {
         &self.router
     }
 
+    /// The shared execution engine (for observability — lane count,
+    /// sharding and workspace counters).
+    pub fn exec_engine(&self) -> &ExecEngine {
+        &self.engine
+    }
+
     /// Drain queues and stop all threads.
     pub fn shutdown(mut self) {
         self.stop();
@@ -192,6 +225,7 @@ impl Drop for Coordinator {
 fn worker_loop(
     batcher: &Batcher,
     metrics: &Metrics,
+    engine: &ExecEngine,
     pjrt_tx: Option<mpsc::Sender<Batch>>,
     idle: Duration,
     min_pjrt_fill: f64,
@@ -199,14 +233,14 @@ fn worker_loop(
     loop {
         match batcher.next_batch(idle) {
             Some(batch) => match &batch.route.backend {
-                Backend::Native => execute_native_batch(batch, metrics),
+                Backend::Native => execute_native_batch(batch, metrics, engine),
                 Backend::Pjrt(_) => {
                     // under-filled deadline flush: padding a fixed-shape
                     // module costs more than running the rows natively
                     let fill =
                         batch.rows as f64 / batch.route.capacity_rows.max(1) as f64;
                     if fill < min_pjrt_fill || pjrt_tx.is_none() {
-                        execute_native_batch(batch, metrics);
+                        execute_native_batch(batch, metrics, engine);
                     } else if let Some(tx) = &pjrt_tx {
                         if let Err(mpsc::SendError(batch)) = tx.send(batch) {
                             fail_batch(batch, "pjrt executor unavailable");
@@ -305,7 +339,7 @@ fn fail_batch(batch: Batch, msg: &str) {
     }
 }
 
-fn execute_native_batch(batch: Batch, metrics: &Metrics) {
+fn execute_native_batch(batch: Batch, metrics: &Metrics, engine: &ExecEngine) {
     let Batch { key, items, rows, .. } = batch;
     let n = key.n;
     let t0 = Instant::now();
@@ -314,7 +348,7 @@ fn execute_native_batch(batch: Batch, metrics: &Metrics) {
         Some(s) => FwhtOptions::with_scale(s),
         None => FwhtOptions::normalized(n),
     };
-    fwht_f32(key.kernel, &mut data, n, &opts);
+    engine.run_f32(key.kernel, &mut data, n, &opts);
     let exec_us = t0.elapsed().as_micros() as u64;
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -487,6 +521,23 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().unwrap().is_ok());
         }
+    }
+
+    #[test]
+    fn native_batches_execute_on_the_engine() {
+        let c = native_coordinator(2);
+        for id in 0..5 {
+            let rows = 4;
+            let n = 2048;
+            c.transform(TransformRequest::new(id, n, vec![1.0; rows * n]))
+                .unwrap();
+        }
+        let s = c.exec_engine().stats();
+        assert!(
+            s.jobs + s.inline_runs >= 5,
+            "every native batch must go through the engine: {s:?}"
+        );
+        c.shutdown();
     }
 
     #[test]

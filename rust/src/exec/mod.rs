@@ -1,0 +1,547 @@
+//! Batched multi-threaded execution engine.
+//!
+//! The serving layers below this module execute every batch on the
+//! thread that picked it up, and the 16-bit path allocates a fresh f32
+//! widening buffer per call — exactly the compute- and exchange-overhead
+//! the paper restructures the transform to remove. This module is the
+//! CPU-side answer, three pieces (design details in
+//! `docs/ARCHITECTURE.md`):
+//!
+//! * `pool` (private) — a persistent std-thread worker pool. A `rows x n` batch
+//!   is sharded into row chunks; workers claim chunks under one lock
+//!   (chunk-granular work stealing), and the submitter blocks on a
+//!   completion latch. Small batches never pay the handoff: below the
+//!   sharding threshold they run inline on the submitting thread.
+//! * **per-thread workspaces** — each worker owns a reusable f32 scratch
+//!   buffer, so the f16/bf16 widen-compute-narrow path performs no heap
+//!   allocation in steady state ([`ExecStats::scratch_grows`] counts the
+//!   warmup growths and then stays flat).
+//! * [`plan`] — a process-wide cache memoizing the per-size round
+//!   structure (Sylvester factorisation, stride tables, §3.3 residual
+//!   factor), so per-batch dispatch rebuilds nothing.
+//!
+//! ```no_run
+//! use hadacore::exec::ExecEngine;
+//! use hadacore::hadamard::{FwhtOptions, KernelKind};
+//!
+//! let engine = ExecEngine::default(); // one lane per core (capped at 16)
+//! let (rows, n) = (256, 4096);
+//! let mut batch = vec![1.0f32; rows * n];
+//! engine.run(KernelKind::HadaCore, &mut batch, n, &FwhtOptions::normalized(n));
+//! ```
+
+pub mod plan;
+mod pool;
+
+pub use plan::{cached_plan_count, plan_for, ExecPlan};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::hadamard::hadacore::fwht_hadacore_f32_planned;
+use crate::hadamard::{fwht_f32, validate_dims, FwhtOptions, KernelKind};
+use crate::util::f16::{Element, BF16, F16};
+
+use pool::{JobSpec, WorkerPool};
+
+/// A batch buffer's base pointer, tagged with its storage dtype so it can
+/// cross the worker-thread boundary. Implementation detail of the
+/// engine's sharding; public only because [`ExecElement`] mentions it.
+#[doc(hidden)]
+#[derive(Clone, Copy)]
+pub enum Payload {
+    F32(*mut f32),
+    F16(*mut F16),
+    BF16(*mut BF16),
+}
+
+// SAFETY: a Payload is only ever dereferenced through `execute_range`,
+// whose callers guarantee exclusive, disjoint access (see pool.rs).
+unsafe impl Send for Payload {}
+
+/// Storage dtypes the engine can execute: `f32` directly, [`F16`] and
+/// [`BF16`] through the per-thread f32 workspace.
+pub trait ExecElement: Element {
+    #[doc(hidden)]
+    fn payload(base: *mut Self) -> Payload;
+}
+
+impl ExecElement for f32 {
+    fn payload(base: *mut Self) -> Payload {
+        Payload::F32(base)
+    }
+}
+
+impl ExecElement for F16 {
+    fn payload(base: *mut Self) -> Payload {
+        Payload::F16(base)
+    }
+}
+
+impl ExecElement for BF16 {
+    fn payload(base: *mut Self) -> Payload {
+        Payload::BF16(base)
+    }
+}
+
+/// Engine counters (all monotonically increasing).
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    /// Batches sharded across the worker pool.
+    pub jobs: AtomicU64,
+    /// Batches executed inline on the submitting thread (too small to
+    /// shard, or a single-threaded engine).
+    pub inline_runs: AtomicU64,
+    /// Chunks executed (an inline run counts as one chunk).
+    pub chunks: AtomicU64,
+    /// Growth events of the reusable f32 workspaces. Flat counter ==
+    /// zero-allocation steady state on the 16-bit path.
+    pub scratch_grows: AtomicU64,
+}
+
+/// Point-in-time copy of [`ExecStats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecStatsSnapshot {
+    pub jobs: u64,
+    pub inline_runs: u64,
+    pub chunks: u64,
+    pub scratch_grows: u64,
+}
+
+impl ExecStats {
+    fn snapshot(&self) -> ExecStatsSnapshot {
+        ExecStatsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            inline_runs: self.inline_runs.load(Ordering::Relaxed),
+            chunks: self.chunks.load(Ordering::Relaxed),
+            scratch_grows: self.scratch_grows.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecConfig {
+    /// Compute lanes (worker threads). `1` runs everything inline on the
+    /// submitting thread with no pool.
+    pub threads: usize,
+    /// Target chunks per lane per batch. More chunks balance uneven
+    /// progress better; fewer chunks lower claim overhead.
+    pub chunks_per_thread: usize,
+    /// Minimum elements per chunk. Batches smaller than one chunk run
+    /// inline — the thread handoff costs more than the transform.
+    pub min_chunk_elems: usize,
+}
+
+impl Default for ExecConfig {
+    /// One lane per available core, capped at 16 — the transform is
+    /// memory-bound well before that on typical hosts; raise `threads`
+    /// explicitly to use more.
+    fn default() -> Self {
+        ExecConfig {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(16),
+            chunks_per_thread: 4,
+            min_chunk_elems: 1 << 14, // 16K elements = 64 KiB of f32
+        }
+    }
+}
+
+/// The batched execution engine. One instance owns one worker pool;
+/// cheap to share behind an [`Arc`] — every method takes `&self`.
+pub struct ExecEngine {
+    cfg: ExecConfig,
+    pool: Option<WorkerPool>,
+    inline_scratch: Mutex<Vec<f32>>,
+    stats: Arc<ExecStats>,
+}
+
+impl Default for ExecEngine {
+    fn default() -> Self {
+        ExecEngine::new(ExecConfig::default())
+    }
+}
+
+impl ExecEngine {
+    /// Start an engine (spawns `cfg.threads` workers when `> 1`).
+    pub fn new(cfg: ExecConfig) -> ExecEngine {
+        let cfg = ExecConfig { threads: cfg.threads.max(1), ..cfg };
+        let stats = Arc::new(ExecStats::default());
+        let pool = (cfg.threads > 1)
+            .then(|| WorkerPool::new(cfg.threads, Arc::clone(&stats)));
+        ExecEngine { cfg, pool, inline_scratch: Mutex::new(Vec::new()), stats }
+    }
+
+    /// An engine with no pool: every batch runs inline on the caller.
+    /// The single-thread baseline the benches compare against, and the
+    /// deterministic-scheduling arm of the parity tests.
+    pub fn single_threaded() -> ExecEngine {
+        ExecEngine::new(ExecConfig { threads: 1, ..ExecConfig::default() })
+    }
+
+    /// Configured lane count.
+    pub fn threads(&self) -> usize {
+        self.cfg.threads
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ExecStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Transform every `n`-sized row of `data` in place with `kind`,
+    /// sharding across the worker pool when the batch is large enough.
+    ///
+    /// Bit-identical to calling the kernel directly on the whole buffer
+    /// (row transforms are independent, and the HadaCore plan replays the
+    /// exact pass structure of the unplanned path).
+    ///
+    /// Panics if `data.len()` is not a `rows * n` multiple or `n` is not
+    /// a supported power of two — callers on the serving path have
+    /// already validated via the router.
+    pub fn run<E: ExecElement>(
+        &self,
+        kind: KernelKind,
+        data: &mut [E],
+        n: usize,
+        opts: &FwhtOptions,
+    ) {
+        let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+        let plan = plan_for(kind, n);
+        let chunk_rows = self.chunk_rows_for(rows, n);
+        let chunks = (rows + chunk_rows - 1) / chunk_rows;
+        match &self.pool {
+            Some(pool) if chunks > 1 => {
+                self.stats.jobs.fetch_add(1, Ordering::Relaxed);
+                let spec = JobSpec {
+                    payload: E::payload(data.as_mut_ptr()),
+                    rows,
+                    n,
+                    chunk_rows,
+                    kind,
+                    opts: *opts,
+                    plan,
+                };
+                // SAFETY: `data` is a `&mut` borrow we hold for the whole
+                // call, covering exactly `rows * n` elements.
+                unsafe { pool.submit_and_wait(spec) };
+            }
+            _ => {
+                self.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
+                let payload = E::payload(data.as_mut_ptr());
+                match payload {
+                    // f32 never touches scratch — skip the shared lock so
+                    // concurrent submitters' small batches stay parallel
+                    Payload::F32(_) => {
+                        let mut unused = Vec::new();
+                        // SAFETY: whole buffer as one chunk, under our `&mut`.
+                        unsafe {
+                            execute_range(
+                                payload,
+                                0,
+                                rows,
+                                n,
+                                kind,
+                                opts,
+                                &plan,
+                                &mut unused,
+                                &self.stats,
+                            );
+                        }
+                    }
+                    _ => {
+                        let mut scratch = self.inline_scratch.lock().unwrap();
+                        // SAFETY: whole buffer as one chunk, under our `&mut`.
+                        unsafe {
+                            execute_range(
+                                payload,
+                                0,
+                                rows,
+                                n,
+                                kind,
+                                opts,
+                                &plan,
+                                &mut scratch,
+                                &self.stats,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`ExecEngine::run`] monomorphised for `f32` — the coordinator's
+    /// native-batch entry point.
+    pub fn run_f32(
+        &self,
+        kind: KernelKind,
+        data: &mut [f32],
+        n: usize,
+        opts: &FwhtOptions,
+    ) {
+        self.run::<f32>(kind, data, n, opts);
+    }
+
+    /// Rows per chunk for a `rows x n` batch: enough chunks to balance
+    /// the lanes, but never chunks smaller than `min_chunk_elems`.
+    fn chunk_rows_for(&self, rows: usize, n: usize) -> usize {
+        let target_chunks =
+            (self.cfg.threads * self.cfg.chunks_per_thread.max(1)).max(1);
+        let by_balance = (rows + target_chunks - 1) / target_chunks;
+        let min_rows = (self.cfg.min_chunk_elems + n - 1) / n;
+        by_balance.max(min_rows).max(1)
+    }
+}
+
+/// Execute rows `[start_row, start_row + rows_here)` of a payload buffer:
+/// direct for f32, widen-compute-narrow through `scratch` for 16-bit
+/// storage. Shared by pool workers and the inline path.
+///
+/// # Safety
+///
+/// `payload` must point at a buffer of at least
+/// `(start_row + rows_here) * n` elements of the tagged dtype, and no
+/// other thread may access the addressed row range for the duration.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn execute_range(
+    payload: Payload,
+    start_row: usize,
+    rows_here: usize,
+    n: usize,
+    kind: KernelKind,
+    opts: &FwhtOptions,
+    plan: &ExecPlan,
+    scratch: &mut Vec<f32>,
+    stats: &ExecStats,
+) {
+    let offset = start_row * n;
+    let len = rows_here * n;
+    stats.chunks.fetch_add(1, Ordering::Relaxed);
+    match payload {
+        Payload::F32(base) => {
+            let data = std::slice::from_raw_parts_mut(base.add(offset), len);
+            run_f32_slice(kind, data, n, opts, plan);
+        }
+        Payload::F16(base) => {
+            let data = std::slice::from_raw_parts_mut(base.add(offset), len);
+            widen_run_narrow(kind, data, n, opts, plan, scratch, stats);
+        }
+        Payload::BF16(base) => {
+            let data = std::slice::from_raw_parts_mut(base.add(offset), len);
+            widen_run_narrow(kind, data, n, opts, plan, scratch, stats);
+        }
+    }
+}
+
+fn run_f32_slice(
+    kind: KernelKind,
+    data: &mut [f32],
+    n: usize,
+    opts: &FwhtOptions,
+    plan: &ExecPlan,
+) {
+    match (&plan.hadacore, kind) {
+        (Some(hp), KernelKind::HadaCore) => fwht_hadacore_f32_planned(data, hp, opts),
+        _ => fwht_f32(kind, data, n, opts),
+    }
+}
+
+/// The 16-bit chunk path with the reusable workspace: widen into
+/// `scratch`, transform in f32, narrow back with round-to-nearest-even.
+/// Capacity growth (an allocation) is counted; in steady state the
+/// counter is flat.
+fn widen_run_narrow<E: Element>(
+    kind: KernelKind,
+    data: &mut [E],
+    n: usize,
+    opts: &FwhtOptions,
+    plan: &ExecPlan,
+    scratch: &mut Vec<f32>,
+    stats: &ExecStats,
+) {
+    let cap_before = scratch.capacity();
+    scratch.clear();
+    scratch.extend(data.iter().map(|v| v.to_f32()));
+    run_f32_slice(kind, scratch.as_mut_slice(), n, opts, plan);
+    for (dst, src) in data.iter_mut().zip(scratch.iter()) {
+        *dst = E::from_f32(*src);
+    }
+    if scratch.capacity() != cap_before {
+        stats.scratch_grows.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::fwht_generic;
+    use crate::util::rng::Rng;
+
+    fn pooled() -> ExecEngine {
+        ExecEngine::new(ExecConfig {
+            threads: 4,
+            chunks_per_thread: 2,
+            min_chunk_elems: 1024, // shard even smallish test batches
+        })
+    }
+
+    #[test]
+    fn pooled_f32_is_bit_identical_to_direct() {
+        let engine = pooled();
+        let mut rng = Rng::new(1);
+        for (rows, n) in [(1usize, 256usize), (7, 512), (33, 1024), (64, 4096)] {
+            let x = rng.normal_vec(rows * n);
+            let opts = FwhtOptions::normalized(n);
+            for kind in KernelKind::all() {
+                let mut direct = x.clone();
+                crate::hadamard::fwht_f32(kind, &mut direct, n, &opts);
+                let mut sharded = x.clone();
+                engine.run_f32(kind, &mut sharded, n, &opts);
+                assert_eq!(direct, sharded, "kind={kind:?} rows={rows} n={n}");
+            }
+        }
+        assert!(engine.stats().jobs > 0, "large batches must use the pool");
+    }
+
+    #[test]
+    fn pooled_16bit_is_bit_identical_to_direct() {
+        let engine = pooled();
+        let mut rng = Rng::new(2);
+        let (rows, n) = (33usize, 512usize);
+        let x = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+
+        let base16: Vec<F16> = x.iter().map(|&v| F16::from_f32(v)).collect();
+        let mut direct = base16.clone();
+        fwht_generic(KernelKind::HadaCore, &mut direct, n, &opts);
+        let mut sharded = base16;
+        engine.run(KernelKind::HadaCore, &mut sharded, n, &opts);
+        assert_eq!(direct, sharded);
+
+        let basebf: Vec<BF16> = x.iter().map(|&v| BF16::from_f32(v)).collect();
+        let mut direct = basebf.clone();
+        fwht_generic(KernelKind::Dao, &mut direct, n, &opts);
+        let mut sharded = basebf;
+        engine.run(KernelKind::Dao, &mut sharded, n, &opts);
+        assert_eq!(direct, sharded);
+    }
+
+    #[test]
+    fn small_batches_run_inline() {
+        let engine = pooled();
+        let n = 256;
+        let mut data = vec![1.0f32; n]; // one row, far below min_chunk_elems
+        engine.run_f32(KernelKind::HadaCore, &mut data, n, &FwhtOptions::raw());
+        let s = engine.stats();
+        assert_eq!(s.jobs, 0);
+        assert_eq!(s.inline_runs, 1);
+        // raw transform of all-ones: first element n, rest 0
+        assert!((data[0] - n as f32).abs() < 1e-3);
+        assert!(data[1..].iter().all(|v| v.abs() < 1e-3));
+    }
+
+    #[test]
+    fn single_threaded_engine_has_no_pool() {
+        let engine = ExecEngine::single_threaded();
+        assert_eq!(engine.threads(), 1);
+        let mut rng = Rng::new(3);
+        let (rows, n) = (16usize, 1024usize);
+        let x = rng.normal_vec(rows * n);
+        let mut got = x.clone();
+        engine.run_f32(KernelKind::HadaCore, &mut got, n, &FwhtOptions::raw());
+        let mut want = x;
+        crate::hadamard::fwht_f32(
+            KernelKind::HadaCore,
+            &mut want,
+            n,
+            &FwhtOptions::raw(),
+        );
+        assert_eq!(got, want);
+        assert_eq!(engine.stats().jobs, 0);
+    }
+
+    #[test]
+    fn scratch_allocation_is_bounded_in_steady_state() {
+        let engine = pooled();
+        let mut rng = Rng::new(4);
+        let (rows, n) = (32usize, 1024usize);
+        let base: Vec<F16> = rng
+            .normal_vec(rows * n)
+            .iter()
+            .map(|&v| F16::from_f32(v))
+            .collect();
+        let opts = FwhtOptions::normalized(n);
+        for _ in 0..20 {
+            let mut batch = base.clone();
+            engine.run(KernelKind::HadaCore, &mut batch, n, &opts);
+        }
+        let s = engine.stats();
+        // every worker grows its workspace at most once for a fixed batch
+        // shape; everything after warmup reuses it
+        assert!(
+            s.scratch_grows <= engine.threads() as u64,
+            "scratch grew {} times across {} chunks — not reusing workspaces",
+            s.scratch_grows,
+            s.chunks,
+        );
+        assert!(s.chunks > s.scratch_grows, "chunks must vastly outnumber grows");
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        let engine = std::sync::Arc::new(pooled());
+        let mut rng = Rng::new(5);
+        let n = 512;
+        let inputs: Vec<Vec<f32>> =
+            (0..8).map(|_| rng.normal_vec(16 * n)).collect();
+        let outputs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            inputs
+                .iter()
+                .map(|x| {
+                    let engine = std::sync::Arc::clone(&engine);
+                    s.spawn(move || {
+                        let mut data = x.clone();
+                        engine.run_f32(
+                            KernelKind::HadaCore,
+                            &mut data,
+                            n,
+                            &FwhtOptions::normalized(n),
+                        );
+                        data
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for (x, got) in inputs.iter().zip(outputs.iter()) {
+            let mut want = x.clone();
+            crate::hadamard::fwht_f32(
+                KernelKind::HadaCore,
+                &mut want,
+                n,
+                &FwhtOptions::normalized(n),
+            );
+            assert_eq!(&want, got);
+        }
+    }
+
+    #[test]
+    fn chunk_rows_policy() {
+        let engine = ExecEngine::new(ExecConfig {
+            threads: 8,
+            chunks_per_thread: 4,
+            min_chunk_elems: 1 << 14,
+        });
+        // balance: 256 rows over 32 target chunks
+        assert_eq!(engine.chunk_rows_for(256, 4096), 8);
+        // floor: chunks never smaller than min_chunk_elems
+        assert_eq!(engine.chunk_rows_for(256, 256), 64);
+        // tiny batches: one chunk
+        assert_eq!(engine.chunk_rows_for(1, 256), 64);
+    }
+}

@@ -1,0 +1,89 @@
+//! Process-wide transform-plan cache.
+//!
+//! Building a [`HadaCorePlan`] rederives the `n = 2^m * 16^r`
+//! factorisation, the per-round stride table, and the §3.3 residual
+//! factor matrix. None of that depends on the data, only on the
+//! transform size — so the engine memoizes one [`ExecPlan`] per
+//! `(kernel, n)` for the lifetime of the process and hands out `Arc`
+//! clones. Per-batch dispatch therefore performs **no allocation and no
+//! factor reconstruction**; it is a hash lookup.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::hadamard::hadacore::{HadaCoreConfig, HadaCorePlan};
+use crate::hadamard::KernelKind;
+use crate::util::lazy::Lazy;
+
+/// A cached execution plan for one `(kernel, n)` pair.
+#[derive(Debug)]
+pub struct ExecPlan {
+    /// Kernel this plan drives.
+    pub kind: KernelKind,
+    /// Transform size.
+    pub n: usize,
+    /// Precomputed round structure (HadaCore only; the butterfly kernels
+    /// carry no per-size state worth caching).
+    pub hadacore: Option<HadaCorePlan>,
+}
+
+type Cache = Mutex<HashMap<(KernelKind, usize), Arc<ExecPlan>>>;
+
+static CACHE: Lazy<Cache> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Get (building and caching on first use) the plan for `(kind, n)`.
+///
+/// `n` must be a power of two within [`crate::MAX_HADAMARD_SIZE`]; the
+/// engine validates dimensions before calling this.
+pub fn plan_for(kind: KernelKind, n: usize) -> Arc<ExecPlan> {
+    let mut cache = CACHE.lock().unwrap();
+    Arc::clone(cache.entry((kind, n)).or_insert_with(|| {
+        Arc::new(ExecPlan {
+            kind,
+            n,
+            hadacore: (kind == KernelKind::HadaCore)
+                .then(|| HadaCorePlan::new(n, &HadaCoreConfig::default())),
+        })
+    }))
+}
+
+/// Number of plans currently cached (observability / tests).
+pub fn cached_plan_count() -> usize {
+    CACHE.lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_cached_and_shared() {
+        let before = cached_plan_count();
+        let a = plan_for(KernelKind::HadaCore, 1 << 14);
+        let b = plan_for(KernelKind::HadaCore, 1 << 14);
+        assert!(Arc::ptr_eq(&a, &b), "same (kind, n) must share one plan");
+        assert_eq!(cached_plan_count(), before + 1);
+
+        let c = plan_for(KernelKind::Dao, 1 << 14);
+        assert!(c.hadacore.is_none());
+        assert_eq!(cached_plan_count(), before + 2);
+
+        let hp = a.hadacore.as_ref().expect("hadacore plan present");
+        assert_eq!(hp.n(), 1 << 14);
+    }
+
+    #[test]
+    fn concurrent_lookups_converge() {
+        let plans: Vec<Arc<ExecPlan>> = std::thread::scope(|s| {
+            (0..8)
+                .map(|_| s.spawn(|| plan_for(KernelKind::HadaCore, 1 << 13)))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for p in &plans[1..] {
+            assert!(Arc::ptr_eq(&plans[0], p));
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! The std-thread worker pool behind [`super::ExecEngine`].
+//!
+//! Persistent workers block on a condvar-guarded FIFO of jobs. A *job* is
+//! one batch buffer sharded into fixed-height row chunks; workers claim
+//! chunk indices one at a time under the queue lock (work stealing at
+//! chunk granularity — a fast worker takes more chunks, so uneven chunk
+//! costs still balance). The submitting thread blocks on the job's
+//! completion latch, which is also the synchronisation edge that makes
+//! the workers' writes visible to the submitter.
+//!
+//! Buffers cross the thread boundary as tagged raw base pointers
+//! ([`super::Payload`]): the submitter holds the `&mut` borrow for the
+//! whole call, chunk claims are unique by construction, and distinct
+//! chunk indices address disjoint row ranges — so no two threads ever
+//! touch the same element. Worker panics are caught and re-raised on the
+//! submitting thread instead of deadlocking the latch.
+//!
+//! Each worker owns a reusable f32 scratch buffer for the 16-bit
+//! widen-compute-narrow path; after the first few batches of a given
+//! shape it never allocates again (steady-state zero-allocation — see
+//! [`super::ExecStats::scratch_grows`]).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::hadamard::{FwhtOptions, KernelKind};
+
+use super::plan::ExecPlan;
+use super::{execute_range, ExecStats, Payload};
+
+/// Everything a worker needs to run one chunk or the submitter needs to
+/// enqueue a batch.
+pub(crate) struct JobSpec {
+    /// Tagged base pointer of the batch buffer.
+    pub payload: Payload,
+    /// Total rows in the batch.
+    pub rows: usize,
+    /// Row length (Hadamard size).
+    pub n: usize,
+    /// Rows per chunk (last chunk may be short).
+    pub chunk_rows: usize,
+    /// Kernel to run.
+    pub kind: KernelKind,
+    /// Transform options.
+    pub opts: FwhtOptions,
+    /// Cached plan for `(kind, n)`.
+    pub plan: Arc<ExecPlan>,
+}
+
+struct Job {
+    spec: JobSpec,
+    chunks: usize,
+    next_chunk: usize,
+    done: Arc<Latch>,
+}
+
+/// Completion latch: counts outstanding chunks, records worker panics.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(chunks: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining: chunks, panicked: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn finish_one(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.remaining -= 1;
+        st.panicked |= panicked;
+        if st.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.panicked {
+            panic!("exec worker panicked while executing a batch chunk");
+        }
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+/// A claimed chunk, copied out of the job under the queue lock.
+struct Claim {
+    payload: Payload,
+    rows: usize,
+    n: usize,
+    chunk_rows: usize,
+    index: usize,
+    kind: KernelKind,
+    opts: FwhtOptions,
+    plan: Arc<ExecPlan>,
+    done: Arc<Latch>,
+}
+
+/// Persistent worker pool (see the module doc for the threading model).
+pub(crate) struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (callers guarantee `threads >= 1`).
+    pub fn new(threads: usize, stats: Arc<ExecStats>) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                let stats = Arc::clone(&stats);
+                std::thread::Builder::new()
+                    .name(format!("hadacore-exec-{wid}"))
+                    .spawn(move || worker_loop(&shared, &stats))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Enqueue one sharded batch and block until every chunk has executed.
+    ///
+    /// # Safety
+    ///
+    /// `spec.payload` must point at a buffer of at least `rows * n`
+    /// elements of the tagged dtype, and the caller must hold the
+    /// exclusive (`&mut`) borrow of that buffer for the full duration of
+    /// this call. Both hold trivially when the payload is taken from a
+    /// `&mut` slice argument immediately before calling.
+    pub unsafe fn submit_and_wait(&self, spec: JobSpec) {
+        debug_assert!(spec.chunk_rows >= 1 && spec.rows >= 1);
+        let chunks = (spec.rows + spec.chunk_rows - 1) / spec.chunk_rows;
+        let done = Arc::new(Latch::new(chunks));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.queue.push_back(Job {
+                spec,
+                chunks,
+                next_chunk: 0,
+                done: Arc::clone(&done),
+            });
+        }
+        self.shared.work_cv.notify_all();
+        done.wait();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, stats: &ExecStats) {
+    // the per-thread reusable f32 workspace for the 16-bit path
+    let mut scratch: Vec<f32> = Vec::new();
+    loop {
+        let claim = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(front) = st.queue.front_mut() {
+                    let claim = Claim {
+                        payload: front.spec.payload,
+                        rows: front.spec.rows,
+                        n: front.spec.n,
+                        chunk_rows: front.spec.chunk_rows,
+                        index: front.next_chunk,
+                        kind: front.spec.kind,
+                        opts: front.spec.opts,
+                        plan: Arc::clone(&front.spec.plan),
+                        done: Arc::clone(&front.done),
+                    };
+                    front.next_chunk += 1;
+                    if front.next_chunk == front.chunks {
+                        // fully claimed; completion is tracked by the latch
+                        st.queue.pop_front();
+                    }
+                    break claim;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let panicked = catch_unwind(AssertUnwindSafe(|| {
+            let start_row = claim.index * claim.chunk_rows;
+            let rows_here = claim.chunk_rows.min(claim.rows - start_row);
+            // SAFETY: chunk indices are claimed uniquely under the queue
+            // lock and map to disjoint row ranges; the submitter keeps the
+            // buffer exclusively borrowed until the latch opens (the
+            // contract of `submit_and_wait`).
+            unsafe {
+                execute_range(
+                    claim.payload,
+                    start_row,
+                    rows_here,
+                    claim.n,
+                    claim.kind,
+                    &claim.opts,
+                    &claim.plan,
+                    &mut scratch,
+                    stats,
+                );
+            }
+        }))
+        .is_err();
+        claim.done.finish_one(panicked);
+    }
+}

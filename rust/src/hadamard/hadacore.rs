@@ -26,7 +26,7 @@
 //! * [`ResidualMode::SmallFactor`]: contract the `2^m` axis directly with
 //!   the small `H_{2^m}` matrix (cheaper; what a CPU would actually do).
 
-use super::matrices::factor_16;
+use super::matrices::{block_diagonal, factor_16};
 use super::mma::{
     left_mul_h16_strided_fast, left_mul_small_strided_fast,
     right_mul_fused_chunk_fast, right_mul_h16_fast,
@@ -116,6 +116,138 @@ pub fn fwht_hadacore_f32_cfg(
                     left_mul_small_strided_fast(row, 1 << m, inner);
                 }
             }
+        }
+    }
+    apply_scale(data, opts.scale);
+}
+
+/// Precomputed round structure for one `(n, residual)` pair.
+///
+/// Everything `fwht_hadacore_f32_cfg` rederives on every call — the
+/// `n = 2^m * 16^r` factorisation, the fused round-0 chunk, the inner
+/// stride of each 16-round, and the §3.3 block-diagonal residual table —
+/// computed once. [`crate::exec::plan`] memoizes one plan per transform
+/// size process-wide so the batch engine's dispatch allocates nothing
+/// and recomputes nothing per call.
+#[derive(Clone, Debug)]
+pub struct HadaCorePlan {
+    n: usize,
+    m: u32,
+    residual: ResidualMode,
+    /// BD path: fused round-0 butterfly chunk (`16 * 2^m`, clamped to n).
+    /// `None` when `m == 0` (round 0 is a plain H16 round).
+    fused_chunk: Option<usize>,
+    /// Inner strides of the strided 16-rounds, in execution order.
+    strides: Vec<usize>,
+    /// SmallFactor path: inner stride of the final `H_{2^m}` contraction
+    /// (`16^r`); `None` when `m == 0` or in BD mode.
+    small_inner: Option<usize>,
+    /// The §3.3 residual factor `I kron H_{2^m}` as a 16x16 table
+    /// (identity when `m == 0`) — the matrix the tile-microkernel path
+    /// and the tests consume.
+    bd: [f32; 256],
+}
+
+impl HadaCorePlan {
+    /// Build the plan for transform size `n` (must be a power of two
+    /// within [`crate::MAX_HADAMARD_SIZE`]).
+    pub fn new(n: usize, cfg: &HadaCoreConfig) -> HadaCorePlan {
+        let (m, r) = factor_16(n);
+        let mut fused_chunk = None;
+        let mut strides = Vec::new();
+        let mut small_inner = None;
+        if n >= 16 {
+            match cfg.residual {
+                ResidualMode::BlockDiagonal => {
+                    if m > 0 {
+                        fused_chunk = Some(((1usize << m) * 16).min(n));
+                        for i in 1..r {
+                            strides.push((1usize << m) * 16usize.pow(i));
+                        }
+                    } else {
+                        for i in 1..r {
+                            strides.push(16usize.pow(i));
+                        }
+                    }
+                }
+                ResidualMode::SmallFactor => {
+                    for i in 1..r {
+                        strides.push(16usize.pow(i));
+                    }
+                    if m > 0 {
+                        small_inner = Some(16usize.pow(r));
+                    }
+                }
+            }
+        }
+        HadaCorePlan {
+            n,
+            m,
+            residual: cfg.residual,
+            fused_chunk,
+            strides,
+            small_inner,
+            bd: block_diagonal(m),
+        }
+    }
+
+    /// Transform size this plan was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Residual strategy this plan was built for.
+    pub fn residual(&self) -> ResidualMode {
+        self.residual
+    }
+
+    /// Number of memory passes over the buffer the planned execution
+    /// makes. One less than the paper's `ceil(log16 n)` logical round
+    /// count when the §Perf fused round-0 applies (the BD residual and
+    /// the first 16-round share one pass).
+    pub fn passes(&self) -> usize {
+        if self.n < 16 {
+            return 1;
+        }
+        1 + self.strides.len() + usize::from(self.small_inner.is_some())
+    }
+
+    /// The cached §3.3 residual factor table (`I kron H_{2^m}`).
+    pub fn residual_table(&self) -> &[f32; 256] {
+        &self.bd
+    }
+}
+
+/// In-place HadaCore FWHT driven by a precomputed [`HadaCorePlan`].
+///
+/// Bit-identical to [`fwht_hadacore_f32_cfg`] with the configuration the
+/// plan was built from; the batch engine's hot path.
+///
+/// Panics if `data.len()` is not a multiple of the plan's `n`.
+pub fn fwht_hadacore_f32_planned(
+    data: &mut [f32],
+    plan: &HadaCorePlan,
+    opts: &FwhtOptions,
+) {
+    let n = plan.n;
+    let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+    if n < 16 {
+        for row in data.chunks_exact_mut(n) {
+            left_mul_small_strided_fast(row, n, 1);
+        }
+        apply_scale(data, opts.scale);
+        return;
+    }
+    match plan.fused_chunk {
+        Some(chunk) => right_mul_fused_chunk_fast(data, chunk),
+        None => right_mul_h16_fast(data),
+    }
+    for &inner in &plan.strides {
+        strided_round(data, rows, n, inner);
+    }
+    if let Some(inner) = plan.small_inner {
+        for row in data.chunks_exact_mut(n) {
+            left_mul_small_strided_fast(row, 1 << plan.m, inner);
         }
     }
     apply_scale(data, opts.scale);
@@ -277,6 +409,57 @@ mod tests {
         // 8K pays 4 rounds, same as 32K (paper results note)
         assert_eq!(hadacore_flops(1, 8192), 16 * 8192 * 4);
         assert_eq!(hadacore_flops(1, 32768), 16 * 32768 * 4);
+    }
+
+    #[test]
+    fn planned_path_is_bit_identical_to_cfg_path() {
+        let mut rng = Rng::new(6);
+        for cfg in [
+            HadaCoreConfig { residual: ResidualMode::BlockDiagonal },
+            HadaCoreConfig { residual: ResidualMode::SmallFactor },
+        ] {
+            for k in 1..=15 {
+                let n = 1usize << k;
+                let rows = if n > 4096 { 2 } else { 3 };
+                let x = rng.normal_vec(rows * n);
+                let mut direct = x.clone();
+                let mut planned = x;
+                let opts = FwhtOptions::normalized(n);
+                fwht_hadacore_f32_cfg(&mut direct, n, &opts, &cfg);
+                let plan = HadaCorePlan::new(n, &cfg);
+                fwht_hadacore_f32_planned(&mut planned, &plan, &opts);
+                // same pass structure => bit-identical, not merely close
+                assert_eq!(direct, planned, "n={n} cfg={cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_structure_matches_factorisation() {
+        let cfg = HadaCoreConfig::default();
+        // 256 = 16^2: two plain 16-rounds, identity residual
+        let p256 = HadaCorePlan::new(256, &cfg);
+        assert_eq!(p256.n(), 256);
+        assert_eq!(p256.passes(), 2);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert_eq!(p256.residual_table()[i * 16 + j], want);
+            }
+        }
+        // 512 = 2 * 16^2: fused BD round-0 + one strided round
+        let p512 = HadaCorePlan::new(512, &cfg);
+        assert_eq!(p512.passes(), 2);
+        assert_eq!(
+            p512.residual_table()[..32].iter().filter(|&&v| v != 0.0).count(),
+            4, // H_2 tile occupies a 2x2 block per 16-row band
+        );
+        // small-factor mode pays an explicit residual pass instead
+        let ps = HadaCorePlan::new(
+            512,
+            &HadaCoreConfig { residual: ResidualMode::SmallFactor },
+        );
+        assert_eq!(ps.passes(), 3);
     }
 
     #[test]

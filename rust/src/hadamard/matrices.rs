@@ -45,7 +45,7 @@ pub fn hadamard_dense(n: usize) -> Vec<f32> {
 /// The 16x16 Hadamard factor as a flat row-major table.
 ///
 /// Built at first use; entries are exactly ±1.0 so no numerical concerns.
-pub static H16: once_cell::sync::Lazy<[f32; 256]> = once_cell::sync::Lazy::new(|| {
+pub static H16: crate::util::lazy::Lazy<[f32; 256]> = crate::util::lazy::Lazy::new(|| {
     let mut h = [0.0f32; 256];
     for i in 0..16 {
         for j in 0..16 {

@@ -113,15 +113,38 @@ pub fn fwht_f32(kind: KernelKind, data: &mut [f32], n: usize, opts: &FwhtOptions
 /// (Tensor-Core/MXU accumulators are FP32 for BF16), transform, then
 /// narrow with round-to-nearest-even. For `f32` this still runs through
 /// the same code path (widen/narrow are the identity).
+///
+/// Allocates a fresh working buffer per call; hot paths (the
+/// [`crate::exec`] engine's workers) use [`fwht_generic_with_scratch`]
+/// with a reused per-thread workspace instead.
 pub fn fwht_generic<E: Element>(
     kind: KernelKind,
     data: &mut [E],
     n: usize,
     opts: &FwhtOptions,
 ) {
-    let mut work: Vec<f32> = data.iter().map(|v| v.to_f32()).collect();
-    fwht_f32(kind, &mut work, n, opts);
-    for (dst, src) in data.iter_mut().zip(work.iter()) {
+    let mut work: Vec<f32> = Vec::new();
+    fwht_generic_with_scratch(kind, data, n, opts, &mut work);
+}
+
+/// [`fwht_generic`] with a caller-owned f32 workspace.
+///
+/// `scratch` is cleared and refilled with the widened input; its capacity
+/// is retained across calls, so a workspace reused for same-shaped
+/// batches performs **no heap allocation in steady state** — the
+/// widen-compute-narrow staging Ootomo & Yokota (2022) show can be made
+/// cheap when the working set is reused deliberately.
+pub fn fwht_generic_with_scratch<E: Element>(
+    kind: KernelKind,
+    data: &mut [E],
+    n: usize,
+    opts: &FwhtOptions,
+    scratch: &mut Vec<f32>,
+) {
+    scratch.clear();
+    scratch.extend(data.iter().map(|v| v.to_f32()));
+    fwht_f32(kind, scratch, n, opts);
+    for (dst, src) in data.iter_mut().zip(scratch.iter()) {
         *dst = E::from_f32(*src);
     }
 }
@@ -183,5 +206,40 @@ mod tests {
         assert!(validate_dims(100, 48).is_err());
         assert!(validate_dims(100, 256).is_err());
         assert!(validate_dims(1 << 20, 1 << 16).is_err());
+    }
+
+    #[test]
+    fn generic_with_scratch_matches_and_reuses_capacity() {
+        use crate::util::f16::F16;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let (rows, n) = (3usize, 256usize);
+        let x = rng.normal_vec(rows * n);
+        let base: Vec<F16> = x.iter().map(|&v| F16::from_f32(v)).collect();
+        let opts = FwhtOptions::normalized(n);
+
+        let mut plain = base.clone();
+        fwht_generic(KernelKind::HadaCore, &mut plain, n, &opts);
+
+        let mut scratched = base;
+        let mut scratch = Vec::new();
+        fwht_generic_with_scratch(
+            KernelKind::HadaCore,
+            &mut scratched,
+            n,
+            &opts,
+            &mut scratch,
+        );
+        assert_eq!(plain, scratched, "scratch path must be bit-identical");
+
+        // steady state: a second same-shaped call must not reallocate
+        let cap = scratch.capacity();
+        fwht_generic_with_scratch(
+            KernelKind::HadaCore,
+            &mut scratched,
+            n,
+            &opts,
+            &mut scratch,
+        );
+        assert_eq!(scratch.capacity(), cap);
     }
 }

@@ -78,6 +78,23 @@ impl ServingWorkload {
     pub fn take(&mut self, count: usize) -> Vec<TransformRequest> {
         (0..count).map(|_| self.next_request()).collect()
     }
+
+    /// Generate one dense `rows x n` batch payload with the configured
+    /// outlier mix — the coordinator-free view of the same distribution,
+    /// used by the [`crate::exec`] engine benches to feed batches
+    /// directly without request framing.
+    pub fn next_matrix(&mut self, rows: usize, n: usize) -> Vec<f32> {
+        let heavy = self.rng.chance(self.cfg.outlier_fraction);
+        let mut data = vec![0.0f32; rows * n];
+        for v in data.iter_mut() {
+            *v = if heavy {
+                self.rng.outlier_normal(0.02, 30.0)
+            } else {
+                self.rng.normal_f32()
+            };
+        }
+        data
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +121,17 @@ mod tests {
             assert!(WorkloadConfig::default().sizes.contains(&req.n));
             assert!(req.rows >= 1 && req.rows <= 8);
         }
+    }
+
+    #[test]
+    fn matrix_payloads_are_deterministic_and_shaped() {
+        let mut a = ServingWorkload::new(WorkloadConfig::default());
+        let mut b = ServingWorkload::new(WorkloadConfig::default());
+        let ma = a.next_matrix(7, 128);
+        let mb = b.next_matrix(7, 128);
+        assert_eq!(ma.len(), 7 * 128);
+        assert_eq!(ma, mb);
+        assert!(ma.iter().any(|v| *v != 0.0));
     }
 
     #[test]

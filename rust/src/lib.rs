@@ -18,29 +18,40 @@
 //!
 //! ## Module map
 //!
+//! The full walkthrough (layering, threading model, data flow) lives in
+//! `docs/ARCHITECTURE.md` at the repository root; the repo-level
+//! `README.md` has quickstart commands.
+//!
 //! | module | role |
 //! |---|---|
 //! | [`hadamard`] | native FWHT kernels: scalar oracle, Dao-style baseline, HadaCore 16x16-block algorithm, f16/bf16 |
+//! | [`exec`] | batched execution engine: worker pool, per-thread workspaces, plan cache |
 //! | [`quant`] | FP8/INT8/INT4 simulated quantisation + error metrics |
 //! | [`gpu_model`] | analytical A100/H100 simulator for the paper's evaluation grids |
 //! | [`runtime`] | PJRT wrapper: load AOT HLO-text artifacts, compile, execute |
 //! | [`coordinator`] | request router, bucketed dynamic batcher, metrics, server loop |
 //! | [`harness`] | workload generation + table/figure regeneration |
-//! | [`util`] | std-only support: JSON, f16/bf16 bits, PRNG, CLI, micro-bench, mini-proptest |
+//! | [`util`] | std-only support: JSON, f16/bf16 bits, PRNG, CLI, micro-bench, mini-proptest, mini-anyhow |
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! // (no_run: doctest binaries miss the xla rpath; see examples/quickstart.rs
-//! // for the executed version of this snippet)
-//! use hadacore::hadamard::{fwht_hadacore_f32, FwhtOptions};
+//! ```
+//! use hadacore::exec::ExecEngine;
+//! use hadacore::hadamard::{fwht_hadacore_f32, FwhtOptions, KernelKind};
 //!
 //! let n = 1024;
+//! // one-shot kernel call
 //! let mut data = vec![1.0f32; 4 * n];
 //! fwht_hadacore_f32(&mut data, n, &FwhtOptions::normalized(n));
+//!
+//! // batched, multi-threaded engine (see examples/quickstart.rs)
+//! let engine = ExecEngine::default();
+//! let mut batch = vec![1.0f32; 64 * n];
+//! engine.run(KernelKind::HadaCore, &mut batch, n, &FwhtOptions::normalized(n));
 //! ```
 
 pub mod coordinator;
+pub mod exec;
 pub mod gpu_model;
 pub mod hadamard;
 pub mod harness;
@@ -48,6 +59,7 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
+pub use exec::{ExecConfig, ExecEngine};
 pub use hadamard::{fwht_dao_f32, fwht_hadacore_f32, fwht_scalar_f32, FwhtOptions};
 
 /// Crate version string (mirrors `Cargo.toml`).

@@ -13,12 +13,14 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use hadacore::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
+use hadacore::exec::ExecConfig;
 use hadacore::gpu_model::{speedup_grid, GridConfig, A100_PCIE, H100_PCIE};
 use hadacore::hadamard::KernelKind;
 use hadacore::harness::tables::{format_runtime_table, format_speedup_table};
 use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
 use hadacore::runtime::Runtime;
 use hadacore::util::cli::Args;
+use hadacore::util::error as anyhow;
 use hadacore::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -43,6 +45,18 @@ fn main() -> anyhow::Result<()> {
 
 fn artifacts_flag(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts"))
+}
+
+/// The artifact dir for serving paths: `None` (native-only) when the flag
+/// is empty or the manifest is absent — a fresh clone has no artifacts and
+/// must still serve.
+fn serving_artifacts(args: &Args) -> Option<PathBuf> {
+    let dir = args.get("artifacts");
+    if dir.is_empty() {
+        return None;
+    }
+    let p = PathBuf::from(dir);
+    p.join("manifest.json").exists().then_some(p)
 }
 
 fn info(argv: Vec<String>) -> anyhow::Result<()> {
@@ -86,9 +100,7 @@ fn transform(argv: Vec<String>) -> anyhow::Result<()> {
     let kernel = KernelKind::parse(&args.get("kernel"))
         .ok_or_else(|| anyhow::anyhow!("bad --kernel"))?;
 
-    let dir = args.get("artifacts");
-    let artifact_dir = if dir.is_empty() { None } else { Some(PathBuf::from(dir)) };
-    let coord = Coordinator::start(artifact_dir, CoordinatorConfig::default())?;
+    let coord = Coordinator::start(serving_artifacts(&args), CoordinatorConfig::default())?;
 
     let mut rng = Rng::new(0);
     let mut req = TransformRequest::new(0, n, rng.normal_vec(rows * n));
@@ -114,16 +126,26 @@ fn serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("requests", "2000", "number of requests")
         .opt("artifacts", "artifacts", "artifact directory ('' = native only)")
         .opt("sizes", "128,256,1024,4096", "Hadamard size mix")
-        .opt("workers", "4", "worker threads")
+        .opt("workers", "4", "batcher worker threads")
+        .opt("exec-threads", "0", "engine compute lanes (0 = default: per-core, capped at 16)")
         .parse_from(argv)
         .map_err(|e| anyhow::anyhow!(e))?;
     let total: usize = args.get_as("requests");
-    let dir = args.get("artifacts");
-    let artifact_dir = if dir.is_empty() { None } else { Some(PathBuf::from(dir)) };
+    let artifact_dir = serving_artifacts(&args);
 
+    let lanes: usize = args.get_as("exec-threads");
+    let exec = if lanes == 0 {
+        ExecConfig::default()
+    } else {
+        ExecConfig { threads: lanes, ..ExecConfig::default() }
+    };
     let coord = Coordinator::start(
         artifact_dir,
-        CoordinatorConfig { workers: args.get_as("workers"), ..Default::default() },
+        CoordinatorConfig {
+            workers: args.get_as("workers"),
+            exec,
+            ..Default::default()
+        },
     )?;
     let mut wl = ServingWorkload::new(WorkloadConfig {
         sizes: args.get_list("sizes"),
@@ -149,6 +171,14 @@ fn serve(argv: Vec<String>) -> anyhow::Result<()> {
         total as f64 / dt.as_secs_f64()
     );
     println!("{}", coord.metrics().snapshot().report());
+    let es = coord.exec_engine().stats();
+    println!(
+        "engine:   {} lanes, {} sharded jobs ({} chunks), {} inline runs",
+        coord.exec_engine().threads(),
+        es.jobs,
+        es.chunks,
+        es.inline_runs
+    );
     coord.shutdown();
     Ok(())
 }

@@ -57,6 +57,13 @@ impl Scheme {
 /// Fake-quantise `x` in place under `scheme` with a per-tensor symmetric
 /// scale chosen from the max-abs value (the paper's setting: per-tensor
 /// FP8 attention). Returns the scale used.
+///
+/// Rotation pairing: QuaRot-style experiments wrap this call in the
+/// **orthonormal** transform (`FwhtOptions::normalized`, i.e.
+/// `x <- (x @ H_n) / sqrt(n)`), quantise, then apply the same transform
+/// again to rotate back — orthonormality is what makes the transform its
+/// own inverse, so any other scale would change the tensor's magnitude
+/// and corrupt the comparison.
 pub fn fake_quantize(x: &mut [f32], scheme: Scheme) -> f32 {
     match scheme {
         Scheme::Fp8E4m3 => fp8_quantize_slice(x, Fp8Format::E4M3),

@@ -2,8 +2,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::util::error::{anyhow, Context, Result};
 use crate::util::f16::DType;
 use crate::util::json::Json;
 

@@ -4,8 +4,21 @@
 //! the [`Runtime`] reads `artifacts/manifest.json`, compiles each HLO-text
 //! module on the PJRT CPU client, and exposes typed `execute_*` calls used
 //! by the coordinator's hot path. Python never runs here.
+//!
+//! fwht artifacts implement the same per-row convention as the native
+//! kernels — `x <- (x @ H_n) * (1/sqrt(n))`, with the orthonormal scale
+//! baked into the compiled module (which is why custom-scale requests
+//! route native; see `coordinator::TransformRequest::scale`).
+//!
+//! **Backend note:** this build resolves the `xla` surface to the
+//! dependency-free host stub in [`pjrt`] — literals and manifests are
+//! fully functional; compiling/executing artifacts reports a clean
+//! error (a coordinator started *with* an artifact dir fails fast at
+//! preload; started without one, it serves natively). Point the
+//! [`xla`] alias at the real `xla` crate to enable artifact execution.
 
 pub mod manifest;
+pub mod pjrt;
 pub mod tensor;
 pub mod weights;
 
@@ -13,11 +26,15 @@ pub use manifest::{ArtifactEntry, Manifest, ModelMeta, TensorSpec};
 pub use tensor::{literal_f32, literal_i32, literal_to_f32, Tensor};
 pub use weights::Weights;
 
+// The `xla` name every call site (and the integration tests) imports.
+// Currently the host stub; point it at the real crate to enable PJRT.
+pub use self::pjrt as xla;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 
 /// A compiled PJRT executable plus its manifest entry.
 pub struct LoadedArtifact {

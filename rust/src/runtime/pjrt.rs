@@ -1,0 +1,278 @@
+//! Host-side stand-in for the `xla` crate's PJRT surface.
+//!
+//! The runtime layer was written against the [`xla-rs`] API
+//! (`PjRtClient` / `PjRtLoadedExecutable` / `Literal`). That crate links
+//! the multi-hundred-megabyte `xla_extension` C++ library, which this
+//! build environment does not ship — so this module provides the same
+//! types with the same signatures, split in two tiers:
+//!
+//! * **Host tier (fully functional):** [`Literal`] construction, reshape,
+//!   and readback are pure host-memory operations and are implemented for
+//!   real. Manifest parsing, weight loading, and every test that only
+//!   moves buffers works identically to the real backend.
+//! * **Device tier (gated):** [`PjRtClient::compile`] returns a clean
+//!   error — compiled-artifact execution requires the real PJRT runtime.
+//!   Deployments without an artifact directory (a fresh clone) are
+//!   unaffected: the coordinator routes everything native. A deployment
+//!   that *does* pass an artifact directory fails fast instead of
+//!   degrading — `Coordinator::start` preloads artifacts by default and
+//!   surfaces the compile error at startup.
+//!
+//! Swapping the real crate back in is a two-line change: add `xla` to
+//! `Cargo.toml` and re-point the `pub use self::pjrt as xla;` alias in
+//! [`crate::runtime`].
+//!
+//! [`xla-rs`]: https://github.com/LaurentMazare/xla-rs
+
+use std::fmt;
+
+/// Error type matching the `xla::Error` role: call sites format it with
+/// `{e:?}`, so only `Debug` is load-bearing.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+const NO_BACKEND: &str = "PJRT execution requires the real `xla` crate \
+     (this build uses the dependency-free host stub; native kernels remain \
+     fully functional)";
+
+/// Typed literal storage (f32 and i32 cover every artifact input/output
+/// this repo produces). Public only because [`NativeType`] mentions it.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized + 'static {
+    #[doc(hidden)]
+    fn wrap(data: &[Self]) -> Storage;
+    #[doc(hidden)]
+    fn unwrap(storage: &Storage) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[Self]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+
+    fn unwrap(storage: &Storage) -> Result<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Ok(v.clone()),
+            Storage::I32(_) => Err(Error::new("literal holds i32, requested f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[Self]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+
+    fn unwrap(storage: &Storage) -> Result<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Ok(v.clone()),
+            Storage::F32(_) => Err(Error::new("literal holds f32, requested i32")),
+        }
+    }
+}
+
+/// A host-memory tensor literal (shape + typed storage).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], storage: T::wrap(data) }
+    }
+
+    /// Reinterpret under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.storage.len() {
+            return Err(Error::new(format!(
+                "reshape to {:?} ({numel} elements) of a {}-element literal",
+                dims,
+                self.storage.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), storage: self.storage.clone() })
+    }
+
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy the contents out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+    }
+
+    /// Unpack a tuple literal. The host stub never produces tuples (they
+    /// only arise from device execution), so this is always an error.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::new(NO_BACKEND))
+    }
+}
+
+/// Parsed HLO module text. The stub validates only that the file exists
+/// and is readable; structural validation happens at compile time on the
+/// real backend.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact from disk.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation wrapping an HLO module, ready to compile.
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: HloModuleProto { text: proto.text.clone() } }
+    }
+}
+
+/// A device buffer handle produced by execution. Unconstructible in the
+/// stub (execution always fails first); present so signatures match.
+pub struct PjRtBuffer {
+    never: std::convert::Infallible,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.never {}
+    }
+}
+
+/// A compiled executable. Unconstructible in the stub.
+pub struct PjRtLoadedExecutable {
+    never: std::convert::Infallible,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.never {}
+    }
+}
+
+/// The PJRT client. The stub constructs (so [`crate::runtime::Runtime`]
+/// opens, manifests parse, and weights load) but cannot compile.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Open the CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Platform label; `-stub` marks the host-only build.
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    /// Compile a computation. Always an error in the stub build.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(NO_BACKEND))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let data: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let lit = Literal::vec1(&data);
+        assert_eq!(lit.dims(), &[6]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), data);
+        assert!(lit.reshape(&[4, 4]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn i32_literals_work() {
+        let toks = vec![1i32, 2, 3, 4];
+        let lit = Literal::vec1(&toks).reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), toks);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_opens_but_cannot_compile() {
+        let dir = std::env::temp_dir().join(format!("hc_hlo_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(&path, "HloModule m").unwrap();
+
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err:?}").contains("PJRT execution requires"));
+
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

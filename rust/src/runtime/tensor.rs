@@ -1,6 +1,11 @@
 //! Host tensors and Literal conversion helpers.
+//!
+//! [`Tensor`] is the plain row-major host container the harness and
+//! examples trade in; the `literal_*` helpers convert to and from the
+//! PJRT [`xla::Literal`] exchange type at the runtime boundary.
 
-use anyhow::{anyhow, Result};
+use super::xla;
+use crate::util::error::{anyhow, Result};
 
 /// A host-side f32 tensor (row-major).
 #[derive(Clone, Debug, PartialEq)]

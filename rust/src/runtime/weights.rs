@@ -7,10 +7,10 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
 use super::manifest::Manifest;
 use super::tensor::Tensor;
+use super::xla;
+use crate::util::error::{anyhow, Context, Result};
 
 /// All trained weights, addressable by name and in manifest order.
 #[derive(Clone, Debug)]

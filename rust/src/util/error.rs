@@ -1,0 +1,168 @@
+//! Minimal error type with context chaining (`anyhow` is unavailable
+//! offline — see the module doc on [`crate::util`]).
+//!
+//! Provides the subset of the `anyhow` API this crate uses, with the same
+//! names so call sites read identically:
+//!
+//! * [`Error`] — an opaque, message-carrying error value.
+//! * [`Result<T>`] — `std::result::Result<T, Error>` with the error
+//!   defaulted.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` adapters that
+//!   prefix a message onto an underlying error.
+//! * [`anyhow!`](crate::anyhow) / [`bail!`](crate::bail) — format-style
+//!   constructors.
+//!
+//! Modules alias this as `use crate::util::error as anyhow;` so existing
+//! `anyhow::Result<..>` signatures keep working unchanged.
+
+use std::fmt;
+
+/// An opaque error: a human-readable message, optionally chained onto the
+/// message of a causing error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix `context` onto this error (outermost context first, matching
+    /// `anyhow`'s display layout).
+    pub fn context(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` interop: any std error converts into `Error`. (`Error` itself
+// deliberately does not implement `std::error::Error`, exactly like
+// `anyhow::Error`, so this blanket impl cannot overlap the reflexive
+// `From<Error> for Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with the crate error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context adapters for `Result`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+// Re-export the crate-root macros so `use crate::util::error as anyhow;`
+// makes `anyhow::anyhow!` / `anyhow::bail!` resolve.
+pub use crate::{anyhow, bail};
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string
+/// or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::error::Error) built as by
+/// [`anyhow!`](crate::anyhow).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 7;
+        let b = anyhow!("n={n} and {}", 8);
+        assert_eq!(b.to_string(), "n=7 and 8");
+        let c = anyhow!(io_err());
+        assert_eq!(c.to_string(), "gone");
+        let captured = anyhow!("value {n}");
+        assert_eq!(captured.to_string(), "value 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn context_prefixes_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: gone");
+
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: gone");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 2);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(inner(true).unwrap_err().to_string(), "failed with code 2");
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = anyhow!("boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+}

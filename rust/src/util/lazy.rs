@@ -1,0 +1,71 @@
+//! Lazily-initialised statics (`once_cell` is unavailable offline).
+//!
+//! [`Lazy`] is the subset of `once_cell::sync::Lazy` this crate needs:
+//! a `static`-compatible cell holding a value built on first dereference
+//! by a plain function pointer (every use site passes a non-capturing
+//! closure, which coerces). Built on [`std::sync::OnceLock`], so
+//! initialisation is thread-safe and happens exactly once.
+
+use std::ops::Deref;
+use std::sync::OnceLock;
+
+/// A value initialised on first access.
+pub struct Lazy<T> {
+    cell: OnceLock<T>,
+    init: fn() -> T,
+}
+
+impl<T> Lazy<T> {
+    /// Create an empty cell that will run `init` on first dereference.
+    pub const fn new(init: fn() -> T) -> Lazy<T> {
+        Lazy { cell: OnceLock::new(), init }
+    }
+
+    /// Force initialisation and return the value.
+    pub fn force(&self) -> &T {
+        self.cell.get_or_init(self.init)
+    }
+}
+
+impl<T> Deref for Lazy<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.force()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static CALLS: AtomicUsize = AtomicUsize::new(0);
+    static CELL: Lazy<u64> = Lazy::new(|| {
+        CALLS.fetch_add(1, Ordering::SeqCst);
+        42
+    });
+
+    #[test]
+    fn initialises_once_across_threads() {
+        let got: Vec<u64> = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| s.spawn(|| *CELL))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        assert!(got.iter().all(|&v| v == 42));
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+        assert_eq!(*CELL.force(), 42);
+    }
+
+    #[test]
+    fn deref_through_reference() {
+        static ARR: Lazy<[f32; 3]> = Lazy::new(|| [1.0, 2.0, 3.0]);
+        let r: &[f32; 3] = &ARR;
+        assert_eq!(r[1], 2.0);
+        assert_eq!(ARR.len(), 3);
+    }
+}

@@ -1,9 +1,11 @@
 //! Std-only support utilities.
 //!
-//! The build environment vendors only the `xla` crate's dependency closure,
-//! so the usual ecosystem crates (serde, clap, criterion, proptest, half,
-//! rand) are unavailable. Each submodule is a small, tested, purpose-built
-//! replacement:
+//! The crate builds with **zero external dependencies** so the tier-1
+//! verify (`cargo build --release && cargo test -q`) runs on any Rust
+//! toolchain without network or vendored registries. The usual ecosystem
+//! crates (serde, clap, criterion, proptest, half, rand, anyhow,
+//! once_cell) are therefore replaced by small, tested, purpose-built
+//! submodules:
 //!
 //! * [`json`] — minimal JSON value model + parser + writer (manifest I/O).
 //! * [`f16`] — IEEE binary16 and bfloat16 with correct round-to-nearest-even.
@@ -11,10 +13,14 @@
 //! * [`cli`] — tiny declarative flag parser for the binary and examples.
 //! * [`bench`] — micro-benchmark timer (warmup, iterations, robust stats).
 //! * [`prop`] — mini property-based test driver (random cases + replay seed).
+//! * [`error`] — message-carrying error type + context chaining (mini-anyhow).
+//! * [`lazy`] — lazily-initialised statics over [`std::sync::OnceLock`].
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod f16;
 pub mod json;
+pub mod lazy;
 pub mod prop;
 pub mod rng;

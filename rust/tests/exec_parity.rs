@@ -1,0 +1,189 @@
+//! Integration: the batched execution engine must be indistinguishable
+//! from the single-call kernels — across kernels (scalar/dao/hadacore),
+//! dtypes (f32/f16/bf16), the paper's size axis (256..32768), chunk
+//! boundaries (rows not divisible by the chunk height, single-row
+//! batches), and lane counts (1, 3, 8).
+//!
+//! Two bars:
+//! * **bit-for-bit vs the direct call of the same kernel** — sharding by
+//!   rows must not change a single ULP (rows are independent, and the
+//!   planned HadaCore path replays the exact pass structure);
+//! * **close to the scalar oracle** — the cross-kernel accuracy bar every
+//!   kernel already meets in unit tests, re-checked through the engine.
+
+use hadacore::exec::{ExecConfig, ExecEngine};
+use hadacore::hadamard::{fwht_f32, fwht_generic, FwhtOptions, KernelKind};
+use hadacore::util::f16::{Element, BF16, F16};
+use hadacore::util::prop::assert_close;
+use hadacore::util::rng::Rng;
+
+/// Lane configurations under test: no pool, an odd lane count, and a
+/// deliberately aggressive sharder (tiny chunks => many boundaries).
+fn engines() -> Vec<(&'static str, ExecEngine)> {
+    vec![
+        ("t1", ExecEngine::single_threaded()),
+        (
+            "t3",
+            ExecEngine::new(ExecConfig {
+                threads: 3,
+                chunks_per_thread: 2,
+                min_chunk_elems: 4096,
+            }),
+        ),
+        (
+            "t8-fine",
+            ExecEngine::new(ExecConfig {
+                threads: 8,
+                chunks_per_thread: 4,
+                min_chunk_elems: 256,
+            }),
+        ),
+    ]
+}
+
+/// (n, rows) grid: paper sizes with row counts chosen to not divide
+/// evenly into chunks, plus single-row batches.
+const SHAPES: [(usize, usize); 8] = [
+    (256, 1),
+    (256, 67),
+    (512, 33),
+    (1024, 13),
+    (4096, 9),
+    (4096, 1),
+    (16384, 5),
+    (32768, 3),
+];
+
+fn scalar_oracle(x: &[f32], n: usize, opts: &FwhtOptions) -> Vec<f32> {
+    let mut want = x.to_vec();
+    fwht_f32(KernelKind::Scalar, &mut want, n, opts);
+    want
+}
+
+#[test]
+fn f32_engine_matches_direct_and_oracle() {
+    let mut rng = Rng::new(0xE0);
+    for (label, engine) in engines() {
+        for &(n, rows) in &SHAPES {
+            let x = rng.normal_vec(rows * n);
+            let opts = FwhtOptions::normalized(n);
+            let oracle = scalar_oracle(&x, n, &opts);
+            for kind in KernelKind::all() {
+                let mut direct = x.clone();
+                fwht_f32(kind, &mut direct, n, &opts);
+                let mut sharded = x.clone();
+                engine.run_f32(kind, &mut sharded, n, &opts);
+                assert_eq!(
+                    direct, sharded,
+                    "bit drift: engine={label} kind={kind:?} n={n} rows={rows}"
+                );
+                assert_close(&sharded, &oracle, 1e-3, 1e-3);
+            }
+        }
+    }
+}
+
+#[test]
+fn f16_engine_matches_direct_and_oracle() {
+    let mut rng = Rng::new(0xE1);
+    for (label, engine) in engines() {
+        for &(n, rows) in &SHAPES {
+            let x = rng.normal_vec(rows * n);
+            let base: Vec<F16> = x.iter().map(|&v| F16::from_f32(v)).collect();
+            let opts = FwhtOptions::normalized(n);
+            for kind in KernelKind::all() {
+                let mut direct = base.clone();
+                fwht_generic(kind, &mut direct, n, &opts);
+                let mut sharded = base.clone();
+                engine.run(kind, &mut sharded, n, &opts);
+                assert_eq!(
+                    direct, sharded,
+                    "bit drift: engine={label} kind={kind:?} n={n} rows={rows}"
+                );
+            }
+            // accuracy bar vs the f32 scalar oracle, at f16 tolerance
+            let widened: Vec<f32> = x.iter().map(|&v| F16::from_f32(v).to_f32()).collect();
+            let oracle = scalar_oracle(&widened, n, &opts);
+            let mut sharded = base.clone();
+            engine.run(KernelKind::HadaCore, &mut sharded, n, &opts);
+            let got: Vec<f32> = sharded.iter().map(|v| v.to_f32()).collect();
+            assert_close(&got, &oracle, 2e-2, 2e-2);
+        }
+    }
+}
+
+#[test]
+fn bf16_engine_matches_direct() {
+    let mut rng = Rng::new(0xE2);
+    for (label, engine) in engines() {
+        for &(n, rows) in &[(512usize, 33usize), (4096, 9), (32768, 3)] {
+            let x = rng.normal_vec(rows * n);
+            let base: Vec<BF16> = x.iter().map(|&v| BF16::from_f32(v)).collect();
+            let opts = FwhtOptions::normalized(n);
+            for kind in KernelKind::all() {
+                let mut direct = base.clone();
+                fwht_generic(kind, &mut direct, n, &opts);
+                let mut sharded = base.clone();
+                engine.run(kind, &mut sharded, n, &opts);
+                assert_eq!(
+                    direct, sharded,
+                    "bit drift: engine={label} kind={kind:?} n={n} rows={rows}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_batches_stop_allocating() {
+    // steady-state zero-allocation on the 16-bit path: workspace growth is
+    // bounded by the lane count, not the batch count
+    let engine = ExecEngine::new(ExecConfig {
+        threads: 4,
+        chunks_per_thread: 2,
+        min_chunk_elems: 1024,
+    });
+    let mut rng = Rng::new(0xE3);
+    let (rows, n) = (64usize, 1024usize);
+    let base: Vec<BF16> = rng
+        .normal_vec(rows * n)
+        .iter()
+        .map(|&v| BF16::from_f32(v))
+        .collect();
+    let opts = FwhtOptions::normalized(n);
+    for _ in 0..50 {
+        let mut batch = base.clone();
+        engine.run(KernelKind::HadaCore, &mut batch, n, &opts);
+    }
+    let s = engine.stats();
+    assert!(s.jobs == 50, "all batches should shard: {s:?}");
+    assert!(
+        s.scratch_grows <= 4,
+        "16-bit path must reuse per-thread workspaces: {s:?}"
+    );
+}
+
+#[test]
+fn custom_scales_shard_correctly() {
+    // the per-element scale must be applied exactly once per element no
+    // matter how the rows are chunked
+    let engine = ExecEngine::new(ExecConfig {
+        threads: 8,
+        chunks_per_thread: 4,
+        min_chunk_elems: 256,
+    });
+    let n = 512;
+    let rows = 29;
+    let mut data = vec![1.0f32; rows * n];
+    engine.run_f32(
+        KernelKind::HadaCore,
+        &mut data,
+        n,
+        &FwhtOptions::with_scale(0.125),
+    );
+    for r in 0..rows {
+        let row = &data[r * n..(r + 1) * n];
+        assert!((row[0] - n as f32 * 0.125).abs() < 1e-2, "row {r}: {}", row[0]);
+        assert!(row[1..].iter().all(|v| v.abs() < 1e-3), "row {r} leakage");
+    }
+}

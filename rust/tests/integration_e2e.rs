@@ -11,6 +11,7 @@
 
 use std::path::{Path, PathBuf};
 
+use hadacore::runtime::xla;
 use hadacore::runtime::{literal_f32, literal_i32, literal_to_f32, Runtime, Tensor};
 use hadacore::util::json::Json;
 use hadacore::util::prop::rel_l2;
