@@ -1,16 +1,29 @@
 //! End-to-end QuaRot-style quantised-attention serving (experiment E9).
 //!
-//! The full three-layer path on a realistic workload: the Rust runtime
-//! loads the AOT-compiled attention artifacts (whose graphs embed the L1
-//! Pallas HadaCore rotation), serves a stream of batched attention
-//! requests per numerics variant, and reports latency/throughput plus the
-//! numerical-fidelity comparison the paper's §4.2 makes.
+//! Two modes, picked by whether AOT artifacts exist:
 //!
-//! Run: `cargo run --release --example quarot_attention` (needs artifacts)
+//! * **Artifact mode** — the full three-layer path: the Rust runtime
+//!   loads the AOT-compiled attention artifacts (whose graphs embed the
+//!   L1 Pallas HadaCore rotation), serves a stream of batched attention
+//!   requests per numerics variant, and reports latency/throughput plus
+//!   the numerical-fidelity comparison the paper's §4.2 makes.
+//! * **Native fused mode** (no artifacts needed) — the paper's
+//!   rotate→FP8 pipeline through the coordinator's **fused epilogue**:
+//!   the server rotates each request and fp8-quantises it in the same
+//!   pass over the data, returning the per-request scale. Compared
+//!   against the two-pass pattern it replaces (plain rotation served,
+//!   then a second client-side traversal to quantise) — bit-identical
+//!   outputs, one fewer pass over every tensor.
+//!
+//! Run: `cargo run --release --example quarot_attention`
+//! (add `-- --artifacts <dir>` for artifact mode)
 
 use std::path::Path;
 use std::time::Instant;
 
+use hadacore::coordinator::{Coordinator, CoordinatorConfig};
+use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
+use hadacore::quant::{fp8_quantize_slice, Epilogue, Fp8Format};
 use hadacore::runtime::xla;
 use hadacore::runtime::{literal_f32, literal_to_f32, Runtime};
 use hadacore::util::bench::percentile;
@@ -25,11 +38,108 @@ fn main() -> anyhow::Result<()> {
         .opt("requests", "64", "attention batches to serve per variant")
         .parse();
     let dir = Path::new(&args.get("artifacts")).to_path_buf();
-    if !dir.join("manifest.json").exists() {
-        anyhow::bail!("artifacts not built — run `make artifacts` first");
-    }
     let requests: usize = args.get_as("requests");
-    let rt = Runtime::open(&dir)?;
+    if dir.join("manifest.json").exists() {
+        run_artifact_serving(&dir, requests)
+    } else {
+        println!(
+            "artifacts not built — serving the fused native rotate→quantize \
+             path instead (run `make artifacts` for the compiled variants)\n"
+        );
+        run_native_fused(requests)
+    }
+}
+
+/// The no-artifact path: QuaRot-style rotate→FP8 serving through the
+/// coordinator's fused epilogue, vs the two-pass client-side pattern.
+fn run_native_fused(requests: usize) -> anyhow::Result<()> {
+    let (rows, n) = (8usize, 4096usize); // one attention block's K/V rows
+    let coord = Coordinator::start(None, CoordinatorConfig::default())?;
+    println!(
+        "serving {requests} rotate+quantise requests of shape ({rows}, {n}) \
+         on the native engine ({} exec lanes)",
+        coord.exec_engine().threads()
+    );
+
+    let fused_cfg = WorkloadConfig {
+        sizes: vec![n],
+        rows_min: rows,
+        rows_max: rows,
+        epilogue: Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+        ..Default::default()
+    };
+    // identical payload stream (same seed), no fused epilogue
+    let plain_cfg = WorkloadConfig { epilogue: Epilogue::None, ..fused_cfg.clone() };
+
+    // fused: the server rotates and fp8-quantises in one pass; the
+    // response carries the per-request quantisation scale
+    let mut wl = ServingWorkload::new(fused_cfg);
+    let mut fused_ms: Vec<f64> = Vec::with_capacity(requests);
+    let mut fused_out: Vec<(Vec<f32>, f32)> = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let req = wl.next_request();
+        let t0 = Instant::now();
+        let resp = coord.transform(req)?;
+        fused_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let scale = resp.scales.per_tensor().unwrap_or(1.0);
+        fused_out.push((resp.data, scale));
+    }
+
+    // two-pass: plain rotation served, then the client traverses the
+    // whole tensor again to quantise — the avoidable data exchange the
+    // fused epilogue removes
+    let mut wl = ServingWorkload::new(plain_cfg);
+    let mut two_ms: Vec<f64> = Vec::with_capacity(requests);
+    let mut two_out: Vec<(Vec<f32>, f32)> = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let req = wl.next_request();
+        let t0 = Instant::now();
+        let mut resp = coord.transform(req)?;
+        let scale = fp8_quantize_slice(&mut resp.data, Fp8Format::E4M3);
+        two_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        two_out.push((resp.data, scale));
+    }
+    coord.shutdown();
+
+    // numerics: the fused path must be bit-identical to two-pass
+    for (i, ((a, sa), (b, sb))) in fused_out.iter().zip(two_out.iter()).enumerate()
+    {
+        assert_eq!(sa, sb, "request {i}: scale diverged");
+        assert_eq!(a, b, "request {i}: fused output diverged from two-pass");
+    }
+
+    fused_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    two_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\n{:<22} {:>10} {:>10} {:>10}",
+        "pipeline", "p50 ms", "p95 ms", "mean ms"
+    );
+    println!("{}", "-".repeat(56));
+    for (label, ms) in
+        [("fused epilogue", &fused_ms), ("two-pass (rot+quant)", &two_ms)]
+    {
+        let mean = ms.iter().sum::<f64>() / ms.len() as f64;
+        println!(
+            "{:<22} {:>10.3} {:>10.3} {:>10.3}",
+            label,
+            percentile(ms, 50.0),
+            percentile(ms, 95.0),
+            mean
+        );
+    }
+    let speedup = percentile(&two_ms, 50.0) / percentile(&fused_ms, 50.0).max(1e-9);
+    println!(
+        "\nclaims checked: fused == two-pass bit-for-bit on all {requests} \
+         requests; per-request scales returned by the server; fused p50 \
+         speedup {speedup:.2}x (one pass saved per tensor)."
+    );
+    Ok(())
+}
+
+/// The artifact path: serve compiled attention variants and compare
+/// their numerics against the fp16 reference.
+fn run_artifact_serving(dir: &Path, requests: usize) -> anyhow::Result<()> {
+    let rt = Runtime::open(dir)?;
     let meta = rt.manifest().model.clone();
     let (b, t, d) = (meta.attn_batch, meta.seq_len, meta.dim);
     println!(

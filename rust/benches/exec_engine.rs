@@ -11,6 +11,7 @@
 use hadacore::exec::{ExecConfig, ExecEngine};
 use hadacore::hadamard::{FwhtOptions, KernelKind};
 use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
+use hadacore::quant::{fp8_quantize_slice, Epilogue, Fp8Format};
 use hadacore::util::bench::{bench, BenchConfig};
 use hadacore::util::f16::{Element, F16};
 
@@ -69,6 +70,51 @@ fn main() {
             "(below 2x — single-core host or loaded machine?)"
         }
     );
+
+    // -- fused rotate→quantize epilogue vs the unfused two-pass --------
+    // two-pass = engine transform, then a second full traversal through
+    // fp8_quantize_slice (amax pass + round pass over cold data); fused =
+    // one engine call quantising each chunk while it is cache-hot, with
+    // the amax reduced per chunk into a shared accumulator.
+    println!("\n## fused fp8 epilogue vs two-pass (transform then quantize)");
+    let mut fused_summary: Vec<(usize, usize, f64)> = Vec::new();
+    for n in [256usize, 1024, 4096, 16384] {
+        let rows = elems / n;
+        let base = wl.next_matrix(rows, n);
+        let opts = FwhtOptions::normalized(n);
+
+        let b1 = base.clone();
+        let mut buf1 = base.clone();
+        let pooled_ref = &pooled;
+        let s_two_pass = bench(&format!("two_pass_{rows}x{n}"), &cfg, move |_| {
+            buf1.copy_from_slice(&b1);
+            pooled_ref.run_f32(KernelKind::HadaCore, &mut buf1, n, &opts);
+            fp8_quantize_slice(&mut buf1, Fp8Format::E4M3)
+        });
+        let b2 = base.clone();
+        let mut buf2 = base;
+        let s_fused = bench(&format!("fused___{rows}x{n}"), &cfg, move |_| {
+            buf2.copy_from_slice(&b2);
+            pooled_ref
+                .run_f32_with_epilogue(
+                    KernelKind::HadaCore,
+                    &mut buf2,
+                    n,
+                    &opts,
+                    Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+                )
+                .per_tensor()
+                .unwrap_or(1.0)
+        });
+        println!("{}", s_two_pass.line());
+        println!("{}", s_fused.line());
+        fused_summary.push((n, rows, s_two_pass.median_ns / s_fused.median_ns));
+    }
+    println!("\n## fused epilogue speedup summary (vs two-pass)");
+    println!("{:>8} {:>8} {:>12}", "size", "rows", "speedup");
+    for (n, rows, speedup) in &fused_summary {
+        println!("{:>8} {:>8} {:>11.2}x", n, rows, speedup);
+    }
 
     // -- tiny batches route inline (sharding would cost more) ----------
     println!("\n## tiny-batch policy (1 row — runs inline by design)");

@@ -11,6 +11,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::hadamard::KernelKind;
+use crate::quant::Epilogue;
 
 use super::router::Route;
 use super::Pending;
@@ -25,8 +26,13 @@ pub struct BucketKey {
     /// Whether this bucket executes on PJRT (fixed shape) or native.
     pub pjrt: bool,
     /// Scale bits (None-scale buckets batch together; custom scales are
-    /// per-value buckets so one batch has one scale).
+    /// per-value buckets so one batch has one scale). The `None` sentinel
+    /// is a NaN bit pattern, which cannot collide with an admitted
+    /// custom scale: the router rejects non-finite scales.
     pub scale_bits: u32,
+    /// Fused quantize epilogue — epilogue buckets never mix with plain
+    /// ones (their responses carry scales and they always route native).
+    pub epilogue: Epilogue,
 }
 
 impl BucketKey {
@@ -37,6 +43,7 @@ impl BucketKey {
             n: req.n,
             pjrt: matches!(route.backend, super::Backend::Pjrt(_)),
             scale_bits: req.scale.map(f32::to_bits).unwrap_or(0x7fc0_0001),
+            epilogue: req.epilogue,
         }
     }
 }
@@ -197,10 +204,14 @@ impl Batcher {
             let wait_until = nearest.unwrap_or(deadline_cap).min(deadline_cap);
             let now = Instant::now();
             if wait_until <= now {
-                if nearest.is_none() {
-                    return None; // idle timeout with empty queues
+                match nearest {
+                    // a bucket deadline has expired; rescan chooses it
+                    Some(t) if t <= now => continue,
+                    // idle timeout: queues empty, or nothing due before
+                    // the cap — return to the caller instead of spinning
+                    // until the nearest deadline
+                    _ => return None,
                 }
-                continue;
             }
             let (guard, _timeout) =
                 self.ready.wait_timeout(st, wait_until - now).unwrap();
@@ -327,6 +338,105 @@ mod tests {
         let t0 = Instant::now();
         assert!(b.next_batch(Duration::from_millis(20)).is_none());
         assert!(t0.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn epilogue_buckets_never_mix_with_plain() {
+        use crate::quant::{Epilogue, Fp8Format};
+        let route = Route { backend: Backend::Native, capacity_rows: 8 };
+        let plain = TransformRequest::new(1, 256, vec![0.0; 256]);
+        let mut fp8 = TransformRequest::new(2, 256, vec![0.0; 256]);
+        fp8.epilogue = Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 };
+        let mut int8 = TransformRequest::new(3, 256, vec![0.0; 256]);
+        int8.epilogue = Epilogue::QuantInt8 { group: 64 };
+        let kp = BucketKey::of(&plain, &route);
+        let kf = BucketKey::of(&fp8, &route);
+        let ki = BucketKey::of(&int8, &route);
+        assert_ne!(kp, kf);
+        assert_ne!(kp, ki);
+        assert_ne!(kf, ki);
+        // distinct int8 groups are distinct buckets too
+        let mut int8b = TransformRequest::new(4, 256, vec![0.0; 256]);
+        int8b.epilogue = Epilogue::QuantInt8 { group: 32 };
+        assert_ne!(ki, BucketKey::of(&int8b, &route));
+    }
+
+    fn pjrt_key_route(n: usize, cap: usize) -> (BucketKey, Route) {
+        use crate::coordinator::router::PjrtBucket;
+        use std::sync::Arc;
+        let route = Route {
+            backend: Backend::Pjrt(PjrtBucket {
+                artifact: Arc::from("fwht_test"),
+                rows: cap,
+            }),
+            capacity_rows: cap,
+        };
+        let req = TransformRequest::new(0, n, vec![0.0; n]);
+        (BucketKey::of(&req, &route), route)
+    }
+
+    #[test]
+    fn work_conserving_flushes_native_immediately() {
+        // an idle worker must not sleep out the 10s deadline on a
+        // non-empty native bucket
+        let b = Batcher::new(BatcherConfig {
+            max_delay: Duration::from_secs(10),
+            work_conserving: true,
+        });
+        let (key, route) = key_route(64, 100);
+        let (p, _rx) = pending(1, 64, 2);
+        b.push(key, route, p);
+        let t0 = Instant::now();
+        let batch = b.next_batch(Duration::from_secs(5)).expect("batch");
+        assert_eq!(batch.rows, 2);
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "work-conserving flush waited {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn work_conserving_picks_the_fullest_native_bucket() {
+        let b = Batcher::new(BatcherConfig {
+            max_delay: Duration::from_secs(10),
+            work_conserving: true,
+        });
+        let (k1, r1) = key_route(64, 100);
+        let (k2, r2) = key_route(128, 100);
+        let (p1, _rx1) = pending(1, 64, 1);
+        b.push(k1, r1, p1);
+        let (p2, _rx2) = pending(2, 128, 3);
+        b.push(k2, r2, p2);
+        let batch = b.next_batch(Duration::from_secs(5)).expect("batch");
+        assert_eq!(batch.key.n, 128, "fullest bucket (3 rows) flushes first");
+        assert_eq!(batch.rows, 3);
+        let batch = b.next_batch(Duration::from_secs(5)).expect("batch");
+        assert_eq!(batch.key.n, 64);
+    }
+
+    #[test]
+    fn work_conserving_pjrt_buckets_still_honor_the_deadline() {
+        let b = Batcher::new(BatcherConfig {
+            max_delay: Duration::from_millis(40),
+            work_conserving: true,
+        });
+        let (key, route) = pjrt_key_route(64, 128);
+        let (p, _rx) = pending(1, 64, 2);
+        b.push(key, route, p);
+        // an idle cap shorter than the deadline returns None (no flush,
+        // no busy spin) ...
+        let t0 = Instant::now();
+        assert!(b.next_batch(Duration::from_millis(5)).is_none());
+        assert!(t0.elapsed() < Duration::from_millis(35), "returned late");
+        // ... and a longer wait flushes only once the deadline expires
+        let batch = b.next_batch(Duration::from_secs(2)).expect("batch");
+        assert_eq!(batch.rows, 2);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(38),
+            "pjrt bucket flushed before its deadline: {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

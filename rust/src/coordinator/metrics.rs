@@ -105,10 +105,15 @@ impl Default for Histogram {
 pub struct Metrics {
     /// Requests accepted by the router.
     pub submitted: AtomicU64,
-    /// Requests completed (responses delivered).
+    /// Requests completed (responses delivered — successes *and* errors;
+    /// `completed - failed` counts the successes).
     pub completed: AtomicU64,
     /// Requests rejected at admission.
     pub rejected: AtomicU64,
+    /// Requests that received an error response (batch execution failed
+    /// or the executor was unavailable). Error responses still record
+    /// queue/e2e latency.
+    pub failed: AtomicU64,
     /// Batches executed.
     pub batches: AtomicU64,
     /// Total data rows executed (excluding padding).
@@ -133,6 +138,7 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    pub failed: u64,
     pub batches: u64,
     pub rows: u64,
     pub padded_rows: u64,
@@ -155,6 +161,7 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             rows: self.rows.load(Ordering::Relaxed),
             padded_rows: self.padded_rows.load(Ordering::Relaxed),
@@ -176,7 +183,7 @@ impl MetricsSnapshot {
     /// Multi-line human-readable report.
     pub fn report(&self) -> String {
         format!(
-            "requests: {} submitted, {} completed, {} rejected\n\
+            "requests: {} submitted, {} completed, {} rejected, {} failed\n\
              batches:  {} total ({} native, {} pjrt), {} rows + {} pad rows\n\
              queue:    p50 {}us  p99 {}us\n\
              exec:     p50 {}us  p99 {}us\n\
@@ -184,6 +191,7 @@ impl MetricsSnapshot {
             self.submitted,
             self.completed,
             self.rejected,
+            self.failed,
             self.batches,
             self.native_batches,
             self.pjrt_batches,
@@ -236,9 +244,12 @@ mod tests {
     fn snapshot_report_formats() {
         let m = Metrics::default();
         m.submitted.store(10, Ordering::Relaxed);
+        m.failed.store(3, Ordering::Relaxed);
         m.e2e.record(120);
         let s = m.snapshot();
         assert_eq!(s.submitted, 10);
+        assert_eq!(s.failed, 3);
         assert!(s.report().contains("10 submitted"));
+        assert!(s.report().contains("3 failed"));
     }
 }

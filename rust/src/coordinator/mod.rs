@@ -34,6 +34,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::hadamard::KernelKind;
+use crate::quant::{Epilogue, QuantScales};
 use crate::util::error as anyhow;
 
 /// A transform request: `rows` rows of size `n`, transformed in place
@@ -62,7 +63,16 @@ pub struct TransformRequest {
     /// `Some(s)` applies `s` verbatim (`Some(1.0)` = the raw ±1
     /// transform). Custom-scale requests batch separately and always
     /// execute natively — PJRT artifacts bake the orthonormal scale in.
+    /// Non-finite scales are rejected at admission (a NaN scale would
+    /// collide with the no-scale bucket sentinel and corrupt batchmates).
     pub scale: Option<f32>,
+    /// Fused rotate→quantize epilogue ([`Epilogue::None`] = plain
+    /// transform). Executed by the engine in the same pass over the data
+    /// as the rotation; the response's [`TransformResponse::scales`]
+    /// carries the quantisation scale(s) back. Epilogue requests batch
+    /// separately from plain ones and always execute natively (PJRT
+    /// artifacts have no quantise stage).
+    pub epilogue: Epilogue,
     /// Force the native backend even when an artifact exists.
     pub force_native: bool,
 }
@@ -78,6 +88,7 @@ impl TransformRequest {
             data,
             kernel: KernelKind::HadaCore,
             scale: None,
+            epilogue: Epilogue::None,
             force_native: false,
         }
     }
@@ -99,6 +110,12 @@ pub struct TransformResponse {
     pub batch_rows: usize,
     /// Which backend executed it ("native" | "pjrt").
     pub backend: &'static str,
+    /// Scale(s) produced by the request's epilogue
+    /// ([`QuantScales::None`] for plain requests). Per-tensor FP8 scales
+    /// are **per request** — the coordinator never couples one request's
+    /// amax to a batchmate's — and grouped-INT8 scales cover exactly this
+    /// request's `rows * n / group` groups in element order.
+    pub scales: QuantScales,
 }
 
 /// Per-request bookkeeping inside the batcher (internal; public only

@@ -140,15 +140,27 @@ impl Router {
                 req.rows, self.cfg.max_request_rows
             ));
         }
+        if let Some(s) = req.scale {
+            // a NaN scale would alias the batcher's no-scale bucket
+            // sentinel (a NaN bit pattern) and batchmates would then be
+            // executed under this request's scale; infinities produce
+            // garbage rows. Reject both outright.
+            if !s.is_finite() {
+                return Err(format!("scale {s} is not finite"));
+            }
+        }
+        req.epilogue.validate(req.n)?;
         Ok(())
     }
 
     /// Choose the backend + bucket for an admitted request.
     ///
     /// PJRT buckets are only usable when the request's scale is the
-    /// artifact's baked-in orthonormal scale and its rows fit the bucket.
+    /// artifact's baked-in orthonormal scale, it carries no fused
+    /// epilogue (artifacts have no quantise stage), and its rows fit the
+    /// bucket.
     pub fn route(&self, req: &TransformRequest) -> Route {
-        if !req.force_native && req.scale.is_none() {
+        if !req.force_native && req.scale.is_none() && req.epilogue.is_none() {
             if let Some(bucket) = self.pjrt.get(&(req.kernel, req.n)) {
                 if req.rows <= bucket.rows {
                     return Route {
@@ -242,6 +254,51 @@ mod tests {
         // unmatched size falls back to native
         let other = TransformRequest::new(2, 64, vec![0.0; 64]);
         assert!(matches!(r.route(&other).backend, Backend::Native));
+    }
+
+    #[test]
+    fn non_finite_scales_are_rejected_at_admission() {
+        let r = native_router();
+        // the exact bit pattern of the batcher's no-scale sentinel: if it
+        // were admitted it would land in the None-scale bucket and
+        // batchmates would execute under this request's "scale"
+        let mut sentinel = TransformRequest::new(1, 256, vec![0.0; 256]);
+        sentinel.scale = Some(f32::from_bits(0x7fc0_0001));
+        assert!(r.admit(&sentinel).is_err());
+
+        let mut nan = TransformRequest::new(2, 256, vec![0.0; 256]);
+        nan.scale = Some(f32::NAN);
+        assert!(r.admit(&nan).is_err());
+
+        let mut inf = TransformRequest::new(3, 256, vec![0.0; 256]);
+        inf.scale = Some(f32::INFINITY);
+        assert!(r.admit(&inf).is_err());
+
+        let mut finite = TransformRequest::new(4, 256, vec![0.0; 256]);
+        finite.scale = Some(2.5);
+        assert!(r.admit(&finite).is_ok());
+    }
+
+    #[test]
+    fn epilogue_admission_and_native_routing() {
+        use crate::quant::{Epilogue, Fp8Format};
+        let r = manifest_router();
+
+        // a bad int8 group is rejected outright
+        let mut bad = TransformRequest::new(1, 256, vec![0.0; 256]);
+        bad.epilogue = Epilogue::QuantInt8 { group: 48 };
+        assert!(r.admit(&bad).is_err());
+
+        // a valid epilogue admits but always routes native, even when a
+        // matching artifact exists
+        let mut fp8 = TransformRequest::new(2, 256, vec![0.0; 256]);
+        fp8.epilogue = Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 };
+        assert!(r.admit(&fp8).is_ok());
+        assert!(matches!(r.route(&fp8).backend, Backend::Native));
+
+        // the same request without the epilogue goes to pjrt
+        let plain = TransformRequest::new(3, 256, vec![0.0; 256]);
+        assert!(matches!(r.route(&plain).backend, Backend::Pjrt(_)));
     }
 
     #[test]

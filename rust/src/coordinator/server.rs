@@ -20,7 +20,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::exec::{ExecConfig, ExecEngine};
-use crate::hadamard::FwhtOptions;
+use crate::hadamard::{FwhtOptions, KernelKind};
+use crate::quant::{Epilogue, QuantScales};
 use crate::runtime::{literal_f32, literal_to_f32, Manifest, Runtime};
 use crate::util::error::{self as anyhow, anyhow};
 
@@ -107,7 +108,9 @@ impl Coordinator {
         let batcher = Arc::new(Batcher::new(cfg.batcher));
         let engine = Arc::new(ExecEngine::new(cfg.exec));
 
-        // PJRT executor thread (owns the non-Send Runtime)
+        // PJRT executor thread (owns the non-Send Runtime; carries an
+        // engine handle so overfull batches can fall back to native
+        // execution instead of being truncated by the pad step)
         let mut pjrt_tx = None;
         let mut pjrt_thread = None;
         let mut manifest: Option<Manifest> = None;
@@ -116,10 +119,13 @@ impl Coordinator {
             let (tx, rx) = mpsc::channel::<Batch>();
             let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
             let m = Arc::clone(&metrics);
+            let eng = Arc::clone(&engine);
             let preload = cfg.preload_pjrt;
             let handle = std::thread::Builder::new()
                 .name("hadacore-pjrt-executor".to_string())
-                .spawn(move || pjrt_executor_loop(dir, rx, ready_tx, &m, preload))
+                .spawn(move || {
+                    pjrt_executor_loop(dir, rx, ready_tx, &m, preload, &eng)
+                })
                 .expect("spawn pjrt executor");
             ready_rx
                 .recv()
@@ -232,27 +238,61 @@ fn worker_loop(
 ) {
     loop {
         match batcher.next_batch(idle) {
-            Some(batch) => match &batch.route.backend {
-                Backend::Native => execute_native_batch(batch, metrics, engine),
-                Backend::Pjrt(_) => {
-                    // under-filled deadline flush: padding a fixed-shape
-                    // module costs more than running the rows natively
-                    let fill =
-                        batch.rows as f64 / batch.route.capacity_rows.max(1) as f64;
-                    if fill < min_pjrt_fill || pjrt_tx.is_none() {
-                        execute_native_batch(batch, metrics, engine);
-                    } else if let Some(tx) = &pjrt_tx {
-                        if let Err(mpsc::SendError(batch)) = tx.send(batch) {
-                            fail_batch(batch, "pjrt executor unavailable");
-                        }
-                    }
-                }
-            },
+            Some(batch) => {
+                dispatch_batch(batch, metrics, engine, pjrt_tx.as_ref(), min_pjrt_fill)
+            }
             // None = idle timeout (keep polling) or shutdown (exit)
             None if batcher.is_shutdown() => return,
             None => {}
         }
     }
+}
+
+/// Route one flushed batch to its executor. PJRT batches divert to the
+/// native engine when the executor is missing or the fill policy says so
+/// ([`pjrt_needs_native_fallback`]).
+fn dispatch_batch(
+    batch: Batch,
+    metrics: &Metrics,
+    engine: &ExecEngine,
+    pjrt_tx: Option<&mpsc::Sender<Batch>>,
+    min_pjrt_fill: f64,
+) {
+    match &batch.route.backend {
+        Backend::Native => execute_native_batch(batch, metrics, engine),
+        Backend::Pjrt(_) => {
+            let Some(tx) = pjrt_tx else {
+                return execute_native_batch(batch, metrics, engine);
+            };
+            if pjrt_needs_native_fallback(
+                batch.rows,
+                batch.route.capacity_rows,
+                min_pjrt_fill,
+            ) {
+                return execute_native_batch(batch, metrics, engine);
+            }
+            if let Err(mpsc::SendError(batch)) = tx.send(batch) {
+                fail_batch(batch, "pjrt executor unavailable", metrics);
+            }
+        }
+    }
+}
+
+/// True when a PJRT-routed batch must execute natively instead:
+///
+/// * **over-filled** (`rows > capacity`): the executor pads the gathered
+///   buffer to the artifact's fixed shape with `resize`, which would
+///   silently *truncate* data rows. Reachable when a manifest's `rows`
+///   shrinks across restarts, or if a batcher change overfills a bucket.
+/// * **under-filled** deadline flush (`fill < min_fill`): padding a
+///   fixed-shape module costs more than running the rows natively.
+fn pjrt_needs_native_fallback(
+    batch_rows: usize,
+    capacity_rows: usize,
+    min_fill: f64,
+) -> bool {
+    let cap = capacity_rows.max(1);
+    batch_rows > cap || (batch_rows as f64 / cap as f64) < min_fill
 }
 
 /// The PJRT executor: opens the Runtime, signals readiness, then executes
@@ -263,6 +303,7 @@ fn pjrt_executor_loop(
     ready_tx: mpsc::Sender<anyhow::Result<()>>,
     metrics: &Metrics,
     preload: bool,
+    engine: &ExecEngine,
 ) {
     let runtime = match Runtime::open(&dir) {
         Ok(rt) => rt,
@@ -289,7 +330,7 @@ fn pjrt_executor_loop(
     }
     let _ = ready_tx.send(Ok(()));
     while let Ok(batch) = rx.recv() {
-        execute_pjrt_batch(batch, &runtime, metrics);
+        execute_pjrt_batch(batch, &runtime, metrics, engine);
     }
 }
 
@@ -301,8 +342,10 @@ fn gather(items: &[Pending], rows: usize, n: usize) -> Vec<f32> {
     data
 }
 
+#[allow(clippy::too_many_arguments)]
 fn complete(
     items: Vec<Pending>,
+    scales: Vec<QuantScales>,
     out: &[f32],
     n: usize,
     exec_start: Instant,
@@ -311,8 +354,9 @@ fn complete(
     backend: &'static str,
     metrics: &Metrics,
 ) {
+    debug_assert_eq!(items.len(), scales.len());
     let mut offset = 0;
-    for p in items {
+    for (p, scales) in items.into_iter().zip(scales) {
         let len = p.req.rows * n;
         let queue_us = exec_start
             .saturating_duration_since(p.enqueued)
@@ -324,6 +368,7 @@ fn complete(
             exec_us,
             batch_rows,
             backend,
+            scales,
         };
         offset += len;
         metrics.queue.record(queue_us);
@@ -333,9 +378,87 @@ fn complete(
     }
 }
 
-fn fail_batch(batch: Batch, msg: &str) {
-    for p in batch.items {
+/// Deliver an error to every pending request, recording the failure in
+/// the metrics: `failed` and `completed` both advance (errors are
+/// delivered responses), and the queue/e2e histograms record the latency
+/// the requests actually experienced. `exec_start` marks when the batch
+/// left the queue (mirroring [`complete`]) so a slow failing execution
+/// inflates the e2e histogram, not the queue one; failures that never
+/// started executing pass the current instant.
+fn fail_items(items: Vec<Pending>, msg: &str, metrics: &Metrics, exec_start: Instant) {
+    for p in items {
+        let queue_us = exec_start
+            .saturating_duration_since(p.enqueued)
+            .as_micros() as u64;
+        metrics.queue.record(queue_us);
+        metrics.e2e.record(p.enqueued.elapsed().as_micros() as u64);
+        metrics.failed.fetch_add(1, Ordering::Relaxed);
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
         let _ = p.tx.send(Err(anyhow!("{msg}")));
+    }
+}
+
+fn fail_batch(batch: Batch, msg: &str, metrics: &Metrics) {
+    fail_items(batch.items, msg, metrics, Instant::now());
+}
+
+/// Run the gathered batch on the engine under its bucket's epilogue and
+/// return one [`QuantScales`] per request, in item order.
+///
+/// Per-tensor FP8 scales are a *per-request* property (each request is
+/// one tensor), so FP8 batches run the fused two-phase engine call once
+/// per request region — each region is still rotated, amax-reduced, and
+/// rounded in a single pass over cache-hot chunks, and large regions
+/// still shard across the engine lanes. Grouped-INT8 scales never cross
+/// a request boundary (`group` divides `n` and requests are whole rows),
+/// so one whole-batch call suffices and the scale vector splits by
+/// offset.
+fn run_native_epilogue(
+    engine: &ExecEngine,
+    kernel: KernelKind,
+    data: &mut [f32],
+    n: usize,
+    opts: &FwhtOptions,
+    epilogue: Epilogue,
+    items: &[Pending],
+) -> Vec<QuantScales> {
+    match epilogue {
+        Epilogue::None => {
+            engine.run_f32(kernel, data, n, opts);
+            items.iter().map(|_| QuantScales::None).collect()
+        }
+        Epilogue::QuantFp8 { .. } => {
+            let mut out = Vec::with_capacity(items.len());
+            let mut offset = 0;
+            for p in items {
+                let len = p.req.rows * n;
+                out.push(engine.run_f32_with_epilogue(
+                    kernel,
+                    &mut data[offset..offset + len],
+                    n,
+                    opts,
+                    epilogue,
+                ));
+                offset += len;
+            }
+            out
+        }
+        Epilogue::QuantInt8 { group } => {
+            match engine.run_f32_with_epilogue(kernel, data, n, opts, epilogue) {
+                QuantScales::PerGroup(all) => {
+                    let mut out = Vec::with_capacity(items.len());
+                    let mut g = 0;
+                    for p in items {
+                        let count = p.req.rows * n / group;
+                        out.push(QuantScales::PerGroup(all[g..g + count].to_vec()));
+                        g += count;
+                    }
+                    out
+                }
+                // the engine's contract: QuantInt8 always yields PerGroup
+                _ => unreachable!("int8 epilogue must produce per-group scales"),
+            }
+        }
     }
 }
 
@@ -348,29 +471,63 @@ fn execute_native_batch(batch: Batch, metrics: &Metrics, engine: &ExecEngine) {
         Some(s) => FwhtOptions::with_scale(s),
         None => FwhtOptions::normalized(n),
     };
-    engine.run_f32(key.kernel, &mut data, n, &opts);
+    let scales =
+        run_native_epilogue(engine, key.kernel, &mut data, n, &opts, key.epilogue, &items);
     let exec_us = t0.elapsed().as_micros() as u64;
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.native_batches.fetch_add(1, Ordering::Relaxed);
     metrics.rows.fetch_add(rows as u64, Ordering::Relaxed);
     metrics.exec.record(exec_us);
-    complete(items, &data, n, t0, exec_us, rows, "native", metrics);
+    complete(items, scales, &data, n, t0, exec_us, rows, "native", metrics);
 }
 
-fn execute_pjrt_batch(batch: Batch, runtime: &Runtime, metrics: &Metrics) {
-    let Batch { key, route, items, rows } = batch;
-    let n = key.n;
-    let Backend::Pjrt(bucket) = &route.backend else {
-        fail_batch(Batch { key, route: route.clone(), items, rows }, "route mismatch");
-        return;
+fn execute_pjrt_batch(
+    batch: Batch,
+    runtime: &Runtime,
+    metrics: &Metrics,
+    engine: &ExecEngine,
+) {
+    let bucket = match &batch.route.backend {
+        Backend::Pjrt(bucket) => bucket.clone(),
+        Backend::Native => {
+            fail_batch(batch, "route mismatch", metrics);
+            return;
+        }
     };
+    // queue time ends here: a lazy compile inside `load` is execution
+    // cost (it lands in the exec/e2e histograms, not the queue one)
     let t0 = Instant::now();
+    // resolve the artifact *before* consuming the batch: if the
+    // compiled module's fixed row count is smaller than the batch (a
+    // manifest's rows shrank across restarts, or a batcher change
+    // overfilled the bucket), the pad `resize` below would silently
+    // truncate data rows — fall back to the native engine instead.
+    let art = match runtime.load(&bucket.artifact) {
+        Ok(a) => a,
+        Err(e) => {
+            fail_items(
+                batch.items,
+                &format!("batch execution failed: {e}"),
+                metrics,
+                t0,
+            );
+            return;
+        }
+    };
+    let cap = art.entry.rows.unwrap_or(batch.rows);
+    if batch.rows > cap {
+        execute_native_batch(batch, metrics, engine);
+        return;
+    }
+
+    let Batch { key, items, rows, .. } = batch;
+    // the router never routes epilogue requests to PJRT
+    debug_assert!(key.epilogue.is_none(), "epilogue batch reached pjrt");
+    let n = key.n;
     let result: anyhow::Result<Vec<f32>> = (|| {
-        let art = runtime.load(&bucket.artifact)?;
-        let cap = art.entry.rows.unwrap_or(rows);
         let mut data = gather(&items, rows, n);
-        data.resize(cap * n, 0.0);
+        data.resize(cap * n, 0.0); // rows <= cap: pure padding, no truncation
         let lit = literal_f32(&data, &[cap, n])?;
         let outs = art.execute(&[lit])?;
         let mut out = literal_to_f32(&outs[0])?;
@@ -384,26 +541,16 @@ fn execute_pjrt_batch(batch: Batch, runtime: &Runtime, metrics: &Metrics) {
     metrics.rows.fetch_add(rows as u64, Ordering::Relaxed);
     metrics
         .padded_rows
-        .fetch_add(bucket.rows.saturating_sub(rows) as u64, Ordering::Relaxed);
+        .fetch_add(cap.saturating_sub(rows) as u64, Ordering::Relaxed);
     metrics.exec.record(exec_us);
 
     match result {
-        Ok(out) => complete(
-            items,
-            &out,
-            n,
-            t0,
-            exec_us,
-            bucket.rows,
-            "pjrt",
-            metrics,
-        ),
+        Ok(out) => {
+            let scales = items.iter().map(|_| QuantScales::None).collect();
+            complete(items, scales, &out, n, t0, exec_us, cap, "pjrt", metrics);
+        }
         Err(e) => {
-            let msg = e.to_string();
-            for p in items {
-                metrics.completed.fetch_add(1, Ordering::Relaxed);
-                let _ = p.tx.send(Err(anyhow!("batch execution failed: {msg}")));
-            }
+            fail_items(items, &format!("batch execution failed: {e}"), metrics, t0);
         }
     }
 }
@@ -538,6 +685,219 @@ mod tests {
             "every native batch must go through the engine: {s:?}"
         );
         c.shutdown();
+    }
+
+    #[test]
+    fn fp8_epilogue_roundtrip_bit_identical_to_two_pass() {
+        use crate::quant::{fp8_quantize_slice, Fp8Format};
+        let c = native_coordinator(2);
+        let mut rng = Rng::new(21);
+        let (rows, n) = (3usize, 512usize);
+        let x = rng.normal_vec(rows * n);
+        let mut req = TransformRequest::new(9, n, x.clone());
+        req.epilogue = Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 };
+        let resp = c.transform(req).unwrap();
+        assert_eq!(resp.backend, "native");
+
+        let mut want = x;
+        crate::hadamard::fwht_f32(
+            KernelKind::HadaCore,
+            &mut want,
+            n,
+            &FwhtOptions::normalized(n),
+        );
+        let scale = fp8_quantize_slice(&mut want, Fp8Format::E4M3);
+        assert_eq!(resp.data, want, "fused path must match the two-pass reference");
+        assert_eq!(resp.scales, QuantScales::PerTensor(scale));
+        c.shutdown();
+    }
+
+    #[test]
+    fn int8_epilogue_returns_per_group_scales() {
+        use crate::quant::{int_quantize_grouped, IntBits};
+        let c = native_coordinator(2);
+        let mut rng = Rng::new(22);
+        let (rows, n, group) = (2usize, 256usize, 64usize);
+        let x = rng.normal_vec(rows * n);
+        let mut req = TransformRequest::new(4, n, x.clone());
+        req.epilogue = Epilogue::QuantInt8 { group };
+        let resp = c.transform(req).unwrap();
+
+        let mut want = x;
+        crate::hadamard::fwht_f32(
+            KernelKind::HadaCore,
+            &mut want,
+            n,
+            &FwhtOptions::normalized(n),
+        );
+        let want_scales = int_quantize_grouped(&mut want, group, IntBits::Int8);
+        assert_eq!(want_scales.len(), rows * n / group);
+        assert_eq!(resp.data, want);
+        assert_eq!(resp.scales, QuantScales::PerGroup(want_scales));
+        c.shutdown();
+    }
+
+    #[test]
+    fn fp8_scales_never_couple_across_batchmates() {
+        use crate::quant::{fp8_quantize_slice, Fp8Format};
+        // two requests with wildly different magnitudes, submitted
+        // back-to-back so they likely share a batch: each response must
+        // carry the scale of *its own* tensor, not the batch's
+        let c = native_coordinator(1);
+        let mut rng = Rng::new(23);
+        let n = 256;
+        let small = rng.normal_vec(n);
+        let big: Vec<f32> = rng.normal_vec(n).iter().map(|v| v * 1000.0).collect();
+        let mut reqs = Vec::new();
+        for (id, data) in [(1u64, small.clone()), (2, big.clone())] {
+            let mut req = TransformRequest::new(id, n, data);
+            req.epilogue = Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 };
+            reqs.push(c.submit(req).unwrap());
+        }
+        for (rx, data) in reqs.into_iter().zip([small, big]) {
+            let resp = rx.recv().unwrap().unwrap();
+            let mut want = data;
+            crate::hadamard::fwht_f32(
+                KernelKind::HadaCore,
+                &mut want,
+                n,
+                &FwhtOptions::normalized(n),
+            );
+            let scale = fp8_quantize_slice(&mut want, Fp8Format::E4M3);
+            assert_eq!(resp.data, want);
+            assert_eq!(resp.scales, QuantScales::PerTensor(scale));
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn nan_scale_sentinel_collision_is_rejected() {
+        // regression: scale bits 0x7fc00001 are the batcher's no-scale
+        // sentinel; before the non-finite admission check this request
+        // would land in the None-scale bucket and its "scale" would be
+        // applied to every batchmate
+        let c = native_coordinator(1);
+        let mut req = TransformRequest::new(1, 256, vec![0.0; 256]);
+        req.scale = Some(f32::from_bits(0x7fc0_0001));
+        assert!(c.submit(req).is_err());
+        assert_eq!(c.metrics().snapshot().rejected, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn pjrt_fallback_policy() {
+        assert!(pjrt_needs_native_fallback(5, 4, 0.25), "overfull");
+        assert!(pjrt_needs_native_fallback(1, 128, 0.25), "underfilled");
+        assert!(!pjrt_needs_native_fallback(64, 128, 0.25));
+        assert!(!pjrt_needs_native_fallback(128, 128, 0.25));
+        assert!(!pjrt_needs_native_fallback(1, 1, 0.5));
+        assert!(pjrt_needs_native_fallback(2, 0, 0.25), "degenerate capacity");
+    }
+
+    #[test]
+    fn overfull_pjrt_batch_executes_natively_untruncated() {
+        use crate::coordinator::router::PjrtBucket;
+        use crate::coordinator::Route;
+        let engine = ExecEngine::single_threaded();
+        let metrics = Metrics::default();
+        let mut rng = Rng::new(31);
+        let (rows, n) = (4usize, 256usize);
+        let x = rng.normal_vec(rows * n);
+        let req = TransformRequest::new(1, n, x.clone());
+        // a pjrt bucket whose fixed shape holds only 2 rows
+        let route = Route {
+            backend: Backend::Pjrt(PjrtBucket {
+                artifact: Arc::from("fwht_shrunk"),
+                rows: 2,
+            }),
+            capacity_rows: 2,
+        };
+        let key = BucketKey::of(&req, &route);
+        let (tx, resp_rx) = mpsc::channel();
+        let batch = Batch {
+            key,
+            route,
+            items: vec![Pending { req, tx, enqueued: Instant::now() }],
+            rows,
+        };
+        let (fwd_tx, fwd_rx) = mpsc::channel::<Batch>();
+        dispatch_batch(batch, &metrics, &engine, Some(&fwd_tx), 0.25);
+        assert!(fwd_rx.try_recv().is_err(), "overfull batch must not reach pjrt");
+        let resp = resp_rx.recv().unwrap().unwrap();
+        assert_eq!(resp.backend, "native");
+        let mut want = x;
+        crate::hadamard::fwht_f32(
+            KernelKind::HadaCore,
+            &mut want,
+            n,
+            &FwhtOptions::normalized(n),
+        );
+        assert_eq!(resp.data, want, "all 4 rows present, none truncated");
+    }
+
+    #[test]
+    fn failure_path_records_metrics() {
+        let metrics = Metrics::default();
+        let (tx, rx) = mpsc::channel();
+        let items = vec![Pending {
+            req: TransformRequest::new(1, 64, vec![0.0; 64]),
+            tx,
+            enqueued: Instant::now(),
+        }];
+        fail_items(items, "boom", &metrics, Instant::now());
+        assert!(rx.recv().unwrap().is_err());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(metrics.queue.count(), 1, "queue histogram must record errors");
+        assert_eq!(metrics.e2e.count(), 1, "e2e histogram must record errors");
+    }
+
+    #[test]
+    fn pjrt_execution_failure_fails_requests_and_records_metrics() {
+        // the stub backend cannot compile, so a deferred (non-preloaded)
+        // artifact fails at execution time — the whole error path in one
+        // end-to-end pass: forward, load failure, error responses, metrics
+        let dir = std::env::temp_dir()
+            .join(format!("hc_pjrt_fail_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+                {"name": "fwht_hadacore_256x8", "op": "fwht",
+                 "kernel": "hadacore", "file": "m.hlo.txt",
+                 "n": 256, "rows": 8,
+                 "inputs": [{"shape": [8, 256], "dtype": "float32"}],
+                 "outputs": [{"shape": [8, 256], "dtype": "float32"}]}
+               ],
+               "weights": [], "model": {}}"#,
+        )
+        .unwrap();
+        let c = Coordinator::start(
+            Some(dir.clone()),
+            CoordinatorConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    max_delay: Duration::from_micros(100),
+                    work_conserving: false,
+                },
+                idle_timeout: Duration::from_millis(10),
+                preload_pjrt: false,
+                min_pjrt_fill: 0.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // rows == the bucket's fixed shape: full flush, forwarded to pjrt
+        let result = c.transform(TransformRequest::new(1, 256, vec![1.0; 8 * 256]));
+        assert!(result.is_err(), "stub compile must fail the batch");
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+        assert!(c.metrics().e2e.count() >= 1);
+        c.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -15,7 +15,21 @@
 //! * **per-thread workspaces** — each worker owns a reusable f32 scratch
 //!   buffer, so the f16/bf16 widen-compute-narrow path performs no heap
 //!   allocation in steady state ([`ExecStats::scratch_grows`] counts the
-//!   warmup growths and then stays flat).
+//!   warmup growths and then stays flat). Inline (non-sharded) 16-bit
+//!   runs use a thread-local workspace on the submitting thread, so
+//!   concurrent small batches never serialize on a shared buffer.
+//! * **fused quantize epilogue** — [`ExecEngine::run_with_epilogue`]
+//!   executes a [`Epilogue`] inside the same chunk traversal as the
+//!   transform: rotate, amax-reduce, and round while the chunk is
+//!   cache-hot, instead of callers making a second full pass over the
+//!   rotated rows. Per-tensor FP8 needs a global amax, so the engine runs
+//!   a **two-phase sharded job** over the same chunk-claiming pool:
+//!   phase 1 transforms each chunk and merges its max-abs into a shared
+//!   accumulator; phase 2 scales + rounds each chunk. Grouped INT8 is
+//!   single-phase (`group` divides `n`, so scales never cross a chunk).
+//!   Outputs are bit-identical to the unfused reference (transform then
+//!   [`crate::quant::fp8_quantize_slice`] /
+//!   [`crate::quant::int_quantize_grouped`]).
 //! * [`plan`] — a process-wide cache memoizing the per-size round
 //!   structure (Sylvester factorisation, stride tables, §3.3 residual
 //!   factor), so per-batch dispatch rebuilds nothing.
@@ -23,11 +37,23 @@
 //! ```no_run
 //! use hadacore::exec::ExecEngine;
 //! use hadacore::hadamard::{FwhtOptions, KernelKind};
+//! use hadacore::quant::{Epilogue, Fp8Format};
 //!
 //! let engine = ExecEngine::default(); // one lane per core (capped at 16)
 //! let (rows, n) = (256, 4096);
 //! let mut batch = vec![1.0f32; rows * n];
 //! engine.run(KernelKind::HadaCore, &mut batch, n, &FwhtOptions::normalized(n));
+//!
+//! // fused rotate -> fp8-quantize in one pass over each chunk
+//! let mut batch = vec![1.0f32; rows * n];
+//! let scales = engine.run_with_epilogue(
+//!     KernelKind::HadaCore,
+//!     &mut batch,
+//!     n,
+//!     &FwhtOptions::normalized(n),
+//!     Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+//! );
+//! assert!(scales.per_tensor().is_some());
 //! ```
 
 pub mod plan;
@@ -35,11 +61,16 @@ mod pool;
 
 pub use plan::{cached_plan_count, plan_for, ExecPlan};
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::hadamard::hadacore::fwht_hadacore_f32_planned;
 use crate::hadamard::{fwht_f32, validate_dims, FwhtOptions, KernelKind};
+use crate::quant::{
+    amax_slice, fp8_apply_slice, int_group_apply_slice, Epilogue, Fp8Format,
+    IntBits, QuantScales,
+};
 use crate::util::f16::{Element, BF16, F16};
 
 use pool::{JobSpec, WorkerPool};
@@ -84,6 +115,58 @@ impl ExecElement for BF16 {
     }
 }
 
+/// Shared nonnegative-f32 max accumulator — the phase-1 reduction target
+/// of the per-tensor epilogue. Nonnegative IEEE floats order identically
+/// to their bit patterns, so `fetch_max` on the bits is an exact float
+/// max; merged per-chunk maxima therefore equal the sequential fold of
+/// [`crate::quant::fp8_quantize_slice`] bit-for-bit. Relaxed ordering is
+/// sufficient: the job's completion latch provides the happens-before
+/// edge to the submitting thread.
+pub(crate) struct AmaxCell(AtomicU32);
+
+impl AmaxCell {
+    fn new() -> AmaxCell {
+        AmaxCell(AtomicU32::new(0))
+    }
+
+    pub(crate) fn merge(&self, v: f32) {
+        debug_assert!(v >= 0.0, "amax must be nonnegative");
+        self.0.fetch_max(v.to_bits(), Ordering::Relaxed);
+    }
+
+    fn get(&self) -> f32 {
+        f32::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Base pointer of the per-group scale output vector for the grouped
+/// epilogue. Distinct chunks write disjoint slot ranges (chunks cover
+/// whole rows and `group` divides `n`) — the same disjointness argument
+/// as [`Payload`].
+#[derive(Clone, Copy)]
+pub(crate) struct ScalesPtr(pub(crate) *mut f32);
+
+// SAFETY: only dereferenced through `group_quant_range`, whose callers
+// guarantee disjoint slot ranges per chunk (see the type doc).
+unsafe impl Send for ScalesPtr {}
+
+/// What a claimed chunk executes. `Rotate` is the plain transform; the
+/// other stages realise the fused quantize epilogue (module doc).
+#[derive(Clone)]
+pub(crate) enum ChunkStage {
+    /// Transform each row of the chunk.
+    Rotate,
+    /// Epilogue phase 1: transform, then merge the chunk's max-abs into
+    /// the shared accumulator.
+    RotateAmax { amax: Arc<AmaxCell> },
+    /// Single-phase grouped-INT8 epilogue: transform, then quantise each
+    /// `group`-sized run and record its scale.
+    RotateGroupQuant { group: usize, scales: ScalesPtr },
+    /// Epilogue phase 2: scale + round every element under the global
+    /// per-tensor scale (no transform — the rows are already rotated).
+    QuantFp8 { scale: f32, fmt: Fp8Format },
+}
+
 /// Engine counters (all monotonically increasing).
 #[derive(Debug, Default)]
 pub struct ExecStats {
@@ -97,6 +180,8 @@ pub struct ExecStats {
     /// Growth events of the reusable f32 workspaces. Flat counter ==
     /// zero-allocation steady state on the 16-bit path.
     pub scratch_grows: AtomicU64,
+    /// Runs that executed a fused quantize epilogue (inline or sharded).
+    pub epilogue_runs: AtomicU64,
 }
 
 /// Point-in-time copy of [`ExecStats`].
@@ -106,6 +191,7 @@ pub struct ExecStatsSnapshot {
     pub inline_runs: u64,
     pub chunks: u64,
     pub scratch_grows: u64,
+    pub epilogue_runs: u64,
 }
 
 impl ExecStats {
@@ -115,6 +201,7 @@ impl ExecStats {
             inline_runs: self.inline_runs.load(Ordering::Relaxed),
             chunks: self.chunks.load(Ordering::Relaxed),
             scratch_grows: self.scratch_grows.load(Ordering::Relaxed),
+            epilogue_runs: self.epilogue_runs.load(Ordering::Relaxed),
         }
     }
 }
@@ -149,12 +236,28 @@ impl Default for ExecConfig {
     }
 }
 
+/// Capacity (in f32 elements) the inline workspace may retain between
+/// runs: 16 MiB per thread. A pool-less engine runs *every* batch
+/// inline, so without a bound a one-off huge 16-bit batch would pin its
+/// widening buffer for the submitting thread's lifetime.
+const INLINE_SCRATCH_RETAIN_ELEMS: usize = 1 << 22;
+
+thread_local! {
+    // Reusable widen/narrow workspace for inline (non-sharded) 16-bit
+    // runs — one per *submitting* thread, so concurrent small f16/bf16
+    // batches never serialize on a shared buffer (a `Mutex<Vec<f32>>`
+    // here would funnel every inline submitter through one lock,
+    // contradicting the pool's stay-parallel design). Growth is still
+    // counted through `ExecStats::scratch_grows` by `widen_run_narrow`;
+    // retention is bounded by `INLINE_SCRATCH_RETAIN_ELEMS`.
+    static INLINE_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
 /// The batched execution engine. One instance owns one worker pool;
 /// cheap to share behind an [`Arc`] — every method takes `&self`.
 pub struct ExecEngine {
     cfg: ExecConfig,
     pool: Option<WorkerPool>,
-    inline_scratch: Mutex<Vec<f32>>,
     stats: Arc<ExecStats>,
 }
 
@@ -171,7 +274,7 @@ impl ExecEngine {
         let stats = Arc::new(ExecStats::default());
         let pool = (cfg.threads > 1)
             .then(|| WorkerPool::new(cfg.threads, Arc::clone(&stats)));
-        ExecEngine { cfg, pool, inline_scratch: Mutex::new(Vec::new()), stats }
+        ExecEngine { cfg, pool, stats }
     }
 
     /// An engine with no pool: every batch runs inline on the caller.
@@ -208,66 +311,150 @@ impl ExecEngine {
         n: usize,
         opts: &FwhtOptions,
     ) {
+        self.run_with_epilogue(kind, data, n, opts, Epilogue::None);
+    }
+
+    /// [`ExecEngine::run`] plus a fused quantize [`Epilogue`], executed
+    /// inside the same chunk traversal as the transform (module doc).
+    /// Returns the scale(s) the epilogue produced.
+    ///
+    /// Bit-identical to the unfused reference — [`ExecEngine::run`]
+    /// followed by [`crate::quant::fp8_quantize_slice`] (per-tensor) or
+    /// [`crate::quant::int_quantize_grouped`] (per-group) over the whole
+    /// buffer; for 16-bit storage the reference widens the transformed
+    /// buffer, quantises in f32, and narrows back.
+    ///
+    /// Panics on invalid dimensions (as [`ExecEngine::run`]) or an
+    /// [`Epilogue`] that fails [`Epilogue::validate`] for `n` — serving
+    /// callers have already validated both at admission.
+    pub fn run_with_epilogue<E: ExecElement>(
+        &self,
+        kind: KernelKind,
+        data: &mut [E],
+        n: usize,
+        opts: &FwhtOptions,
+        epilogue: Epilogue,
+    ) -> QuantScales {
         let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+        if let Err(e) = epilogue.validate(n) {
+            panic!("invalid epilogue: {e}");
+        }
+        if !epilogue.is_none() {
+            self.stats.epilogue_runs.fetch_add(1, Ordering::Relaxed);
+        }
         let plan = plan_for(kind, n);
         let chunk_rows = self.chunk_rows_for(rows, n);
         let chunks = (rows + chunk_rows - 1) / chunk_rows;
+        let payload = E::payload(data.as_mut_ptr());
         match &self.pool {
             Some(pool) if chunks > 1 => {
                 self.stats.jobs.fetch_add(1, Ordering::Relaxed);
-                let spec = JobSpec {
-                    payload: E::payload(data.as_mut_ptr()),
+                let spec = |stage: ChunkStage| JobSpec {
+                    payload,
                     rows,
                     n,
                     chunk_rows,
                     kind,
                     opts: *opts,
-                    plan,
+                    plan: Arc::clone(&plan),
+                    stage,
                 };
-                // SAFETY: `data` is a `&mut` borrow we hold for the whole
-                // call, covering exactly `rows * n` elements.
-                unsafe { pool.submit_and_wait(spec) };
+                // SAFETY (all submissions below): `data` is a `&mut`
+                // borrow we hold for the whole call, covering exactly
+                // `rows * n` elements; each submission blocks until its
+                // chunks complete, so the phases never overlap.
+                match epilogue {
+                    Epilogue::None => {
+                        unsafe { pool.submit_and_wait(spec(ChunkStage::Rotate)) };
+                        QuantScales::None
+                    }
+                    Epilogue::QuantFp8 { fmt } => {
+                        // phase 1: rotate + merge per-chunk amax into the
+                        // shared accumulator
+                        let amax = Arc::new(AmaxCell::new());
+                        unsafe {
+                            pool.submit_and_wait(spec(ChunkStage::RotateAmax {
+                                amax: Arc::clone(&amax),
+                            }))
+                        };
+                        let amax = amax.get();
+                        if amax == 0.0 {
+                            // matches fp8_quantize_slice: all-zero data is
+                            // left untouched and the scale is 1
+                            return QuantScales::PerTensor(1.0);
+                        }
+                        let scale = amax / fmt.max_finite();
+                        // phase 2: scale + round each chunk
+                        unsafe {
+                            pool.submit_and_wait(spec(ChunkStage::QuantFp8 {
+                                scale,
+                                fmt,
+                            }))
+                        };
+                        QuantScales::PerTensor(scale)
+                    }
+                    Epilogue::QuantInt8 { group } => {
+                        let mut scales = vec![0.0f32; rows * n / group];
+                        // SAFETY of ScalesPtr: `scales` outlives the
+                        // blocking submission and chunks write disjoint
+                        // slot ranges (group divides n).
+                        unsafe {
+                            pool.submit_and_wait(spec(
+                                ChunkStage::RotateGroupQuant {
+                                    group,
+                                    scales: ScalesPtr(scales.as_mut_ptr()),
+                                },
+                            ))
+                        };
+                        QuantScales::PerGroup(scales)
+                    }
+                }
             }
             _ => {
                 self.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
-                let payload = E::payload(data.as_mut_ptr());
                 match payload {
-                    // f32 never touches scratch — skip the shared lock so
-                    // concurrent submitters' small batches stay parallel
+                    // f32 never touches scratch — no workspace borrow
                     Payload::F32(_) => {
                         let mut unused = Vec::new();
                         // SAFETY: whole buffer as one chunk, under our `&mut`.
                         unsafe {
-                            execute_range(
+                            run_inline(
                                 payload,
-                                0,
                                 rows,
                                 n,
                                 kind,
                                 opts,
                                 &plan,
+                                &self.stats,
+                                epilogue,
                                 &mut unused,
-                                &self.stats,
-                            );
+                            )
                         }
                     }
-                    _ => {
-                        let mut scratch = self.inline_scratch.lock().unwrap();
+                    // 16-bit storage widens through the submitting
+                    // thread's own workspace (no shared lock)
+                    _ => INLINE_SCRATCH.with(|cell| {
+                        let mut scratch = cell.borrow_mut();
                         // SAFETY: whole buffer as one chunk, under our `&mut`.
-                        unsafe {
-                            execute_range(
+                        let scales = unsafe {
+                            run_inline(
                                 payload,
-                                0,
                                 rows,
                                 n,
                                 kind,
                                 opts,
                                 &plan,
-                                &mut scratch,
                                 &self.stats,
-                            );
+                                epilogue,
+                                &mut scratch,
+                            )
+                        };
+                        if scratch.capacity() > INLINE_SCRATCH_RETAIN_ELEMS {
+                            scratch.clear();
+                            scratch.shrink_to(INLINE_SCRATCH_RETAIN_ELEMS);
                         }
-                    }
+                        scales
+                    }),
                 }
             }
         }
@@ -283,6 +470,18 @@ impl ExecEngine {
         opts: &FwhtOptions,
     ) {
         self.run::<f32>(kind, data, n, opts);
+    }
+
+    /// [`ExecEngine::run_with_epilogue`] monomorphised for `f32`.
+    pub fn run_f32_with_epilogue(
+        &self,
+        kind: KernelKind,
+        data: &mut [f32],
+        n: usize,
+        opts: &FwhtOptions,
+        epilogue: Epilogue,
+    ) -> QuantScales {
+        self.run_with_epilogue::<f32>(kind, data, n, opts, epilogue)
     }
 
     /// Rows per chunk for a `rows x n` batch: enough chunks to balance
@@ -333,6 +532,203 @@ pub(crate) unsafe fn execute_range(
             let data = std::slice::from_raw_parts_mut(base.add(offset), len);
             widen_run_narrow(kind, data, n, opts, plan, scratch, stats);
         }
+    }
+}
+
+/// Execute one claimed chunk under its [`ChunkStage`]. Shared by pool
+/// workers; the inline path uses [`run_inline`] (whole buffer, one chunk).
+///
+/// # Safety
+///
+/// Same contract as [`execute_range`]; additionally, for
+/// [`ChunkStage::RotateGroupQuant`] the scale pointer must address a
+/// buffer of `rows * n / group` slots that outlives the job, with no
+/// other thread touching this chunk's slot range.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn execute_stage(
+    stage: &ChunkStage,
+    payload: Payload,
+    start_row: usize,
+    rows_here: usize,
+    n: usize,
+    kind: KernelKind,
+    opts: &FwhtOptions,
+    plan: &ExecPlan,
+    scratch: &mut Vec<f32>,
+    stats: &ExecStats,
+) {
+    match stage {
+        ChunkStage::Rotate => {
+            execute_range(
+                payload, start_row, rows_here, n, kind, opts, plan, scratch,
+                stats,
+            );
+        }
+        ChunkStage::RotateAmax { amax } => {
+            execute_range(
+                payload, start_row, rows_here, n, kind, opts, plan, scratch,
+                stats,
+            );
+            amax.merge(amax_range(payload, start_row, rows_here, n));
+        }
+        ChunkStage::RotateGroupQuant { group, scales } => {
+            execute_range(
+                payload, start_row, rows_here, n, kind, opts, plan, scratch,
+                stats,
+            );
+            group_quant_range(payload, start_row, rows_here, n, *group, scales.0);
+        }
+        ChunkStage::QuantFp8 { scale, fmt } => {
+            quant_fp8_range(payload, start_row, rows_here, n, *scale, *fmt);
+        }
+    }
+}
+
+/// The inline (non-sharded) path: transform the whole buffer as one
+/// chunk, then run the epilogue over it. Returns the epilogue's scales.
+///
+/// # Safety
+///
+/// Same contract as [`execute_range`] with `start_row = 0` and
+/// `rows_here = rows`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_inline(
+    payload: Payload,
+    rows: usize,
+    n: usize,
+    kind: KernelKind,
+    opts: &FwhtOptions,
+    plan: &ExecPlan,
+    stats: &ExecStats,
+    epilogue: Epilogue,
+    scratch: &mut Vec<f32>,
+) -> QuantScales {
+    execute_range(payload, 0, rows, n, kind, opts, plan, scratch, stats);
+    match epilogue {
+        Epilogue::None => QuantScales::None,
+        Epilogue::QuantFp8 { fmt } => {
+            let amax = amax_range(payload, 0, rows, n);
+            if amax == 0.0 {
+                return QuantScales::PerTensor(1.0);
+            }
+            let scale = amax / fmt.max_finite();
+            quant_fp8_range(payload, 0, rows, n, scale, fmt);
+            QuantScales::PerTensor(scale)
+        }
+        Epilogue::QuantInt8 { group } => {
+            let mut scales = vec![0.0f32; rows * n / group];
+            group_quant_range(payload, 0, rows, n, group, scales.as_mut_ptr());
+            QuantScales::PerGroup(scales)
+        }
+    }
+}
+
+/// Max-abs over the addressed range, widening 16-bit storage. `max` over
+/// a finite nonnegative set is exact under any association, so per-chunk
+/// maxima merged through [`AmaxCell`] equal the sequential fold of the
+/// unfused reference bit-for-bit (NaNs are ignored by `f32::max` on both
+/// paths).
+///
+/// # Safety
+///
+/// Same addressing contract as [`execute_range`] (shared access
+/// suffices — this stage only reads).
+unsafe fn amax_range(
+    payload: Payload,
+    start_row: usize,
+    rows_here: usize,
+    n: usize,
+) -> f32 {
+    let offset = start_row * n;
+    let len = rows_here * n;
+    match payload {
+        Payload::F32(base) => {
+            amax_slice(std::slice::from_raw_parts(base.add(offset), len))
+        }
+        Payload::F16(base) => {
+            amax_slice(std::slice::from_raw_parts(base.add(offset), len))
+        }
+        Payload::BF16(base) => {
+            amax_slice(std::slice::from_raw_parts(base.add(offset), len))
+        }
+    }
+}
+
+/// Phase-2 per-tensor FP8 rounding of the addressed range.
+///
+/// # Safety
+///
+/// Same addressing contract as [`execute_range`].
+unsafe fn quant_fp8_range(
+    payload: Payload,
+    start_row: usize,
+    rows_here: usize,
+    n: usize,
+    scale: f32,
+    fmt: Fp8Format,
+) {
+    let offset = start_row * n;
+    let len = rows_here * n;
+    match payload {
+        Payload::F32(base) => fp8_apply_slice(
+            std::slice::from_raw_parts_mut(base.add(offset), len),
+            scale,
+            fmt,
+        ),
+        Payload::F16(base) => fp8_apply_slice(
+            std::slice::from_raw_parts_mut(base.add(offset), len),
+            scale,
+            fmt,
+        ),
+        Payload::BF16(base) => fp8_apply_slice(
+            std::slice::from_raw_parts_mut(base.add(offset), len),
+            scale,
+            fmt,
+        ),
+    }
+}
+
+/// Grouped-INT8 quantisation of the addressed range; group `g`'s scale
+/// lands in `scales_base.add(g)`. Chunks cover whole rows and `group`
+/// divides `n`, so `offset` is group-aligned and distinct chunks write
+/// disjoint scale slots.
+///
+/// # Safety
+///
+/// Same addressing contract as [`execute_range`]; `scales_base` must
+/// address `rows * n / group` slots valid for the duration, with this
+/// chunk's slot range untouched by other threads.
+unsafe fn group_quant_range(
+    payload: Payload,
+    start_row: usize,
+    rows_here: usize,
+    n: usize,
+    group: usize,
+    scales_base: *mut f32,
+) {
+    let offset = start_row * n;
+    let len = rows_here * n;
+    let scales =
+        std::slice::from_raw_parts_mut(scales_base.add(offset / group), len / group);
+    match payload {
+        Payload::F32(base) => int_group_apply_slice(
+            std::slice::from_raw_parts_mut(base.add(offset), len),
+            group,
+            IntBits::Int8,
+            scales,
+        ),
+        Payload::F16(base) => int_group_apply_slice(
+            std::slice::from_raw_parts_mut(base.add(offset), len),
+            group,
+            IntBits::Int8,
+            scales,
+        ),
+        Payload::BF16(base) => int_group_apply_slice(
+            std::slice::from_raw_parts_mut(base.add(offset), len),
+            group,
+            IntBits::Int8,
+            scales,
+        ),
     }
 }
 
@@ -528,6 +924,196 @@ mod tests {
             );
             assert_eq!(&want, got);
         }
+    }
+
+    #[test]
+    fn fused_fp8_matches_unfused_two_pass() {
+        let engine = pooled();
+        let mut rng = Rng::new(11);
+        let (rows, n) = (33usize, 1024usize);
+        let x = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+        for kind in KernelKind::all() {
+            let mut unfused = x.clone();
+            engine.run_f32(kind, &mut unfused, n, &opts);
+            let want_scale =
+                crate::quant::fp8_quantize_slice(&mut unfused, Fp8Format::E4M3);
+
+            let mut fused = x.clone();
+            let scales = engine.run_with_epilogue(
+                kind,
+                &mut fused,
+                n,
+                &opts,
+                Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+            );
+            assert_eq!(scales, QuantScales::PerTensor(want_scale), "kind={kind:?}");
+            assert_eq!(unfused, fused, "kind={kind:?}");
+        }
+        let s = engine.stats();
+        assert_eq!(s.epilogue_runs, KernelKind::all().len() as u64);
+        assert!(s.jobs > 0, "a 33x1024 batch must shard on this engine");
+    }
+
+    #[test]
+    fn fused_fp8_16bit_matches_widened_reference() {
+        let engine = pooled();
+        let mut rng = Rng::new(12);
+        let (rows, n) = (17usize, 512usize);
+        let x = rng.normal_vec(rows * n);
+        let base: Vec<F16> = x.iter().map(|&v| F16::from_f32(v)).collect();
+        let opts = FwhtOptions::normalized(n);
+
+        let mut unfused = base.clone();
+        engine.run(KernelKind::HadaCore, &mut unfused, n, &opts);
+        let mut widened: Vec<f32> = unfused.iter().map(|v| v.to_f32()).collect();
+        let want_scale =
+            crate::quant::fp8_quantize_slice(&mut widened, Fp8Format::E5M2);
+        let want: Vec<F16> = widened.iter().map(|&v| F16::from_f32(v)).collect();
+
+        let mut fused = base;
+        let scales = engine.run_with_epilogue(
+            KernelKind::HadaCore,
+            &mut fused,
+            n,
+            &opts,
+            Epilogue::QuantFp8 { fmt: Fp8Format::E5M2 },
+        );
+        assert_eq!(scales, QuantScales::PerTensor(want_scale));
+        assert_eq!(want, fused);
+    }
+
+    #[test]
+    fn fused_int8_group_matches_reference() {
+        let engine = pooled();
+        let mut rng = Rng::new(13);
+        let (rows, n, group) = (19usize, 512usize, 64usize);
+        let x = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+
+        let mut unfused = x.clone();
+        engine.run_f32(KernelKind::Dao, &mut unfused, n, &opts);
+        let want_scales =
+            crate::quant::int_quantize_grouped(&mut unfused, group, IntBits::Int8);
+
+        let mut fused = x;
+        let scales = engine.run_with_epilogue(
+            KernelKind::Dao,
+            &mut fused,
+            n,
+            &opts,
+            Epilogue::QuantInt8 { group },
+        );
+        assert_eq!(scales, QuantScales::PerGroup(want_scales));
+        assert_eq!(unfused, fused);
+    }
+
+    #[test]
+    fn fused_epilogue_inline_path() {
+        // one small row runs inline; the epilogue must still apply
+        let engine = pooled();
+        let n = 256;
+        let mut data = vec![1.0f32; n];
+        let scales = engine.run_with_epilogue(
+            KernelKind::HadaCore,
+            &mut data,
+            n,
+            &FwhtOptions::raw(),
+            Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+        );
+        // raw all-ones transform: amax = n = 256 > 448? no: scale = 256/448
+        let scale = 256.0 / 448.0;
+        assert_eq!(scales, QuantScales::PerTensor(scale));
+        let s = engine.stats();
+        assert_eq!(s.inline_runs, 1);
+        assert_eq!(s.jobs, 0);
+        assert_eq!(s.epilogue_runs, 1);
+    }
+
+    #[test]
+    fn fused_fp8_zero_batch_scale_is_one() {
+        let engine = pooled();
+        let (rows, n) = (33usize, 512usize);
+        let mut data = vec![0.0f32; rows * n];
+        let scales = engine.run_with_epilogue(
+            KernelKind::HadaCore,
+            &mut data,
+            n,
+            &FwhtOptions::normalized(n),
+            Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+        );
+        assert_eq!(scales, QuantScales::PerTensor(1.0));
+        assert!(data.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid epilogue")]
+    fn misaligned_group_panics() {
+        let engine = ExecEngine::single_threaded();
+        let mut data = vec![0.0f32; 256];
+        engine.run_with_epilogue(
+            KernelKind::HadaCore,
+            &mut data,
+            256,
+            &FwhtOptions::raw(),
+            Epilogue::QuantInt8 { group: 48 },
+        );
+    }
+
+    #[test]
+    fn concurrent_inline_16bit_batches_stay_correct() {
+        // small f16 batches run inline on the submitting threads; each
+        // thread uses its own thread-local workspace (no shared lock)
+        let engine = std::sync::Arc::new(pooled());
+        let mut rng = Rng::new(14);
+        let n = 256; // one row: far below the sharding threshold
+        let inputs: Vec<Vec<F16>> = (0..8)
+            .map(|_| {
+                rng.normal_vec(n).iter().map(|&v| F16::from_f32(v)).collect()
+            })
+            .collect();
+        let opts = FwhtOptions::normalized(n);
+        let outputs: Vec<Vec<F16>> = std::thread::scope(|s| {
+            inputs
+                .iter()
+                .map(|x| {
+                    let engine = std::sync::Arc::clone(&engine);
+                    s.spawn(move || {
+                        let mut data = x.clone();
+                        engine.run(KernelKind::HadaCore, &mut data, n, &opts);
+                        data
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for (x, got) in inputs.iter().zip(outputs.iter()) {
+            let mut want = x.clone();
+            fwht_generic(KernelKind::HadaCore, &mut want, n, &opts);
+            assert_eq!(&want, got);
+        }
+        assert_eq!(engine.stats().inline_runs, 8);
+    }
+
+    #[test]
+    fn inline_scratch_retention_is_bounded() {
+        // a pool-less engine runs even huge 16-bit batches inline; the
+        // widening buffer must not stay pinned past the retention cap
+        let engine = ExecEngine::single_threaded();
+        let n = 1 << 15;
+        let rows = 130; // 130 * 32768 = 4.26M elems > INLINE_SCRATCH_RETAIN_ELEMS
+        assert!(rows * n > INLINE_SCRATCH_RETAIN_ELEMS);
+        let mut data: Vec<F16> = vec![F16::from_f32(1.0); rows * n];
+        engine.run(KernelKind::Dao, &mut data, n, &FwhtOptions::normalized(n));
+        INLINE_SCRATCH.with(|cell| {
+            assert!(
+                cell.borrow().capacity() <= INLINE_SCRATCH_RETAIN_ELEMS,
+                "inline scratch retained {} elems",
+                cell.borrow().capacity()
+            );
+        });
     }
 
     #[test]

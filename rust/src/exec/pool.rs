@@ -8,6 +8,13 @@
 //! completion latch, which is also the synchronisation edge that makes
 //! the workers' writes visible to the submitter.
 //!
+//! What a chunk *does* is the job's [`ChunkStage`]: the plain transform,
+//! a fused transform + amax / grouped-quant epilogue pass, or the
+//! per-tensor scale+round phase. The engine's two-phase epilogue jobs
+//! submit two specs back to back over the same chunk geometry — the
+//! latch of phase 1 is the barrier that makes the global amax valid
+//! before phase 2 starts claiming.
+//!
 //! Buffers cross the thread boundary as tagged raw base pointers
 //! ([`super::Payload`]): the submitter holds the `&mut` borrow for the
 //! whole call, chunk claims are unique by construction, and distinct
@@ -28,7 +35,7 @@ use std::thread::JoinHandle;
 use crate::hadamard::{FwhtOptions, KernelKind};
 
 use super::plan::ExecPlan;
-use super::{execute_range, ExecStats, Payload};
+use super::{execute_stage, ChunkStage, ExecStats, Payload};
 
 /// Everything a worker needs to run one chunk or the submitter needs to
 /// enqueue a batch.
@@ -47,6 +54,8 @@ pub(crate) struct JobSpec {
     pub opts: FwhtOptions,
     /// Cached plan for `(kind, n)`.
     pub plan: Arc<ExecPlan>,
+    /// What each chunk executes (plain rotate or an epilogue stage).
+    pub stage: ChunkStage,
 }
 
 struct Job {
@@ -115,6 +124,7 @@ struct Claim {
     kind: KernelKind,
     opts: FwhtOptions,
     plan: Arc<ExecPlan>,
+    stage: ChunkStage,
     done: Arc<Latch>,
 }
 
@@ -198,6 +208,7 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
                         kind: front.spec.kind,
                         opts: front.spec.opts,
                         plan: Arc::clone(&front.spec.plan),
+                        stage: front.spec.stage.clone(),
                         done: Arc::clone(&front.done),
                     };
                     front.next_chunk += 1;
@@ -217,11 +228,12 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
             let start_row = claim.index * claim.chunk_rows;
             let rows_here = claim.chunk_rows.min(claim.rows - start_row);
             // SAFETY: chunk indices are claimed uniquely under the queue
-            // lock and map to disjoint row ranges; the submitter keeps the
-            // buffer exclusively borrowed until the latch opens (the
-            // contract of `submit_and_wait`).
+            // lock and map to disjoint row (and scale-slot) ranges; the
+            // submitter keeps the buffer exclusively borrowed until the
+            // latch opens (the contract of `submit_and_wait`).
             unsafe {
-                execute_range(
+                execute_stage(
+                    &claim.stage,
                     claim.payload,
                     start_row,
                     rows_here,

@@ -7,6 +7,7 @@
 
 use crate::coordinator::TransformRequest;
 use crate::hadamard::KernelKind;
+use crate::quant::Epilogue;
 use crate::util::rng::Rng;
 
 /// Workload configuration.
@@ -23,6 +24,11 @@ pub struct WorkloadConfig {
     /// Probability a payload is heavy-tailed (outlier-bearing), the
     /// activation regime the paper's rotations target.
     pub outlier_fraction: f64,
+    /// Fused rotate→quantize epilogue attached to every request — the
+    /// quantised-serving workload (FP8 KV/activations). Does not consume
+    /// randomness, so streams with and without an epilogue share the
+    /// same payloads for a given seed.
+    pub epilogue: Epilogue,
     /// RNG seed.
     pub seed: u64,
 }
@@ -35,6 +41,7 @@ impl Default for WorkloadConfig {
             rows_max: 8,
             kernel: KernelKind::HadaCore,
             outlier_fraction: 0.2,
+            epilogue: Epilogue::None,
             seed: 0xBEEF,
         }
     }
@@ -71,6 +78,7 @@ impl ServingWorkload {
         self.next_id += 1;
         let mut req = TransformRequest::new(id, n, data);
         req.kernel = self.cfg.kernel;
+        req.epilogue = self.cfg.epilogue;
         req
     }
 
@@ -132,6 +140,25 @@ mod tests {
         assert_eq!(ma.len(), 7 * 128);
         assert_eq!(ma, mb);
         assert!(ma.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn epilogue_propagates_without_perturbing_the_stream() {
+        use crate::quant::Fp8Format;
+        let mut plain = ServingWorkload::new(WorkloadConfig::default());
+        let mut fused = ServingWorkload::new(WorkloadConfig {
+            epilogue: Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+            ..Default::default()
+        });
+        for _ in 0..10 {
+            let a = plain.next_request();
+            let b = fused.next_request();
+            assert_eq!(a.epilogue, Epilogue::None);
+            assert_eq!(b.epilogue, Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 });
+            // same seed, same payloads — the epilogue is orthogonal
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.data, b.data);
+        }
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //! infinities and max finite 57344. These are the formats FP8 attention
 //! (FlashAttention-3, the paper's end-to-end setting) quantises to.
 
+use crate::util::f16::Element;
+
 /// FP8 format selector.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Fp8Format {
     /// 4 exponent bits, 3 mantissa bits, bias 7, finite-only (fn variant).
     E4M3,
@@ -87,18 +89,28 @@ fn round_ties_even(x: f32) -> f32 {
     }
 }
 
+/// Scale + round every element under a fixed per-tensor scale
+/// (`x <- fp8(x / scale) * scale`), widening/narrowing 16-bit storage
+/// through [`Element`]. The single rounding loop behind both
+/// [`fp8_quantize_slice`] and the execution engine's fused epilogue —
+/// one implementation is what makes the fused path bit-identical to the
+/// two-pass reference by construction.
+pub fn fp8_apply_slice<E: Element>(data: &mut [E], scale: f32, fmt: Fp8Format) {
+    for v in data.iter_mut() {
+        *v = E::from_f32(fp8_round(v.to_f32() / scale, fmt) * scale);
+    }
+}
+
 /// Fake-quantise a slice through FP8 with a per-tensor symmetric scale
 /// mapping max-abs to the format's max finite value. Returns the scale
 /// (`x_quantised = fp8(x / scale) * scale`).
 pub fn fp8_quantize_slice(x: &mut [f32], fmt: Fp8Format) -> f32 {
-    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let amax = crate::quant::amax_slice(x);
     if amax == 0.0 {
         return 1.0;
     }
     let scale = amax / fmt.max_finite();
-    for v in x.iter_mut() {
-        *v = fp8_round(*v / scale, fmt) * scale;
-    }
+    fp8_apply_slice(x, scale, fmt);
     scale
 }
 

@@ -3,7 +3,32 @@
 //! per-group scales of 32-128 elements bound the blast radius of each
 //! outlier to its own group, and rotation then flattens *within* groups).
 
+use crate::util::f16::Element;
+
 use super::int::{int_round, IntBits};
+
+/// Per-group quantisation of a slice, writing each group's scale into
+/// the matching `scales` slot (one per group, in element order).
+/// Widens/narrows 16-bit storage through [`Element`]. The single
+/// per-group loop behind both [`int_quantize_grouped`] and the execution
+/// engine's fused epilogue — one implementation is what makes the fused
+/// path bit-identical to the two-pass reference by construction.
+pub fn int_group_apply_slice<E: Element>(
+    data: &mut [E],
+    group: usize,
+    bits: IntBits,
+    scales: &mut [f32],
+) {
+    debug_assert_eq!(data.len() / group.max(1), scales.len());
+    for (g, slot) in data.chunks_exact_mut(group).zip(scales.iter_mut()) {
+        let amax = crate::quant::amax_slice(g);
+        let scale = if amax == 0.0 { 1.0 } else { amax / bits.qmax() as f32 };
+        for v in g.iter_mut() {
+            *v = E::from_f32(int_round(v.to_f32(), scale, bits));
+        }
+        *slot = scale;
+    }
+}
 
 /// Per-group symmetric INT quantisation of the last axis.
 ///
@@ -15,15 +40,8 @@ pub fn int_quantize_grouped(
     bits: IntBits,
 ) -> Vec<f32> {
     assert!(group > 0 && x.len() % group == 0, "bad group size");
-    let mut scales = Vec::with_capacity(x.len() / group);
-    for g in x.chunks_exact_mut(group) {
-        let amax = g.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        let scale = if amax == 0.0 { 1.0 } else { amax / bits.qmax() as f32 };
-        for v in g.iter_mut() {
-            *v = int_round(*v, scale, bits);
-        }
-        scales.push(scale);
-    }
+    let mut scales = vec![0.0f32; x.len() / group];
+    int_group_apply_slice(x, group, bits, &mut scales);
     scales
 }
 

@@ -44,7 +44,7 @@ pub fn int_round(v: f32, scale: f32, bits: IntBits) -> f32 {
 /// Fake-quantise a slice with a per-tensor symmetric max-abs scale.
 /// Returns the scale.
 pub fn int_quantize_slice(x: &mut [f32], bits: IntBits) -> f32 {
-    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let amax = crate::quant::amax_slice(x);
     if amax == 0.0 {
         return 1.0;
     }

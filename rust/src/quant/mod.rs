@@ -13,10 +13,92 @@ pub mod group;
 pub mod int;
 pub mod metrics;
 
-pub use fp8::{fp8_quantize_slice, Fp8Format};
-pub use group::{group_size_sweep, int_quantize_grouped};
+pub use fp8::{fp8_apply_slice, fp8_quantize_slice, Fp8Format};
+pub use group::{group_size_sweep, int_group_apply_slice, int_quantize_grouped};
 pub use int::{int_quantize_slice, IntBits};
 pub use metrics::{incoherence, outlier_mass, quant_mse, QuantReport};
+
+/// Max-abs over a slice, widening 16-bit storage through
+/// [`crate::util::f16::Element`]. NaNs are ignored (`f32::max`
+/// semantics), and `max` over finite nonnegative values is exact under
+/// any association — per-chunk maxima merged by the execution engine's
+/// sharded epilogue equal this sequential fold bit-for-bit.
+pub fn amax_slice<E: crate::util::f16::Element>(data: &[E]) -> f32 {
+    data.iter().fold(0.0f32, |m, v| m.max(v.to_f32().abs()))
+}
+
+/// A quantisation step fused into the transform as an epilogue: the
+/// [`crate::exec`] engine rotates each chunk and quantises it in the same
+/// working-set traversal, instead of callers making a second full pass
+/// over the rotated rows (the avoidable data-exchange overhead the paper
+/// restructures the transform to remove).
+///
+/// Semantics match the unfused reference exactly (bit-for-bit, enforced
+/// by `rust/tests/epilogue_parity.rs`):
+///
+/// * [`Epilogue::QuantFp8`] == transform then [`fp8_quantize_slice`]
+///   (per-tensor symmetric max-abs scale);
+/// * [`Epilogue::QuantInt8`] == transform then [`int_quantize_grouped`]
+///   (per-group symmetric INT8 scales; `group` must divide `n`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Epilogue {
+    /// Plain transform, no fused quantisation.
+    #[default]
+    None,
+    /// Per-tensor FP8 fake-quantisation (two-phase: global amax, then
+    /// scale + round-to-nearest-even per chunk).
+    QuantFp8 {
+        /// FP8 format (e4m3 for the paper's FP8-attention setting).
+        fmt: Fp8Format,
+    },
+    /// Per-group symmetric INT8 fake-quantisation (single-phase: group
+    /// scales never cross a chunk boundary because `group` divides `n`).
+    QuantInt8 {
+        /// Contiguous elements sharing one max-abs scale.
+        group: usize,
+    },
+}
+
+impl Epilogue {
+    /// True for the plain (no-quantisation) epilogue.
+    pub fn is_none(self) -> bool {
+        matches!(self, Epilogue::None)
+    }
+
+    /// Admission-time validation against a transform size.
+    pub fn validate(self, n: usize) -> Result<(), String> {
+        match self {
+            Epilogue::QuantInt8 { group } if group == 0 || n % group != 0 => {
+                Err(format!(
+                    "int8 epilogue group {group} must be a nonzero divisor of n={n}"
+                ))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// The scale(s) an [`Epilogue`] produced, carried back to the caller so
+/// dequantisation needs no recomputation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantScales {
+    /// No epilogue ran.
+    None,
+    /// One symmetric per-tensor scale (`x_q = fp8(x / scale) * scale`).
+    PerTensor(f32),
+    /// One scale per contiguous group, in element order.
+    PerGroup(Vec<f32>),
+}
+
+impl QuantScales {
+    /// The per-tensor scale, if that is what the epilogue produced.
+    pub fn per_tensor(&self) -> Option<f32> {
+        match self {
+            QuantScales::PerTensor(s) => Some(*s),
+            _ => None,
+        }
+    }
+}
 
 /// A quantisation scheme applied per-tensor with a symmetric scale.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,6 +166,20 @@ mod tests {
         }
         assert_eq!(Scheme::parse("fp8"), Some(Scheme::Fp8E4m3));
         assert_eq!(Scheme::parse("fp7"), None);
+    }
+
+    #[test]
+    fn epilogue_validation() {
+        assert!(Epilogue::None.validate(256).is_ok());
+        assert!(Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 }.validate(256).is_ok());
+        assert!(Epilogue::QuantInt8 { group: 32 }.validate(256).is_ok());
+        assert!(Epilogue::QuantInt8 { group: 256 }.validate(256).is_ok());
+        assert!(Epilogue::QuantInt8 { group: 0 }.validate(256).is_err());
+        assert!(Epilogue::QuantInt8 { group: 48 }.validate(256).is_err());
+        assert!(Epilogue::None.is_none());
+        assert!(!Epilogue::QuantInt8 { group: 32 }.is_none());
+        assert_eq!(QuantScales::PerTensor(0.5).per_tensor(), Some(0.5));
+        assert_eq!(QuantScales::None.per_tensor(), None);
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Integration: the fused rotate→quantize epilogue must be bit-identical
+//! to the unfused two-pass reference — across kernels
+//! (scalar/dao/hadacore), dtypes (f32/f16/bf16), the paper's size axis
+//! (256..8192), chunk boundaries, and lane counts (1, 4, 8).
+//!
+//! The unfused reference for [`hadacore::quant::Epilogue::QuantFp8`] is
+//! the engine transform followed by `fp8_quantize_slice` over the whole
+//! (widened, for 16-bit storage) buffer; for
+//! [`hadacore::quant::Epilogue::QuantInt8`] it is the transform followed
+//! by `int_quantize_grouped`. Both the quantised data and the returned
+//! scale(s) must match exactly: the per-tensor amax is reduced per chunk
+//! through a shared accumulator, and `max` over finite nonnegative
+//! values is exact under any association, so sharding must not change a
+//! single bit.
+
+use hadacore::exec::{ExecConfig, ExecEngine, ExecElement};
+use hadacore::hadamard::{FwhtOptions, KernelKind};
+use hadacore::quant::{
+    fp8_quantize_slice, int_quantize_grouped, Epilogue, Fp8Format, IntBits,
+    QuantScales,
+};
+use hadacore::util::f16::{Element, BF16, F16};
+use hadacore::util::rng::Rng;
+
+/// Lane configurations under test: no pool, a typical pool, and a
+/// deliberately aggressive sharder (tiny chunks => many chunk
+/// boundaries, so the two-phase reduction crosses many workers).
+fn engines() -> Vec<(&'static str, ExecEngine)> {
+    vec![
+        ("t1", ExecEngine::single_threaded()),
+        (
+            "t4",
+            ExecEngine::new(ExecConfig {
+                threads: 4,
+                chunks_per_thread: 2,
+                min_chunk_elems: 2048,
+            }),
+        ),
+        (
+            "t8-fine",
+            ExecEngine::new(ExecConfig {
+                threads: 8,
+                chunks_per_thread: 4,
+                min_chunk_elems: 256,
+            }),
+        ),
+    ]
+}
+
+/// (n, rows) grid: the acceptance sizes with row counts chosen to not
+/// divide evenly into chunks, plus a single-row batch.
+const SHAPES: [(usize, usize); 5] =
+    [(256, 67), (512, 1), (1024, 13), (4096, 9), (8192, 3)];
+
+fn check_fp8<E>(
+    label: &str,
+    engine: &ExecEngine,
+    kind: KernelKind,
+    base: &[E],
+    n: usize,
+    fmt: Fp8Format,
+) where
+    E: ExecElement + PartialEq + std::fmt::Debug,
+{
+    let opts = FwhtOptions::normalized(n);
+
+    // unfused two-pass reference: transform, widen, quantize, narrow
+    let mut unfused: Vec<E> = base.to_vec();
+    engine.run(kind, &mut unfused, n, &opts);
+    let mut widened: Vec<f32> = unfused.iter().map(|v| v.to_f32()).collect();
+    let want_scale = fp8_quantize_slice(&mut widened, fmt);
+    let want: Vec<E> = widened.iter().map(|&v| E::from_f32(v)).collect();
+
+    // fused: one engine call, quantised in the same chunk traversal
+    let mut fused: Vec<E> = base.to_vec();
+    let scales = engine.run_with_epilogue(
+        kind,
+        &mut fused,
+        n,
+        &opts,
+        Epilogue::QuantFp8 { fmt },
+    );
+    assert_eq!(
+        scales,
+        QuantScales::PerTensor(want_scale),
+        "{label}: scale mismatch"
+    );
+    assert_eq!(want, fused, "{label}: fused fp8 output diverged");
+}
+
+#[test]
+fn fused_fp8_bit_identical_across_kernels_dtypes_sizes_lanes() {
+    let mut rng = Rng::new(0xE41);
+    for (ename, engine) in engines() {
+        for (n, rows) in SHAPES {
+            let x = rng.normal_vec(rows * n);
+            for kind in KernelKind::all() {
+                let label = format!("{ename} {kind:?} {rows}x{n}");
+                check_fp8(
+                    &format!("{label} f32"),
+                    &engine,
+                    kind,
+                    &x,
+                    n,
+                    Fp8Format::E4M3,
+                );
+                let f16: Vec<F16> = x.iter().map(|&v| F16::from_f32(v)).collect();
+                check_fp8(
+                    &format!("{label} f16"),
+                    &engine,
+                    kind,
+                    &f16,
+                    n,
+                    Fp8Format::E4M3,
+                );
+                let bf16: Vec<BF16> =
+                    x.iter().map(|&v| BF16::from_f32(v)).collect();
+                check_fp8(
+                    &format!("{label} bf16"),
+                    &engine,
+                    kind,
+                    &bf16,
+                    n,
+                    Fp8Format::E5M2,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_int8_grouped_bit_identical_across_engines() {
+    let mut rng = Rng::new(0x138);
+    for (ename, engine) in engines() {
+        for (n, rows) in SHAPES {
+            let x = rng.normal_vec(rows * n);
+            for group in [32usize, n] {
+                let opts = FwhtOptions::normalized(n);
+                let mut unfused = x.clone();
+                engine.run_f32(KernelKind::HadaCore, &mut unfused, n, &opts);
+                let want_scales =
+                    int_quantize_grouped(&mut unfused, group, IntBits::Int8);
+
+                let mut fused = x.clone();
+                let scales = engine.run_with_epilogue(
+                    KernelKind::HadaCore,
+                    &mut fused,
+                    n,
+                    &opts,
+                    Epilogue::QuantInt8 { group },
+                );
+                let label = format!("{ename} {rows}x{n} group={group}");
+                assert_eq!(scales, QuantScales::PerGroup(want_scales), "{label}");
+                assert_eq!(unfused, fused, "{label}: fused int8 output diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_fp8_handles_outlier_heavy_payloads() {
+    // heavy-tailed payloads (the activation regime rotations target)
+    // stress the amax reduction: the max lives in one chunk while the
+    // others are orders of magnitude smaller
+    let mut rng = Rng::new(0x0E7);
+    let engine = ExecEngine::new(ExecConfig {
+        threads: 8,
+        chunks_per_thread: 4,
+        min_chunk_elems: 256,
+    });
+    let (rows, n) = (29usize, 1024usize);
+    let mut x = rng.normal_vec(rows * n);
+    x[17 * n + 5] = 4.0e4; // single extreme outlier deep in one chunk
+    for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+        check_fp8("outliers f32", &engine, KernelKind::HadaCore, &x, n, fmt);
+    }
+}
+
+#[test]
+fn fused_epilogue_scale_has_the_documented_meaning() {
+    // the returned per-tensor scale must be exactly amax / max_finite of
+    // the *rotated* (pre-quantisation) tensor, and quantised magnitudes
+    // must stay bounded by amax (the fn-saturation convention)
+    let mut rng = Rng::new(0xDE);
+    let engine = ExecEngine::default();
+    let (rows, n) = (8usize, 2048usize);
+    let orig = rng.normal_vec(rows * n);
+    let opts = FwhtOptions::normalized(n);
+
+    let mut rotated = orig.clone();
+    engine.run_f32(KernelKind::HadaCore, &mut rotated, n, &opts);
+    let amax = rotated.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+
+    let mut data = orig;
+    let scales = engine.run_with_epilogue(
+        KernelKind::HadaCore,
+        &mut data,
+        n,
+        &opts,
+        Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+    );
+    let scale = scales.per_tensor().expect("per-tensor scale");
+    assert_eq!(scale, amax / Fp8Format::E4M3.max_finite());
+    let qmax = data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    assert!(
+        qmax <= amax * (1.0 + 1e-6),
+        "quantised magnitude {qmax} exceeds amax {amax}"
+    );
+}
