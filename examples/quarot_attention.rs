@@ -8,7 +8,8 @@
 //!   requests per numerics variant, and reports latency/throughput plus
 //!   the numerical-fidelity comparison the paper's §4.2 makes.
 //! * **Native fused mode** (no artifacts needed) — the paper's
-//!   rotate→FP8 pipeline through the coordinator's **fused epilogue**:
+//!   rotate→FP8 pipeline driven at a real Llama dim (14336 = 28·512)
+//!   through the coordinator's **fused epilogue**:
 //!   the server rotates each request and fp8-quantises it in the same
 //!   pass over the data, returning the per-request scale. Compared
 //!   against the two-pass pattern it replaces (plain rotation served,
@@ -53,11 +54,15 @@ fn main() -> anyhow::Result<()> {
 /// The no-artifact path: QuaRot-style rotate→FP8 serving through the
 /// coordinator's fused epilogue, vs the two-pass client-side pattern.
 fn run_native_fused(requests: usize) -> anyhow::Result<()> {
-    let (rows, n) = (8usize, 4096usize); // one attention block's K/V rows
+    // one attention block's K/V rows at the Llama-3 8B FFN width:
+    // 14336 = 28 * 512 — a real down-projection rotation dim, only
+    // admissible since the B * 2^k size family landed (the paper's
+    // QuaRot pipeline rotates exactly these hidden dims)
+    let (rows, n) = (8usize, 14336usize);
     let coord = Coordinator::start(None, CoordinatorConfig::default())?;
     println!(
         "serving {requests} rotate+quantise requests of shape ({rows}, {n}) \
-         on the native engine ({} exec lanes)",
+         (28*512, Llama-3 8B FFN dim) on the native engine ({} exec lanes)",
         coord.exec_engine().threads()
     );
 

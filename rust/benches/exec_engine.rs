@@ -31,7 +31,9 @@ fn main() {
     println!("## f32 HadaCore batches, {} elements/batch", elems);
     let mut wl = ServingWorkload::new(WorkloadConfig::default());
     let mut summary: Vec<(usize, usize, f64)> = Vec::new();
-    for n in [256usize, 1024, 4096, 16384] {
+    // 14336 = 28 * 512: the non-power-of-two Llama-3 FFN dim — the
+    // engine shards its base-stage + mma-round schedule like any other
+    for n in [256usize, 1024, 4096, 14336, 16384] {
         let rows = elems / n;
         let base = wl.next_matrix(rows, n);
         let opts = FwhtOptions::normalized(n);

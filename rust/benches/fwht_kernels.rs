@@ -65,6 +65,32 @@ fn main() {
         println!("{:>8} {:>17.2}x {:>17.2}x", n, vs_dao, vs_scalar);
     }
 
+    // -- non-power-of-two sizes (B * 2^k family) -----------------------
+    // the leading base-matrix stage's cost on top of the mma rounds, at
+    // the Llama-relevant dims the family exists for
+    println!("\n## non-power-of-two sizes (leading base stage + mma rounds)");
+    for n in [768usize, 5120, 14336] {
+        let rows = (1 << 18) / n;
+        let mut rng = Rng::new(n as u64);
+        let base = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+        for kind in [KernelKind::Dao, KernelKind::HadaCore] {
+            let label = format!("{}_{}", kind.name(), n);
+            let b = base.clone();
+            let mut data = base.clone();
+            let s: Stats = bench(&label, &cfg, move |_| {
+                data.copy_from_slice(&b);
+                match kind {
+                    KernelKind::Scalar => fwht_scalar_f32(&mut data, n, &opts),
+                    KernelKind::Dao => fwht_dao_f32(&mut data, n, &opts),
+                    KernelKind::HadaCore => fwht_hadacore_f32(&mut data, n, &opts),
+                }
+                data[0]
+            });
+            println!("{}", s.line());
+        }
+    }
+
     // -- bf16 (paper appendix C) ---------------------------------------
     println!("\n## bf16 path (fp32 accumulate + convert)");
     for n in [256usize, 4096] {

@@ -48,8 +48,10 @@ use crate::util::error as anyhow;
 pub struct TransformRequest {
     /// Client-assigned id, echoed in the response.
     pub id: u64,
-    /// Hadamard size (row length). Must be a power of two within
-    /// [`crate::MAX_HADAMARD_SIZE`].
+    /// Hadamard size (row length). Must be `B * 2^k` with
+    /// `B ∈ {1, 12, 20, 28, 40}` within [`crate::MAX_HADAMARD_SIZE`]
+    /// (see [`crate::hadamard::split_base`]); non-power-of-two sizes
+    /// always execute on the native backend.
     pub n: usize,
     /// Number of rows in `data` (`data.len() == rows * n`).
     pub rows: usize,

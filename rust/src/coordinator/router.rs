@@ -9,11 +9,16 @@
 //! * the **native backend** (in-process Rust kernel) otherwise — the
 //!   substrate path, also used by benchmarks to measure kernel cost
 //!   without PJRT dispatch overhead.
+//!
+//! Admission accepts the full `B * 2^k` size family
+//! (`B ∈ {1, 12, 20, 28, 40}`, see [`crate::hadamard::split_base`]);
+//! non-power-of-two sizes always route native because the AOT lowering
+//! only emits power-of-two modules.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::hadamard::{is_pow2, KernelKind};
+use crate::hadamard::{is_pow2, is_supported_size, KernelKind};
 use crate::runtime::Manifest;
 use crate::MAX_HADAMARD_SIZE;
 
@@ -88,6 +93,12 @@ pub struct Router {
 impl Router {
     /// Build a router over the manifest's fwht artifacts. Pass `None` to
     /// run native-only (no artifacts needed).
+    ///
+    /// Only power-of-two artifact sizes are bucketed: the AOT lowering
+    /// (and the PJRT stub's manifests) emit power-of-two modules only,
+    /// so non-power-of-two `B * 2^k` sizes always serve on the native
+    /// engine — a manifest entry claiming such a size is ignored rather
+    /// than routed to a module that cannot exist.
     pub fn new(manifest: Option<&Manifest>, cfg: RouterConfig) -> Router {
         let mut pjrt = HashMap::new();
         if let Some(m) = manifest {
@@ -99,6 +110,9 @@ impl Router {
                         .and_then(KernelKind::parse)
                         .unwrap_or(KernelKind::HadaCore);
                     let n = e.n.unwrap_or(0);
+                    if !is_pow2(n) {
+                        continue;
+                    }
                     pjrt.insert(
                         (kernel, n),
                         PjrtBucket {
@@ -113,9 +127,34 @@ impl Router {
     }
 
     /// Validate a request; `Err` carries the rejection reason.
+    ///
+    /// Accepted transform sizes are `B * 2^k` with
+    /// `B ∈ {1, 12, 20, 28, 40}` — the fast-hadamard-transform base
+    /// family, which admits the Llama hidden dims (14336 = 28·512,
+    /// 28672 = 28·1024) alongside the plain powers of two.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hadacore::coordinator::{Router, RouterConfig, TransformRequest};
+    ///
+    /// let router = Router::new(None, RouterConfig::default());
+    /// // 768 = 12 * 2^6 — a non-power-of-two size in the family
+    /// assert!(router.admit(&TransformRequest::new(1, 768, vec![0.0; 768])).is_ok());
+    /// // rejections name the accepted family, not just "not a power of 2"
+    /// let err = router
+    ///     .admit(&TransformRequest::new(2, 10, vec![0.0; 10]))
+    ///     .unwrap_err();
+    /// assert!(err.contains("12, 20, 28, 40"));
+    /// ```
     pub fn admit(&self, req: &TransformRequest) -> Result<(), String> {
-        if !is_pow2(req.n) {
-            return Err(format!("n={} is not a power of 2", req.n));
+        if !is_supported_size(req.n) {
+            return Err(format!(
+                "n={} is not a supported transform size; accepted sizes are \
+                 B * 2^k with B in {{1, 12, 20, 28, 40}} (e.g. 1024, \
+                 768 = 12*64, 5120 = 20*256, 14336 = 28*512, 40960 = 40*1024)",
+                req.n
+            ));
         }
         if req.n > MAX_HADAMARD_SIZE {
             return Err(format!(
@@ -216,7 +255,7 @@ mod tests {
         let bad_n = TransformRequest::new(2, 100, vec![0.0; 100]);
         assert!(r.admit(&bad_n).is_err());
 
-        let too_big = TransformRequest::new(3, 1 << 16, vec![0.0; 1 << 16]);
+        let too_big = TransformRequest::new(3, 1 << 17, vec![0.0; 1 << 17]);
         assert!(r.admit(&too_big).is_err());
 
         let mut mismatched = TransformRequest::new(4, 256, vec![0.0; 256]);
@@ -226,6 +265,58 @@ mod tests {
         let mut empty = TransformRequest::new(5, 256, vec![]);
         empty.rows = 0;
         assert!(r.admit(&empty).is_err());
+    }
+
+    #[test]
+    fn non_pow2_family_admission_and_rejection_message() {
+        let r = native_router();
+        // every base at a couple of 2^k, including the Llama dims
+        for n in [12usize, 24, 768, 5120, 14336, 28672, 40960] {
+            let req = TransformRequest::new(1, n, vec![0.0; n]);
+            assert!(r.admit(&req).is_ok(), "n={n} must be admitted");
+        }
+        // rejection enumerates the accepted family instead of the old
+        // bare "not a power of 2" string
+        for n in [10usize, 36, 44, 11008] {
+            let err = r
+                .admit(&TransformRequest::new(2, n, vec![0.0; n]))
+                .unwrap_err();
+            assert!(
+                err.contains("B * 2^k") && err.contains("12, 20, 28, 40"),
+                "n={n}: message must enumerate the size family, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_pow2_sizes_always_route_native() {
+        // a manifest that (incorrectly) claims a non-power-of-two
+        // artifact: the router must ignore it — the AOT lowering only
+        // emits power-of-two modules
+        let m = Manifest::parse(
+            r#"{"artifacts": [
+                {"name": "fwht_hadacore_768x64", "op": "fwht",
+                 "kernel": "hadacore", "file": "x.hlo.txt",
+                 "n": 768, "rows": 64,
+                 "inputs": [{"shape": [64, 768], "dtype": "float32"}],
+                 "outputs": [{"shape": [64, 768], "dtype": "float32"}]},
+                {"name": "fwht_hadacore_256x128", "op": "fwht",
+                 "kernel": "hadacore", "file": "x.hlo.txt",
+                 "n": 256, "rows": 128,
+                 "inputs": [{"shape": [128, 256], "dtype": "float32"}],
+                 "outputs": [{"shape": [128, 256], "dtype": "float32"}]}
+               ],
+               "weights": [], "model": {}}"#,
+        )
+        .unwrap();
+        let r = Router::new(Some(&m), RouterConfig::default());
+        assert_eq!(r.pjrt_bucket_count(), 1, "non-pow2 artifact must be dropped");
+        let req = TransformRequest::new(1, 768, vec![0.0; 768]);
+        assert!(r.admit(&req).is_ok());
+        assert!(matches!(r.route(&req).backend, Backend::Native));
+        // the pow2 sibling still routes to its module
+        let pow2 = TransformRequest::new(2, 256, vec![0.0; 256]);
+        assert!(matches!(r.route(&pow2).backend, Backend::Pjrt(_)));
     }
 
     #[test]

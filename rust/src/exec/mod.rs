@@ -301,9 +301,9 @@ impl ExecEngine {
     /// (row transforms are independent, and the HadaCore plan replays the
     /// exact pass structure of the unplanned path).
     ///
-    /// Panics if `data.len()` is not a `rows * n` multiple or `n` is not
-    /// a supported power of two — callers on the serving path have
-    /// already validated via the router.
+    /// Panics if `data.len()` is not a `rows * n` multiple or `n` is
+    /// outside the supported `B * 2^k` size family — callers on the
+    /// serving path have already validated via the router.
     pub fn run<E: ExecElement>(
         &self,
         kind: KernelKind,

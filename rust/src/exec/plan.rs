@@ -1,12 +1,16 @@
 //! Process-wide transform-plan cache.
 //!
-//! Building a [`HadaCorePlan`] rederives the `n = 2^m * 16^r`
-//! factorisation, the per-round stride table, and the §3.3 residual
-//! factor matrix. None of that depends on the data, only on the
-//! transform size — so the engine memoizes one [`ExecPlan`] per
-//! `(kernel, n)` for the lifetime of the process and hands out `Arc`
-//! clones. Per-batch dispatch therefore performs **no allocation and no
-//! factor reconstruction**; it is a hash lookup.
+//! Building a [`HadaCorePlan`] rederives the canonical `n = B * 2^k`
+//! base split, the `2^k = 2^m * 16^r` factorisation, the per-round
+//! stride table, and the §3.3 residual factor matrix. None of that
+//! depends on the data, only on the transform size — so the engine
+//! memoizes one [`ExecPlan`] per `(kernel, n)` for the lifetime of the
+//! process and hands out `Arc` clones. The key stays `(kernel, n)`
+//! across the whole size family: base-40 sizes hash under their own `n`
+//! even though their plan canonicalises to base 20 internally, so no
+//! caller needs to know about canonicalisation. Per-batch dispatch
+//! therefore performs **no allocation and no factor reconstruction**;
+//! it is a hash lookup.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -33,8 +37,9 @@ static CACHE: Lazy<Cache> = Lazy::new(|| Mutex::new(HashMap::new()));
 
 /// Get (building and caching on first use) the plan for `(kind, n)`.
 ///
-/// `n` must be a power of two within [`crate::MAX_HADAMARD_SIZE`]; the
-/// engine validates dimensions before calling this.
+/// `n` must be in the supported `B * 2^k` family within
+/// [`crate::MAX_HADAMARD_SIZE`]; the engine validates dimensions before
+/// calling this.
 pub fn plan_for(kind: KernelKind, n: usize) -> Arc<ExecPlan> {
     let mut cache = CACHE.lock().unwrap();
     Arc::clone(cache.entry((kind, n)).or_insert_with(|| {
@@ -70,6 +75,23 @@ mod tests {
 
         let hp = a.hadacore.as_ref().expect("hadacore plan present");
         assert_eq!(hp.n(), 1 << 14);
+    }
+
+    #[test]
+    fn non_pow2_sizes_cache_their_own_plans() {
+        let before = cached_plan_count();
+        let a = plan_for(KernelKind::HadaCore, 14336);
+        let b = plan_for(KernelKind::HadaCore, 14336);
+        assert!(Arc::ptr_eq(&a, &b));
+        let hp = a.hadacore.as_ref().expect("hadacore plan present");
+        assert_eq!(hp.n(), 14336);
+        assert_eq!(hp.base(), 28);
+        // 40960 canonicalises to base 20 internally but keys under its
+        // own n — callers never see the canonicalisation
+        let c = plan_for(KernelKind::HadaCore, 40960);
+        assert_eq!(c.hadacore.as_ref().unwrap().base(), 20);
+        assert_eq!(c.n, 40960);
+        assert_eq!(cached_plan_count(), before + 2);
     }
 
     #[test]

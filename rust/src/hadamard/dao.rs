@@ -16,6 +16,8 @@
 //! algorithmic structure and op count (`2 m n log2 n` flops) the paper
 //! attributes to it.
 
+use super::matrices::{hadamard_base, split_base};
+use super::mma::left_mul_base_strided;
 use super::{validate_dims, FwhtOptions};
 
 /// First three butterfly levels of one 8-element block, fully unrolled
@@ -61,37 +63,59 @@ fn butterfly_level(row: &mut [f32], h: usize) {
     }
 }
 
+/// Power-of-two Dao butterfly over one contiguous `m`-sized block.
+#[inline]
+fn dao_pow2_block(blk: &mut [f32]) {
+    let m = blk.len();
+    if m < 8 {
+        // sizes 2 and 4: plain levels (no 8-block stage available)
+        let mut h = 1;
+        while h < m {
+            let mut i = 0;
+            while i < m {
+                for j in i..i + h {
+                    let x = blk[j];
+                    let y = blk[j + h];
+                    blk[j] = x + y;
+                    blk[j + h] = x - y;
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+    } else {
+        // register stage: 3 levels per 8-element block
+        for b in blk.chunks_exact_mut(8) {
+            fwht8(b);
+        }
+        // exchange stages: levels h = 8 .. m/2
+        let mut h = 8;
+        while h < m {
+            butterfly_level(blk, h);
+            h *= 2;
+        }
+    }
+}
+
 /// In-place Dao-style FWHT of every `n`-sized row in `data`.
+///
+/// Non-power-of-two sizes `n = B * 2^k` run the leading base-matrix
+/// stage (the tiled [`left_mul_base_strided`] contraction with `H_B`)
+/// and then the butterfly hierarchy on each contiguous `2^k` block —
+/// the same stage split as the HadaCore kernel, so the baseline pays a
+/// comparable cost structure on the widened size family.
 pub fn fwht_dao_f32(data: &mut [f32], n: usize, opts: &FwhtOptions) {
     let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+    let (base, m) = split_base(n).expect("validated by validate_dims");
+    let hb = (base > 1).then(|| hadamard_base(base));
     for r in 0..rows {
         let row = &mut data[r * n..(r + 1) * n];
-        if n < 8 {
-            // sizes 2 and 4: plain levels (no 8-block stage available)
-            let mut h = 1;
-            while h < n {
-                let mut i = 0;
-                while i < n {
-                    for j in i..i + h {
-                        let x = row[j];
-                        let y = row[j + h];
-                        row[j] = x + y;
-                        row[j + h] = x - y;
-                    }
-                    i += 2 * h;
-                }
-                h *= 2;
-            }
-        } else {
-            // register stage: 3 levels per 8-element block
-            for blk in row.chunks_exact_mut(8) {
-                fwht8(blk);
-            }
-            // exchange stages: levels h = 8 .. n/2
-            let mut h = 8;
-            while h < n {
-                butterfly_level(row, h);
-                h *= 2;
+        if let Some(hb) = hb {
+            left_mul_base_strided(row, base, m, hb);
+        }
+        if m > 1 {
+            for blk in row.chunks_exact_mut(m) {
+                dao_pow2_block(blk);
             }
         }
         if opts.scale != 1.0 {
@@ -135,6 +159,20 @@ mod tests {
             fwht_dao_f32(&mut got, n, &FwhtOptions::normalized(n));
             fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
             assert_close(&got, &want, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn matches_scalar_non_pow2_sizes() {
+        let mut rng = Rng::new(9);
+        for n in [12usize, 24, 40, 48, 80, 112, 768, 5120, 14336] {
+            let rows = if n > 4096 { 2 } else { 3 };
+            let x = rng.normal_vec(rows * n);
+            let mut got = x.clone();
+            let mut want = x;
+            fwht_dao_f32(&mut got, n, &FwhtOptions::normalized(n));
+            fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
+            assert_close(&got, &want, 1e-3, 1e-3);
         }
     }
 

@@ -8,6 +8,14 @@
 //! butterfly levels — the paper's core trade: `16 m n ceil(log16 n)` flops
 //! on matrix hardware vs `2 m n log2 n` flops on scalar hardware.
 //!
+//! Non-power-of-two sizes `n = B * 2^k` (`B ∈ {12, 20, 28, 40}`, the
+//! fast-hadamard-transform base family) factor as `H_n = H_B ⊗ H_{2^k}`
+//! and add one **leading base-matrix stage** — a block-diagonal
+//! contraction of each row's `(B, 2^k)` view with the dense Paley-II
+//! base — ahead of the rounds above, which then treat the buffer as
+//! `rows * B` independent length-`2^k` rows. Derivation and supported-
+//! size table: `docs/KERNEL_MATH.md`.
+//!
 //! Memory layout of the rounds (per row of length `n`, fastest axis
 //! first): `[2^m | 16 | 16 | ... | 16]`. Round 0 transforms the fastest
 //! 16 contiguous elements (one `right_mul_h` over the whole buffer — the
@@ -26,9 +34,9 @@
 //! * [`ResidualMode::SmallFactor`]: contract the `2^m` axis directly with
 //!   the small `H_{2^m}` matrix (cheaper; what a CPU would actually do).
 
-use super::matrices::{block_diagonal, factor_16};
+use super::matrices::{block_diagonal, factor_16, hadamard_base, split_base};
 use super::mma::{
-    left_mul_h16_strided_fast, left_mul_small_strided_fast,
+    left_mul_base_strided, left_mul_h16_strided_fast, left_mul_small_strided_fast,
     right_mul_fused_chunk_fast, right_mul_h16_fast,
 };
 use super::{validate_dims, FwhtOptions};
@@ -61,6 +69,15 @@ pub fn fwht_hadacore_f32(data: &mut [f32], n: usize, opts: &FwhtOptions) {
 }
 
 /// In-place HadaCore FWHT with an explicit configuration.
+///
+/// Non-power-of-two sizes `n = B * 2^k` (`B ∈ {12, 20, 28}` after the
+/// canonical [`split_base`] factorisation) run a **leading base-matrix
+/// stage** — the §3.3 block-diagonal idea applied to the Kronecker
+/// factor `H_B`: one tiled contraction of the `(B, 2^k)` view of each
+/// row with the dense Paley-II base — and then the 16x16 rounds on each
+/// contiguous `2^k` block. Because the `B` blocks are contiguous, the
+/// power-of-two rounds see the buffer as `rows * B` independent rows of
+/// length `2^k`; no round machinery changes.
 pub fn fwht_hadacore_f32_cfg(
     data: &mut [f32],
     n: usize,
@@ -68,37 +85,52 @@ pub fn fwht_hadacore_f32_cfg(
     cfg: &HadaCoreConfig,
 ) {
     let rows = validate_dims(data.len(), n).expect("invalid dimensions");
-    let (m, r) = factor_16(n);
-
-    if n < 16 {
-        // base case: n in {2,4,8} — one small round per row
+    let (base, pow2) = split_base(n).expect("validated by validate_dims");
+    if base > 1 {
+        let hb = hadamard_base(base);
         for row in data.chunks_exact_mut(n) {
-            left_mul_small_strided_fast(row, n, 1);
+            left_mul_base_strided(row, base, pow2, hb);
         }
-        apply_scale(data, opts.scale);
+    }
+    pow2_rounds(data, rows * base, pow2, cfg.residual);
+    apply_scale(data, opts.scale);
+}
+
+/// The power-of-two round schedule over a `(rows, m)` view (`m = 2^k`):
+/// the original HadaCore kernel body, shared by the direct and planned
+/// paths' derivations. `m == 1` is the identity.
+fn pow2_rounds(data: &mut [f32], rows: usize, m: usize, residual: ResidualMode) {
+    if m == 1 {
         return;
     }
-
-    match cfg.residual {
+    if m < 16 {
+        // base case: m in {2,4,8} — one small round per row
+        for row in data.chunks_exact_mut(m) {
+            left_mul_small_strided_fast(row, m, 1);
+        }
+        return;
+    }
+    let (m2, r) = factor_16(m);
+    match residual {
         ResidualMode::BlockDiagonal => {
-            // Round 0: fastest 16 elements x (BD residual fused when m>0,
-            // plain H16 when m==0 — in that case round 0 IS the first
+            // Round 0: fastest 16 elements x (BD residual fused when m2>0,
+            // plain H16 when m2==0 — in that case round 0 IS the first
             // 16-round).
-            if m > 0 {
+            if m2 > 0 {
                 // fused: BD round + first 16-round = one contiguous
-                // butterfly over chunks of 16 * 2^m (see mma.rs §Perf)
-                let chunk = (1usize << m) * 16;
-                right_mul_fused_chunk_fast(data, chunk.min(n));
-                // remaining 16-rounds at inner = 2^m * 16^i for i in 1..r
+                // butterfly over chunks of 16 * 2^m2 (see mma.rs §Perf)
+                let chunk = (1usize << m2) * 16;
+                right_mul_fused_chunk_fast(data, chunk.min(m));
+                // remaining 16-rounds at inner = 2^m2 * 16^i for i in 1..r
                 for i in 1..r {
-                    let inner = (1usize << m) * 16usize.pow(i);
-                    strided_round(data, rows, n, inner);
+                    let inner = (1usize << m2) * 16usize.pow(i);
+                    strided_round(data, rows, m, inner);
                 }
             } else {
                 right_mul_h16_fast(data);
                 for i in 1..r {
                     let inner = 16usize.pow(i);
-                    strided_round(data, rows, n, inner);
+                    strided_round(data, rows, m, inner);
                 }
             }
         }
@@ -108,34 +140,57 @@ pub fn fwht_hadacore_f32_cfg(
             right_mul_h16_fast(data);
             for i in 1..r {
                 let inner = 16usize.pow(i);
-                strided_round(data, rows, n, inner);
+                strided_round(data, rows, m, inner);
             }
-            if m > 0 {
+            if m2 > 0 {
                 let inner = 16usize.pow(r);
-                for row in data.chunks_exact_mut(n) {
-                    left_mul_small_strided_fast(row, 1 << m, inner);
+                for row in data.chunks_exact_mut(m) {
+                    left_mul_small_strided_fast(row, 1 << m2, inner);
                 }
             }
         }
     }
-    apply_scale(data, opts.scale);
 }
 
 /// Precomputed round structure for one `(n, residual)` pair.
 ///
 /// Everything `fwht_hadacore_f32_cfg` rederives on every call — the
-/// `n = 2^m * 16^r` factorisation, the fused round-0 chunk, the inner
-/// stride of each 16-round, and the §3.3 block-diagonal residual table —
-/// computed once. [`crate::exec::plan`] memoizes one plan per transform
-/// size process-wide so the batch engine's dispatch allocates nothing
-/// and recomputes nothing per call.
+/// canonical `n = B * 2^k` base split, the `2^k = 2^m * 16^r`
+/// factorisation, the fused round-0 chunk, the inner stride of each
+/// 16-round, and the §3.3 block-diagonal residual table — computed once.
+/// [`crate::exec::plan`] memoizes one plan per transform size
+/// process-wide so the batch engine's dispatch allocates nothing and
+/// recomputes nothing per call.
+///
+/// # Examples
+///
+/// ```
+/// use hadacore::hadamard::hadacore::{HadaCoreConfig, HadaCorePlan};
+///
+/// // 14336 = 28 * 512: a Llama-3 8B FFN dim only the B·2^k family admits
+/// let plan = HadaCorePlan::new(14336, &HadaCoreConfig::default());
+/// assert_eq!(plan.n(), 14336);
+/// assert_eq!(plan.base(), 28);
+/// // base stage + fused round 0 (512 = 2·16²) + one strided 16-round
+/// assert_eq!(plan.passes(), 3);
+///
+/// // powers of two have no base stage, as before
+/// assert_eq!(HadaCorePlan::new(256, &HadaCoreConfig::default()).base(), 1);
+/// ```
 #[derive(Clone, Debug)]
 pub struct HadaCorePlan {
     n: usize,
+    /// Canonical base order (1, 12, 20, or 28; 40·2^k sizes split as
+    /// 20·2^(k+1) — see [`split_base`]).
+    base: usize,
+    /// The power-of-two factor `2^k = n / base`.
+    pow2: usize,
+    /// Residual exponent of the pow2 factor (`2^k = 2^m * 16^r`).
     m: u32,
     residual: ResidualMode,
-    /// BD path: fused round-0 butterfly chunk (`16 * 2^m`, clamped to n).
-    /// `None` when `m == 0` (round 0 is a plain H16 round).
+    /// BD path: fused round-0 butterfly chunk (`16 * 2^m`, clamped to
+    /// the pow2 factor). `None` when `m == 0` (round 0 is a plain H16
+    /// round).
     fused_chunk: Option<usize>,
     /// Inner strides of the strided 16-rounds, in execution order.
     strides: Vec<usize>,
@@ -149,18 +204,21 @@ pub struct HadaCorePlan {
 }
 
 impl HadaCorePlan {
-    /// Build the plan for transform size `n` (must be a power of two
-    /// within [`crate::MAX_HADAMARD_SIZE`]).
+    /// Build the plan for transform size `n` (must be in the supported
+    /// `B * 2^k` family within [`crate::MAX_HADAMARD_SIZE`]).
     pub fn new(n: usize, cfg: &HadaCoreConfig) -> HadaCorePlan {
-        let (m, r) = factor_16(n);
+        let (base, pow2) = split_base(n).unwrap_or_else(|| {
+            panic!("Hadamard size must be B * 2^k with B in {{1, 12, 20, 28, 40}}, got {n}")
+        });
+        let (m, r) = if pow2 > 1 { factor_16(pow2) } else { (0, 0) };
         let mut fused_chunk = None;
         let mut strides = Vec::new();
         let mut small_inner = None;
-        if n >= 16 {
+        if pow2 >= 16 {
             match cfg.residual {
                 ResidualMode::BlockDiagonal => {
                     if m > 0 {
-                        fused_chunk = Some(((1usize << m) * 16).min(n));
+                        fused_chunk = Some(((1usize << m) * 16).min(pow2));
                         for i in 1..r {
                             strides.push((1usize << m) * 16usize.pow(i));
                         }
@@ -182,6 +240,8 @@ impl HadaCorePlan {
         }
         HadaCorePlan {
             n,
+            base,
+            pow2,
             m,
             residual: cfg.residual,
             fused_chunk,
@@ -196,6 +256,11 @@ impl HadaCorePlan {
         self.n
     }
 
+    /// Canonical base order of the plan's size (1 for powers of two).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
     /// Residual strategy this plan was built for.
     pub fn residual(&self) -> ResidualMode {
         self.residual
@@ -204,12 +269,17 @@ impl HadaCorePlan {
     /// Number of memory passes over the buffer the planned execution
     /// makes. One less than the paper's `ceil(log16 n)` logical round
     /// count when the §Perf fused round-0 applies (the BD residual and
-    /// the first 16-round share one pass).
+    /// the first 16-round share one pass); non-power-of-two sizes add
+    /// one leading base-matrix pass.
     pub fn passes(&self) -> usize {
-        if self.n < 16 {
-            return 1;
+        let base_pass = usize::from(self.base > 1);
+        if self.pow2 == 1 {
+            return base_pass.max(1);
         }
-        1 + self.strides.len() + usize::from(self.small_inner.is_some())
+        if self.pow2 < 16 {
+            return base_pass + 1;
+        }
+        base_pass + 1 + self.strides.len() + usize::from(self.small_inner.is_some())
     }
 
     /// The cached §3.3 residual factor table (`I kron H_{2^m}`).
@@ -231,9 +301,21 @@ pub fn fwht_hadacore_f32_planned(
 ) {
     let n = plan.n;
     let rows = validate_dims(data.len(), n).expect("invalid dimensions");
-    if n < 16 {
+    if plan.base > 1 {
+        let hb = hadamard_base(plan.base);
         for row in data.chunks_exact_mut(n) {
-            left_mul_small_strided_fast(row, n, 1);
+            left_mul_base_strided(row, plan.base, plan.pow2, hb);
+        }
+    }
+    let m = plan.pow2;
+    let sub_rows = rows * plan.base;
+    if m == 1 {
+        apply_scale(data, opts.scale);
+        return;
+    }
+    if m < 16 {
+        for row in data.chunks_exact_mut(m) {
+            left_mul_small_strided_fast(row, m, 1);
         }
         apply_scale(data, opts.scale);
         return;
@@ -243,10 +325,10 @@ pub fn fwht_hadacore_f32_planned(
         None => right_mul_h16_fast(data),
     }
     for &inner in &plan.strides {
-        strided_round(data, rows, n, inner);
+        strided_round(data, sub_rows, m, inner);
     }
     if let Some(inner) = plan.small_inner {
-        for row in data.chunks_exact_mut(n) {
+        for row in data.chunks_exact_mut(m) {
             left_mul_small_strided_fast(row, 1 << plan.m, inner);
         }
     }
@@ -282,18 +364,38 @@ fn apply_scale(data: &mut [f32], scale: f32) {
 }
 
 /// FLOP count of the HadaCore algorithm for an `(rows, n)` transform —
-/// `16 * rows * n * ceil(log16 n)` (paper §3.4). Used by the GPU model
-/// and the roofline report.
+/// `16 * rows * n * ceil(log16 2^k)` for the matrix-unit rounds (paper
+/// §3.4), plus `2 * rows * n * B` for the leading base-matrix stage when
+/// `n = B * 2^k` with `B > 1` (B MACs per element). Used by the GPU
+/// model and the roofline report.
 pub fn hadacore_flops(rows: usize, n: usize) -> u64 {
-    let (m, r) = factor_16(n);
-    let rounds = r + u32::from(m > 0);
-    // each round: (rows*n/16) 16x16x16-vector products = rows*n*16 MACs = 2*16*rows*n flops
-    2 * 16 * rows as u64 * n as u64 * rounds as u64 / 2
+    let (base, pow2) = split_base(n).expect("unsupported Hadamard size");
+    let (m, r) = if pow2 > 1 { factor_16(pow2) } else { (0, 0) };
+    let rounds = (r + u32::from(m > 0)) as u64;
+    // each round: (rows*n/16) 16x16x16-vector products = rows*n*16 MACs
+    let mma = 16 * rows as u64 * n as u64 * rounds;
+    let base_stage = if base > 1 {
+        2 * rows as u64 * n as u64 * base as u64
+    } else {
+        0
+    };
+    mma + base_stage
 }
 
-/// FLOP count of the butterfly algorithm — `2 * rows * n * log2 n`.
+/// FLOP count of the butterfly algorithm — `2 * rows * n * log2 2^k`,
+/// plus the same `2 * rows * n * B` base-stage term as
+/// [`hadacore_flops`] for non-power-of-two sizes (the butterfly needs
+/// the dense base contraction too).
 pub fn butterfly_flops(rows: usize, n: usize) -> u64 {
-    2 * rows as u64 * n as u64 * n.trailing_zeros() as u64
+    let (base, pow2) = split_base(n).expect("unsupported Hadamard size");
+    let levels = pow2.trailing_zeros() as u64;
+    let butterfly = 2 * rows as u64 * n as u64 * levels;
+    let base_stage = if base > 1 {
+        2 * rows as u64 * n as u64 * base as u64
+    } else {
+        0
+    };
+    butterfly + base_stage
 }
 
 #[cfg(test)]
@@ -315,6 +417,42 @@ mod tests {
             fwht_hadacore_f32(&mut got, n, &FwhtOptions::normalized(n));
             fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
             assert_close(&got, &want, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn matches_scalar_non_pow2_sizes() {
+        let mut rng = Rng::new(7);
+        // every base x several 2^k, including the Llama-3 FFN dim
+        for n in [12usize, 20, 28, 40, 24, 48, 96, 160, 224, 320, 768, 5120, 14336] {
+            let rows = if n > 4096 { 2 } else { 3 };
+            let x = rng.normal_vec(rows * n);
+            let mut got = x.clone();
+            let mut want = x.clone();
+            fwht_hadacore_f32(&mut got, n, &FwhtOptions::normalized(n));
+            fwht_scalar_f32(&mut want, n, &FwhtOptions::normalized(n));
+            assert_close(&got, &want, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn planned_path_is_bit_identical_at_non_pow2_sizes() {
+        let mut rng = Rng::new(8);
+        for cfg in [
+            HadaCoreConfig { residual: ResidualMode::BlockDiagonal },
+            HadaCoreConfig { residual: ResidualMode::SmallFactor },
+        ] {
+            for n in [12usize, 24, 40, 48, 160, 768, 5120, 14336, 40960] {
+                let rows = if n > 4096 { 2 } else { 3 };
+                let x = rng.normal_vec(rows * n);
+                let mut direct = x.clone();
+                let mut planned = x;
+                let opts = FwhtOptions::normalized(n);
+                fwht_hadacore_f32_cfg(&mut direct, n, &opts, &cfg);
+                let plan = HadaCorePlan::new(n, &cfg);
+                fwht_hadacore_f32_planned(&mut planned, &plan, &opts);
+                assert_eq!(direct, planned, "n={n} cfg={cfg:?}");
+            }
         }
     }
 
@@ -460,6 +598,27 @@ mod tests {
             &HadaCoreConfig { residual: ResidualMode::SmallFactor },
         );
         assert_eq!(ps.passes(), 3);
+
+        // 14336 = 28 * 512: leading base pass + the 512 schedule
+        let p = HadaCorePlan::new(14336, &cfg);
+        assert_eq!(p.base(), 28);
+        assert_eq!(p.passes(), 3);
+        // 40960 = 40 * 1024 canonicalises to 20 * 2048
+        let p = HadaCorePlan::new(40960, &cfg);
+        assert_eq!(p.base(), 20);
+        // 2048 = 8 * 16^2: base pass + fused round 0 + one strided round
+        assert_eq!(p.passes(), 3);
+        // base-only size: one pass
+        assert_eq!(HadaCorePlan::new(12, &cfg).passes(), 1);
+        // base + small pow2 (24 = 12 * 2): base pass + small round
+        assert_eq!(HadaCorePlan::new(24, &cfg).passes(), 2);
+    }
+
+    #[test]
+    fn flop_formulas_cover_the_base_stage() {
+        // 768 = 12 * 64: two mma rounds on the 64-part + the base stage
+        assert_eq!(hadacore_flops(1, 768), 16 * 768 * 2 + 2 * 768 * 12);
+        assert_eq!(butterfly_flops(1, 768), 2 * 768 * 6 + 2 * 768 * 12);
     }
 
     #[test]

@@ -1,14 +1,77 @@
 //! Walsh-Hadamard matrix construction and factorisation helpers.
 //!
-//! Sylvester/Walsh-Hadamard matrices in natural (Hadamard) ordering:
-//! `H[i][j] = (-1)^popcount(i & j)` — the closed form of the recursive
-//! construction `H_{2n} = [[H_n, H_n], [H_n, -H_n]]`. `H16` is the constant
-//! factor every HadaCore round multiplies by (the CUDA kernel keeps it in
-//! registers; here it is a compile-time table).
+//! Two constructions cover the full supported size family `n = B * 2^k`
+//! (the math derivation lives in `docs/KERNEL_MATH.md`):
+//!
+//! * **Sylvester** (powers of two), in natural (Hadamard) ordering:
+//!   `H[i][j] = (-1)^popcount(i & j)` — the closed form of the recursive
+//!   construction `H_{2n} = [[H_n, H_n], [H_n, -H_n]]`. `H16` is the
+//!   constant factor every HadaCore round multiplies by (the CUDA kernel
+//!   keeps it in registers; here it is a compile-time table).
+//! * **Paley II** (the non-power-of-two bases `H12`/`H20`/`H28`, the
+//!   same base orders the `fast-hadamard-transform` library ships): a
+//!   symmetric conference matrix over `GF(q)`, `q ∈ {5, 9, 13}`,
+//!   expanded by 2x2 blocks into a **symmetric** Hadamard matrix of
+//!   order `2(q+1)`; `H40` is the Sylvester doubling `H20 ⊗ H2`.
+//!   Symmetry matters: the crate-wide convention `x <- x @ H_n` relies
+//!   on left and right transforms coinciding, and the normalized
+//!   transform being an involution (`H·H = n·I`) needs `H = Hᵀ`. Every
+//!   base table is orthogonality- and symmetry-verified when it is
+//!   built.
+//!
+//! The full transform matrix for `n = B * 2^k` is the Kronecker product
+//! `H_n = H_B ⊗ H_{2^k}` with the base axis slow (index `i = b*2^k + t`),
+//! so a row factors into `B` contiguous `2^k`-blocks.
 
 /// True iff `n` is a positive power of two.
 pub fn is_pow2(n: usize) -> bool {
     n > 0 && (n & (n - 1)) == 0
+}
+
+/// Base orders accepted by the `B * 2^k` size family, including the
+/// redundant `40` (see [`split_base`] for why it canonicalises away).
+pub const SUPPORTED_BASES: [usize; 5] = [1, 12, 20, 28, 40];
+
+/// True iff `n` is in the supported transform-size family `B * 2^k`,
+/// `B ∈ {1, 12, 20, 28, 40}` (equivalently: [`split_base`] succeeds).
+pub fn is_supported_size(n: usize) -> bool {
+    split_base(n).is_some()
+}
+
+/// Canonical factorisation `n = B * 2^k`: returns `(B, 2^k)` with
+/// `B ∈ {1, 12, 20, 28}`, or `None` when `n` is outside the family.
+///
+/// The base is determined by the odd part of `n` (3 → 12, 5 → 20,
+/// 7 → 28), which must come with at least two factors of two — Hadamard
+/// matrices only exist at orders 1, 2, and multiples of 4. Base-40 sizes
+/// are in the family but canonicalise to base 20: `40 * 2^k = 20 *
+/// 2^(k+1)`, and the base-20 split costs fewer base-stage flops
+/// (`B^2 * (n/B)` = `20n` vs `40n` MACs per row).
+///
+/// # Examples
+///
+/// ```
+/// use hadacore::hadamard::matrices::split_base;
+///
+/// assert_eq!(split_base(1024), Some((1, 1024)));   // plain power of two
+/// assert_eq!(split_base(768), Some((12, 64)));     // 12 * 2^6
+/// assert_eq!(split_base(14336), Some((28, 512)));  // Llama-3 8B FFN dim
+/// assert_eq!(split_base(40960), Some((20, 2048))); // 40*2^10 = 20*2^11
+/// assert_eq!(split_base(10), None);                // no Hadamard order 10
+/// assert_eq!(split_base(48), Some((12, 4)));
+/// ```
+pub fn split_base(n: usize) -> Option<(usize, usize)> {
+    if n == 0 {
+        return None;
+    }
+    let tz = n.trailing_zeros();
+    match (n >> tz, tz) {
+        (1, _) => Some((1, n)),
+        (3, 2..) => Some((12, n / 12)),
+        (5, 2..) => Some((20, n / 20)),
+        (7, 2..) => Some((28, n / 28)),
+        _ => None,
+    }
 }
 
 /// Factor `n = 2^m * 16^r` with `0 <= m < 4` (paper §3.3).
@@ -69,6 +132,231 @@ pub fn block_diagonal(m: u32) -> [f32; 256] {
         }
     }
     bd
+}
+
+// ---------------------------------------------------------------------
+// Non-power-of-two bases: Paley construction II.
+//
+// For q ≡ 1 (mod 4) a prime power, the Jacobsthal matrix Q over GF(q)
+// (Q[i][j] = χ(e_i − e_j), χ the quadratic character) is symmetric with
+// zero diagonal, zero row sums, and QQᵀ = qI − J. Bordering it with a
+// row/column of ones gives a symmetric conference matrix C of order
+// q + 1 (CCᵀ = qI, zero diagonal), and substituting 2x2 blocks
+// (H = C ⊗ [[1,1],[1,−1]] + I ⊗ [[1,−1],[−1,−1]]) yields a *symmetric*
+// Hadamard matrix of order 2(q+1): the cross terms cancel because C is
+// symmetric, leaving HHᵀ = qI⊗2I + I⊗2I = 2(q+1)·I.
+//
+// q = 5, 9, 13 produce H12, H20, H28. GF(9) is realised as
+// GF(3)[t]/(t² + 1) (t² + 1 has no roots mod 3, hence irreducible); its
+// elements are encoded as the index a + 3b for a + b·t. Order 40 would
+// need q = 19 ≡ 3 (mod 4) — outside Paley II's reach (its Jacobsthal
+// matrix is skew there, breaking symmetry) — so H40 is the Sylvester
+// doubling H20 ⊗ H2 instead, which stays symmetric and makes the
+// base-40 canonicalisation exact: H40 ⊗ H_{2^k} = H20 ⊗ H_{2^(k+1)}.
+
+/// Subtraction in GF(q) for q ∈ {5, 9, 13} under the index encoding
+/// above (prime q: the index is the value itself).
+fn gf_sub(q: usize, a: usize, b: usize) -> usize {
+    if q == 9 {
+        let (a0, a1) = (a % 3, a / 3);
+        let (b0, b1) = (b % 3, b / 3);
+        (a0 + 3 - b0) % 3 + 3 * ((a1 + 3 - b1) % 3)
+    } else {
+        (a + q - b) % q
+    }
+}
+
+/// Multiplication in GF(q) for q ∈ {5, 9, 13}.
+fn gf_mul(q: usize, a: usize, b: usize) -> usize {
+    if q == 9 {
+        let (a0, a1) = (a % 3, a / 3);
+        let (b0, b1) = (b % 3, b / 3);
+        // (a0 + a1 t)(b0 + b1 t) with t² = −1 ≡ 2 (mod 3)
+        (a0 * b0 + 2 * a1 * b1) % 3 + 3 * ((a0 * b1 + a1 * b0) % 3)
+    } else {
+        (a * b) % q
+    }
+}
+
+/// Build-time verification shared by every base-table constructor:
+/// entries ±1, symmetry, and row orthogonality (`H·Hᵀ = n·I`). The
+/// checks are exact — every dot product is a small integer sum.
+fn verify_symmetric_hadamard(h: &[f32], n: usize) {
+    assert_eq!(h.len(), n * n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = h[i * n + j];
+            assert!(v == 1.0 || v == -1.0, "H_{n}[{i}][{j}] = {v} not ±1");
+            assert_eq!(v, h[j * n + i], "H_{n} must be symmetric at ({i},{j})");
+            let dot: f32 = (0..n).map(|k| h[i * n + k] * h[j * n + k]).sum();
+            let want = if i == j { n as f32 } else { 0.0 };
+            assert_eq!(dot, want, "H_{n} rows {i},{j} not orthogonal");
+        }
+    }
+}
+
+/// Symmetric Hadamard matrix of order `2(q+1)` via Paley construction
+/// II, with [`verify_symmetric_hadamard`] run before the table is
+/// released.
+fn paley2_hadamard(q: usize) -> Vec<f32> {
+    // the construction is only symmetric for q ≡ 1 (mod 4): that is
+    // what makes χ(−1) = +1 and the Jacobsthal matrix symmetric
+    assert_eq!(q % 4, 1, "Paley II needs q ≡ 1 (mod 4), got {q}");
+    // quadratic character: χ(0) = 0, χ(square) = +1, else −1
+    let squares: std::collections::HashSet<usize> =
+        (1..q).map(|x| gf_mul(q, x, x)).collect();
+    let chi = |z: usize| -> i32 {
+        if z == 0 {
+            0
+        } else if squares.contains(&z) {
+            1
+        } else {
+            -1
+        }
+    };
+
+    // symmetric conference matrix C of order q+1: ones border + Jacobsthal
+    let n0 = q + 1;
+    let mut c = vec![0i32; n0 * n0];
+    for j in 1..n0 {
+        c[j] = 1;
+        c[j * n0] = 1;
+    }
+    for i in 0..q {
+        for j in 0..q {
+            c[(i + 1) * n0 + (j + 1)] = chi(gf_sub(q, i, j));
+        }
+    }
+
+    // 2x2-block substitution: H = C ⊗ M + I ⊗ N
+    const M: [i32; 4] = [1, 1, 1, -1];
+    const N: [i32; 4] = [1, -1, -1, -1];
+    let n = 2 * n0;
+    let mut h = vec![0.0f32; n * n];
+    for bi in 0..n0 {
+        for bj in 0..n0 {
+            let cij = c[bi * n0 + bj];
+            for u in 0..2 {
+                for v in 0..2 {
+                    let diag = if bi == bj { N[u * 2 + v] } else { 0 };
+                    h[(2 * bi + u) * n + (2 * bj + v)] =
+                        (cij * M[u * 2 + v] + diag) as f32;
+                }
+            }
+        }
+    }
+
+    verify_symmetric_hadamard(&h, n);
+    h
+}
+
+/// The order-12 symmetric Hadamard base (Paley II over GF(5)).
+pub static H12: crate::util::lazy::Lazy<Vec<f32>> =
+    crate::util::lazy::Lazy::new(|| paley2_hadamard(5));
+
+/// The order-20 symmetric Hadamard base (Paley II over GF(9)).
+pub static H20: crate::util::lazy::Lazy<Vec<f32>> =
+    crate::util::lazy::Lazy::new(|| paley2_hadamard(9));
+
+/// The order-28 symmetric Hadamard base (Paley II over GF(13)).
+pub static H28: crate::util::lazy::Lazy<Vec<f32>> =
+    crate::util::lazy::Lazy::new(|| paley2_hadamard(13));
+
+/// The order-40 symmetric Hadamard base: the Sylvester doubling
+/// `H20 ⊗ H2` (Paley II cannot reach order 40 — it would need
+/// `q = 19 ≡ 3 mod 4`), re-verified for orthogonality/symmetry on
+/// build.
+///
+/// Provided as a construction, but the transform path never multiplies
+/// by it: under this definition `H40 ⊗ H_{2^k} = H20 ⊗ H_{2^(k+1)}`
+/// *exactly*, so `40 * 2^k` sizes canonicalise to the cheaper
+/// `20 * 2^(k+1)` split — see [`split_base`].
+pub static H40: crate::util::lazy::Lazy<Vec<f32>> = crate::util::lazy::Lazy::new(|| {
+    // H40[2i+u][2j+v] = H20[i][j] * H2[u][v] (pow2 axis fast)
+    let h20 = H20.force();
+    let n = 40;
+    let mut h = vec![0.0f32; n * n];
+    for i in 0..20 {
+        for j in 0..20 {
+            let v = h20[i * 20 + j];
+            h[(2 * i) * n + 2 * j] = v;
+            h[(2 * i) * n + 2 * j + 1] = v;
+            h[(2 * i + 1) * n + 2 * j] = v;
+            h[(2 * i + 1) * n + 2 * j + 1] = -v;
+        }
+    }
+    verify_symmetric_hadamard(&h, n);
+    h
+});
+
+/// Dense `b x b` row-major table for base order `b ∈ {12, 20, 28, 40}`.
+///
+/// Panics on any other order (base 1 has no table — the pow2 factor is
+/// handled by the Sylvester machinery).
+///
+/// # Examples
+///
+/// ```
+/// use hadacore::hadamard::matrices::hadamard_base;
+///
+/// let h12 = hadamard_base(12);
+/// // symmetric, ±1, orthogonal rows: H12 · H12ᵀ = 12·I
+/// let dot: f32 = (0..12).map(|k| h12[k] * h12[12 + k]).sum();
+/// assert_eq!(dot, 0.0);
+/// let norm: f32 = (0..12).map(|k| h12[k] * h12[k]).sum();
+/// assert_eq!(norm, 12.0);
+/// ```
+pub fn hadamard_base(b: usize) -> &'static [f32] {
+    match b {
+        12 => H12.force().as_slice(),
+        20 => H20.force().as_slice(),
+        28 => H28.force().as_slice(),
+        40 => H40.force().as_slice(),
+        _ => panic!("no Hadamard base matrix of order {b} (supported: 12, 20, 28, 40)"),
+    }
+}
+
+/// Entry `H_n[i][j]` for any supported size `n = B * 2^k`: the Kronecker
+/// factorisation `H_B[i/2^k][j/2^k] * H_{2^k}[i%2^k][j%2^k]` with the
+/// base axis slow. Reduces to [`hadamard_entry`] for powers of two.
+///
+/// Panics when `n` is outside the family.
+pub fn hadamard_entry_n(n: usize, i: usize, j: usize) -> f32 {
+    let (base, m) = split_base(n)
+        .unwrap_or_else(|| panic!("unsupported Hadamard size {n}"));
+    if base == 1 {
+        return hadamard_entry(i, j);
+    }
+    hadamard_base(base)[(i / m) * base + (j / m)] * hadamard_entry(i % m, j % m)
+}
+
+/// Dense reference `y = x @ H_n` for any supported size, computing
+/// entries on the fly (no `n x n` materialisation — at `n = 14336` the
+/// dense matrix would be 822 MB) and accumulating in f64 with one final
+/// rounding. Test helper — O(n^2) per row.
+pub fn matvec_hadamard_n(x: &[f32], n: usize, y: &mut [f32]) {
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), n);
+    let (base, m) = split_base(n)
+        .unwrap_or_else(|| panic!("unsupported Hadamard size {n}"));
+    let hb = (base > 1).then(|| hadamard_base(base));
+    for (j, out) in y.iter_mut().enumerate() {
+        let (bj, tj) = (j / m, j % m);
+        let mut acc = 0.0f64;
+        // iterate block-wise so the O(n^2) hot loop carries no divisions
+        for bk in 0..base {
+            let w = match hb {
+                Some(hb) => hb[bk * base + bj],
+                None => 1.0,
+            };
+            for (tk, &xv) in x[bk * m..(bk + 1) * m].iter().enumerate() {
+                // w and the entry are ±1: the product is an exact sign
+                // flip, so f64 accumulation rounds exactly once
+                acc += (w * xv * hadamard_entry(tk, tj)) as f64;
+            }
+        }
+        *out = acc as f32;
+    }
 }
 
 /// Multiply a dense row-vector by a dense matrix: `y = x @ M` (n x n).
@@ -174,6 +462,77 @@ mod tests {
                 assert_eq!(id[i * 16 + j], if i == j { 1.0 } else { 0.0 });
             }
         }
+    }
+
+    #[test]
+    fn split_base_canonical_factorisations() {
+        assert_eq!(split_base(1), Some((1, 1)));
+        assert_eq!(split_base(2), Some((1, 2)));
+        assert_eq!(split_base(256), Some((1, 256)));
+        assert_eq!(split_base(12), Some((12, 1)));
+        assert_eq!(split_base(20), Some((20, 1)));
+        assert_eq!(split_base(28), Some((28, 1)));
+        assert_eq!(split_base(40), Some((20, 2)), "40 = 20 * 2 canonically");
+        assert_eq!(split_base(768), Some((12, 64)));
+        assert_eq!(split_base(5120), Some((20, 256)));
+        assert_eq!(split_base(14336), Some((28, 512)));
+        assert_eq!(split_base(28672), Some((28, 1024)));
+        assert_eq!(split_base(40960), Some((20, 2048)));
+        // outside the family: odd parts other than {1,3,5,7}, or fewer
+        // than two factors of two alongside an odd part
+        for n in [0usize, 3, 5, 6, 7, 10, 14, 18, 36, 44, 63, 100] {
+            assert_eq!(split_base(n), None, "n={n}");
+        }
+        assert!(is_supported_size(14336));
+        assert!(!is_supported_size(11008)); // odd part 43: not a base
+    }
+
+    #[test]
+    fn base_tables_build_and_self_verify() {
+        // forcing each table runs verify_symmetric_hadamard inside the
+        // Lazy initializer (the full ±1/symmetry/orthogonality loop
+        // lives there and in the property suite — not duplicated here)
+        for b in [12usize, 20, 28, 40] {
+            assert_eq!(hadamard_base(b).len(), b * b);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no Hadamard base matrix")]
+    fn hadamard_base_rejects_unknown_orders() {
+        hadamard_base(16);
+    }
+
+    #[test]
+    fn entry_n_matches_kronecker_structure() {
+        // H_24 = H_12 ⊗ H_2, base axis slow
+        let n = 24;
+        let h12 = hadamard_base(12);
+        for i in 0..n {
+            for j in 0..n {
+                let want = h12[(i / 2) * 12 + (j / 2)] * hadamard_entry(i % 2, j % 2);
+                assert_eq!(hadamard_entry_n(n, i, j), want);
+            }
+        }
+        // pow2 reduces to the Sylvester closed form
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(hadamard_entry_n(16, i, j), hadamard_entry(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_hadamard_n_matches_dense_pow2() {
+        let n = 32;
+        let h = hadamard_dense(n);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x = rng.normal_vec(n);
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        matvec_hadamard_n(&x, n, &mut a);
+        matvec_right(&x, &h, n, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -148,6 +148,48 @@ pub fn left_mul_small_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32
     }
 }
 
+/// Largest base order [`left_mul_base_strided`] supports (sizes its
+/// stack tile).
+pub const MAX_BASE: usize = 40;
+
+/// In-place `B <- H_base @ B` for a `(size, inner)` block whose rows are
+/// `inner` elements apart (`b.len() == size * inner`), with `m` an
+/// arbitrary dense `size x size` factor and `size <= MAX_BASE`.
+///
+/// This is the leading base-matrix stage of the non-power-of-two
+/// transform (`n = B * 2^k`, `inner = 2^k`): the contraction runs over
+/// the `B` strided blocks while the arithmetic vectorises over the
+/// contiguous `inner` axis — the same gather-compute-scatter tiling as
+/// [`left_mul_small_strided`], but with a stack tile sized for the
+/// largest base so the per-row hot path performs no heap allocation.
+pub fn left_mul_base_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    debug_assert_eq!(b.len(), size * inner);
+    debug_assert_eq!(m.len(), size * size);
+    assert!(size <= MAX_BASE, "base order {size} exceeds {MAX_BASE}");
+    const TILE: usize = 64;
+    let mut tmp = [0.0f32; MAX_BASE * TILE];
+    let mut col = 0;
+    while col < inner {
+        let w = TILE.min(inner - col);
+        for i in 0..size {
+            let out = &mut tmp[i * w..(i + 1) * w];
+            out.iter_mut().for_each(|v| *v = 0.0);
+            for k in 0..size {
+                let mik = m[i * size + k];
+                let src = &b[k * inner + col..k * inner + col + w];
+                for (o, s) in out.iter_mut().zip(src.iter()) {
+                    *o += mik * s;
+                }
+            }
+        }
+        for i in 0..size {
+            b[i * inner + col..i * inner + col + w]
+                .copy_from_slice(&tmp[i * w..(i + 1) * w]);
+        }
+        col += w;
+    }
+}
+
 // ---------------------------------------------------------------------
 // Fast constant-factor paths (§Perf).
 //
@@ -460,6 +502,46 @@ mod tests {
                 for (a, b) in fast.iter().zip(generic.iter()) {
                     assert!((a - b).abs() < 1e-3);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn left_mul_base_strided_matches_naive() {
+        use crate::hadamard::matrices::hadamard_base;
+        let mut rng = Rng::new(25);
+        // the Paley-II bases plus a random dense factor (generality)
+        for size in [12usize, 20, 28, 40] {
+            let h = hadamard_base(size);
+            for inner in [1usize, 5, 64, 100] {
+                let mut b = rng.normal_vec(size * inner);
+                let orig = b.clone();
+                left_mul_base_strided(&mut b, size, inner, h);
+                for i in 0..size {
+                    for c in 0..inner {
+                        let want: f32 = (0..size)
+                            .map(|k| h[i * size + k] * orig[k * inner + c])
+                            .sum();
+                        assert!(
+                            (b[i * inner + c] - want).abs() < 1e-3,
+                            "size={size} inner={inner} i={i} c={c}"
+                        );
+                    }
+                }
+            }
+        }
+        let size = 12;
+        let h: Vec<f32> = rng.normal_vec(size * size);
+        let inner = 37;
+        let mut b = rng.normal_vec(size * inner);
+        let orig = b.clone();
+        left_mul_base_strided(&mut b, size, inner, &h);
+        for i in 0..size {
+            for c in 0..inner {
+                let want: f32 = (0..size)
+                    .map(|k| h[i * size + k] * orig[k * inner + c])
+                    .sum();
+                assert!((b[i * inner + c] - want).abs() < 1e-3);
             }
         }
     }

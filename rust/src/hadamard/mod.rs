@@ -15,13 +15,23 @@
 //!   block-diagonal residual factor), executed by the [`mma`] microkernel —
 //!   the CPU stand-in for a Tensor Core / MXU tile op.
 //!
-//! Plus support: [`matrices`] (Sylvester construction & factor matrices),
-//! [`mma`] (the 16x16 tile microkernel), and dtype-generic wrappers over
-//! f32 / f16 / bf16 storage (paper Appendix C).
+//! Plus support: [`matrices`] (Sylvester construction, the Paley-II
+//! non-power-of-two bases, & factor matrices), [`mma`] (the 16x16 tile
+//! microkernel), and dtype-generic wrappers over f32 / f16 / bf16
+//! storage (paper Appendix C).
 //!
 //! All transforms operate row-wise on a `rows x n` row-major buffer and
 //! compute `x <- (x @ H_n) * scale` per row (the right-Hadamard-transform
 //! convention of the fast-hadamard-transform library; `H_n` symmetric).
+//!
+//! Supported sizes are `n = B * 2^k` with base `B ∈ {1, 12, 20, 28, 40}`
+//! — the same family the fast-hadamard-transform library ships, covering
+//! the Llama-family hidden dims (14336 = 28·512, 28672 = 28·1024,
+//! 40960 = 40·1024) that a plain power-of-two kernel excludes. For
+//! `B > 1` the transform factors as `H_n = H_B ⊗ H_{2^k}` (base axis
+//! slow): a leading block-diagonal base-matrix stage followed by the
+//! power-of-two machinery on each contiguous `2^k` block. The full
+//! derivation is in `docs/KERNEL_MATH.md`.
 
 pub mod dao;
 pub mod hadacore;
@@ -33,7 +43,10 @@ use crate::util::f16::Element;
 
 pub use dao::fwht_dao_f32;
 pub use hadacore::fwht_hadacore_f32;
-pub use matrices::{block_diagonal, factor_16, hadamard_dense, is_pow2, H16};
+pub use matrices::{
+    block_diagonal, factor_16, hadamard_base, hadamard_dense, is_pow2,
+    is_supported_size, split_base, H16,
+};
 pub use scalar::fwht_scalar_f32;
 
 /// Transform options shared by all kernels.
@@ -163,10 +176,13 @@ pub fn fwht_f32_out_of_place(
     dst
 }
 
-/// Validate a (len, n) pair: n power of two within bounds, len divisible.
+/// Validate a (len, n) pair: n in the supported `B * 2^k` family within
+/// bounds, len divisible. Returns the row count `len / n`.
 pub fn validate_dims(len: usize, n: usize) -> Result<usize, String> {
-    if !is_pow2(n) {
-        return Err(format!("Hadamard size must be a power of 2, got {n}"));
+    if !is_supported_size(n) {
+        return Err(format!(
+            "Hadamard size must be B * 2^k with B in {{1, 12, 20, 28, 40}}, got {n}"
+        ));
     }
     if n > crate::MAX_HADAMARD_SIZE {
         return Err(format!(
@@ -203,9 +219,19 @@ mod tests {
     #[test]
     fn validate_dims_checks() {
         assert_eq!(validate_dims(1024, 256), Ok(4));
+        // 48 = 12 * 4 is in the family; 100 is not a multiple of it
         assert!(validate_dims(100, 48).is_err());
+        assert_eq!(validate_dims(96, 48), Ok(2));
         assert!(validate_dims(100, 256).is_err());
-        assert!(validate_dims(1 << 20, 1 << 16).is_err());
+        assert!(validate_dims(1 << 21, 1 << 17).is_err());
+        // the non-power-of-two family end to end
+        assert_eq!(validate_dims(2 * 14336, 14336), Ok(2));
+        assert_eq!(validate_dims(40960, 40960), Ok(1));
+        assert!(validate_dims(100, 10).is_err());
+        assert!(
+            validate_dims(100, 10).unwrap_err().contains("12, 20, 28, 40"),
+            "rejection must enumerate the size family"
+        );
     }
 
     #[test]

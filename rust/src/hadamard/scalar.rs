@@ -4,7 +4,15 @@
 //! levels, each pairing elements `h` apart with an add/sub. Deliberately
 //! unoptimised — every other kernel is validated against this one, which
 //! in turn is validated against the dense Hadamard matmul in tests.
+//!
+//! Non-power-of-two sizes `n = B * 2^k` (`H_n = H_B ⊗ H_{2^k}`, base
+//! axis slow — see `docs/KERNEL_MATH.md`) run a leading naive dense
+//! contraction with `H_B` across the `B` strided blocks, then the
+//! butterfly on each contiguous `2^k` block. The base stage is its own
+//! textbook loop (independent of the optimised [`super::mma`] tile
+//! kernels) so this file stays a self-contained oracle.
 
+use super::matrices::{hadamard_base, split_base};
 use super::{validate_dims, FwhtOptions};
 
 /// In-place scalar FWHT of every `n`-sized row in `data`.
@@ -12,21 +20,39 @@ use super::{validate_dims, FwhtOptions};
 /// Panics on invalid dimensions (see [`validate_dims`]).
 pub fn fwht_scalar_f32(data: &mut [f32], n: usize, opts: &FwhtOptions) {
     let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+    let (base, m) = split_base(n).expect("validated by validate_dims");
+    let hb = (base > 1).then(|| hadamard_base(base));
+    let mut tmp = vec![0.0f32; if base > 1 { base } else { 0 }];
     for r in 0..rows {
         let row = &mut data[r * n..(r + 1) * n];
-        let mut h = 1;
-        while h < n {
-            let mut i = 0;
-            while i < n {
-                for j in i..i + h {
-                    let x = row[j];
-                    let y = row[j + h];
-                    row[j] = x + y;
-                    row[j + h] = x - y;
+        // leading base stage: y_b = sum_c H_B[b][c] * x_c across the B
+        // blocks of m contiguous elements, one output column at a time
+        if let Some(hb) = hb {
+            for t in 0..m {
+                for (b, slot) in tmp.iter_mut().enumerate() {
+                    *slot = (0..base).map(|c| hb[b * base + c] * row[c * m + t]).sum();
                 }
-                i += h * 2;
+                for (b, v) in tmp.iter().enumerate() {
+                    row[b * m + t] = *v;
+                }
             }
-            h *= 2;
+        }
+        // power-of-two butterfly on each contiguous m-block
+        for blk in row.chunks_exact_mut(m) {
+            let mut h = 1;
+            while h < m {
+                let mut i = 0;
+                while i < m {
+                    for j in i..i + h {
+                        let x = blk[j];
+                        let y = blk[j + h];
+                        blk[j] = x + y;
+                        blk[j + h] = x - y;
+                    }
+                    i += h * 2;
+                }
+                h *= 2;
+            }
         }
         if opts.scale != 1.0 {
             for v in row.iter_mut() {
@@ -68,6 +94,20 @@ mod tests {
             fwht_scalar_f32(&mut got, n, &FwhtOptions::raw());
             let mut want = vec![0.0f32; n];
             matvec_right(&x, &h, n, &mut want);
+            assert_close(&got, &want, 1e-4, 1e-3);
+        }
+    }
+
+    #[test]
+    fn matches_dense_matmul_non_pow2_sizes() {
+        use crate::hadamard::matrices::matvec_hadamard_n;
+        let mut rng = Rng::new(43);
+        for n in [12usize, 20, 24, 28, 40, 48, 96, 160, 224, 768] {
+            let x = rng.normal_vec(n);
+            let mut got = x.clone();
+            fwht_scalar_f32(&mut got, n, &FwhtOptions::raw());
+            let mut want = vec![0.0f32; n];
+            matvec_hadamard_n(&x, n, &mut want);
             assert_close(&got, &want, 1e-4, 1e-3);
         }
     }

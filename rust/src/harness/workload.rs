@@ -13,7 +13,10 @@ use crate::util::rng::Rng;
 /// Workload configuration.
 #[derive(Clone, Debug)]
 pub struct WorkloadConfig {
-    /// Hadamard sizes to draw from (uniform mix).
+    /// Hadamard sizes to draw from (uniform mix). Any size the router
+    /// admits is valid — the full `B * 2^k` family, so a workload can
+    /// mix powers of two with Llama-dim sizes like 14336 = 28·512 (the
+    /// `quarot_attention` example serves exactly that mix).
     pub sizes: Vec<usize>,
     /// Rows per request: uniform in [min, max].
     pub rows_min: usize,
@@ -159,6 +162,22 @@ mod tests {
             assert_eq!(a.n, b.n);
             assert_eq!(a.data, b.data);
         }
+    }
+
+    #[test]
+    fn non_pow2_sizes_flow_through_the_stream() {
+        let cfg = WorkloadConfig {
+            sizes: vec![768, 14336],
+            ..Default::default()
+        };
+        let mut w = ServingWorkload::new(cfg);
+        let mut saw = std::collections::HashSet::new();
+        for req in w.take(40) {
+            assert!(req.data.len() == req.rows * req.n);
+            assert!(req.n == 768 || req.n == 14336);
+            saw.insert(req.n);
+        }
+        assert_eq!(saw.len(), 2, "both sizes must appear in 40 draws");
     }
 
     #[test]

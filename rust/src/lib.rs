@@ -24,7 +24,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`hadamard`] | native FWHT kernels: scalar oracle, Dao-style baseline, HadaCore 16x16-block algorithm, f16/bf16 |
+//! | [`hadamard`] | native FWHT kernels: scalar oracle, Dao-style baseline, HadaCore 16x16-block algorithm, f16/bf16; sizes `B * 2^k`, `B ∈ {1,12,20,28,40}` (see `docs/KERNEL_MATH.md`) |
 //! | [`exec`] | batched execution engine: worker pool, per-thread workspaces, plan cache |
 //! | [`quant`] | FP8/INT8/INT4 simulated quantisation + error metrics |
 //! | [`gpu_model`] | analytical A100/H100 simulator for the paper's evaluation grids |
@@ -65,5 +65,9 @@ pub use hadamard::{fwht_dao_f32, fwht_hadacore_f32, fwht_scalar_f32, FwhtOptions
 /// Crate version string (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
 
-/// Maximum supported Hadamard size, `2^15` — same ceiling as the paper.
-pub const MAX_HADAMARD_SIZE: usize = 1 << 15;
+/// Maximum supported Hadamard size, `2^16`. The paper's own evaluation
+/// grid stops at `2^15`, but the `B * 2^k` size family (see
+/// [`hadamard::split_base`]) admits Llama-family hidden dims above it —
+/// 40960 = 40·2^10 in particular — so the ceiling sits one doubling
+/// higher.
+pub const MAX_HADAMARD_SIZE: usize = 1 << 16;

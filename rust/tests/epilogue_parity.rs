@@ -1,7 +1,8 @@
 //! Integration: the fused rotate→quantize epilogue must be bit-identical
 //! to the unfused two-pass reference — across kernels
 //! (scalar/dao/hadacore), dtypes (f32/f16/bf16), the paper's size axis
-//! (256..8192), chunk boundaries, and lane counts (1, 4, 8).
+//! (256..8192) plus non-power-of-two `B * 2^k` sizes, chunk boundaries,
+//! and lane counts (1, 4, 8).
 //!
 //! The unfused reference for [`hadacore::quant::Epilogue::QuantFp8`] is
 //! the engine transform followed by `fp8_quantize_slice` over the whole
@@ -48,9 +49,10 @@ fn engines() -> Vec<(&'static str, ExecEngine)> {
 }
 
 /// (n, rows) grid: the acceptance sizes with row counts chosen to not
-/// divide evenly into chunks, plus a single-row batch.
-const SHAPES: [(usize, usize); 5] =
-    [(256, 67), (512, 1), (1024, 13), (4096, 9), (8192, 3)];
+/// divide evenly into chunks, plus a single-row batch, plus
+/// non-power-of-two `B * 2^k` sizes (group scales must divide them too).
+const SHAPES: [(usize, usize); 7] =
+    [(256, 67), (512, 1), (768, 13), (1024, 13), (4096, 9), (8192, 3), (14336, 3)];
 
 fn check_fp8<E>(
     label: &str,

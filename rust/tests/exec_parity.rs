@@ -1,8 +1,9 @@
 //! Integration: the batched execution engine must be indistinguishable
 //! from the single-call kernels — across kernels (scalar/dao/hadacore),
-//! dtypes (f32/f16/bf16), the paper's size axis (256..32768), chunk
-//! boundaries (rows not divisible by the chunk height, single-row
-//! batches), and lane counts (1, 3, 8).
+//! dtypes (f32/f16/bf16), the paper's size axis (256..32768) plus the
+//! non-power-of-two `B * 2^k` sizes, chunk boundaries (rows not
+//! divisible by the chunk height, single-row batches), and lane counts
+//! (1, 3, 8).
 //!
 //! Two bars:
 //! * **bit-for-bit vs the direct call of the same kernel** — sharding by
@@ -42,14 +43,18 @@ fn engines() -> Vec<(&'static str, ExecEngine)> {
 }
 
 /// (n, rows) grid: paper sizes with row counts chosen to not divide
-/// evenly into chunks, plus single-row batches.
-const SHAPES: [(usize, usize); 8] = [
+/// evenly into chunks, plus single-row batches, plus the non-power-of-two
+/// `B * 2^k` family (12·64, 20·256, 28·512 — the Llama-3 FFN dim).
+const SHAPES: [(usize, usize); 11] = [
     (256, 1),
     (256, 67),
     (512, 33),
+    (768, 33),
     (1024, 13),
     (4096, 9),
     (4096, 1),
+    (5120, 9),
+    (14336, 3),
     (16384, 5),
     (32768, 3),
 ];

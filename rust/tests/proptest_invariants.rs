@@ -82,6 +82,55 @@ fn prop_responses_match_requests_exactly() {
 }
 
 #[test]
+fn prop_base_matrices_are_symmetric_orthogonal_involutions() {
+    use hadacore::hadamard::hadamard_base;
+    // orthogonality H_B · H_Bᵀ = B·I, symmetry (which makes the
+    // normalized transform an involution), and ±1 entries — exact
+    // arithmetic, so asserted with == not tolerances
+    for b in [12usize, 20, 28, 40] {
+        let h = hadamard_base(b);
+        for i in 0..b {
+            for j in 0..b {
+                assert!(
+                    h[i * b + j] == 1.0 || h[i * b + j] == -1.0,
+                    "H{b}[{i}][{j}] must be ±1"
+                );
+                assert_eq!(h[i * b + j], h[j * b + i], "H{b} must be symmetric");
+                let dot: f32 = (0..b).map(|k| h[i * b + k] * h[j * b + k]).sum();
+                let want = if i == j { b as f32 } else { 0.0 };
+                assert_eq!(dot, want, "H{b} rows {i},{j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_non_pow2_involution_and_kernel_agreement() {
+    // involution-up-to-scale and three-kernel agreement across the whole
+    // B * 2^k family at random k
+    check("non-pow2 involution + agreement", 25, |rng| {
+        let base = [12usize, 20, 28, 40][rng.below(4)];
+        let n = base << rng.range(0, 8); // up to 40 * 256 = 10240
+        let x = rng.normal_vec(n);
+        let opts = FwhtOptions::normalized(n);
+
+        let mut y = x.clone();
+        fwht_hadacore_f32(&mut y, n, &opts);
+        fwht_hadacore_f32(&mut y, n, &opts);
+        assert_close(&y, &x, 1e-3, 1e-3);
+
+        let mut a = x.clone();
+        let mut b = x.clone();
+        let mut c = x;
+        fwht_scalar_f32(&mut a, n, &opts);
+        fwht_dao_f32(&mut b, n, &opts);
+        fwht_hadacore_f32(&mut c, n, &opts);
+        assert_close(&b, &a, 1e-3, 1e-3);
+        assert_close(&c, &a, 1e-3, 1e-3);
+    });
+}
+
+#[test]
 fn prop_kernels_agree_on_random_inputs() {
     check("three kernels agree", 40, |rng| {
         let n = 1usize << rng.range(1, 15);
