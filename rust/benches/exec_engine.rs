@@ -1,30 +1,177 @@
 //! Batched-engine benchmarks: single-thread vs pooled throughput across
-//! the paper's size axis, plus the 16-bit workspace-reuse check.
+//! the paper's size axis, the round-fusion depth sweep, plus the 16-bit
+//! workspace-reuse check.
 //!
-//! `cargo bench --bench exec_engine` (add `--quick` for a short run).
+//! `cargo bench --bench exec_engine` (add `--quick` for a short run;
+//! `--smoke` runs only the tiny-size fusion sweep — the CI gate that
+//! checks the machine-readable output exists and is well-formed).
 //!
-//! The headline number is the **pool speedup** — batch throughput with
-//! the worker pool over the same batch on one thread. On a multi-core
-//! host the large-batch rows should report >= 2x; the engine's win is the
-//! sharding, so tiny batches (which run inline by policy) report ~1x.
+//! Every run writes `BENCH_PR4.json` (override with
+//! `HADACORE_BENCH_JSON`): one entry per measured (size × kernel ×
+//! fusion depth × dtype) case, schema `hadacore-bench-v1` — the repo's
+//! perf trajectory. The file is re-read and schema-validated before the
+//! binary exits, so a malformed emission fails the run.
+//!
+//! The headline numbers are the **pool speedup** — batch throughput with
+//! the worker pool over the same batch on one thread — and the **fusion
+//! speedup** — the tuned multi-round tile traversal over the classic
+//! one-traversal-per-round schedule.
 
-use hadacore::exec::{ExecConfig, ExecEngine};
-use hadacore::hadamard::{FwhtOptions, KernelKind};
+use hadacore::exec::{tuning_for, ExecConfig, ExecEngine};
+use hadacore::hadamard::hadacore::{
+    fwht_hadacore_f32_planned_depth, HadaCoreConfig, HadaCorePlan,
+};
+use hadacore::hadamard::{fwht_f32, FwhtOptions, KernelKind};
 use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
 use hadacore::quant::{fp8_quantize_slice, Epilogue, Fp8Format};
-use hadacore::util::bench::{bench, BenchConfig};
-use hadacore::util::f16::{Element, F16};
+use hadacore::util::bench::{bench, BenchConfig, BenchJson, BenchRecord};
+use hadacore::util::f16::{DType, Element, F16};
+
+/// The fusion-depth sweep: direct planned-kernel calls per depth (clean
+/// attribution, no pool noise), every kernel at its natural depth, and
+/// one tuned-engine row per size. Appends one JSON record per case.
+fn fusion_sweep(
+    sizes: &[usize],
+    elems: usize,
+    cfg: &BenchConfig,
+    engine: &ExecEngine,
+    engine_cfg: &ExecConfig,
+    wl: &mut ServingWorkload,
+    out: &mut BenchJson,
+) {
+    println!("\n## round-fusion sweep (direct planned kernel, f32)");
+    for &n in sizes {
+        let rows = (elems / n).max(1);
+        let base = wl.next_matrix(rows, n);
+        let opts = FwhtOptions::normalized(n);
+        let plan = HadaCorePlan::new(n, &HadaCoreConfig::default());
+
+        // butterfly baselines at their (only) depth
+        for kind in [KernelKind::Scalar, KernelKind::Dao] {
+            let b = base.clone();
+            let mut buf = base.clone();
+            let s = bench(
+                &format!("{}_{rows}x{n}", kind.name()),
+                cfg,
+                move |_| {
+                    buf.copy_from_slice(&b);
+                    fwht_f32(kind, &mut buf, n, &opts);
+                    buf[0]
+                },
+            );
+            println!("{}", s.line());
+            out.push(BenchRecord::new(
+                "fusion_sweep",
+                kind.name(),
+                n,
+                rows,
+                DType::F32.name(),
+                1,
+                0,
+                s,
+            ));
+        }
+
+        // hadacore at every fusion depth
+        let mut depth1_ns = 0.0f64;
+        for depth in 1..=plan.max_fusion_depth() {
+            let b = base.clone();
+            let mut buf = base.clone();
+            let p = plan.clone();
+            let s = bench(
+                &format!("hadacore_d{depth}_{rows}x{n}"),
+                cfg,
+                move |_| {
+                    buf.copy_from_slice(&b);
+                    fwht_hadacore_f32_planned_depth(&mut buf, &p, &opts, depth);
+                    buf[0]
+                },
+            );
+            println!("{}", s.line());
+            if depth == 1 {
+                depth1_ns = s.median_ns;
+            } else {
+                println!(
+                    "    -> fusion speedup vs depth 1: {:.2}x (model bound {:.2}x)",
+                    depth1_ns / s.median_ns,
+                    hadacore::gpu_model::roofline::fusion_speedup_bound(n, depth),
+                );
+            }
+            out.push(BenchRecord::new(
+                "fusion_sweep",
+                "hadacore",
+                n,
+                rows,
+                DType::F32.name(),
+                depth,
+                0,
+                s,
+            ));
+        }
+
+        // the tuned engine end to end (whatever depth the tuner picked)
+        let tuned =
+            tuning_for(engine_cfg, KernelKind::HadaCore, n, rows, DType::F32);
+        let b = base.clone();
+        let mut buf = base;
+        let s = bench(&format!("engine_tuned_{rows}x{n}"), cfg, move |_| {
+            buf.copy_from_slice(&b);
+            engine.run_f32(KernelKind::HadaCore, &mut buf, n, &opts);
+            buf[0]
+        });
+        println!(
+            "{}  [tuned depth {} chunk {} rows]",
+            s.line(),
+            tuned.fusion_depth,
+            tuned.chunk_rows
+        );
+        out.push(BenchRecord::new(
+            "engine_tuned",
+            "hadacore",
+            n,
+            rows,
+            DType::F32.name(),
+            tuned.fusion_depth,
+            engine.threads(),
+            s,
+        ));
+    }
+}
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = if quick || smoke {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+    let mut out = BenchJson::new();
+    let json_path = BenchJson::output_path("BENCH_PR4.json");
 
+    let engine_cfg = ExecConfig::default();
     let single = ExecEngine::single_threaded();
-    let pooled = ExecEngine::default();
+    let pooled = ExecEngine::new(engine_cfg);
     println!(
         "# exec_engine — batched execution engine (CPU, {} lanes)\n",
         pooled.threads()
     );
+
+    if smoke {
+        // CI gate: tiny sizes, quick config, JSON emission + validation
+        let mut wl = ServingWorkload::new(WorkloadConfig::default());
+        fusion_sweep(
+            &[256, 768],
+            1 << 14,
+            &cfg,
+            &pooled,
+            &engine_cfg,
+            &mut wl,
+            &mut out,
+        );
+        finish_json(&out, &json_path);
+        return;
+    }
 
     // -- single-thread vs pooled, f32, fixed element budget ------------
     let elems = 1usize << 21; // 2M f32 per batch = 8 MiB
@@ -71,6 +218,17 @@ fn main() {
         } else {
             "(below 2x — single-core host or loaded machine?)"
         }
+    );
+
+    // -- round-fusion depth sweep (the autotuner's search space) -------
+    fusion_sweep(
+        &[256, 1024, 4096, 8192, 14336, 32768],
+        elems,
+        &cfg,
+        &pooled,
+        &engine_cfg,
+        &mut wl,
+        &mut out,
     );
 
     // -- fused rotate→quantize epilogue vs the unfused two-pass --------
@@ -156,4 +314,28 @@ fn main() {
         stats.scratch_grows - grows_before,
         stats.chunks
     );
+    out.push(BenchRecord::new(
+        "engine_f16",
+        "hadacore",
+        n,
+        rows,
+        DType::F16.name(),
+        tuning_for(&engine_cfg, KernelKind::HadaCore, n, rows, DType::F16)
+            .fusion_depth,
+        pooled.threads(),
+        s,
+    ));
+
+    finish_json(&out, &json_path);
+}
+
+/// Write + re-validate the machine-readable output; a malformed emission
+/// aborts the bench run (CI treats that as a failed smoke step).
+fn finish_json(out: &BenchJson, path: &str) {
+    match out.write(path) {
+        Ok(entries) => {
+            println!("\nwrote {path}: {entries} entries (schema valid)")
+        }
+        Err(e) => panic!("bench JSON emission failed: {e}"),
+    }
 }

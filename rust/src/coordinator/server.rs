@@ -40,7 +40,13 @@ pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
     /// Routing policy.
     pub router: RouterConfig,
-    /// Execution-engine geometry (compute lanes, chunking).
+    /// Execution-engine geometry (compute lanes, chunking) and tuning
+    /// policy: the engine's roofline-guided autotuner
+    /// ([`crate::exec::tune`]) picks the round-fusion depth and chunk
+    /// refinement per batch shape; pin [`crate::exec::TunePolicy`] (or
+    /// set `HADACORE_TUNE=off|model` / `HADACORE_FUSION_DEPTH`) for
+    /// bit-reproducible scheduling across hosts — responses are
+    /// bit-identical either way, only throughput changes.
     pub exec: ExecConfig,
     /// Worker idle poll interval (shutdown latency bound).
     pub idle_timeout: Duration,
@@ -667,6 +673,45 @@ mod tests {
         c.shutdown();
         for rx in rxs {
             assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn tuned_and_pinned_engines_serve_identical_bytes() {
+        // the autotuner (default Measure policy) and every pinned fusion
+        // depth must produce the same response bytes through the full
+        // dispatch path — fusion is scheduling, never arithmetic
+        use crate::exec::{ExecConfig, TunePolicy};
+        let mut rng = Rng::new(0x7D);
+        let (rows, n) = (6usize, 4096usize);
+        let x = rng.normal_vec(rows * n);
+        let mut want: Option<Vec<f32>> = None;
+        for tune in [
+            TunePolicy::Measure,
+            TunePolicy::Off,
+            TunePolicy::FixedDepth(2),
+            TunePolicy::FixedDepth(3),
+        ] {
+            let c = Coordinator::start(
+                None,
+                CoordinatorConfig {
+                    workers: 2,
+                    batcher: BatcherConfig {
+                        max_delay: Duration::from_micros(200),
+                        work_conserving: false,
+                    },
+                    exec: ExecConfig { threads: 2, tune, ..ExecConfig::default() },
+                    idle_timeout: Duration::from_millis(10),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let resp = c.transform(TransformRequest::new(1, n, x.clone())).unwrap();
+            match &want {
+                None => want = Some(resp.data),
+                Some(w) => assert_eq!(w, &resp.data, "tune={tune:?} diverged"),
+            }
+            c.shutdown();
         }
     }
 

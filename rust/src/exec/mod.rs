@@ -33,6 +33,15 @@
 //! * [`plan`] — a process-wide cache memoizing the per-size round
 //!   structure (Sylvester factorisation, stride tables, §3.3 residual
 //!   factor), so per-batch dispatch rebuilds nothing.
+//! * [`tune`] — a roofline-guided autotuner: per batch shape it picks
+//!   the HadaCore **round-fusion depth** (how many consecutive 16×16
+//!   rounds run per cache-blocked tile — one read and one write of the
+//!   tile instead of one per round) and refines the pool's chunk
+//!   height, seeding from the `gpu_model` roofline and confirming with
+//!   a one-shot micro-measurement memoized per `(kernel, n)` next to
+//!   the plan cache. Fused execution is bit-identical to unfused at
+//!   every depth; `HADACORE_TUNE` / `HADACORE_FUSION_DEPTH` /
+//!   `HADACORE_CHUNK_ROWS` pin the decisions for reproducible runs.
 //!
 //! ```no_run
 //! use hadacore::exec::ExecEngine;
@@ -58,14 +67,16 @@
 
 pub mod plan;
 mod pool;
+pub mod tune;
 
-pub use plan::{cached_plan_count, plan_for, ExecPlan};
+pub use plan::{cached_plan_count, measured_key_count, plan_for, ExecPlan};
+pub use tune::{tuning_for, TunePolicy, TuneSource, Tuning};
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::hadamard::hadacore::fwht_hadacore_f32_planned;
+use crate::hadamard::hadacore::fwht_hadacore_f32_planned_depth;
 use crate::hadamard::{fwht_f32, validate_dims, FwhtOptions, KernelKind};
 use crate::quant::{
     amax_slice, fp8_apply_slice, int_group_apply_slice, Epilogue, Fp8Format,
@@ -182,6 +193,8 @@ pub struct ExecStats {
     pub scratch_grows: AtomicU64,
     /// Runs that executed a fused quantize epilogue (inline or sharded).
     pub epilogue_runs: AtomicU64,
+    /// Runs whose tuned fusion depth was > 1 (multi-round tiles).
+    pub fused_runs: AtomicU64,
 }
 
 /// Point-in-time copy of [`ExecStats`].
@@ -192,6 +205,7 @@ pub struct ExecStatsSnapshot {
     pub chunks: u64,
     pub scratch_grows: u64,
     pub epilogue_runs: u64,
+    pub fused_runs: u64,
 }
 
 impl ExecStats {
@@ -202,6 +216,7 @@ impl ExecStats {
             chunks: self.chunks.load(Ordering::Relaxed),
             scratch_grows: self.scratch_grows.load(Ordering::Relaxed),
             epilogue_runs: self.epilogue_runs.load(Ordering::Relaxed),
+            fused_runs: self.fused_runs.load(Ordering::Relaxed),
         }
     }
 }
@@ -218,12 +233,17 @@ pub struct ExecConfig {
     /// Minimum elements per chunk. Batches smaller than one chunk run
     /// inline — the thread handoff costs more than the transform.
     pub min_chunk_elems: usize,
+    /// How fusion depth and chunk refinement are chosen (see
+    /// [`tune`]). `HADACORE_TUNE` / `HADACORE_FUSION_DEPTH` /
+    /// `HADACORE_CHUNK_ROWS` env vars override this at runtime for
+    /// reproducible runs.
+    pub tune: TunePolicy,
 }
 
 impl Default for ExecConfig {
     /// One lane per available core, capped at 16 — the transform is
     /// memory-bound well before that on typical hosts; raise `threads`
-    /// explicitly to use more.
+    /// explicitly to use more. Tuning defaults to the measured policy.
     fn default() -> Self {
         ExecConfig {
             threads: std::thread::available_parallelism()
@@ -232,6 +252,7 @@ impl Default for ExecConfig {
                 .min(16),
             chunks_per_thread: 4,
             min_chunk_elems: 1 << 14, // 16K elements = 64 KiB of f32
+            tune: TunePolicy::Measure,
         }
     }
 }
@@ -343,7 +364,20 @@ impl ExecEngine {
             self.stats.epilogue_runs.fetch_add(1, Ordering::Relaxed);
         }
         let plan = plan_for(kind, n);
-        let chunk_rows = self.chunk_rows_for(rows, n);
+        // the autotuned fusion depth + chunk refinement for this shape
+        // (memoized; a hash lookup after first use). An env-pinned chunk
+        // wins outright; otherwise the refined chunk never shards
+        // coarser than the static per-batch balance policy.
+        let tuning = tune::tuning_for_plan(&self.cfg, &plan, rows, E::DTYPE);
+        let chunk_rows = if tuning.chunk_pinned {
+            tuning.chunk_rows
+        } else {
+            tuning.chunk_rows.min(self.chunk_rows_for(rows, n)).max(1)
+        };
+        let fusion_depth = tuning.fusion_depth;
+        if fusion_depth > 1 {
+            self.stats.fused_runs.fetch_add(1, Ordering::Relaxed);
+        }
         let chunks = (rows + chunk_rows - 1) / chunk_rows;
         let payload = E::payload(data.as_mut_ptr());
         match &self.pool {
@@ -357,6 +391,7 @@ impl ExecEngine {
                     kind,
                     opts: *opts,
                     plan: Arc::clone(&plan),
+                    fusion_depth,
                     stage,
                 };
                 // SAFETY (all submissions below): `data` is a `&mut`
@@ -425,6 +460,7 @@ impl ExecEngine {
                                 kind,
                                 opts,
                                 &plan,
+                                fusion_depth,
                                 &self.stats,
                                 epilogue,
                                 &mut unused,
@@ -444,6 +480,7 @@ impl ExecEngine {
                                 kind,
                                 opts,
                                 &plan,
+                                fusion_depth,
                                 &self.stats,
                                 epilogue,
                                 &mut scratch,
@@ -484,14 +521,13 @@ impl ExecEngine {
         self.run_with_epilogue::<f32>(kind, data, n, opts, epilogue)
     }
 
-    /// Rows per chunk for a `rows x n` batch: enough chunks to balance
-    /// the lanes, but never chunks smaller than `min_chunk_elems`.
+    /// Rows per chunk for a `rows x n` batch under the static balance
+    /// policy: enough chunks to balance the lanes, but never chunks
+    /// smaller than `min_chunk_elems`. Delegates to the shared
+    /// [`tune::policy_chunk_rows`] so the tuner's refinement envelope
+    /// and the engine's policy can never drift apart.
     fn chunk_rows_for(&self, rows: usize, n: usize) -> usize {
-        let target_chunks =
-            (self.cfg.threads * self.cfg.chunks_per_thread.max(1)).max(1);
-        let by_balance = (rows + target_chunks - 1) / target_chunks;
-        let min_rows = (self.cfg.min_chunk_elems + n - 1) / n;
-        by_balance.max(min_rows).max(1)
+        tune::policy_chunk_rows(&self.cfg, rows, n)
     }
 }
 
@@ -513,6 +549,7 @@ pub(crate) unsafe fn execute_range(
     kind: KernelKind,
     opts: &FwhtOptions,
     plan: &ExecPlan,
+    fusion_depth: usize,
     scratch: &mut Vec<f32>,
     stats: &ExecStats,
 ) {
@@ -522,15 +559,15 @@ pub(crate) unsafe fn execute_range(
     match payload {
         Payload::F32(base) => {
             let data = std::slice::from_raw_parts_mut(base.add(offset), len);
-            run_f32_slice(kind, data, n, opts, plan);
+            run_f32_slice(kind, data, n, opts, plan, fusion_depth);
         }
         Payload::F16(base) => {
             let data = std::slice::from_raw_parts_mut(base.add(offset), len);
-            widen_run_narrow(kind, data, n, opts, plan, scratch, stats);
+            widen_run_narrow(kind, data, n, opts, plan, fusion_depth, scratch, stats);
         }
         Payload::BF16(base) => {
             let data = std::slice::from_raw_parts_mut(base.add(offset), len);
-            widen_run_narrow(kind, data, n, opts, plan, scratch, stats);
+            widen_run_narrow(kind, data, n, opts, plan, fusion_depth, scratch, stats);
         }
     }
 }
@@ -554,27 +591,28 @@ pub(crate) unsafe fn execute_stage(
     kind: KernelKind,
     opts: &FwhtOptions,
     plan: &ExecPlan,
+    fusion_depth: usize,
     scratch: &mut Vec<f32>,
     stats: &ExecStats,
 ) {
     match stage {
         ChunkStage::Rotate => {
             execute_range(
-                payload, start_row, rows_here, n, kind, opts, plan, scratch,
-                stats,
+                payload, start_row, rows_here, n, kind, opts, plan,
+                fusion_depth, scratch, stats,
             );
         }
         ChunkStage::RotateAmax { amax } => {
             execute_range(
-                payload, start_row, rows_here, n, kind, opts, plan, scratch,
-                stats,
+                payload, start_row, rows_here, n, kind, opts, plan,
+                fusion_depth, scratch, stats,
             );
             amax.merge(amax_range(payload, start_row, rows_here, n));
         }
         ChunkStage::RotateGroupQuant { group, scales } => {
             execute_range(
-                payload, start_row, rows_here, n, kind, opts, plan, scratch,
-                stats,
+                payload, start_row, rows_here, n, kind, opts, plan,
+                fusion_depth, scratch, stats,
             );
             group_quant_range(payload, start_row, rows_here, n, *group, scales.0);
         }
@@ -599,11 +637,14 @@ unsafe fn run_inline(
     kind: KernelKind,
     opts: &FwhtOptions,
     plan: &ExecPlan,
+    fusion_depth: usize,
     stats: &ExecStats,
     epilogue: Epilogue,
     scratch: &mut Vec<f32>,
 ) -> QuantScales {
-    execute_range(payload, 0, rows, n, kind, opts, plan, scratch, stats);
+    execute_range(
+        payload, 0, rows, n, kind, opts, plan, fusion_depth, scratch, stats,
+    );
     match epilogue {
         Epilogue::None => QuantScales::None,
         Epilogue::QuantFp8 { fmt } => {
@@ -738,9 +779,12 @@ fn run_f32_slice(
     n: usize,
     opts: &FwhtOptions,
     plan: &ExecPlan,
+    fusion_depth: usize,
 ) {
     match (&plan.hadacore, kind) {
-        (Some(hp), KernelKind::HadaCore) => fwht_hadacore_f32_planned(data, hp, opts),
+        (Some(hp), KernelKind::HadaCore) => {
+            fwht_hadacore_f32_planned_depth(data, hp, opts, fusion_depth)
+        }
         _ => fwht_f32(kind, data, n, opts),
     }
 }
@@ -749,19 +793,21 @@ fn run_f32_slice(
 /// `scratch`, transform in f32, narrow back with round-to-nearest-even.
 /// Capacity growth (an allocation) is counted; in steady state the
 /// counter is flat.
+#[allow(clippy::too_many_arguments)]
 fn widen_run_narrow<E: Element>(
     kind: KernelKind,
     data: &mut [E],
     n: usize,
     opts: &FwhtOptions,
     plan: &ExecPlan,
+    fusion_depth: usize,
     scratch: &mut Vec<f32>,
     stats: &ExecStats,
 ) {
     let cap_before = scratch.capacity();
     scratch.clear();
     scratch.extend(data.iter().map(|v| v.to_f32()));
-    run_f32_slice(kind, scratch.as_mut_slice(), n, opts, plan);
+    run_f32_slice(kind, scratch.as_mut_slice(), n, opts, plan, fusion_depth);
     for (dst, src) in data.iter_mut().zip(scratch.iter()) {
         *dst = E::from_f32(*src);
     }
@@ -781,6 +827,7 @@ mod tests {
             threads: 4,
             chunks_per_thread: 2,
             min_chunk_elems: 1024, // shard even smallish test batches
+            ..ExecConfig::default()
         })
     }
 
@@ -1122,6 +1169,7 @@ mod tests {
             threads: 8,
             chunks_per_thread: 4,
             min_chunk_elems: 1 << 14,
+            ..ExecConfig::default()
         });
         // balance: 256 rows over 32 target chunks
         assert_eq!(engine.chunk_rows_for(256, 4096), 8);
@@ -1129,5 +1177,50 @@ mod tests {
         assert_eq!(engine.chunk_rows_for(256, 256), 64);
         // tiny batches: one chunk
         assert_eq!(engine.chunk_rows_for(1, 256), 64);
+    }
+
+    #[test]
+    fn forced_fusion_depths_are_bit_identical_through_the_engine() {
+        // every config-forced depth must reproduce the depth-1 engine
+        // output bit for bit, sharded and inline alike
+        let mut rng = Rng::new(0xF1);
+        for (rows, n) in [(33usize, 1024usize), (1, 4096), (5, 14336)] {
+            let x = rng.normal_vec(rows * n);
+            let opts = FwhtOptions::normalized(n);
+            let mut want = x.clone();
+            fwht_f32(KernelKind::HadaCore, &mut want, n, &opts);
+            for depth in 1..=4 {
+                let engine = ExecEngine::new(ExecConfig {
+                    threads: 4,
+                    chunks_per_thread: 2,
+                    min_chunk_elems: 1024,
+                    tune: TunePolicy::FixedDepth(depth),
+                });
+                let mut got = x.clone();
+                engine.run_f32(KernelKind::HadaCore, &mut got, n, &opts);
+                assert_eq!(want, got, "rows={rows} n={n} depth={depth}");
+                if depth > 1 {
+                    assert_eq!(engine.stats().fused_runs, 1, "depth={depth}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_default_engine_matches_direct_kernels() {
+        // the measured policy may pick any depth — outputs must still be
+        // bit-identical to the direct (unfused) kernel call
+        let engine = pooled();
+        let mut rng = Rng::new(0xF2);
+        let (rows, n) = (17usize, 8192usize);
+        let x = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+        for kind in KernelKind::all() {
+            let mut direct = x.clone();
+            fwht_f32(kind, &mut direct, n, &opts);
+            let mut tuned = x.clone();
+            engine.run_f32(kind, &mut tuned, n, &opts);
+            assert_eq!(direct, tuned, "kind={kind:?}");
+        }
     }
 }

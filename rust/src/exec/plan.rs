@@ -1,4 +1,4 @@
-//! Process-wide transform-plan cache.
+//! Process-wide transform-plan and tuning-measurement caches.
 //!
 //! Building a [`HadaCorePlan`] rederives the canonical `n = B * 2^k`
 //! base split, the `2^k = 2^m * 16^r` factorisation, the per-round
@@ -11,6 +11,15 @@
 //! caller needs to know about canonicalisation. Per-batch dispatch
 //! therefore performs **no allocation and no factor reconstruction**;
 //! it is a hash lookup.
+//!
+//! The same module memoizes the autotuner's one-shot micro-measurement
+//! ([`measurement_for`]) per `(kernel, n)`: the fastest fusion depth
+//! and the observed per-element cost are host physics, not engine
+//! configuration, so every engine in the process shares them. The
+//! measurement runs *outside* the cache lock (it takes ~a millisecond;
+//! concurrent first lookups may both measure, first insert wins — a
+//! benign race that trades a duplicated measurement for never blocking
+//! other sizes' lookups).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -18,6 +27,8 @@ use std::sync::{Arc, Mutex};
 use crate::hadamard::hadacore::{HadaCoreConfig, HadaCorePlan};
 use crate::hadamard::KernelKind;
 use crate::util::lazy::Lazy;
+
+use super::tune::{self, Measurement};
 
 /// A cached execution plan for one `(kernel, n)` pair.
 #[derive(Debug)]
@@ -55,6 +66,32 @@ pub fn plan_for(kind: KernelKind, n: usize) -> Arc<ExecPlan> {
 /// Number of plans currently cached (observability / tests).
 pub fn cached_plan_count() -> usize {
     CACHE.lock().unwrap().len()
+}
+
+type TuneCache = Mutex<HashMap<(KernelKind, usize), Measurement>>;
+
+static TUNE_CACHE: Lazy<TuneCache> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Get (measuring and memoizing on first use) the autotuner's
+/// micro-measurement for `(kind, n)`. The sweep runs on the f32
+/// compute image — 16-bit storage only rescales the cost estimate at
+/// resolve time, so mixed-dtype traffic at one size shares a single
+/// measurement. `seed_depth` is the roofline model's proposal, used to
+/// narrow the candidate sweep on a miss; hits ignore it.
+pub fn measurement_for(kind: KernelKind, n: usize, seed_depth: usize) -> Measurement {
+    let key = (kind, n);
+    if let Some(m) = TUNE_CACHE.lock().unwrap().get(&key) {
+        return *m;
+    }
+    // measure without holding the lock (see the module doc)
+    let plan = plan_for(kind, n);
+    let measured = tune::measure_profile(kind, n, &plan, seed_depth);
+    *TUNE_CACHE.lock().unwrap().entry(key).or_insert(measured)
+}
+
+/// Number of memoized tuning measurements (observability / tests).
+pub fn measured_key_count() -> usize {
+    TUNE_CACHE.lock().unwrap().len()
 }
 
 #[cfg(test)]

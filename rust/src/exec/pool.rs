@@ -54,6 +54,9 @@ pub(crate) struct JobSpec {
     pub opts: FwhtOptions,
     /// Cached plan for `(kind, n)`.
     pub plan: Arc<ExecPlan>,
+    /// Autotuned round-fusion depth for the HadaCore planned path
+    /// (1 = unfused; see [`crate::exec::tune`]).
+    pub fusion_depth: usize,
     /// What each chunk executes (plain rotate or an epilogue stage).
     pub stage: ChunkStage,
 }
@@ -124,6 +127,7 @@ struct Claim {
     kind: KernelKind,
     opts: FwhtOptions,
     plan: Arc<ExecPlan>,
+    fusion_depth: usize,
     stage: ChunkStage,
     done: Arc<Latch>,
 }
@@ -208,6 +212,7 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
                         kind: front.spec.kind,
                         opts: front.spec.opts,
                         plan: Arc::clone(&front.spec.plan),
+                        fusion_depth: front.spec.fusion_depth,
                         stage: front.spec.stage.clone(),
                         done: Arc::clone(&front.done),
                     };
@@ -241,6 +246,7 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
                     claim.kind,
                     &claim.opts,
                     &claim.plan,
+                    claim.fusion_depth,
                     &mut scratch,
                     stats,
                 );

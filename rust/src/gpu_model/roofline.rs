@@ -77,6 +77,72 @@ pub fn roofline_fraction(dev: &DeviceSpec, elems: usize, measured_us: f64) -> f6
     ideal_us / measured_us
 }
 
+// ---------------------------------------------------------------------
+// Round-fusion model (the part of the roofline that now drives a
+// *runtime* decision — see `exec::tune`).
+//
+// The transform is memory-bound at serving sizes (`hadacore_bound`
+// above), so its cost is dominated by how many times the buffer streams
+// through the memory system: one read + one write per round traversal.
+// Fusing `d` consecutive rounds per cache-blocked tile divides the pow2
+// traversal count by `d` — the CPU realisation of the paper's
+// keep-data-resident-across-rounds structure (GPU: register fragments
+// chained through `mma` pairs; CPU: a tile that stays in L1/L2) —
+// *provided the fused tile actually fits in cache*. These helpers give
+// the tuner its seed: predicted traffic per depth, and the deepest
+// depth whose tile fits a cache budget.
+
+/// Main-memory traffic (bytes) of a planned HadaCore execution over
+/// `elems` elements at fusion depth `depth`, assuming each fused
+/// traversal streams the buffer once (read + write) and tiles stay
+/// cache-resident within a traversal.
+pub fn hadacore_traffic_bytes(
+    n: usize,
+    elems: usize,
+    depth: usize,
+    elem_bytes: usize,
+) -> f64 {
+    use crate::hadamard::hadacore::{HadaCoreConfig, HadaCorePlan};
+    let plan = HadaCorePlan::new(n, &HadaCoreConfig::default());
+    2.0 * elems as f64 * elem_bytes as f64 * plan.passes_at(depth) as f64
+}
+
+/// Predicted upper-bound speedup of fusion depth `depth` over the
+/// unfused schedule for a memory-bound execution: the traversal-count
+/// ratio. Realised speedup is below this when tiles spill or compute
+/// starts to bind.
+pub fn fusion_speedup_bound(n: usize, depth: usize) -> f64 {
+    use crate::hadamard::hadacore::{HadaCoreConfig, HadaCorePlan};
+    let plan = HadaCorePlan::new(n, &HadaCoreConfig::default());
+    plan.passes_at(1) as f64 / plan.passes_at(depth) as f64
+}
+
+/// The model's seed for the autotuner: the deepest fusion depth (≤ the
+/// plan's round count) whose fused-tile working set — tile bytes for
+/// the f32 compute image, ×2 for the in-flight read+write halves —
+/// fits `cache_bytes`. Depth 1 (no fusion, tile = 0) always fits.
+pub fn recommend_fusion_depth(n: usize, cache_bytes: usize) -> usize {
+    use crate::hadamard::hadacore::{HadaCoreConfig, HadaCorePlan};
+    recommend_fusion_depth_for(
+        &HadaCorePlan::new(n, &HadaCoreConfig::default()),
+        cache_bytes,
+    )
+}
+
+/// [`recommend_fusion_depth`] over an already-built plan — what the
+/// tuner's per-batch path uses (no plan construction, no allocation).
+pub fn recommend_fusion_depth_for(
+    plan: &crate::hadamard::hadacore::HadaCorePlan,
+    cache_bytes: usize,
+) -> usize {
+    for depth in (1..=plan.max_fusion_depth()).rev() {
+        if plan.fused_tile_elems(depth) * 4 * 2 <= cache_bytes {
+            return depth;
+        }
+    }
+    1
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +183,37 @@ mod tests {
         assert!(hadacore_intensity(32768) > hadacore_intensity(256));
         // but stays tiny compared to GEMM-class intensity (~100s)
         assert!(hadacore_intensity(32768) < 64.0);
+    }
+
+    #[test]
+    fn fusion_model_tracks_the_plan() {
+        // 4096 = 16^3: three plain rounds; traffic scales with passes
+        let t1 = hadacore_traffic_bytes(4096, 1 << 20, 1, 4);
+        let t3 = hadacore_traffic_bytes(4096, 1 << 20, 3, 4);
+        assert_eq!(t1, 3.0 * t3); // 3 traversals -> 1 traversal
+        assert!((fusion_speedup_bound(4096, 3) - 3.0).abs() < 1e-12);
+        // fusing beyond the round count saturates
+        assert_eq!(
+            fusion_speedup_bound(4096, 8),
+            fusion_speedup_bound(4096, 3)
+        );
+        // non-pow2: the base pass is never fused away
+        assert!((fusion_speedup_bound(14336, 2) - 3.0 / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recommended_depth_respects_the_cache_budget() {
+        // 4096: depth-2 tile = 256 elems (2 KiB working set), depth-3
+        // tile = 4096 elems (32 KiB) — a 4 KiB budget stops at depth 2
+        assert_eq!(recommend_fusion_depth(4096, 4 << 10), 2);
+        assert_eq!(recommend_fusion_depth(4096, 1 << 20), 3);
+        // a zero budget still returns the valid no-fusion depth
+        assert_eq!(recommend_fusion_depth(4096, 0), 1);
+        // 256 has two rounds with a 256-elem final tile: 1 MiB is plenty
+        assert_eq!(recommend_fusion_depth(256, 1 << 20), 2);
+        // 32768 at full fusion needs 256 KiB of tile; a 64 KiB budget
+        // backs off to depth 2 (16 KiB tile)
+        assert_eq!(recommend_fusion_depth(32768, 64 << 10), 2);
     }
 
     #[test]

@@ -152,6 +152,47 @@ fn pow2_rounds(data: &mut [f32], rows: usize, m: usize, residual: ResidualMode) 
     }
 }
 
+/// One pass of the power-of-two round schedule, in execution order.
+///
+/// Every pass touches a *contiguous aligned block* of the buffer
+/// (`block_len` elements) and is independent across blocks, and the
+/// block of each pass divides the block of every later pass. Those two
+/// facts are what make **round fusion** (`fwht_hadacore_f32_planned_depth`)
+/// a pure traversal reordering: a group of consecutive passes can run
+/// tile-by-tile over blocks of the *last* pass in the group — one read
+/// and one write of the tile instead of one per pass — while every
+/// element still undergoes the identical sequence of f32 operations, so
+/// the fused output is bit-for-bit the unfused output (see
+/// `docs/KERNEL_MATH.md` §Fused rounds).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pow2Round {
+    /// Round 0: a contiguous butterfly over `chunk`-sized groups —
+    /// `H_{2^m} ⊗ H16` on the fastest axis when `chunk > 16` (the BD
+    /// residual fused with the first 16-round), plain `H16` when
+    /// `chunk == 16`.
+    Contiguous { chunk: usize },
+    /// A strided 16-round: `H16` on the axis with inner stride `inner`,
+    /// block length `16 * inner`.
+    Strided { inner: usize },
+    /// The explicit residual/small factor: `H_size` on the axis with
+    /// inner stride `inner`, block length `size * inner` (always a full
+    /// pow2 row). Used by [`ResidualMode::SmallFactor`] and by sizes
+    /// with `2^k < 16`.
+    Small { size: usize, inner: usize },
+}
+
+impl Pow2Round {
+    /// Contiguous aligned block length (in elements) this pass operates
+    /// on. Divides the block length of every later pass in a schedule.
+    pub fn block_len(self) -> usize {
+        match self {
+            Pow2Round::Contiguous { chunk } => chunk,
+            Pow2Round::Strided { inner } => 16 * inner,
+            Pow2Round::Small { size, inner } => size * inner,
+        }
+    }
+}
+
 /// Precomputed round structure for one `(n, residual)` pair.
 ///
 /// Everything `fwht_hadacore_f32_cfg` rederives on every call — the
@@ -185,18 +226,11 @@ pub struct HadaCorePlan {
     base: usize,
     /// The power-of-two factor `2^k = n / base`.
     pow2: usize,
-    /// Residual exponent of the pow2 factor (`2^k = 2^m * 16^r`).
-    m: u32,
     residual: ResidualMode,
-    /// BD path: fused round-0 butterfly chunk (`16 * 2^m`, clamped to
-    /// the pow2 factor). `None` when `m == 0` (round 0 is a plain H16
-    /// round).
-    fused_chunk: Option<usize>,
-    /// Inner strides of the strided 16-rounds, in execution order.
-    strides: Vec<usize>,
-    /// SmallFactor path: inner stride of the final `H_{2^m}` contraction
-    /// (`16^r`); `None` when `m == 0` or in BD mode.
-    small_inner: Option<usize>,
+    /// The pow2 round schedule in execution order (empty when
+    /// `2^k == 1`). Block lengths are non-decreasing and each divides
+    /// the next — the invariant round fusion relies on.
+    rounds: Vec<Pow2Round>,
     /// The §3.3 residual factor `I kron H_{2^m}` as a 16x16 table
     /// (identity when `m == 0`) — the matrix the tile-microkernel path
     /// and the tests consume.
@@ -211,42 +245,52 @@ impl HadaCorePlan {
             panic!("Hadamard size must be B * 2^k with B in {{1, 12, 20, 28, 40}}, got {n}")
         });
         let (m, r) = if pow2 > 1 { factor_16(pow2) } else { (0, 0) };
-        let mut fused_chunk = None;
-        let mut strides = Vec::new();
-        let mut small_inner = None;
-        if pow2 >= 16 {
+        let mut rounds = Vec::new();
+        if pow2 > 1 && pow2 < 16 {
+            rounds.push(Pow2Round::Small { size: pow2, inner: 1 });
+        } else if pow2 >= 16 {
             match cfg.residual {
                 ResidualMode::BlockDiagonal => {
                     if m > 0 {
-                        fused_chunk = Some(((1usize << m) * 16).min(pow2));
+                        rounds.push(Pow2Round::Contiguous {
+                            chunk: ((1usize << m) * 16).min(pow2),
+                        });
                         for i in 1..r {
-                            strides.push((1usize << m) * 16usize.pow(i));
+                            rounds.push(Pow2Round::Strided {
+                                inner: (1usize << m) * 16usize.pow(i),
+                            });
                         }
                     } else {
+                        rounds.push(Pow2Round::Contiguous { chunk: 16 });
                         for i in 1..r {
-                            strides.push(16usize.pow(i));
+                            rounds.push(Pow2Round::Strided { inner: 16usize.pow(i) });
                         }
                     }
                 }
                 ResidualMode::SmallFactor => {
+                    rounds.push(Pow2Round::Contiguous { chunk: 16 });
                     for i in 1..r {
-                        strides.push(16usize.pow(i));
+                        rounds.push(Pow2Round::Strided { inner: 16usize.pow(i) });
                     }
                     if m > 0 {
-                        small_inner = Some(16usize.pow(r));
+                        rounds.push(Pow2Round::Small {
+                            size: 1 << m,
+                            inner: 16usize.pow(r),
+                        });
                     }
                 }
             }
         }
+        debug_assert!(
+            rounds.windows(2).all(|w| w[1].block_len() % w[0].block_len() == 0),
+            "round blocks must nest for fusion to be exact"
+        );
         HadaCorePlan {
             n,
             base,
             pow2,
-            m,
             residual: cfg.residual,
-            fused_chunk,
-            strides,
-            small_inner,
+            rounds,
             bd: block_diagonal(m),
         }
     }
@@ -267,19 +311,50 @@ impl HadaCorePlan {
     }
 
     /// Number of memory passes over the buffer the planned execution
-    /// makes. One less than the paper's `ceil(log16 n)` logical round
-    /// count when the §Perf fused round-0 applies (the BD residual and
-    /// the first 16-round share one pass); non-power-of-two sizes add
-    /// one leading base-matrix pass.
+    /// makes at fusion depth 1. One less than the paper's `ceil(log16 n)`
+    /// logical round count when the §Perf fused round-0 applies (the BD
+    /// residual and the first 16-round share one pass); non-power-of-two
+    /// sizes add one leading base-matrix pass.
     pub fn passes(&self) -> usize {
+        self.passes_at(1)
+    }
+
+    /// Memory passes over the buffer at fusion depth `depth`: the base
+    /// pass (if any) plus `ceil(rounds / depth)` fused traversals. The
+    /// quantity the [`crate::exec::tune`] cost model minimises.
+    pub fn passes_at(&self, depth: usize) -> usize {
+        let depth = depth.max(1);
         let base_pass = usize::from(self.base > 1);
-        if self.pow2 == 1 {
+        if self.rounds.is_empty() {
             return base_pass.max(1);
         }
-        if self.pow2 < 16 {
-            return base_pass + 1;
-        }
-        base_pass + 1 + self.strides.len() + usize::from(self.small_inner.is_some())
+        base_pass + (self.rounds.len() + depth - 1) / depth
+    }
+
+    /// The pow2 round schedule, in execution order.
+    pub fn rounds(&self) -> &[Pow2Round] {
+        &self.rounds
+    }
+
+    /// Largest fusion depth that changes anything for this size: the
+    /// pow2 round count (at least 1). Depths above this are clamped by
+    /// the executor.
+    pub fn max_fusion_depth(&self) -> usize {
+        self.rounds.len().max(1)
+    }
+
+    /// Fused-tile working set at `depth` in elements: the block length
+    /// of the last round in the largest *fused* (≥ 2 rounds) group —
+    /// the contiguous span a fused traversal must keep cache-hot for
+    /// the saved passes to be real. `0` when no group fuses (depth 1,
+    /// or fewer than 2 rounds).
+    pub fn fused_tile_elems(&self, depth: usize) -> usize {
+        self.rounds
+            .chunks(depth.max(1))
+            .filter(|g| g.len() > 1)
+            .map(|g| g[g.len() - 1].block_len())
+            .max()
+            .unwrap_or(0)
     }
 
     /// The cached §3.3 residual factor table (`I kron H_{2^m}`).
@@ -291,7 +366,8 @@ impl HadaCorePlan {
 /// In-place HadaCore FWHT driven by a precomputed [`HadaCorePlan`].
 ///
 /// Bit-identical to [`fwht_hadacore_f32_cfg`] with the configuration the
-/// plan was built from; the batch engine's hot path.
+/// plan was built from; equivalent to
+/// [`fwht_hadacore_f32_planned_depth`] at depth 1.
 ///
 /// Panics if `data.len()` is not a multiple of the plan's `n`.
 pub fn fwht_hadacore_f32_planned(
@@ -299,40 +375,76 @@ pub fn fwht_hadacore_f32_planned(
     plan: &HadaCorePlan,
     opts: &FwhtOptions,
 ) {
+    fwht_hadacore_f32_planned_depth(data, plan, opts, 1);
+}
+
+/// [`fwht_hadacore_f32_planned`] with **round fusion**: consecutive
+/// groups of `depth` pow2 rounds execute per cache-blocked tile (one
+/// read + one write of the tile for the whole group) instead of one
+/// full traversal of the buffer per round — the in-register chaining of
+/// the paper's CUDA kernel mapped onto the CPU cache hierarchy. The
+/// batch engine's hot path; `depth` is picked by [`crate::exec::tune`].
+///
+/// **Bit-for-bit identical to every other depth** (and to
+/// [`fwht_hadacore_f32_cfg`]): each pass operates independently on
+/// contiguous aligned blocks and each block divides the next pass's
+/// block ([`Pow2Round`]), so fusion only reorders work across disjoint
+/// tiles — the per-element f32 operation sequence never changes.
+/// Depths are clamped to `[1, plan.max_fusion_depth()]`.
+///
+/// Panics if `data.len()` is not a multiple of the plan's `n`.
+pub fn fwht_hadacore_f32_planned_depth(
+    data: &mut [f32],
+    plan: &HadaCorePlan,
+    opts: &FwhtOptions,
+    depth: usize,
+) {
     let n = plan.n;
-    let rows = validate_dims(data.len(), n).expect("invalid dimensions");
+    validate_dims(data.len(), n).expect("invalid dimensions");
     if plan.base > 1 {
         let hb = hadamard_base(plan.base);
         for row in data.chunks_exact_mut(n) {
             left_mul_base_strided(row, plan.base, plan.pow2, hb);
         }
     }
-    let m = plan.pow2;
-    let sub_rows = rows * plan.base;
-    if m == 1 {
-        apply_scale(data, opts.scale);
-        return;
-    }
-    if m < 16 {
-        for row in data.chunks_exact_mut(m) {
-            left_mul_small_strided_fast(row, m, 1);
-        }
-        apply_scale(data, opts.scale);
-        return;
-    }
-    match plan.fused_chunk {
-        Some(chunk) => right_mul_fused_chunk_fast(data, chunk),
-        None => right_mul_h16_fast(data),
-    }
-    for &inner in &plan.strides {
-        strided_round(data, sub_rows, m, inner);
-    }
-    if let Some(inner) = plan.small_inner {
-        for row in data.chunks_exact_mut(m) {
-            left_mul_small_strided_fast(row, 1 << plan.m, inner);
+    let depth = depth.clamp(1, plan.rounds.len().max(1));
+    for group in plan.rounds.chunks(depth) {
+        // the whole buffer is a multiple of every round's block length
+        // (blocks nest and divide the pow2 row), so tiling by the last
+        // round's block is exact
+        let tile = group[group.len() - 1].block_len();
+        for tile_buf in data.chunks_exact_mut(tile) {
+            for round in group {
+                apply_pow2_round(tile_buf, *round);
+            }
         }
     }
     apply_scale(data, opts.scale);
+}
+
+/// Execute one [`Pow2Round`] over a buffer that is a whole multiple of
+/// the round's block length (a fused tile or the full batch).
+#[inline]
+fn apply_pow2_round(buf: &mut [f32], round: Pow2Round) {
+    match round {
+        Pow2Round::Contiguous { chunk } => {
+            if chunk == 16 {
+                right_mul_h16_fast(buf);
+            } else {
+                right_mul_fused_chunk_fast(buf, chunk);
+            }
+        }
+        Pow2Round::Strided { inner } => {
+            for block in buf.chunks_exact_mut(16 * inner) {
+                left_mul_h16_strided_fast(block, inner);
+            }
+        }
+        Pow2Round::Small { size, inner } => {
+            for block in buf.chunks_exact_mut(size * inner) {
+                left_mul_small_strided_fast(block, size, inner);
+            }
+        }
+    }
 }
 
 /// One 16-round on the axis with inner stride `inner` (> 1): for every row
@@ -612,6 +724,84 @@ mod tests {
         assert_eq!(HadaCorePlan::new(12, &cfg).passes(), 1);
         // base + small pow2 (24 = 12 * 2): base pass + small round
         assert_eq!(HadaCorePlan::new(24, &cfg).passes(), 2);
+    }
+
+    #[test]
+    fn fused_depths_are_bit_identical_to_depth_1() {
+        // the tentpole invariant: round fusion is a traversal reordering,
+        // never an arithmetic reassociation — every depth must reproduce
+        // the unfused output bit for bit, at every size family member
+        let mut rng = Rng::new(0xF0);
+        for cfg in [
+            HadaCoreConfig { residual: ResidualMode::BlockDiagonal },
+            HadaCoreConfig { residual: ResidualMode::SmallFactor },
+        ] {
+            for n in [
+                16usize, 32, 256, 512, 2048, 4096, 8192, 32768, 24, 768, 5120,
+                14336, 40960,
+            ] {
+                let rows = if n > 4096 { 2 } else { 3 };
+                let x = rng.normal_vec(rows * n);
+                let opts = FwhtOptions::normalized(n);
+                let plan = HadaCorePlan::new(n, &cfg);
+                let mut reference = x.clone();
+                fwht_hadacore_f32_cfg(&mut reference, n, &opts, &cfg);
+                for depth in 1..=plan.max_fusion_depth() + 1 {
+                    let mut fused = x.clone();
+                    fwht_hadacore_f32_planned_depth(&mut fused, &plan, &opts, depth);
+                    assert_eq!(
+                        reference, fused,
+                        "n={n} depth={depth} cfg={cfg:?}: fusion drifted"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_schedule_blocks_nest_and_tile_model_is_sane() {
+        let cfg = HadaCoreConfig::default();
+        for n in [256usize, 512, 4096, 8192, 32768, 768, 14336, 40960] {
+            let plan = HadaCorePlan::new(n, &cfg);
+            let rounds = plan.rounds();
+            assert!(!rounds.is_empty());
+            for w in rounds.windows(2) {
+                assert_eq!(
+                    w[1].block_len() % w[0].block_len(),
+                    0,
+                    "n={n}: blocks must nest"
+                );
+            }
+            // depth 1 fuses nothing; max depth fuses everything into one
+            // traversal whose tile is the last round's block
+            assert_eq!(plan.fused_tile_elems(1), 0, "n={n}");
+            if rounds.len() > 1 {
+                assert_eq!(
+                    plan.fused_tile_elems(plan.max_fusion_depth()),
+                    rounds[rounds.len() - 1].block_len(),
+                    "n={n}"
+                );
+            }
+            // pass count shrinks with depth exactly as ceil(rounds/depth)
+            let base_pass = usize::from(plan.base() > 1);
+            for d in 1..=rounds.len() {
+                assert_eq!(
+                    plan.passes_at(d),
+                    base_pass + (rounds.len() + d - 1) / d,
+                    "n={n} d={d}"
+                );
+            }
+        }
+        // 8192 = 2^13 = 2 * 16^3 (BD): fused round 0 + two strided rounds
+        let p = HadaCorePlan::new(8192, &cfg);
+        assert_eq!(p.rounds().len(), 3);
+        assert_eq!(p.passes_at(3), 1);
+        assert_eq!(p.max_fusion_depth(), 3);
+        // depth 2 groups [round0, strided(inner=32)] + [strided(inner=512)]:
+        // the only fused group's tile is the inner=32 round's block, 16*32
+        assert_eq!(p.fused_tile_elems(2), 512);
+        // depth 3 fuses all three rounds; the tile is the whole pow2 row
+        assert_eq!(p.fused_tile_elems(3), 8192);
     }
 
     #[test]

@@ -106,6 +106,22 @@ impl ServingWorkload {
         }
         data
     }
+
+    /// [`ServingWorkload::next_matrix`] narrowed to a 16-bit (or `f32`)
+    /// storage dtype — the payload shape the autotuner benches and the
+    /// accuracy studies sweep. Consumes exactly the randomness of one
+    /// `next_matrix` call, so an f32 stream and its narrowed twin stay
+    /// in lockstep for a given seed.
+    pub fn next_matrix_as<E: crate::util::f16::Element>(
+        &mut self,
+        rows: usize,
+        n: usize,
+    ) -> Vec<E> {
+        self.next_matrix(rows, n)
+            .into_iter()
+            .map(E::from_f32)
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +159,20 @@ mod tests {
         assert_eq!(ma.len(), 7 * 128);
         assert_eq!(ma, mb);
         assert!(ma.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn matrix_dtype_twins_stay_in_lockstep() {
+        use crate::util::f16::{Element, F16};
+        let mut a = ServingWorkload::new(WorkloadConfig::default());
+        let mut b = ServingWorkload::new(WorkloadConfig::default());
+        let m32 = a.next_matrix(5, 128);
+        let m16: Vec<F16> = b.next_matrix_as(5, 128);
+        for (x, h) in m32.iter().zip(m16.iter()) {
+            assert_eq!(F16::from_f32(*x), *h);
+        }
+        // both streams consumed the same randomness: next draws agree
+        assert_eq!(a.next_matrix(2, 64), b.next_matrix(2, 64));
     }
 
     #[test]

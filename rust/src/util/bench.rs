@@ -4,9 +4,17 @@
 //! evaluation needs — median / mean / MAD over repeated timed batches with
 //! black-box protection — and a stable text report format that the bench
 //! binaries (`cargo bench`, `harness = false`) print.
+//!
+//! [`BenchJson`] adds the machine-readable side: bench binaries collect
+//! one [`BenchRecord`] per measured case and emit a `BENCH_PR4.json`
+//! document (schema `hadacore-bench-v1`), giving the repo a perf
+//! trajectory that CI can archive and diff across commits instead of
+//! scraping stdout. `HADACORE_BENCH_JSON` overrides the output path.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Result statistics for one benchmark case (all values in nanoseconds).
 #[derive(Clone, Debug)]
@@ -136,6 +144,188 @@ pub fn run_case<T>(name: &str, cfg: &BenchConfig, f: impl FnMut(u64) -> T) -> St
     s
 }
 
+// ---------------------------------------------------------------------
+// Machine-readable bench output (BENCH_PR4.json).
+
+/// Schema identifier written into every emitted document; bump on any
+/// incompatible field change.
+pub const BENCH_SCHEMA: &str = "hadacore-bench-v1";
+
+/// Per-entry fields every consumer may rely on (also what
+/// [`validate_bench_json`] checks).
+pub const REQUIRED_ENTRY_KEYS: [&str; 8] = [
+    "bench",
+    "kernel",
+    "n",
+    "rows",
+    "dtype",
+    "fusion_depth",
+    "median_ns",
+    "melems_per_s",
+];
+
+/// One measured configuration: a [`Stats`] plus the workload coordinates
+/// (size × kernel × fusion depth × dtype) the perf trajectory indexes by.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Section of the bench binary (e.g. `"fusion_sweep"`).
+    pub bench: String,
+    /// Kernel name (`scalar` | `dao` | `hadacore`).
+    pub kernel: String,
+    /// Transform size.
+    pub n: usize,
+    /// Rows per batch.
+    pub rows: usize,
+    /// Storage dtype name (`float32` | `float16` | `bfloat16`).
+    pub dtype: String,
+    /// Round-fusion depth the case executed with (1 = unfused).
+    pub fusion_depth: usize,
+    /// Engine lanes used by the case (0 = direct kernel call).
+    pub threads: usize,
+    /// Robust timing statistics of one iteration.
+    pub stats: Stats,
+    /// Throughput in mega-elements per second (`rows * n / median`).
+    pub melems_per_s: f64,
+}
+
+impl BenchRecord {
+    /// Build a record from a measured [`Stats`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        bench: &str,
+        kernel: &str,
+        n: usize,
+        rows: usize,
+        dtype: &str,
+        fusion_depth: usize,
+        threads: usize,
+        stats: Stats,
+    ) -> BenchRecord {
+        let elems = (rows * n) as f64;
+        let melems_per_s = elems / stats.median_ns.max(1e-9) * 1e3;
+        BenchRecord {
+            bench: bench.to_string(),
+            kernel: kernel.to_string(),
+            n,
+            rows,
+            dtype: dtype.to_string(),
+            fusion_depth,
+            threads,
+            stats,
+            melems_per_s,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(self.bench.clone())),
+            ("kernel", Json::str(self.kernel.clone())),
+            ("n", Json::num(self.n as f64)),
+            ("rows", Json::num(self.rows as f64)),
+            ("dtype", Json::str(self.dtype.clone())),
+            ("fusion_depth", Json::num(self.fusion_depth as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("median_ns", Json::num(self.stats.median_ns)),
+            ("min_ns", Json::num(self.stats.min_ns)),
+            ("mad_ns", Json::num(self.stats.mad_ns)),
+            ("iters", Json::num(self.stats.iters as f64)),
+            ("samples", Json::num(self.stats.samples as f64)),
+            ("melems_per_s", Json::num(self.melems_per_s)),
+        ])
+    }
+}
+
+/// Collector for a bench binary's machine-readable output.
+#[derive(Default)]
+pub struct BenchJson {
+    records: Vec<BenchRecord>,
+}
+
+impl BenchJson {
+    /// Empty collector.
+    pub fn new() -> BenchJson {
+        BenchJson::default()
+    }
+
+    /// Add one measured case.
+    pub fn push(&mut self, record: BenchRecord) {
+        self.records.push(record);
+    }
+
+    /// Records collected so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The emitted document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(BENCH_SCHEMA)),
+            ("entries", Json::Arr(self.records.iter().map(BenchRecord::to_json).collect())),
+        ])
+    }
+
+    /// Resolve the output path: `HADACORE_BENCH_JSON` env override, else
+    /// `default_path` (bench binaries pass `"BENCH_PR4.json"`, which
+    /// lands in the cargo working directory — `rust/`).
+    pub fn output_path(default_path: &str) -> String {
+        std::env::var("HADACORE_BENCH_JSON").unwrap_or_else(|_| default_path.to_string())
+    }
+
+    /// Write the document (pretty-printed) and re-validate it from disk,
+    /// so a bench run can never leave a malformed trajectory file behind.
+    /// Returns the entry count on success.
+    pub fn write(&self, path: &str) -> Result<usize, String> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(|e| format!("write {path}: {e}"))?;
+        validate_bench_json(path)
+    }
+}
+
+/// Validate an emitted bench JSON file: parses, checks the schema tag,
+/// requires a non-empty `entries` array, and checks every entry carries
+/// the [`REQUIRED_ENTRY_KEYS`] with the right types and positive
+/// throughput. Returns the entry count. Used by the bench binaries after
+/// writing and by the CI smoke step.
+pub fn validate_bench_json(path: &str) -> Result<usize, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    if doc.get("schema").and_then(Json::as_str) != Some(BENCH_SCHEMA) {
+        return Err(format!("{path}: missing or unknown schema tag"));
+    }
+    let entries = doc
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{path}: entries must be an array"))?;
+    if entries.is_empty() {
+        return Err(format!("{path}: entries array is empty"));
+    }
+    for (i, e) in entries.iter().enumerate() {
+        for key in REQUIRED_ENTRY_KEYS {
+            let v = e
+                .get(key)
+                .ok_or_else(|| format!("{path}: entry {i} missing '{key}'"))?;
+            let ok = match key {
+                "bench" | "kernel" | "dtype" => v.as_str().is_some(),
+                "n" | "rows" | "fusion_depth" => {
+                    v.as_usize().is_some_and(|u| u >= 1)
+                }
+                _ => v.as_f64().is_some_and(|f| f > 0.0),
+            };
+            if !ok {
+                return Err(format!("{path}: entry {i} has invalid '{key}'"));
+            }
+        }
+    }
+    Ok(entries.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +357,119 @@ mod tests {
         assert!(s.median_ns > 0.0);
         assert!(s.min_ns <= s.median_ns);
         assert!(s.iters >= 1);
+    }
+
+    fn stats_fixture(median_ns: f64) -> Stats {
+        Stats {
+            name: "case".into(),
+            iters: 100,
+            samples: 6,
+            mean_ns: median_ns * 1.1,
+            median_ns,
+            min_ns: median_ns * 0.9,
+            mad_ns: median_ns * 0.05,
+        }
+    }
+
+    #[test]
+    fn bench_json_roundtrips_and_validates() {
+        let mut out = BenchJson::new();
+        out.push(BenchRecord::new(
+            "fusion_sweep",
+            "hadacore",
+            4096,
+            512,
+            "float32",
+            2,
+            8,
+            stats_fixture(1_000_000.0),
+        ));
+        out.push(BenchRecord::new(
+            "fusion_sweep",
+            "dao",
+            256,
+            8192,
+            "float16",
+            1,
+            0,
+            stats_fixture(2_000_000.0),
+        ));
+        assert_eq!(out.len(), 2);
+        let path = std::env::temp_dir()
+            .join(format!("hc_bench_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        assert_eq!(out.write(&path).unwrap(), 2);
+        assert_eq!(validate_bench_json(&path).unwrap(), 2);
+
+        // throughput math: rows*n elems over the median
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let entries = doc.get("entries").unwrap().as_arr().unwrap();
+        let mps = entries[0].get("melems_per_s").unwrap().as_f64().unwrap();
+        assert!((mps - (512.0 * 4096.0) / 1e6 * 1e3).abs() < 1e-6, "{mps}");
+        assert_eq!(
+            entries[0].get("fusion_depth").unwrap().as_usize(),
+            Some(2)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_json_validation_rejects_malformed_documents() {
+        let dir = std::env::temp_dir();
+        let cases = [
+            ("empty", "{}".to_string()),
+            (
+                "bad_schema",
+                r#"{"schema": "nope", "entries": []}"#.to_string(),
+            ),
+            (
+                "no_entries",
+                format!(r#"{{"schema": "{BENCH_SCHEMA}", "entries": []}}"#),
+            ),
+            (
+                "missing_key",
+                format!(
+                    r#"{{"schema": "{BENCH_SCHEMA}", "entries": [{{"bench": "x"}}]}}"#
+                ),
+            ),
+            (
+                "zero_throughput",
+                format!(
+                    r#"{{"schema": "{BENCH_SCHEMA}", "entries": [{{
+                        "bench": "x", "kernel": "dao", "n": 256, "rows": 1,
+                        "dtype": "float32", "fusion_depth": 1,
+                        "median_ns": 1.0, "melems_per_s": 0}}]}}"#
+                ),
+            ),
+        ];
+        for (name, text) in cases {
+            let path = dir
+                .join(format!("hc_badbench_{}_{name}.json", std::process::id()))
+                .to_string_lossy()
+                .into_owned();
+            std::fs::write(&path, text).unwrap();
+            assert!(validate_bench_json(&path).is_err(), "{name} must fail");
+            std::fs::remove_file(&path).ok();
+        }
+        // writing an empty collector must also fail loudly
+        let path = dir
+            .join(format!("hc_emptybench_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        assert!(BenchJson::new().write(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_json_env_override_controls_the_path() {
+        // read-only check of the resolution rule (no env mutation: tests
+        // share the process)
+        assert_eq!(
+            BenchJson::output_path("BENCH_PR4.json"),
+            std::env::var("HADACORE_BENCH_JSON")
+                .unwrap_or_else(|_| "BENCH_PR4.json".to_string())
+        );
     }
 
     #[test]

@@ -55,6 +55,33 @@ pub fn assert_close(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
     }
 }
 
+/// Draw a random transform size from the full supported `B * 2^k`
+/// family: any base in {1, 12, 20, 28, 40} with `2^k` up to
+/// `2^max_pow2` (bases > 1 require k ≥ 2 only when reached via the odd
+/// part — the family itself admits any k ≥ 0 for the canonical bases,
+/// mirroring [`crate::hadamard::matrices::split_base`]). The driver for
+/// differential fuzzing across every kernel path.
+pub fn random_supported_size(rng: &mut Rng, max_pow2: u32) -> usize {
+    let base = [1usize, 12, 20, 28, 40][rng.below(5)];
+    let k = rng.range(0, max_pow2 as usize) as u32;
+    let n = base << k;
+    debug_assert!(
+        crate::hadamard::matrices::is_supported_size(n),
+        "generated unsupported size {n}"
+    );
+    n
+}
+
+/// Integer-valued f32 payload in `[-amp, amp]`. With the raw (scale = 1)
+/// transform every kernel's arithmetic is exact as long as
+/// `n * amp < 2^24`, so cross-kernel comparisons can assert **bit
+/// equality**, not tolerances — the strongest differential oracle.
+pub fn integer_vec(rng: &mut Rng, len: usize, amp: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| rng.below(2 * amp + 1) as f32 - amp as f32)
+        .collect()
+}
+
 /// Max absolute difference between two slices.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter()
@@ -104,5 +131,29 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn close_rejects_length_mismatch() {
         assert_close(&[1.0], &[1.0, 2.0], 0.1, 0.1);
+    }
+
+    #[test]
+    fn random_sizes_are_always_supported_and_cover_bases() {
+        let mut rng = Rng::new(0x51);
+        let mut bases = std::collections::HashSet::new();
+        for _ in 0..300 {
+            let n = random_supported_size(&mut rng, 6);
+            assert!(crate::hadamard::matrices::is_supported_size(n), "n={n}");
+            assert!(n <= 40 << 6);
+            bases.insert(crate::hadamard::matrices::split_base(n).unwrap().0);
+        }
+        assert!(bases.len() >= 4, "all canonical bases should appear: {bases:?}");
+    }
+
+    #[test]
+    fn integer_vec_is_integral_and_bounded() {
+        let mut rng = Rng::new(0x52);
+        let v = integer_vec(&mut rng, 1000, 4);
+        for x in &v {
+            assert_eq!(*x, x.round());
+            assert!(x.abs() <= 4.0);
+        }
+        assert!(v.iter().any(|x| *x != v[0]), "degenerate stream");
     }
 }

@@ -1,0 +1,163 @@
+//! Paper §4.2 numerics: 16-bit transform accuracy against the dense f32
+//! reference (`matvec_hadamard_n`), across the supported size family.
+//!
+//! ## Threshold derivation (why these exact bounds)
+//!
+//! The 16-bit path computes: narrow input to E ∈ {f16, bf16} (exact —
+//! the inputs below are already E-representable), widen to f32 (exact),
+//! transform in f32, narrow the result once with round-to-nearest-even.
+//! Against the dense reference on the *same widened inputs* the error
+//! has two parts:
+//!
+//! 1. **f32 compute error**: the FWHT is `log2(n)` levels of adds/subs;
+//!    with the orthonormal scale each output is an average of `n` inputs
+//!    with ±1 signs, so the accumulated relative error is
+//!    ≤ ~`log2(n) · 2^-24` — at n = 16384 that is ~6e-7, two orders of
+//!    magnitude below either storage format's rounding step. Negligible.
+//! 2. **the final narrowing**: one round-to-nearest-even, bounded by
+//!    half an ULP of the result — relative error ≤ `2^-11` for f16
+//!    (10 fraction bits) and ≤ `2^-8` for bf16 (7 fraction bits).
+//!
+//! Individual outputs can be arbitrarily close to zero (cancellation),
+//! where *pointwise* relative error is meaningless — the standard
+//! metric (Markidis et al.'s tensor-core precision methodology) is the
+//! max absolute error **relative to the output's max magnitude**, whose
+//! narrowing bound is the same half-ULP-at-amax. Budget: narrowing
+//! (2^-11 / 2^-8) + compute (≤ 2^-20 after the amax normalisation)
+//! with 2× headroom for the error of the *reference* rounding and the
+//! outlier-heavy payloads:
+//!
+//! * f16:  2 · 2^-11 ≈ 9.8e-4
+//! * bf16: 2 · 2^-8  ≈ 7.8e-3
+//!
+//! A genuine algorithmic regression (a dropped round, a wrong residual
+//! factor) produces errors at the 1e-1..1e0 scale — orders of magnitude
+//! above these gates.
+
+use hadacore::exec::ExecEngine;
+use hadacore::hadamard::matrices::matvec_hadamard_n;
+use hadacore::hadamard::{FwhtOptions, KernelKind};
+use hadacore::util::f16::{DType, Element, BF16, F16};
+use hadacore::util::rng::Rng;
+
+/// The supported-size family under test: powers of two across the
+/// paper's range plus every non-power-of-two base (12·64, 20·256,
+/// 28·512 — the Llama-3 8B FFN dim).
+const FAMILY: [usize; 7] = [256, 1024, 4096, 16384, 768, 5120, 14336];
+
+/// Max |got − want| / max|want| of one row, in f64.
+fn rel_to_amax(got: &[f32], want: &[f32]) -> f64 {
+    let amax = want.iter().fold(0.0f64, |m, v| m.max((*v as f64).abs()));
+    let maxdiff = got
+        .iter()
+        .zip(want)
+        .fold(0.0f64, |m, (g, w)| m.max((*g as f64 - *w as f64).abs()));
+    maxdiff / amax.max(1e-300)
+}
+
+/// Threshold for a dtype (derived in the module header).
+fn threshold(dtype: DType) -> f64 {
+    match dtype {
+        DType::F16 => 2.0 * (2f64).powi(-11),
+        DType::BF16 => 2.0 * (2f64).powi(-8),
+        DType::F32 => unreachable!("16-bit test"),
+    }
+}
+
+fn check_dtype<E: Element + hadacore::exec::ExecElement>(dtype: DType) {
+    let mut rng = Rng::new(0xACC ^ dtype.size_bytes() as u64);
+    let engine = ExecEngine::default();
+    let mut worst: (f64, usize) = (0.0, 0);
+    for n in FAMILY {
+        // outlier-bearing payload (the activation regime the rotation
+        // targets), pre-narrowed so the 16-bit input is exact
+        let raw: Vec<f32> = (0..n).map(|_| rng.outlier_normal(0.05, 30.0)).collect();
+        let narrowed: Vec<E> = raw.iter().map(|&v| E::from_f32(v)).collect();
+        let widened: Vec<f32> = narrowed.iter().map(|v| v.to_f32()).collect();
+
+        // dense f32 reference on the widened input, orthonormal scale
+        let mut want = vec![0.0f32; n];
+        matvec_hadamard_n(&widened, n, &mut want);
+        let scale = 1.0 / (n as f32).sqrt();
+        for v in want.iter_mut() {
+            *v *= scale;
+        }
+
+        // the 16-bit serving path (engine, autotuned) end to end
+        let mut got16 = narrowed;
+        engine.run(KernelKind::HadaCore, &mut got16, n, &FwhtOptions::normalized(n));
+        let got: Vec<f32> = got16.iter().map(|v| v.to_f32()).collect();
+
+        let err = rel_to_amax(&got, &want);
+        let gate = threshold(dtype);
+        assert!(
+            err <= gate,
+            "{} n={n}: max rel-to-amax error {err:.3e} exceeds the derived \
+             bound {gate:.3e}",
+            dtype.name()
+        );
+        if err > worst.0 {
+            worst = (err, n);
+        }
+    }
+    // the bound must also not be vacuous: a real 16-bit rounding error
+    // should show up within two decades of the gate at some size
+    assert!(
+        worst.0 > threshold(dtype) / 100.0,
+        "{}: worst error {:.3e} implausibly small — is the 16-bit path \
+         actually narrowing? (worst at n={})",
+        dtype.name(),
+        worst.0,
+        worst.1
+    );
+}
+
+#[test]
+fn f16_transform_error_is_bounded_by_the_derived_threshold() {
+    check_dtype::<F16>(DType::F16);
+}
+
+#[test]
+fn bf16_transform_error_is_bounded_by_the_derived_threshold() {
+    check_dtype::<BF16>(DType::BF16);
+}
+
+#[test]
+fn f16_error_grows_with_format_coarseness() {
+    // sanity on the derivation's ordering: at the same payload, bf16's
+    // coarser fraction must produce a larger (or equal) error than f16
+    let n = 4096;
+    let mut rng = Rng::new(0xACC2);
+    let raw: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let engine = ExecEngine::single_threaded();
+
+    let mut err = [0.0f64; 2];
+    for (slot, coarse) in [(0usize, false), (1, true)] {
+        let (widened, got): (Vec<f32>, Vec<f32>) = if coarse {
+            let x: Vec<BF16> = raw.iter().map(|&v| BF16::from_f32(v)).collect();
+            let w = x.iter().map(|v| v.to_f32()).collect();
+            let mut d = x;
+            engine.run(KernelKind::HadaCore, &mut d, n, &FwhtOptions::normalized(n));
+            (w, d.iter().map(|v| v.to_f32()).collect())
+        } else {
+            let x: Vec<F16> = raw.iter().map(|&v| F16::from_f32(v)).collect();
+            let w = x.iter().map(|v| v.to_f32()).collect();
+            let mut d = x;
+            engine.run(KernelKind::HadaCore, &mut d, n, &FwhtOptions::normalized(n));
+            (w, d.iter().map(|v| v.to_f32()).collect())
+        };
+        let mut want = vec![0.0f32; n];
+        matvec_hadamard_n(&widened, n, &mut want);
+        let scale = 1.0 / (n as f32).sqrt();
+        for v in want.iter_mut() {
+            *v *= scale;
+        }
+        err[slot] = rel_to_amax(&got, &want);
+    }
+    assert!(
+        err[1] >= err[0],
+        "bf16 error {:.3e} should dominate f16 error {:.3e}",
+        err[1],
+        err[0]
+    );
+}

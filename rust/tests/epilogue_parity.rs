@@ -14,7 +14,7 @@
 //! values is exact under any association, so sharding must not change a
 //! single bit.
 
-use hadacore::exec::{ExecConfig, ExecEngine, ExecElement};
+use hadacore::exec::{ExecConfig, ExecEngine, ExecElement, TunePolicy};
 use hadacore::hadamard::{FwhtOptions, KernelKind};
 use hadacore::quant::{
     fp8_quantize_slice, int_quantize_grouped, Epilogue, Fp8Format, IntBits,
@@ -23,9 +23,11 @@ use hadacore::quant::{
 use hadacore::util::f16::{Element, BF16, F16};
 use hadacore::util::rng::Rng;
 
-/// Lane configurations under test: no pool, a typical pool, and a
+/// Lane configurations under test: no pool, a typical pool, a
 /// deliberately aggressive sharder (tiny chunks => many chunk
-/// boundaries, so the two-phase reduction crosses many workers).
+/// boundaries, so the two-phase reduction crosses many workers), and
+/// pinned round-fusion depths — the fused-rounds + fused-epilogue
+/// combination must stay bit-identical to the unfused reference too.
 fn engines() -> Vec<(&'static str, ExecEngine)> {
     vec![
         ("t1", ExecEngine::single_threaded()),
@@ -35,6 +37,7 @@ fn engines() -> Vec<(&'static str, ExecEngine)> {
                 threads: 4,
                 chunks_per_thread: 2,
                 min_chunk_elems: 2048,
+                ..ExecConfig::default()
             }),
         ),
         (
@@ -43,6 +46,25 @@ fn engines() -> Vec<(&'static str, ExecEngine)> {
                 threads: 8,
                 chunks_per_thread: 4,
                 min_chunk_elems: 256,
+                ..ExecConfig::default()
+            }),
+        ),
+        (
+            "t4-d2",
+            ExecEngine::new(ExecConfig {
+                threads: 4,
+                chunks_per_thread: 2,
+                min_chunk_elems: 512,
+                tune: TunePolicy::FixedDepth(2),
+            }),
+        ),
+        (
+            "t4-d3",
+            ExecEngine::new(ExecConfig {
+                threads: 4,
+                chunks_per_thread: 2,
+                min_chunk_elems: 512,
+                tune: TunePolicy::FixedDepth(3),
             }),
         ),
     ]
@@ -169,6 +191,7 @@ fn fused_fp8_handles_outlier_heavy_payloads() {
         threads: 8,
         chunks_per_thread: 4,
         min_chunk_elems: 256,
+        ..ExecConfig::default()
     });
     let (rows, n) = (29usize, 1024usize);
     let mut x = rng.normal_vec(rows * n);

@@ -12,16 +12,20 @@
 //! * **close to the scalar oracle** — the cross-kernel accuracy bar every
 //!   kernel already meets in unit tests, re-checked through the engine.
 
-use hadacore::exec::{ExecConfig, ExecEngine};
+use hadacore::exec::{ExecConfig, ExecEngine, TunePolicy};
 use hadacore::hadamard::{fwht_f32, fwht_generic, FwhtOptions, KernelKind};
 use hadacore::util::f16::{Element, BF16, F16};
 use hadacore::util::prop::assert_close;
 use hadacore::util::rng::Rng;
 
-/// Lane configurations under test: no pool, an odd lane count, and a
-/// deliberately aggressive sharder (tiny chunks => many boundaries).
+/// Lane configurations under test: no pool, an odd lane count, a
+/// deliberately aggressive sharder (tiny chunks => many boundaries),
+/// and every pinned round-fusion depth (the autotuned fused path must
+/// be indistinguishable from the unfused one — this is the acceptance
+/// grid for the fusion tentpole; depth 4 exceeds every plan's round
+/// count and must clamp).
 fn engines() -> Vec<(&'static str, ExecEngine)> {
-    vec![
+    let mut v = vec![
         ("t1", ExecEngine::single_threaded()),
         (
             "t3",
@@ -29,6 +33,7 @@ fn engines() -> Vec<(&'static str, ExecEngine)> {
                 threads: 3,
                 chunks_per_thread: 2,
                 min_chunk_elems: 4096,
+                ..ExecConfig::default()
             }),
         ),
         (
@@ -37,9 +42,32 @@ fn engines() -> Vec<(&'static str, ExecEngine)> {
                 threads: 8,
                 chunks_per_thread: 4,
                 min_chunk_elems: 256,
+                ..ExecConfig::default()
             }),
         ),
-    ]
+        (
+            "t1-untuned",
+            ExecEngine::new(ExecConfig {
+                threads: 1,
+                tune: TunePolicy::Off,
+                ..ExecConfig::default()
+            }),
+        ),
+    ];
+    for (name, depth) in
+        [("t4-d1", 1usize), ("t4-d2", 2), ("t4-d3", 3), ("t4-d4", 4)]
+    {
+        v.push((
+            name,
+            ExecEngine::new(ExecConfig {
+                threads: 4,
+                chunks_per_thread: 2,
+                min_chunk_elems: 1024,
+                tune: TunePolicy::FixedDepth(depth),
+            }),
+        ));
+    }
+    v
 }
 
 /// (n, rows) grid: paper sizes with row counts chosen to not divide
@@ -147,6 +175,7 @@ fn repeated_batches_stop_allocating() {
         threads: 4,
         chunks_per_thread: 2,
         min_chunk_elems: 1024,
+        ..ExecConfig::default()
     });
     let mut rng = Rng::new(0xE3);
     let (rows, n) = (64usize, 1024usize);
@@ -176,6 +205,7 @@ fn custom_scales_shard_correctly() {
         threads: 8,
         chunks_per_thread: 4,
         min_chunk_elems: 256,
+        ..ExecConfig::default()
     });
     let n = 512;
     let rows = 29;

@@ -1,0 +1,286 @@
+//! Golden-vector regression suite: transform outputs locked to
+//! checked-in digests so *silent numeric drift fails loudly*.
+//!
+//! Coverage: all kernels (scalar / dao / hadacore, plus the planned +
+//! engine hadacore paths) × sizes {256, 1024, 768 = 12·64,
+//! 5120 = 20·256, 14336 = 28·512} × dtypes {f32, f16, bf16}, under the
+//! serving-default orthonormal scale.
+//!
+//! ## Why the goldens are platform-exact
+//!
+//! Inputs are derived from the deterministic [`Rng`] (`util/rng.rs`)
+//! **raw u64 stream** mapped to dyadic rationals (`k / 2^16`,
+//! `|v| < 128`) — no transcendental functions anywhere in the input
+//! path, so the inputs are bit-identical on every platform and
+//! toolchain. The kernels then use only IEEE add/sub/mul (+ one
+//! correctly-rounded sqrt for the scale) in a deterministic order, so
+//! outputs are bit-identical too. Goldens therefore store IEEE **bit
+//! patterns** (a 16-element prefix verbatim plus an FNV-1a-64 digest of
+//! the full output), never decimal floats.
+//!
+//! ## Regenerating (`--regen` path)
+//!
+//! After an *intentional* numeric change, rewrite the golden files from
+//! the current implementation and commit the diff:
+//!
+//! ```text
+//! cargo test --test golden_vectors -- --ignored regen_golden_vectors --nocapture
+//! ```
+//!
+//! (the `regen_golden_vectors` target below; it overwrites
+//! `tests/golden/*.json` in the source tree via `CARGO_MANIFEST_DIR`).
+//! Review the diff like any other behavioural change — an unexplained
+//! digest flip is exactly what this suite exists to catch.
+
+use hadacore::exec::ExecEngine;
+use hadacore::hadamard::{fwht_f32, fwht_generic, FwhtOptions, KernelKind};
+use hadacore::util::f16::{DType, Element, BF16, F16};
+use hadacore::util::json::Json;
+use hadacore::util::rng::Rng;
+
+/// Schema tag of the golden files.
+const GOLDEN_SCHEMA: &str = "hadacore-golden-v1";
+
+/// Locked sizes: two powers of two + one of each non-power-of-two base
+/// (12·64, 20·256, 28·512 — the Llama-3 8B FFN dim).
+const GOLDEN_SIZES: [usize; 5] = [256, 1024, 768, 5120, 14336];
+
+/// Base seed; each size derives its own stream as `SEED ^ n`.
+const GOLDEN_SEED: u64 = 0x601D;
+
+/// Output-prefix elements stored verbatim (as bit patterns).
+const PREFIX_LEN: usize = 16;
+
+fn golden_rows(n: usize) -> usize {
+    if n <= 1024 {
+        3
+    } else {
+        2
+    }
+}
+
+/// Dyadic input stream: `(u64 >> 40) - 2^23` over `2^16` — exactly
+/// representable in f32 (24-bit numerators), no transcendentals.
+fn golden_input(n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(GOLDEN_SEED ^ n as u64);
+    let rows = golden_rows(n);
+    (0..rows * n)
+        .map(|_| ((rng.next_u64() >> 40) as i64 - (1 << 23)) as f32 / 65536.0)
+        .collect()
+}
+
+/// FNV-1a 64 over little-endian bytes.
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+}
+
+/// The transformed output of one (kernel, n, dtype) case, as bit
+/// patterns (u32 per element for f32, u16 widened to u32 for 16-bit).
+fn transform_bits(kind: KernelKind, n: usize, dtype: DType) -> Vec<u32> {
+    let input = golden_input(n);
+    let opts = FwhtOptions::normalized(n);
+    match dtype {
+        DType::F32 => {
+            let mut data = input;
+            fwht_f32(kind, &mut data, n, &opts);
+            data.iter().map(|v| v.to_bits()).collect()
+        }
+        DType::F16 => {
+            let mut data: Vec<F16> = input.iter().map(|&v| F16::from_f32(v)).collect();
+            fwht_generic(kind, &mut data, n, &opts);
+            data.iter().map(|v| v.0 as u32).collect()
+        }
+        DType::BF16 => {
+            let mut data: Vec<BF16> =
+                input.iter().map(|&v| BF16::from_f32(v)).collect();
+            fwht_generic(kind, &mut data, n, &opts);
+            data.iter().map(|v| v.0 as u32).collect()
+        }
+    }
+}
+
+/// Same case through the batched engine (default tuned policy) — must
+/// produce the identical bit stream.
+fn engine_bits(kind: KernelKind, n: usize, dtype: DType) -> Vec<u32> {
+    let engine = ExecEngine::default();
+    let input = golden_input(n);
+    let opts = FwhtOptions::normalized(n);
+    match dtype {
+        DType::F32 => {
+            let mut data = input;
+            engine.run_f32(kind, &mut data, n, &opts);
+            data.iter().map(|v| v.to_bits()).collect()
+        }
+        DType::F16 => {
+            let mut data: Vec<F16> = input.iter().map(|&v| F16::from_f32(v)).collect();
+            engine.run(kind, &mut data, n, &opts);
+            data.iter().map(|v| v.0 as u32).collect()
+        }
+        DType::BF16 => {
+            let mut data: Vec<BF16> =
+                input.iter().map(|&v| BF16::from_f32(v)).collect();
+            engine.run(kind, &mut data, n, &opts);
+            data.iter().map(|v| v.0 as u32).collect()
+        }
+    }
+}
+
+fn digest(bits: &[u32], dtype: DType) -> String {
+    let mut h = Fnv64::new();
+    for &b in bits {
+        match dtype {
+            DType::F32 => h.update(&b.to_le_bytes()),
+            DType::F16 | DType::BF16 => h.update(&(b as u16).to_le_bytes()),
+        }
+    }
+    format!("{:#018x}", h.0)
+}
+
+fn golden_path(dtype: DType) -> String {
+    format!(
+        "{}/tests/golden/{}.json",
+        env!("CARGO_MANIFEST_DIR"),
+        dtype.name()
+    )
+}
+
+fn entry_json(kind: KernelKind, n: usize, dtype: DType) -> Json {
+    let bits = transform_bits(kind, n, dtype);
+    Json::obj(vec![
+        ("kernel", Json::str(kind.name())),
+        ("n", Json::num(n as f64)),
+        ("rows", Json::num(golden_rows(n) as f64)),
+        ("seed", Json::num((GOLDEN_SEED ^ n as u64) as f64)),
+        (
+            "prefix_bits",
+            Json::Arr(
+                bits.iter().take(PREFIX_LEN).map(|&b| Json::num(b as f64)).collect(),
+            ),
+        ),
+        ("fnv64", Json::str(digest(&bits, dtype))),
+    ])
+}
+
+fn check_dtype(dtype: DType) {
+    let path = golden_path(dtype);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden file {path}: {e} (run the regen target — see the file header)"));
+    let doc = Json::parse(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_str),
+        Some(GOLDEN_SCHEMA),
+        "{path}: schema tag"
+    );
+    let entries = doc.get("entries").and_then(Json::as_arr).expect("entries");
+    assert_eq!(
+        entries.len(),
+        GOLDEN_SIZES.len() * KernelKind::all().len(),
+        "{path}: entry count"
+    );
+    for e in entries {
+        let kernel = e.get("kernel").and_then(Json::as_str).expect("kernel");
+        let kind = KernelKind::parse(kernel).expect("known kernel");
+        let n = e.get("n").and_then(Json::as_usize).expect("n");
+        let rows = e.get("rows").and_then(Json::as_usize).expect("rows");
+        assert_eq!(rows, golden_rows(n), "locked row count changed");
+        let want_prefix: Vec<u32> = e
+            .get("prefix_bits")
+            .and_then(Json::as_arr)
+            .expect("prefix_bits")
+            .iter()
+            .map(|v| v.as_usize().expect("bit pattern") as u32)
+            .collect();
+        let want_fnv = e.get("fnv64").and_then(Json::as_str).expect("fnv64");
+
+        let bits = transform_bits(kind, n, dtype);
+        let got_prefix = &bits[..PREFIX_LEN.min(bits.len())];
+        assert_eq!(
+            got_prefix,
+            &want_prefix[..],
+            "golden drift: {kernel} n={n} dtype={} (prefix)",
+            dtype.name()
+        );
+        assert_eq!(
+            digest(&bits, dtype),
+            want_fnv,
+            "golden drift: {kernel} n={n} dtype={} (digest) — if this \
+             change is intentional, regenerate (file header)",
+            dtype.name()
+        );
+
+        // the batched engine must serve the same bits it locked
+        assert_eq!(
+            engine_bits(kind, n, dtype),
+            bits,
+            "engine diverged from the golden path: {kernel} n={n} dtype={}",
+            dtype.name()
+        );
+    }
+}
+
+#[test]
+fn golden_vectors_f32() {
+    check_dtype(DType::F32);
+}
+
+#[test]
+fn golden_vectors_f16() {
+    check_dtype(DType::F16);
+}
+
+#[test]
+fn golden_vectors_bf16() {
+    check_dtype(DType::BF16);
+}
+
+#[test]
+fn golden_inputs_are_dyadic_and_deterministic() {
+    // the platform-exactness argument rests on these two properties
+    for n in GOLDEN_SIZES {
+        let a = golden_input(n);
+        let b = golden_input(n);
+        assert_eq!(a, b);
+        for v in &a {
+            assert!(v.abs() < 128.0);
+            // representable as k / 2^16 with |k| < 2^23: scaling back up
+            // is exact and integral
+            let k = (v * 65536.0) as i64;
+            assert_eq!(*v, k as f32 / 65536.0);
+        }
+    }
+}
+
+/// Rewrite `tests/golden/*.json` from the current implementation — the
+/// documented `--regen` path (see the file header). `#[ignore]`d so a
+/// plain `cargo test` never mutates the source tree.
+#[test]
+#[ignore = "regenerates the checked-in goldens; run explicitly after an intentional numeric change"]
+fn regen_golden_vectors() {
+    for dtype in [DType::F32, DType::F16, DType::BF16] {
+        let mut entries = Vec::new();
+        for &n in &GOLDEN_SIZES {
+            for kind in KernelKind::all() {
+                entries.push(entry_json(kind, n, dtype));
+            }
+        }
+        let doc = Json::obj(vec![
+            ("schema", Json::str(GOLDEN_SCHEMA)),
+            ("dtype", Json::str(dtype.name())),
+            ("prefix_len", Json::num(PREFIX_LEN as f64)),
+            ("entries", Json::Arr(entries)),
+        ]);
+        let path = golden_path(dtype);
+        std::fs::write(&path, doc.to_pretty()).expect("write golden file");
+        println!("regenerated {path}");
+    }
+}

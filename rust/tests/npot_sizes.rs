@@ -64,6 +64,7 @@ fn acceptance_14336_matches_dense_reference_bit_for_bit() {
         threads: 4,
         chunks_per_thread: 2,
         min_chunk_elems: 4096, // one row per chunk: both rows shard
+        ..ExecConfig::default()
     });
     let mut got = x.clone();
     engine.run_f32(KernelKind::HadaCore, &mut got, n, &opts);
@@ -78,6 +79,7 @@ fn engine_parity_across_the_npot_grid() {
         threads: 8,
         chunks_per_thread: 4,
         min_chunk_elems: 1024,
+        ..ExecConfig::default()
     });
     let mut rng = Rng::new(0xB0);
     for (n, rows) in NPOT_SHAPES {
@@ -94,6 +96,42 @@ fn engine_parity_across_the_npot_grid() {
 }
 
 #[test]
+fn fused_depths_match_dense_reference_bit_for_bit_at_npot_sizes() {
+    // the round-fusion acceptance bar on the npot grid: every pinned
+    // depth — direct planned kernel AND sharded engine — must reproduce
+    // the dense x @ H_n integer reference exactly
+    use hadacore::exec::TunePolicy;
+    use hadacore::hadamard::hadacore::{
+        fwht_hadacore_f32_planned_depth, HadaCoreConfig, HadaCorePlan,
+    };
+    let mut rng = Rng::new(0xB4);
+    for (n, rows) in [(768usize, 5usize), (5120, 3), (14336, 1)] {
+        let x = integer_payload(&mut rng, rows * n);
+        let mut want = vec![0.0f32; rows * n];
+        for r in 0..rows {
+            matvec_hadamard_n(&x[r * n..(r + 1) * n], n, &mut want[r * n..(r + 1) * n]);
+        }
+        let opts = FwhtOptions::raw();
+        let plan = HadaCorePlan::new(n, &HadaCoreConfig::default());
+        for depth in 1..=plan.max_fusion_depth() {
+            let mut direct = x.clone();
+            fwht_hadacore_f32_planned_depth(&mut direct, &plan, &opts, depth);
+            assert_eq!(direct, want, "direct n={n} depth={depth}");
+
+            let engine = ExecEngine::new(ExecConfig {
+                threads: 4,
+                chunks_per_thread: 2,
+                min_chunk_elems: 1024,
+                tune: TunePolicy::FixedDepth(depth),
+            });
+            let mut sharded = x.clone();
+            engine.run_f32(KernelKind::HadaCore, &mut sharded, n, &opts);
+            assert_eq!(sharded, want, "engine n={n} depth={depth}");
+        }
+    }
+}
+
+#[test]
 fn engine_parity_npot_16bit() {
     use hadacore::hadamard::fwht_generic;
     use hadacore::util::f16::{Element, F16};
@@ -101,6 +139,7 @@ fn engine_parity_npot_16bit() {
         threads: 4,
         chunks_per_thread: 2,
         min_chunk_elems: 1024,
+        ..ExecConfig::default()
     });
     let mut rng = Rng::new(0xB1);
     for (n, rows) in [(768usize, 17usize), (14336, 3)] {
@@ -127,6 +166,7 @@ fn fused_epilogues_bit_identical_at_npot_sizes() {
         threads: 4,
         chunks_per_thread: 2,
         min_chunk_elems: 2048,
+        ..ExecConfig::default()
     });
     let mut rng = Rng::new(0xB2);
     for (n, rows) in NPOT_SHAPES {

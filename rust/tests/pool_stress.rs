@@ -1,0 +1,222 @@
+//! Deterministic-seed concurrency stress for the worker pool: many
+//! submitting threads hammer chunk claiming and the two-phase epilogue
+//! machinery simultaneously, on an engine configured for maximal chunk
+//! churn (tiny chunks, many lanes). Catches lost updates (a chunk
+//! claimed twice / never), ordering bugs (phase 2 starting before every
+//! phase-1 chunk merged its amax), and cross-job interference (chunks
+//! of concurrent jobs writing each other's buffers).
+//!
+//! Payloads are seeded per (submitter, iteration), so every run checks
+//! the same data against the same single-threaded references — only the
+//! scheduling varies. std threads only, no new dependencies.
+
+use std::sync::Arc;
+
+use hadacore::exec::{ExecConfig, ExecEngine, TunePolicy};
+use hadacore::hadamard::{fwht_f32, FwhtOptions, KernelKind};
+use hadacore::quant::{
+    fp8_quantize_slice, int_quantize_grouped, Epilogue, Fp8Format, IntBits,
+    QuantScales,
+};
+use hadacore::util::f16::{Element, F16};
+use hadacore::util::rng::Rng;
+
+/// An engine built for churn: 8 lanes, chunks as small as one row so
+/// every batch fans into many claims with a ragged tail.
+fn churn_engine() -> Arc<ExecEngine> {
+    Arc::new(ExecEngine::new(ExecConfig {
+        threads: 8,
+        chunks_per_thread: 8,
+        min_chunk_elems: 64,
+        // pin the depth so the stress run exercises fused tiles without
+        // spending startup time in the micro-measurement
+        tune: TunePolicy::FixedDepth(2),
+    }))
+}
+
+/// Deterministic payload for (submitter, iteration): integer-valued so
+/// the raw transform is exact and a lost/duplicated chunk produces a
+/// gross integer mismatch, never a tolerance question.
+fn payload(submitter: u64, iter: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x57E5 ^ (submitter << 32) ^ iter);
+    (0..len).map(|_| rng.below(9) as f32 - 4.0).collect()
+}
+
+#[test]
+fn concurrent_submitters_hammer_chunk_claiming() {
+    // 16 submitters × 6 iterations × ragged shapes, all sharing one
+    // 8-lane pool: every response must equal the direct single-call
+    // transform bit for bit
+    let engine = churn_engine();
+    let shapes = [(37usize, 256usize), (13, 768), (29, 512), (5, 1024)];
+    std::thread::scope(|s| {
+        for submitter in 0..16u64 {
+            let engine = Arc::clone(&engine);
+            s.spawn(move || {
+                for iter in 0..6u64 {
+                    let (rows, n) = shapes[(submitter as usize + iter as usize) % shapes.len()];
+                    let x = payload(submitter, iter, rows * n);
+                    let opts = FwhtOptions::raw();
+                    let mut want = x.clone();
+                    fwht_f32(KernelKind::HadaCore, &mut want, n, &opts);
+                    let mut got = x;
+                    engine.run_f32(KernelKind::HadaCore, &mut got, n, &opts);
+                    assert_eq!(
+                        want, got,
+                        "submitter {submitter} iter {iter} {rows}x{n}"
+                    );
+                }
+            });
+        }
+    });
+    let stats = engine.stats();
+    assert!(stats.jobs > 0, "stress batches must shard: {stats:?}");
+    assert!(
+        stats.chunks > stats.jobs * 4,
+        "chunk churn expected (tiny chunks): {stats:?}"
+    );
+}
+
+#[test]
+fn concurrent_two_phase_epilogues_never_lose_or_reorder_updates() {
+    // the two-phase FP8 job is the ordering-sensitive path: phase 2's
+    // scale is only correct if *every* phase-1 chunk merged its amax
+    // before the latch opened. Hammer it from 12 submitters and check
+    // scales + bytes against the sequential reference; plant the batch
+    // amax deep in one chunk so a premature phase 2 is guaranteed to
+    // pick a wrong scale.
+    let engine = churn_engine();
+    std::thread::scope(|s| {
+        for submitter in 0..12u64 {
+            let engine = Arc::clone(&engine);
+            s.spawn(move || {
+                for iter in 0..5u64 {
+                    let (rows, n) = (23usize, 512usize);
+                    let mut x = payload(submitter, iter, rows * n);
+                    // the extreme element lands in a different chunk per
+                    // (submitter, iter)
+                    let hot = ((submitter * 7 + iter * 3) as usize) % (rows * n);
+                    x[hot] = 3.0e4;
+                    let opts = FwhtOptions::normalized(n);
+
+                    let mut want = x.clone();
+                    fwht_f32(KernelKind::HadaCore, &mut want, n, &opts);
+                    let want_scale =
+                        fp8_quantize_slice(&mut want, Fp8Format::E4M3);
+
+                    let mut got = x;
+                    let scales = engine.run_f32_with_epilogue(
+                        KernelKind::HadaCore,
+                        &mut got,
+                        n,
+                        &opts,
+                        Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+                    );
+                    assert_eq!(
+                        scales,
+                        QuantScales::PerTensor(want_scale),
+                        "submitter {submitter} iter {iter}: amax lost or \
+                         phase ordering broken"
+                    );
+                    assert_eq!(want, got, "submitter {submitter} iter {iter}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn concurrent_grouped_epilogues_write_disjoint_scale_slots() {
+    // grouped INT8 writes per-chunk scale slots through a raw pointer;
+    // concurrent jobs must never interleave slots
+    let engine = churn_engine();
+    std::thread::scope(|s| {
+        for submitter in 0..10u64 {
+            let engine = Arc::clone(&engine);
+            s.spawn(move || {
+                for iter in 0..5u64 {
+                    let (rows, n, group) = (19usize, 256usize, 32usize);
+                    let x = payload(submitter, iter, rows * n);
+                    let opts = FwhtOptions::normalized(n);
+
+                    let mut want = x.clone();
+                    fwht_f32(KernelKind::HadaCore, &mut want, n, &opts);
+                    let want_scales =
+                        int_quantize_grouped(&mut want, group, IntBits::Int8);
+
+                    let mut got = x;
+                    let scales = engine.run_f32_with_epilogue(
+                        KernelKind::HadaCore,
+                        &mut got,
+                        n,
+                        &opts,
+                        Epilogue::QuantInt8 { group },
+                    );
+                    assert_eq!(scales, QuantScales::PerGroup(want_scales));
+                    assert_eq!(want, got, "submitter {submitter} iter {iter}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn mixed_dtype_and_epilogue_traffic_shares_one_pool() {
+    // the realistic worst case: f32 plain, f32 fp8, and f16 plain jobs
+    // interleaving on the same lanes — per-thread scratch buffers and
+    // stage dispatch must never cross wires
+    let engine = churn_engine();
+    std::thread::scope(|s| {
+        for submitter in 0..12u64 {
+            let engine = Arc::clone(&engine);
+            s.spawn(move || {
+                for iter in 0..4u64 {
+                    let (rows, n) = (17usize, 512usize);
+                    let x = payload(submitter, iter, rows * n);
+                    let opts = FwhtOptions::normalized(n);
+                    match submitter % 3 {
+                        0 => {
+                            let mut want = x.clone();
+                            fwht_f32(KernelKind::HadaCore, &mut want, n, &opts);
+                            let mut got = x;
+                            engine.run_f32(KernelKind::HadaCore, &mut got, n, &opts);
+                            assert_eq!(want, got);
+                        }
+                        1 => {
+                            let mut want = x.clone();
+                            fwht_f32(KernelKind::HadaCore, &mut want, n, &opts);
+                            let want_scale =
+                                fp8_quantize_slice(&mut want, Fp8Format::E5M2);
+                            let mut got = x;
+                            let scales = engine.run_f32_with_epilogue(
+                                KernelKind::HadaCore,
+                                &mut got,
+                                n,
+                                &opts,
+                                Epilogue::QuantFp8 { fmt: Fp8Format::E5M2 },
+                            );
+                            assert_eq!(scales, QuantScales::PerTensor(want_scale));
+                            assert_eq!(want, got);
+                        }
+                        _ => {
+                            let h: Vec<F16> =
+                                x.iter().map(|&v| F16::from_f32(v)).collect();
+                            let mut want = h.clone();
+                            hadacore::hadamard::fwht_generic(
+                                KernelKind::HadaCore,
+                                &mut want,
+                                n,
+                                &opts,
+                            );
+                            let mut got = h;
+                            engine.run(KernelKind::HadaCore, &mut got, n, &opts);
+                            assert_eq!(want, got);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let stats = engine.stats();
+    assert!(stats.epilogue_runs >= 16, "fp8 arm must have run: {stats:?}");
+}

@@ -10,12 +10,19 @@ use std::time::Duration;
 use hadacore::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, RouterConfig, TransformRequest,
 };
+use hadacore::exec::{ExecConfig, ExecEngine, TunePolicy};
+use hadacore::hadamard::hadacore::{
+    fwht_hadacore_f32_cfg, fwht_hadacore_f32_planned_depth, HadaCoreConfig,
+    HadaCorePlan,
+};
 use hadacore::hadamard::{
     fwht_dao_f32, fwht_f32, fwht_hadacore_f32, fwht_scalar_f32, FwhtOptions,
     KernelKind,
 };
 use hadacore::quant::{fake_quantize, Scheme};
-use hadacore::util::prop::{assert_close, check, max_abs_diff, rel_l2};
+use hadacore::util::prop::{
+    assert_close, check, integer_vec, max_abs_diff, random_supported_size, rel_l2,
+};
 use hadacore::util::rng::Rng;
 
 fn coordinator(workers: usize) -> Coordinator {
@@ -127,6 +134,110 @@ fn prop_non_pow2_involution_and_kernel_agreement() {
         fwht_hadacore_f32(&mut c, n, &opts);
         assert_close(&b, &a, 1e-3, 1e-3);
         assert_close(&c, &a, 1e-3, 1e-3);
+    });
+}
+
+#[test]
+fn prop_differential_all_paths_agree_bit_for_bit_on_integer_payloads() {
+    // The differential fuzz harness (ISSUE 4): randomized rows × size ×
+    // lanes × chunk boundaries × fusion depths, asserting
+    //   scalar == dao == hadacore == planned == planned@depth == engine
+    // With integer payloads in [-4, 4] and the raw scale every
+    // intermediate is an exact small integer (n·amp < 2^24 across the
+    // drawn family), and all three kernels factor the same butterfly
+    // network — so the assertion is **bit equality across everything**,
+    // the strongest oracle this suite has. Lanes {1, 3, 8} × random
+    // chunk floors guarantee random chunk boundaries; a fresh engine per
+    // case keeps the drawn (lanes, chunk, depth) combination honest.
+    check("differential: kernels × plans × depths × engines", 16, |rng| {
+        let n = random_supported_size(rng, 9); // up to 40·512 = 20480
+        let rows = rng.range(1, 6);
+        let x = integer_vec(rng, rows * n, 4);
+        let opts = FwhtOptions::raw();
+
+        let mut scalar = x.clone();
+        fwht_scalar_f32(&mut scalar, n, &opts);
+        let mut dao = x.clone();
+        fwht_dao_f32(&mut dao, n, &opts);
+        assert_eq!(scalar, dao, "scalar vs dao: n={n} rows={rows}");
+        let mut hada = x.clone();
+        fwht_hadacore_f32(&mut hada, n, &opts);
+        assert_eq!(scalar, hada, "scalar vs hadacore: n={n} rows={rows}");
+
+        for cfg in [
+            HadaCoreConfig { residual: hadacore::hadamard::hadacore::ResidualMode::BlockDiagonal },
+            HadaCoreConfig { residual: hadacore::hadamard::hadacore::ResidualMode::SmallFactor },
+        ] {
+            let mut direct = x.clone();
+            fwht_hadacore_f32_cfg(&mut direct, n, &opts, &cfg);
+            let plan = HadaCorePlan::new(n, &cfg);
+            for depth in 1..=plan.max_fusion_depth() {
+                let mut fused = x.clone();
+                fwht_hadacore_f32_planned_depth(&mut fused, &plan, &opts, depth);
+                assert_eq!(
+                    direct, fused,
+                    "planned@{depth} vs cfg: n={n} {:?}",
+                    cfg.residual
+                );
+            }
+            // both residual modes compute the same exact integers
+            assert_eq!(scalar, direct, "cfg {:?} vs scalar: n={n}", cfg.residual);
+        }
+
+        // engines: random lane count, random chunk floor, random depth
+        let threads = [1usize, 3, 8][rng.below(3)];
+        let min_chunk = 1usize << rng.range(6, 12);
+        let depth = rng.range(1, 4);
+        let engine = ExecEngine::new(ExecConfig {
+            threads,
+            chunks_per_thread: rng.range(1, 5),
+            min_chunk_elems: min_chunk,
+            tune: TunePolicy::FixedDepth(depth),
+        });
+        let mut engine_out = x.clone();
+        engine.run_f32(KernelKind::HadaCore, &mut engine_out, n, &opts);
+        assert_eq!(
+            scalar, engine_out,
+            "engine vs scalar: n={n} rows={rows} t={threads} chunk>={min_chunk} d={depth}"
+        );
+    });
+}
+
+#[test]
+fn prop_differential_real_payloads_close_and_hadacore_chain_exact() {
+    // real-valued twin of the test above: cross-kernel comparisons drop
+    // to tolerances (different butterfly associations round differently
+    // in principle), but the hadacore chain (cfg == planned@every depth
+    // == engine) must stay bit-exact — fusion and sharding are
+    // scheduling, not arithmetic
+    check("differential: real payloads", 12, |rng| {
+        let n = random_supported_size(rng, 8);
+        let rows = rng.range(1, 4);
+        let x = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+
+        let mut scalar = x.clone();
+        fwht_scalar_f32(&mut scalar, n, &opts);
+        let mut hada = x.clone();
+        fwht_hadacore_f32(&mut hada, n, &opts);
+        assert_close(&hada, &scalar, 1e-3, 1e-3);
+
+        let plan = HadaCorePlan::new(n, &HadaCoreConfig::default());
+        for depth in 1..=plan.max_fusion_depth() {
+            let mut fused = x.clone();
+            fwht_hadacore_f32_planned_depth(&mut fused, &plan, &opts, depth);
+            assert_eq!(hada, fused, "depth {depth} n={n}");
+        }
+
+        let engine = ExecEngine::new(ExecConfig {
+            threads: [1usize, 4][rng.below(2)],
+            chunks_per_thread: 2,
+            min_chunk_elems: 1 << rng.range(7, 11),
+            tune: TunePolicy::FixedDepth(rng.range(1, 4)),
+        });
+        let mut engine_out = x;
+        engine.run_f32(KernelKind::HadaCore, &mut engine_out, n, &opts);
+        assert_eq!(hada, engine_out, "engine n={n} rows={rows}");
     });
 }
 
