@@ -1,98 +1,81 @@
-//! Serving demo: the coordinator under a mixed-size transform workload.
+//! Serving demo: the full TCP stack end to end in one process.
 //!
-//! Drives the dynamic batcher with open-loop request arrivals across a mix
-//! of Hadamard sizes and both backends (PJRT artifacts where available,
-//! native kernels elsewhere), then prints the full metrics report —
-//! batching efficiency, padding overhead, and queue/exec/e2e percentiles.
+//! Starts a coordinator + the `serve/` TCP front-end on an ephemeral
+//! loopback port, drives it with the open-loop load generator
+//! (concurrent pipelining client connections over a named traffic mix,
+//! wire protocol v1), then fetches the server's own `Stats` frame — the
+//! same counters and percentile report a remote operator would see —
+//! and tears everything down gracefully (`ServeHandle::shutdown` +
+//! `Coordinator::drain`).
 //!
-//! Run: `cargo run --release --example serve -- --requests 5000`
+//! Run: `cargo run --release --example serve -- --requests 2000`
 
-use std::path::Path;
-use std::time::Instant;
+use std::sync::Arc;
 
 use hadacore::coordinator::{Coordinator, CoordinatorConfig};
 use hadacore::exec::ExecConfig;
-use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
+use hadacore::harness::workload::traffic_mix;
 use hadacore::hadamard::KernelKind;
+use hadacore::serve::{loadgen, serve, Client, LoadgenConfig, ServeConfig};
 use hadacore::util::cli::Args;
 use hadacore::util::error as anyhow;
+use hadacore::util::f16::DType;
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::new("serve", "mixed workload serving demo")
-        .opt("requests", "5000", "total requests")
-        .opt("artifacts", "artifacts", "artifact directory ('' = native only)")
+    let args = Args::new("serve", "TCP serving demo (loopback, in-process server)")
+        .opt("requests", "2000", "total requests")
+        .opt("clients", "4", "concurrent pipelining client connections")
+        .opt("qps", "0", "offered load (0 = unpaced)")
+        .opt("mix", "mixed", "traffic mix: interactive|batch|llama-ffn|quantized|mixed")
         .opt("workers", "4", "batcher worker threads")
         .opt("exec-threads", "0", "engine compute lanes (0 = default: per-core, capped at 16)")
         .opt("kernel", "hadacore", "kernel: hadacore|dao|scalar")
-        .switch("native", "force native backend for all requests")
         .parse();
-    let total: usize = args.get_as("requests");
-    let force_native = args.flag("native");
-    let dirs = args.get("artifacts");
-    let artifact_dir = if dirs.is_empty() || force_native {
-        None
-    } else {
-        let p = Path::new(&dirs);
-        p.join("manifest.json").exists().then(|| p.to_path_buf())
-    };
-    println!(
-        "backend: {}",
-        if artifact_dir.is_some() { "pjrt + native" } else { "native only" }
-    );
+    let kernel = KernelKind::parse(&args.get("kernel")).unwrap_or(KernelKind::HadaCore);
+    let mut workload = traffic_mix(&args.get("mix"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --mix"))?;
+    workload.kernel = kernel;
 
-    let lanes: usize = args.get_as("exec-threads");
-    let exec = if lanes == 0 {
-        ExecConfig::default()
-    } else {
-        ExecConfig { threads: lanes, ..ExecConfig::default() }
-    };
-    let coord = Coordinator::start(
-        artifact_dir,
+    let coord = Arc::new(Coordinator::start(
+        None,
         CoordinatorConfig {
             workers: args.get_as("workers"),
-            exec,
+            exec: ExecConfig::with_lanes(args.get_as("exec-threads")),
             ..Default::default()
         },
-    )?;
-    let mut wl = ServingWorkload::new(WorkloadConfig {
-        sizes: vec![128, 256, 512, 1024, 4096],
-        kernel: KernelKind::parse(&args.get("kernel")).unwrap_or(KernelKind::HadaCore),
+    )?);
+    let handle = serve(Arc::clone(&coord), ServeConfig::default())?;
+    let addr = handle.addr().to_string();
+
+    let cfg = LoadgenConfig {
+        addr: addr.clone(),
+        mix: args.get("mix"),
+        workload,
+        qps: args.get_as("qps"),
+        requests: args.get_as("requests"),
+        clients: args.get_as("clients"),
+        dtype: DType::F32,
         ..Default::default()
-    });
+    };
+    println!(
+        "server on {addr} — {} clients x {} requests ({} mix)",
+        cfg.clients, cfg.requests, cfg.mix
+    );
+    let report = loadgen::run(&cfg)?;
+    println!("{}", report.line());
+    println!(
+        "throughput: {:.1} M elem/s over {:?}",
+        report.elems as f64 / report.wall.as_secs_f64().max(1e-9) / 1e6,
+        report.wall
+    );
 
-    let t0 = Instant::now();
-    let mut pending = Vec::with_capacity(total);
-    for _ in 0..total {
-        let mut req = wl.next_request();
-        req.force_native = force_native;
-        pending.push(coord.submit(req).map_err(|e| anyhow::anyhow!(e))?);
-    }
-    let submit_dt = t0.elapsed();
-    let mut elems = 0usize;
-    for rx in pending {
-        elems += rx.recv()??.data.len();
-    }
-    let dt = t0.elapsed();
+    // the server's own view, over the wire
+    let probe = Client::connect(&addr)?;
+    println!("\nping rtt: {:?}", probe.ping()?);
+    println!("\n{}", probe.stats()?.report);
+    drop(probe);
 
-    println!(
-        "{total} requests ({:.1} M elements) in {dt:?} (submit {submit_dt:?})",
-        elems as f64 / 1e6
-    );
-    println!(
-        "throughput: {:.0} req/s, {:.1} M elem/s",
-        total as f64 / dt.as_secs_f64(),
-        elems as f64 / dt.as_secs_f64() / 1e6
-    );
-    println!("\n{}", coord.metrics().snapshot().report());
-    let es = coord.exec_engine().stats();
-    println!(
-        "engine:   {} lanes, {} sharded jobs ({} chunks), {} inline runs, {} scratch grows",
-        coord.exec_engine().threads(),
-        es.jobs,
-        es.chunks,
-        es.inline_runs,
-        es.scratch_grows
-    );
-    coord.shutdown();
+    handle.shutdown();
+    coord.drain();
     Ok(())
 }

@@ -1,0 +1,114 @@
+//! Serving-layer micro-benchmarks: wire codec cost and loopback RTT.
+//!
+//! Two sections:
+//!
+//! * `codec` — encode/decode cost of request/response frames across
+//!   payload sizes and dtypes (the per-request serialization tax the
+//!   serving layer adds on top of the transform itself).
+//! * `loopback` — single-request round-trip latency and pipelined
+//!   throughput through a real TCP server on the loopback interface.
+//!
+//! Run: `cargo bench --bench serve_wire` (add `-- --smoke` for the CI
+//! quick pass).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hadacore::coordinator::{Coordinator, CoordinatorConfig};
+use hadacore::hadamard::KernelKind;
+use hadacore::serve::wire::{decode_frame, Frame, WireRequest, DEFAULT_MAX_FRAME_BYTES};
+use hadacore::serve::{serve, Client, Reply, ServeConfig};
+use hadacore::util::bench::{run_case, BenchConfig};
+use hadacore::util::f16::DType;
+use hadacore::util::rng::Rng;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = if smoke { BenchConfig::quick() } else { BenchConfig::default() };
+    let sizes: &[usize] = if smoke { &[256, 4096] } else { &[256, 4096, 14336] };
+
+    println!("== wire codec ==");
+    let mut rng = Rng::new(0xC0DEC);
+    for &n in sizes {
+        for dtype in [DType::F32, DType::F16] {
+            let data = rng.normal_vec(4 * n);
+            let frame = Frame::Request(WireRequest::from_f32(
+                1,
+                n,
+                &data,
+                KernelKind::HadaCore,
+                dtype,
+            ));
+            let bytes = frame.encode();
+            run_case(
+                &format!("encode 4x{n} {}", dtype.name()),
+                &cfg,
+                |_| frame.encode(),
+            );
+            run_case(
+                &format!("decode 4x{n} {}", dtype.name()),
+                &cfg,
+                |_| decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES).unwrap().unwrap(),
+            );
+        }
+    }
+
+    println!("\n== loopback serving ==");
+    let coord = Arc::new(
+        Coordinator::start(
+            None,
+            CoordinatorConfig {
+                workers: 2,
+                idle_timeout: Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let handle = serve(Arc::clone(&coord), ServeConfig::default()).unwrap();
+    let client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    for &n in sizes {
+        let data = rng.normal_vec(n);
+        run_case(&format!("rtt 1x{n} f32"), &cfg, |_| {
+            client
+                .transform(WireRequest::from_f32(0, n, &data, KernelKind::HadaCore, DType::F32))
+                .unwrap()
+        });
+    }
+
+    // pipelined throughput: a window of requests in flight at once
+    // (kept under the server's pipeline_depth so nothing sheds)
+    let window = if smoke { 8 } else { 16 };
+    for &n in sizes {
+        let data = rng.normal_vec(n);
+        run_case(&format!("pipelined x{window} 1x{n} f32"), &cfg, |_| {
+            let pending: Vec<_> = (0..window)
+                .map(|_| {
+                    client
+                        .submit(WireRequest::from_f32(
+                            0,
+                            n,
+                            &data,
+                            KernelKind::HadaCore,
+                            DType::F32,
+                        ))
+                        .unwrap()
+                })
+                .collect();
+            let mut ok = 0;
+            for p in pending {
+                if matches!(p.wait(), Reply::Response(_)) {
+                    ok += 1;
+                }
+            }
+            assert_eq!(ok, window);
+            ok
+        });
+    }
+
+    drop(client);
+    handle.shutdown();
+    coord.drain();
+    println!("\nserving metrics after bench:\n{}", coord.metrics().snapshot().report());
+}

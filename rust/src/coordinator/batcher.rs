@@ -113,9 +113,17 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a pending request under its route.
-    pub fn push(&self, key: BucketKey, route: Route, item: Pending) {
+    /// Enqueue a pending request under its route. Returns `false` (and
+    /// drops the item) once [`Batcher::shutdown`] has been called: the
+    /// decision is made under the same lock that guards the shutdown
+    /// flag, so no item can slip in behind the draining workers and
+    /// strand its response channel.
+    #[must_use]
+    pub fn push(&self, key: BucketKey, route: Route, item: Pending) -> bool {
         let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return false;
+        }
         let rows = item.req.rows;
         let bucket = st.buckets.entry(key).or_insert_with(|| Bucket {
             route: route.clone(),
@@ -137,6 +145,7 @@ impl Batcher {
             // lets it recompute (cheap, and only on request arrival)
             self.ready.notify_one();
         }
+        true
     }
 
     /// Worker call: block until a batch is ready (full or expired), the
@@ -251,7 +260,7 @@ mod tests {
         (
             Pending {
                 req: TransformRequest::new(id, n, vec![0.0; n * rows]),
-                tx,
+                tx: crate::coordinator::ResponseTx::Oneshot(tx),
                 enqueued: Instant::now(),
             },
             rx,
@@ -270,7 +279,7 @@ mod tests {
         let (key, route) = key_route(64, 4);
         for i in 0..4 {
             let (p, _rx) = pending(i, 64, 1);
-            b.push(key, route.clone(), p);
+            assert!(b.push(key, route.clone(), p));
         }
         let batch = b.next_batch(Duration::from_millis(100)).expect("batch");
         assert_eq!(batch.rows, 4);
@@ -283,7 +292,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig { max_delay: Duration::from_millis(5), work_conserving: false });
         let (key, route) = key_route(64, 100);
         let (p, _rx) = pending(1, 64, 2);
-        b.push(key, route, p);
+        assert!(b.push(key, route, p));
         let t0 = Instant::now();
         let batch = b.next_batch(Duration::from_secs(1)).expect("batch");
         assert_eq!(batch.rows, 2);
@@ -297,7 +306,7 @@ mod tests {
         let (key, route) = key_route(32, 4);
         for i in 0..3 {
             let (p, _rx) = pending(i, 32, 3); // 3 rows each, cap 4
-            b.push(key, route.clone(), p);
+            assert!(b.push(key, route.clone(), p));
         }
         // each batch takes one 3-row request (3+3 > 4)... first batch takes
         // request 0 only (3 rows); adding request 1 would exceed cap.
@@ -315,7 +324,7 @@ mod tests {
         let b = Batcher::new(BatcherConfig { max_delay: Duration::from_secs(1), work_conserving: false });
         let (key, route) = key_route(32, 4);
         let (p, _rx) = pending(9, 32, 10); // exceeds capacity
-        b.push(key, route, p);
+        assert!(b.push(key, route, p));
         let batch = b.next_batch(Duration::from_millis(200)).unwrap();
         assert_eq!(batch.rows, 10);
         assert_eq!(batch.items.len(), 1);
@@ -326,10 +335,25 @@ mod tests {
         let b = Batcher::new(BatcherConfig { max_delay: Duration::from_secs(10), work_conserving: false });
         let (key, route) = key_route(16, 100);
         let (p, _rx) = pending(1, 16, 1);
-        b.push(key, route, p);
+        assert!(b.push(key, route, p));
         b.shutdown();
         assert!(b.next_batch(Duration::from_millis(50)).is_some());
         assert!(b.next_batch(Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn push_after_shutdown_is_refused() {
+        // the submit-vs-drain race: once shutdown is set, no item may
+        // enter the queue (it would sit behind already-exited workers)
+        let b = Batcher::new(BatcherConfig::default());
+        b.shutdown();
+        let (key, route) = key_route(64, 4);
+        let (p, rx) = pending(1, 64, 1);
+        assert!(!b.push(key, route, p), "post-shutdown push must be refused");
+        assert_eq!(b.queued_rows(), 0);
+        // the dropped Pending closes its response channel: a waiting
+        // caller observes a disconnect, not an eternal hang
+        assert!(rx.recv().is_err());
     }
 
     #[test]
@@ -385,7 +409,7 @@ mod tests {
         });
         let (key, route) = key_route(64, 100);
         let (p, _rx) = pending(1, 64, 2);
-        b.push(key, route, p);
+        assert!(b.push(key, route, p));
         let t0 = Instant::now();
         let batch = b.next_batch(Duration::from_secs(5)).expect("batch");
         assert_eq!(batch.rows, 2);
@@ -405,9 +429,9 @@ mod tests {
         let (k1, r1) = key_route(64, 100);
         let (k2, r2) = key_route(128, 100);
         let (p1, _rx1) = pending(1, 64, 1);
-        b.push(k1, r1, p1);
+        assert!(b.push(k1, r1, p1));
         let (p2, _rx2) = pending(2, 128, 3);
-        b.push(k2, r2, p2);
+        assert!(b.push(k2, r2, p2));
         let batch = b.next_batch(Duration::from_secs(5)).expect("batch");
         assert_eq!(batch.key.n, 128, "fullest bucket (3 rows) flushes first");
         assert_eq!(batch.rows, 3);
@@ -423,7 +447,7 @@ mod tests {
         });
         let (key, route) = pjrt_key_route(64, 128);
         let (p, _rx) = pending(1, 64, 2);
-        b.push(key, route, p);
+        assert!(b.push(key, route, p));
         // an idle cap shorter than the deadline returns None (no flush,
         // no busy spin) ...
         let t0 = Instant::now();
@@ -447,8 +471,8 @@ mod tests {
         assert_ne!(k1, k2);
         let (p1, _rx1) = pending(1, 64, 1);
         let (p2, _rx2) = pending(2, 128, 1);
-        b.push(k1, r1, p1);
-        b.push(k2, r2, p2);
+        assert!(b.push(k1, r1, p1));
+        assert!(b.push(k2, r2, p2));
         let b1 = b.next_batch(Duration::from_millis(100)).unwrap();
         let b2 = b.next_batch(Duration::from_millis(100)).unwrap();
         assert_ne!(b1.key.n, b2.key.n);

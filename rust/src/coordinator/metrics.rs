@@ -92,6 +92,22 @@ impl Histogram {
         }
         self.max_us()
     }
+
+    /// One-line text report: count, mean, p50/p90/p99 reconstruction and
+    /// max. The serving layer streams this through the `Stats` wire frame
+    /// so a remote client sees the same percentiles an in-process caller
+    /// would compute.
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: count {}  mean {:.1}us  p50 {}us  p90 {}us  p99 {}us  max {}us",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(90.0),
+            self.percentile_us(99.0),
+            self.max_us(),
+        )
+    }
 }
 
 impl Default for Histogram {
@@ -145,10 +161,13 @@ pub struct MetricsSnapshot {
     pub native_batches: u64,
     pub pjrt_batches: u64,
     pub queue_p50_us: u64,
+    pub queue_p90_us: u64,
     pub queue_p99_us: u64,
     pub exec_p50_us: u64,
+    pub exec_p90_us: u64,
     pub exec_p99_us: u64,
     pub e2e_p50_us: u64,
+    pub e2e_p90_us: u64,
     pub e2e_p95_us: u64,
     pub e2e_p99_us: u64,
     pub e2e_mean_us: f64,
@@ -168,10 +187,13 @@ impl Metrics {
             native_batches: self.native_batches.load(Ordering::Relaxed),
             pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
             queue_p50_us: self.queue.percentile_us(50.0),
+            queue_p90_us: self.queue.percentile_us(90.0),
             queue_p99_us: self.queue.percentile_us(99.0),
             exec_p50_us: self.exec.percentile_us(50.0),
+            exec_p90_us: self.exec.percentile_us(90.0),
             exec_p99_us: self.exec.percentile_us(99.0),
             e2e_p50_us: self.e2e.percentile_us(50.0),
+            e2e_p90_us: self.e2e.percentile_us(90.0),
             e2e_p95_us: self.e2e.percentile_us(95.0),
             e2e_p99_us: self.e2e.percentile_us(99.0),
             e2e_mean_us: self.e2e.mean_us(),
@@ -185,9 +207,9 @@ impl MetricsSnapshot {
         format!(
             "requests: {} submitted, {} completed, {} rejected, {} failed\n\
              batches:  {} total ({} native, {} pjrt), {} rows + {} pad rows\n\
-             queue:    p50 {}us  p99 {}us\n\
-             exec:     p50 {}us  p99 {}us\n\
-             e2e:      p50 {}us  p95 {}us  p99 {}us  mean {:.1}us",
+             queue:    p50 {}us  p90 {}us  p99 {}us\n\
+             exec:     p50 {}us  p90 {}us  p99 {}us\n\
+             e2e:      p50 {}us  p90 {}us  p95 {}us  p99 {}us  mean {:.1}us",
             self.submitted,
             self.completed,
             self.rejected,
@@ -198,10 +220,13 @@ impl MetricsSnapshot {
             self.rows,
             self.padded_rows,
             self.queue_p50_us,
+            self.queue_p90_us,
             self.queue_p99_us,
             self.exec_p50_us,
+            self.exec_p90_us,
             self.exec_p99_us,
             self.e2e_p50_us,
+            self.e2e_p90_us,
             self.e2e_p95_us,
             self.e2e_p99_us,
             self.e2e_mean_us,
@@ -238,6 +263,53 @@ mod tests {
         let empty = Histogram::new();
         assert_eq!(empty.percentile_us(50.0), 0);
         assert_eq!(empty.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn percentile_reconstruction_against_known_bucket_fills() {
+        // linear region: one observation in each of the first 16 buckets
+        // (us = 0..15, bucket uppers 1..16). The p-th percentile targets
+        // observation ceil(p/100 * 16); its bucket upper bound is exact.
+        let h = Histogram::new();
+        for us in 0..16u64 {
+            h.record(us);
+        }
+        assert_eq!(h.percentile_us(50.0), 8, "obs #8 sits in bucket 7 (upper 8)");
+        assert_eq!(h.percentile_us(90.0), 15, "ceil(0.9*16)=15 -> bucket 14");
+        assert_eq!(h.percentile_us(99.0), 16, "ceil(0.99*16)=16 -> bucket 15");
+        assert_eq!(h.percentile_us(100.0), 16);
+
+        // geometric region: a 90/10 bimodal fill. 90 observations at 10us
+        // (bucket 10, upper 11) and 10 at 1_000_000us (10^6/16 = 62500,
+        // needs 16 doublings -> bucket 31, upper 16<<16 = 1048576).
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(10);
+        }
+        for _ in 0..10 {
+            h.record(1_000_000);
+        }
+        assert_eq!(h.percentile_us(50.0), 11);
+        assert_eq!(h.percentile_us(90.0), 11, "the 90th obs is still in the fast mode");
+        assert_eq!(h.percentile_us(99.0), 1_048_576, "the tail lands in bucket 31");
+        assert_eq!(h.max_us(), 1_000_000);
+    }
+
+    #[test]
+    fn histogram_report_carries_the_percentile_line() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(10);
+        }
+        for _ in 0..10 {
+            h.record(1_000_000);
+        }
+        let r = h.report("e2e");
+        assert!(r.starts_with("e2e: count 100"), "got: {r}");
+        assert!(r.contains("p50 11us"), "got: {r}");
+        assert!(r.contains("p90 11us"), "got: {r}");
+        assert!(r.contains("p99 1048576us"), "got: {r}");
+        assert!(r.contains("max 1000000us"), "got: {r}");
     }
 
     #[test]

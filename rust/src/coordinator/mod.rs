@@ -28,7 +28,7 @@ pub mod server;
 pub use batcher::{Batch, Batcher, BatcherConfig, BucketKey};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use router::{Backend, Route, Router, RouterConfig};
-pub use server::{Coordinator, CoordinatorConfig, SubmitError};
+pub use server::{Coordinator, CoordinatorConfig, SubmitError, TaggedResponseTx};
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -120,11 +120,42 @@ pub struct TransformResponse {
     pub scales: QuantScales,
 }
 
+/// Where a completed (or failed) request's response is delivered.
+///
+/// The in-process API ([`Coordinator::submit`]) uses one channel per
+/// request; the TCP serving layer ([`crate::serve`]) multiplexes every
+/// request of a connection onto one channel and demultiplexes by request
+/// id — responses may complete out of order, so the tagged variant
+/// carries the id alongside the result (errors would otherwise lose it:
+/// [`crate::util::error::Error`] has no id field).
+pub enum ResponseTx {
+    /// Dedicated per-request channel (the `submit` path).
+    Oneshot(mpsc::Sender<anyhow::Result<TransformResponse>>),
+    /// Shared per-connection channel; the id travels with the result
+    /// (the `submit_with` path used by the serving layer).
+    Tagged(mpsc::Sender<(u64, anyhow::Result<TransformResponse>)>),
+}
+
+impl ResponseTx {
+    /// Deliver a response, ignoring a hung-up receiver (the client went
+    /// away; the work is already done either way).
+    pub fn send(&self, id: u64, result: anyhow::Result<TransformResponse>) {
+        match self {
+            ResponseTx::Oneshot(tx) => {
+                let _ = tx.send(result);
+            }
+            ResponseTx::Tagged(tx) => {
+                let _ = tx.send((id, result));
+            }
+        }
+    }
+}
+
 /// Per-request bookkeeping inside the batcher (internal; public only
 /// because it crosses the `Batcher` API boundary).
 #[doc(hidden)]
 pub struct Pending {
     pub req: TransformRequest,
-    pub tx: mpsc::Sender<anyhow::Result<TransformResponse>>,
+    pub tx: ResponseTx,
     pub enqueued: Instant,
 }

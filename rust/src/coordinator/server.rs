@@ -14,8 +14,8 @@
 //! either way.
 
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -28,7 +28,7 @@ use crate::util::error::{self as anyhow, anyhow};
 use super::batcher::{Batch, Batcher, BatcherConfig, BucketKey};
 use super::metrics::Metrics;
 use super::router::{Backend, Router, RouterConfig};
-use super::{Pending, TransformRequest, TransformResponse};
+use super::{Pending, ResponseTx, TransformRequest, TransformResponse};
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -91,15 +91,34 @@ impl std::error::Error for SubmitError {}
 /// Response receiver handle.
 pub type ResponseRx = mpsc::Receiver<anyhow::Result<TransformResponse>>;
 
+/// The multiplexed response sender the serving layer passes to
+/// [`Coordinator::submit_with`]: every response (or error) arrives tagged
+/// with the request id so one channel can carry a whole connection's
+/// traffic, out of order.
+pub type TaggedResponseTx = mpsc::Sender<(u64, anyhow::Result<TransformResponse>)>;
+
 /// The running coordinator.
+///
+/// Teardown paths (all idempotent, all drain in-flight work):
+///
+/// * [`Coordinator::shutdown`] — consume the owned value and stop.
+/// * [`Coordinator::drain`] — `&self` graceful shutdown for shared
+///   (`Arc`) coordinators: stop admitting (`submit` returns a retriable
+///   rejection), complete everything already queued, then join threads.
+/// * `Drop` — same as `shutdown`.
 pub struct Coordinator {
     router: Arc<Router>,
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
     engine: Arc<ExecEngine>,
-    workers: Vec<JoinHandle<()>>,
-    pjrt_tx: Option<mpsc::Sender<Batch>>,
-    pjrt_thread: Option<JoinHandle<()>>,
+    draining: AtomicBool,
+    /// Serialises [`Coordinator::drain`]: a second caller blocks here
+    /// until the first has finished joining, so "drain returned" always
+    /// means "all threads are stopped" — for every caller.
+    drain_lock: Mutex<()>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    pjrt_tx: Mutex<Option<mpsc::Sender<Batch>>>,
+    pjrt_thread: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Coordinator {
@@ -164,24 +183,64 @@ impl Coordinator {
             batcher,
             metrics,
             engine,
-            workers,
-            pjrt_tx,
-            pjrt_thread,
+            draining: AtomicBool::new(false),
+            drain_lock: Mutex::new(()),
+            workers: Mutex::new(workers),
+            pjrt_tx: Mutex::new(pjrt_tx),
+            pjrt_thread: Mutex::new(pjrt_thread),
         })
     }
 
-    /// Submit a request; returns the response receiver.
-    pub fn submit(&self, req: TransformRequest) -> Result<ResponseRx, SubmitError> {
+    /// Shared admission + enqueue path behind both submit flavours.
+    fn submit_inner(
+        &self,
+        req: TransformRequest,
+        tx: ResponseTx,
+    ) -> Result<(), SubmitError> {
+        if self.draining.load(Ordering::Acquire) {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError(
+                "coordinator is draining (retriable)".to_string(),
+            ));
+        }
         if let Err(reason) = self.router.admit(&req) {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError(reason));
         }
         let route = self.router.route(&req);
         let key = BucketKey::of(&req, &route);
-        let (tx, rx) = mpsc::channel();
+        // the batcher itself refuses work once shutdown has begun (the
+        // check is atomic with the flag), so a submit racing drain() can
+        // never strand a Pending behind the already-exited workers
+        let pushed =
+            self.batcher.push(key, route, Pending { req, tx, enqueued: Instant::now() });
+        if !pushed {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError(
+                "coordinator is draining (retriable)".to_string(),
+            ));
+        }
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.batcher.push(key, route, Pending { req, tx, enqueued: Instant::now() });
+        Ok(())
+    }
+
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, req: TransformRequest) -> Result<ResponseRx, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_inner(req, ResponseTx::Oneshot(tx))?;
         Ok(rx)
+    }
+
+    /// Submit a request whose response is delivered on a caller-owned
+    /// multiplexed channel, tagged with the request id. This is the
+    /// serving-layer path: one channel per connection, responses stream
+    /// back in completion order (not submission order).
+    pub fn submit_with(
+        &self,
+        req: TransformRequest,
+        tx: TaggedResponseTx,
+    ) -> Result<(), SubmitError> {
+        self.submit_inner(req, ResponseTx::Tagged(tx))
     }
 
     /// Convenience: submit and block for the response.
@@ -209,20 +268,52 @@ impl Coordinator {
         &self.engine
     }
 
-    /// Drain queues and stop all threads.
-    pub fn shutdown(mut self) {
-        self.stop();
+    /// Rows currently queued in the batcher (admission-control signal for
+    /// the serving layer's load shedding).
+    pub fn queued_rows(&self) -> usize {
+        self.batcher.queued_rows()
     }
 
-    fn stop(&mut self) {
+    /// True once [`Coordinator::drain`] (or shutdown) has begun: new
+    /// submissions are rejected with a retriable error.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Drain queues and stop all threads.
+    pub fn shutdown(self) {
+        self.drain();
+    }
+
+    /// Graceful `&self` shutdown: stop admitting new requests, let the
+    /// workers complete everything already queued (every pending request
+    /// receives its response — never an error caused by the shutdown
+    /// itself), then join the worker and executor threads. Idempotent;
+    /// concurrent callers block until the first drain finishes joining.
+    pub fn drain(&self) {
+        // hold for the whole teardown: a concurrent drain (or Drop)
+        // must not observe half-joined state and return early
+        let _serialise = self.drain_lock.lock().unwrap();
+        self.draining.store(true, Ordering::Release);
         self.batcher.shutdown();
-        for w in self.workers.drain(..) {
+        let workers: Vec<JoinHandle<()>> =
+            self.workers.lock().unwrap().drain(..).collect();
+        for w in workers {
             let _ = w.join();
+        }
+        // belt-and-suspenders: `Batcher::push` refuses items once the
+        // shutdown flag is set (atomically, under the same lock), so
+        // nothing can land behind the joined workers — but if a future
+        // change ever broke that invariant, executing stragglers inline
+        // here keeps "no pending request is ever stranded" true
+        while let Some(batch) = self.batcher.next_batch(Duration::from_millis(1)) {
+            execute_native_batch(batch, &self.metrics, &self.engine);
         }
         // workers have drained the batcher; closing the channel stops the
         // executor after it finishes forwarded batches
-        self.pjrt_tx = None;
-        if let Some(h) = self.pjrt_thread.take() {
+        *self.pjrt_tx.lock().unwrap() = None;
+        let pjrt = self.pjrt_thread.lock().unwrap().take();
+        if let Some(h) = pjrt {
             let _ = h.join();
         }
     }
@@ -230,7 +321,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.stop();
+        self.drain();
     }
 }
 
@@ -363,12 +454,13 @@ fn complete(
     debug_assert_eq!(items.len(), scales.len());
     let mut offset = 0;
     for (p, scales) in items.into_iter().zip(scales) {
+        let id = p.req.id;
         let len = p.req.rows * n;
         let queue_us = exec_start
             .saturating_duration_since(p.enqueued)
             .as_micros() as u64;
         let resp = TransformResponse {
-            id: p.req.id,
+            id,
             data: out[offset..offset + len].to_vec(),
             queue_us,
             exec_us,
@@ -380,7 +472,7 @@ fn complete(
         metrics.queue.record(queue_us);
         metrics.e2e.record(p.enqueued.elapsed().as_micros() as u64);
         metrics.completed.fetch_add(1, Ordering::Relaxed);
-        let _ = p.tx.send(Ok(resp));
+        p.tx.send(id, Ok(resp));
     }
 }
 
@@ -400,7 +492,7 @@ fn fail_items(items: Vec<Pending>, msg: &str, metrics: &Metrics, exec_start: Ins
         metrics.e2e.record(p.enqueued.elapsed().as_micros() as u64);
         metrics.failed.fetch_add(1, Ordering::Relaxed);
         metrics.completed.fetch_add(1, Ordering::Relaxed);
-        let _ = p.tx.send(Err(anyhow!("{msg}")));
+        p.tx.send(p.req.id, Err(anyhow!("{msg}")));
     }
 }
 
@@ -663,6 +755,58 @@ mod tests {
     }
 
     #[test]
+    fn drain_completes_pending_then_rejects_new_submissions() {
+        // the serving layer's teardown path: every request admitted
+        // before drain() must receive its real response (not an error
+        // caused by the shutdown), and submissions after drain() are
+        // rejected with a retriable message
+        let c = native_coordinator(2);
+        let n = 512;
+        let mut rxs = Vec::new();
+        for id in 0..32 {
+            rxs.push(c.submit(TransformRequest::new(id, n, vec![1.0; n])).unwrap());
+        }
+        c.drain();
+        for rx in rxs {
+            assert!(
+                rx.recv().unwrap().is_ok(),
+                "pending requests must complete, not error, on drain"
+            );
+        }
+        assert!(c.is_draining());
+        let err = c.submit(TransformRequest::new(99, n, vec![1.0; n])).unwrap_err();
+        assert!(err.0.contains("draining"), "got: {}", err.0);
+        c.drain(); // idempotent
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_with_multiplexes_tagged_responses_on_one_channel() {
+        let c = native_coordinator(2);
+        let (tx, rx) = mpsc::channel();
+        let mut rng = Rng::new(11);
+        let n = 256;
+        let mut want = std::collections::HashMap::new();
+        for id in 0..12u64 {
+            let x = rng.normal_vec(n);
+            let mut w = x.clone();
+            fwht_scalar_f32(&mut w, n, &FwhtOptions::normalized(n));
+            want.insert(id, w);
+            c.submit_with(TransformRequest::new(id, n, x), tx.clone()).unwrap();
+        }
+        drop(tx); // the coordinator's clones keep the channel open
+        let mut seen = 0;
+        while let Ok((id, result)) = rx.recv() {
+            let resp = result.unwrap();
+            assert_eq!(resp.id, id, "tag must match the response id");
+            assert_close(&resp.data, &want[&id], 1e-3, 1e-3);
+            seen += 1;
+        }
+        assert_eq!(seen, 12, "every tagged response must arrive");
+        c.shutdown();
+    }
+
+    #[test]
     fn shutdown_completes_inflight() {
         let c = native_coordinator(2);
         let n = 512;
@@ -862,7 +1006,11 @@ mod tests {
         let batch = Batch {
             key,
             route,
-            items: vec![Pending { req, tx, enqueued: Instant::now() }],
+            items: vec![Pending {
+                req,
+                tx: ResponseTx::Oneshot(tx),
+                enqueued: Instant::now(),
+            }],
             rows,
         };
         let (fwd_tx, fwd_rx) = mpsc::channel::<Batch>();
@@ -886,7 +1034,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let items = vec![Pending {
             req: TransformRequest::new(1, 64, vec![0.0; 64]),
-            tx,
+            tx: ResponseTx::Oneshot(tx),
             enqueued: Instant::now(),
         }];
         fail_items(items, "boom", &metrics, Instant::now());

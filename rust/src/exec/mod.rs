@@ -240,6 +240,19 @@ pub struct ExecConfig {
     pub tune: TunePolicy,
 }
 
+impl ExecConfig {
+    /// The CLI-flag convention shared by the binary, examples, and
+    /// benches: `0` = the default lane policy (per-core, capped at 16),
+    /// anything else overrides the lane count exactly.
+    pub fn with_lanes(lanes: usize) -> ExecConfig {
+        if lanes == 0 {
+            ExecConfig::default()
+        } else {
+            ExecConfig { threads: lanes, ..ExecConfig::default() }
+        }
+    }
+}
+
 impl Default for ExecConfig {
     /// One lane per available core, capped at 16 — the transform is
     /// memory-bound well before that on typical hosts; raise `threads`

@@ -50,6 +50,62 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Named traffic models for the serving layer's load generator: each is
+/// a [`WorkloadConfig`] preset describing one regime of the paper's
+/// serving story, so `hadacore loadgen --mixes interactive,llama-ffn`
+/// reuses exactly the request distributions the in-process benches
+/// measure.
+pub const TRAFFIC_MIXES: [&str; 5] =
+    ["interactive", "batch", "llama-ffn", "quantized", "mixed"];
+
+/// Resolve a named traffic mix (see [`TRAFFIC_MIXES`]); `None` for an
+/// unknown name.
+///
+/// * `interactive` — small sizes, 1–2 rows: latency-bound chat traffic.
+/// * `batch` — large sizes, deep rows: throughput-bound prefill.
+/// * `llama-ffn` — n = 14336 (28·512, the Llama-3 8B FFN dim): the
+///   non-power-of-two production shape.
+/// * `quantized` — FP8 rotate→quantize epilogue on attention-sized rows
+///   (the paper's FP8-attention setting).
+/// * `mixed` — everything at once, the general-traffic soak.
+pub fn traffic_mix(name: &str) -> Option<WorkloadConfig> {
+    let base = WorkloadConfig::default();
+    match name {
+        "interactive" => Some(WorkloadConfig {
+            sizes: vec![128, 256, 512],
+            rows_min: 1,
+            rows_max: 2,
+            ..base
+        }),
+        "batch" => Some(WorkloadConfig {
+            sizes: vec![1024, 4096, 8192],
+            rows_min: 4,
+            rows_max: 16,
+            ..base
+        }),
+        "llama-ffn" => Some(WorkloadConfig {
+            sizes: vec![14336],
+            rows_min: 1,
+            rows_max: 4,
+            ..base
+        }),
+        "quantized" => Some(WorkloadConfig {
+            sizes: vec![1024, 4096],
+            rows_min: 1,
+            rows_max: 8,
+            epilogue: Epilogue::QuantFp8 { fmt: crate::quant::Fp8Format::E4M3 },
+            ..base
+        }),
+        "mixed" => Some(WorkloadConfig {
+            sizes: vec![256, 1024, 4096, 14336],
+            rows_min: 1,
+            rows_max: 8,
+            ..base
+        }),
+        _ => None,
+    }
+}
+
 /// Deterministic request stream.
 pub struct ServingWorkload {
     cfg: WorkloadConfig,
@@ -208,6 +264,34 @@ mod tests {
             saw.insert(req.n);
         }
         assert_eq!(saw.len(), 2, "both sizes must appear in 40 draws");
+    }
+
+    #[test]
+    fn every_traffic_mix_generates_admissible_requests() {
+        use crate::coordinator::{Router, RouterConfig};
+        let router = Router::new(None, RouterConfig::default());
+        for name in TRAFFIC_MIXES {
+            let cfg = traffic_mix(name).expect(name);
+            let mut w = ServingWorkload::new(cfg);
+            for req in w.take(25) {
+                assert!(
+                    router.admit(&req).is_ok(),
+                    "mix {name}: n={} rows={} must be admissible",
+                    req.n,
+                    req.rows
+                );
+            }
+        }
+        assert!(traffic_mix("nope").is_none());
+    }
+
+    #[test]
+    fn quantized_mix_carries_the_fp8_epilogue() {
+        use crate::quant::Fp8Format;
+        let cfg = traffic_mix("quantized").unwrap();
+        assert_eq!(cfg.epilogue, Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 });
+        let cfg = traffic_mix("llama-ffn").unwrap();
+        assert_eq!(cfg.sizes, vec![14336]);
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! | [`gpu_model`] | analytical A100/H100 simulator for the paper's evaluation grids |
 //! | [`runtime`] | PJRT wrapper: load AOT HLO-text artifacts, compile, execute |
 //! | [`coordinator`] | request router, bucketed dynamic batcher, metrics, server loop |
+//! | [`serve`] | TCP serving layer: wire protocol, bounded-handler server with load shedding, pipelining client, open-loop load generator |
 //! | [`harness`] | workload generation + table/figure regeneration |
 //! | [`util`] | std-only support: JSON, f16/bf16 bits, PRNG, CLI, micro-bench, mini-proptest, mini-anyhow |
 //!
@@ -57,6 +58,7 @@ pub mod hadamard;
 pub mod harness;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use exec::{ExecConfig, ExecEngine};

@@ -4,23 +4,32 @@
 //!
 //! * `info`      — artifact inventory, platform, weight stats.
 //! * `transform` — one-off transform from the CLI (native or PJRT).
-//! * `serve`     — run the coordinator against a synthetic workload and
-//!                 print the serving metrics (the e2e smoke path).
+//! * `serve`     — run the TCP serving layer (`serve/`) over the
+//!                 coordinator: wire-protocol server with admission
+//!                 control and graceful drain.
+//! * `loadgen`   — open-loop load generator: drive configurable QPS /
+//!                 traffic mixes through the client library against a
+//!                 server (or a self-hosted in-process one) and emit the
+//!                 `BENCH_PR5.json` perf trajectory.
 //! * `tables`    — regenerate the paper's evaluation tables from the GPU
 //!                 model (see also `examples/paper_tables.rs`).
 
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use hadacore::coordinator::{Coordinator, CoordinatorConfig, TransformRequest};
 use hadacore::exec::ExecConfig;
 use hadacore::gpu_model::{speedup_grid, GridConfig, A100_PCIE, H100_PCIE};
 use hadacore::hadamard::KernelKind;
 use hadacore::harness::tables::{format_runtime_table, format_speedup_table};
-use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
+use hadacore::harness::workload::{traffic_mix, TRAFFIC_MIXES};
 use hadacore::runtime::Runtime;
+use hadacore::serve::{loadgen as lg, serve as serve_tcp, LoadgenConfig, ServeConfig};
+use hadacore::util::bench::BenchJson;
 use hadacore::util::cli::Args;
 use hadacore::util::error as anyhow;
+use hadacore::util::f16::DType;
 use hadacore::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -30,11 +39,12 @@ fn main() -> anyhow::Result<()> {
         "info" => info(argv),
         "transform" => transform(argv),
         "serve" => serve(argv),
+        "loadgen" => loadgen(argv),
         "tables" => tables(argv),
         _ => {
             println!(
                 "hadacore {} — matrix-unit-accelerated Hadamard transform server\n\n\
-                 usage: hadacore <info|transform|serve|tables> [flags]\n\
+                 usage: hadacore <info|transform|serve|loadgen|tables> [flags]\n\
                  run `hadacore <cmd> --help` for per-command flags",
                 hadacore::VERSION
             );
@@ -121,65 +131,149 @@ fn transform(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Shared engine-config plumbing for the serving subcommands.
+fn exec_config(args: &Args) -> ExecConfig {
+    ExecConfig::with_lanes(args.get_as("exec-threads"))
+}
+
 fn serve(argv: Vec<String>) -> anyhow::Result<()> {
-    let args = Args::new("hadacore serve", "synthetic serving workload")
-        .opt("requests", "2000", "number of requests")
+    let args = Args::new("hadacore serve", "TCP transform server (wire protocol v1)")
+        .opt("addr", "127.0.0.1:7380", "bind address (port 0 = ephemeral)")
         .opt("artifacts", "artifacts", "artifact directory ('' = native only)")
-        .opt("sizes", "128,256,1024,4096", "Hadamard size mix")
         .opt("workers", "4", "batcher worker threads")
         .opt("exec-threads", "0", "engine compute lanes (0 = default: per-core, capped at 16)")
+        .opt("max-conns", "64", "connection-handler pool bound")
+        .opt("max-inflight", "256", "global in-flight request cap")
+        .opt("pipeline", "32", "per-connection pipelining cap")
+        .opt("max-queued-rows", "8192", "shed (Busy) when the batcher queues more rows")
+        .opt("duration", "0", "seconds to serve (0 = until killed)")
         .parse_from(argv)
         .map_err(|e| anyhow::anyhow!(e))?;
-    let total: usize = args.get_as("requests");
     let artifact_dir = serving_artifacts(&args);
-
-    let lanes: usize = args.get_as("exec-threads");
-    let exec = if lanes == 0 {
-        ExecConfig::default()
-    } else {
-        ExecConfig { threads: lanes, ..ExecConfig::default() }
-    };
-    let coord = Coordinator::start(
+    let backend = if artifact_dir.is_some() { "pjrt + native" } else { "native only" };
+    let coord = Arc::new(Coordinator::start(
         artifact_dir,
         CoordinatorConfig {
             workers: args.get_as("workers"),
-            exec,
+            exec: exec_config(&args),
+            ..Default::default()
+        },
+    )?);
+    let handle = serve_tcp(
+        Arc::clone(&coord),
+        ServeConfig {
+            addr: args.get("addr"),
+            max_conns: args.get_as("max-conns"),
+            max_inflight: args.get_as("max-inflight"),
+            pipeline_depth: args.get_as("pipeline"),
+            max_queued_rows: args.get_as("max-queued-rows"),
             ..Default::default()
         },
     )?;
-    let mut wl = ServingWorkload::new(WorkloadConfig {
-        sizes: args.get_list("sizes"),
-        ..Default::default()
-    });
+    println!("hadacore serving on {} ({backend})", handle.addr());
 
-    println!("serving {total} requests...");
-    let t0 = Instant::now();
-    let mut handles = Vec::with_capacity(total);
-    for _ in 0..total {
-        handles.push(coord.submit(wl.next_request()).map_err(|e| anyhow::anyhow!(e))?);
+    let secs: u64 = args.get_as("duration");
+    if secs == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
     }
-    let mut elems = 0usize;
-    for h in handles {
-        let resp = h.recv()??;
-        elems += resp.data.len();
-    }
-    let dt = t0.elapsed();
-    println!(
-        "done: {total} requests / {:.2} M elements in {:?} = {:.0} req/s",
-        elems as f64 / 1e6,
-        dt,
-        total as f64 / dt.as_secs_f64()
-    );
+    std::thread::sleep(Duration::from_secs(secs));
+
+    // graceful teardown: stop the front-end first (in-flight responses
+    // flush to their connections), then drain the coordinator
+    handle.shutdown();
+    coord.drain();
     println!("{}", coord.metrics().snapshot().report());
-    let es = coord.exec_engine().stats();
-    println!(
-        "engine:   {} lanes, {} sharded jobs ({} chunks), {} inline runs",
-        coord.exec_engine().threads(),
-        es.jobs,
-        es.chunks,
-        es.inline_runs
-    );
-    coord.shutdown();
+    Ok(())
+}
+
+fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("hadacore loadgen", "open-loop TCP load generator")
+        .opt("addr", "", "server address ('' = self-host an in-process server)")
+        .opt("qps", "2000", "offered load across all connections (0 = unpaced)")
+        .opt("requests", "2000", "requests per traffic mix")
+        .opt("clients", "4", "client connections")
+        .opt(
+            "mixes",
+            "mixed",
+            "comma-separated traffic mixes (interactive|batch|llama-ffn|quantized|mixed)",
+        )
+        .opt("dtype", "float32", "wire dtype: float32|float16|bfloat16")
+        .opt("kernel", "hadacore", "kernel: hadacore|dao|scalar")
+        .opt("json", "BENCH_PR5.json", "perf-trajectory output path")
+        .opt("workers", "4", "self-hosted server: batcher workers")
+        .opt("exec-threads", "0", "self-hosted server: engine lanes (0 = default)")
+        .switch("smoke", "tiny CI run (few requests, unpaced)")
+        .parse_from(argv)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let dtype = DType::parse(&args.get("dtype"))
+        .ok_or_else(|| anyhow::anyhow!("bad --dtype"))?;
+    let kernel = KernelKind::parse(&args.get("kernel"))
+        .ok_or_else(|| anyhow::anyhow!("bad --kernel"))?;
+    let (requests, qps): (usize, f64) = if args.flag("smoke") {
+        (120, 0.0)
+    } else {
+        (args.get_as("requests"), args.get_as("qps"))
+    };
+
+    // '' = self-host: bind an ephemeral in-process server so one command
+    // exercises the full stack (the CI smoke path)
+    let mut selfhost = None;
+    let addr = {
+        let a = args.get("addr");
+        if a.is_empty() {
+            let coord = Arc::new(Coordinator::start(
+                None,
+                CoordinatorConfig {
+                    workers: args.get_as("workers"),
+                    exec: exec_config(&args),
+                    ..Default::default()
+                },
+            )?);
+            let handle = serve_tcp(Arc::clone(&coord), ServeConfig::default())?;
+            let addr = handle.addr().to_string();
+            println!("self-hosted server on {addr}");
+            selfhost = Some((coord, handle));
+            addr
+        } else {
+            a
+        }
+    };
+
+    let mut out = BenchJson::new();
+    for name in args.get_str_list("mixes") {
+        let mut workload = traffic_mix(&name).ok_or_else(|| {
+            anyhow::anyhow!("unknown mix {name:?}; known: {}", TRAFFIC_MIXES.join(", "))
+        })?;
+        workload.kernel = kernel;
+        let cfg = LoadgenConfig {
+            addr: addr.clone(),
+            mix: name,
+            workload,
+            qps,
+            requests,
+            clients: args.get_as("clients"),
+            dtype,
+            ..Default::default()
+        };
+        let report = lg::run(&cfg)?;
+        println!("{}", report.line());
+        if report.ok == 0 {
+            anyhow::bail!("mix {}: no successful responses", cfg.mix);
+        }
+        out.push(report.to_record(&cfg));
+    }
+
+    let path = BenchJson::output_path(&args.get("json"));
+    let count = out.write(&path).map_err(|e| anyhow::anyhow!(e))?;
+    println!("wrote {count} loadgen records to {path}");
+
+    if let Some((coord, handle)) = selfhost {
+        handle.shutdown();
+        coord.drain();
+        println!("{}", coord.metrics().snapshot().report());
+    }
     Ok(())
 }
 

@@ -1,0 +1,275 @@
+//! Synchronous pipelining client for the wire protocol.
+//!
+//! A [`Client`] owns one TCP connection. [`Client::submit`] writes a
+//! request frame and returns immediately with a [`PendingReply`]; many
+//! submissions can be in flight at once (pipelining), and a background
+//! reader thread demultiplexes whatever the server streams back — in
+//! completion order, not submission order — by request id. [`Client`]
+//! assigns ids itself (unique per connection), so callers never collide
+//! with their own in-flight traffic.
+//!
+//! The blocking conveniences ([`Client::transform`], [`Client::ping`],
+//! [`Client::stats`]) are submit-then-wait; [`Reply`] exposes the
+//! protocol-level outcomes (`Busy` is data, not a transport error — an
+//! open-loop load generator counts it, a latency-sensitive caller backs
+//! off and retries).
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{self as anyhow, anyhow};
+
+use super::wire::{
+    read_frame, write_frame, Frame, ReadError, WireRequest, WireResponse, WireStats,
+    DEFAULT_MAX_FRAME_BYTES,
+};
+
+/// What the server answered for one submitted frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// A transform response (the normal case).
+    Response(WireResponse),
+    /// The request was shed; retry after the hint.
+    Busy {
+        /// Server-suggested backoff.
+        retry_after_us: u32,
+    },
+    /// An error frame (rejection, execution failure, draining, …).
+    Error {
+        /// Machine-readable class tag (see [`super::wire::ErrorCode`]).
+        code: super::wire::ErrorCode,
+        /// Human-readable detail.
+        msg: String,
+    },
+    /// Pong for a ping.
+    Pong,
+    /// Stats snapshot.
+    Stats(WireStats),
+    /// The connection died before the reply arrived.
+    Disconnected,
+}
+
+/// Handle to one in-flight submission.
+pub struct PendingReply {
+    /// The id the client assigned to this submission.
+    pub id: u64,
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl PendingReply {
+    /// Block until the reply arrives (or the connection dies).
+    pub fn wait(self) -> Reply {
+        self.rx.recv().unwrap_or(Reply::Disconnected)
+    }
+
+    /// Non-blocking poll; `None` while still in flight.
+    pub fn try_wait(&self) -> Option<Reply> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Reply::Disconnected),
+        }
+    }
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<Reply>>>>;
+
+/// One connection to a hadacore server.
+pub struct Client {
+    writer: Mutex<TcpStream>,
+    stream: TcpStream,
+    pending: PendingMap,
+    /// Set by the reader before it exits (EOF, reset, or a corrupt
+    /// stream): the connection can no longer deliver replies, so new
+    /// submissions must fail instead of waiting forever.
+    dead: Arc<AtomicBool>,
+    next_id: AtomicU64,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl Client {
+    /// Connect to `addr` (anything [`std::net::ToSocketAddrs`] accepts,
+    /// e.g. `"127.0.0.1:7380"`).
+    pub fn connect(addr: &str) -> anyhow::Result<Client> {
+        Client::connect_with(addr, DEFAULT_MAX_FRAME_BYTES)
+    }
+
+    /// [`Client::connect`] with an explicit frame-size cap, for talking
+    /// to servers configured with a non-default
+    /// [`super::ServeConfig::max_frame_bytes`].
+    pub fn connect_with(addr: &str, max_frame_bytes: u32) -> anyhow::Result<Client> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream
+            .try_clone()
+            .map_err(|e| anyhow!("clone stream: {e}"))?;
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| anyhow!("clone stream: {e}"))?;
+        let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let dead = Arc::new(AtomicBool::new(false));
+        let reader_map = Arc::clone(&pending);
+        let reader_dead = Arc::clone(&dead);
+        let reader = std::thread::Builder::new()
+            .name("hadacore-client-reader".to_string())
+            .spawn(move || reader_loop(read_half, &reader_map, &reader_dead, max_frame_bytes))
+            .map_err(|e| anyhow!("spawn reader: {e}"))?;
+        Ok(Client {
+            writer: Mutex::new(writer),
+            stream,
+            pending,
+            dead,
+            next_id: AtomicU64::new(1),
+            reader: Some(reader),
+        })
+    }
+
+    /// True once the reader has stopped: no further replies can arrive.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    fn register(&self) -> anyhow::Result<(u64, PendingReply)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        // re-check *after* inserting: either this check observes the
+        // dead flag, or the reader (which sets the flag before draining
+        // the map) observes our entry and resolves it — no interleaving
+        // leaves a waiter stranded
+        if self.is_dead() {
+            self.pending.lock().unwrap().remove(&id);
+            return Err(anyhow!("connection closed"));
+        }
+        Ok((id, PendingReply { id, rx }))
+    }
+
+    fn write(&self, frame: &Frame) -> anyhow::Result<()> {
+        let mut w = self.writer.lock().unwrap();
+        write_frame(&mut *w, frame).map_err(|e| anyhow!("write frame: {e}"))?;
+        w.flush().map_err(|e| anyhow!("flush: {e}"))
+    }
+
+    /// Pipeline one request; the client overwrites `req.id` with a
+    /// connection-unique id (echoed on the returned handle). Fails fast
+    /// once the connection is dead.
+    pub fn submit(&self, mut req: WireRequest) -> anyhow::Result<PendingReply> {
+        let (id, reply) = self.register()?;
+        req.id = id;
+        match self.write(&Frame::Request(req)) {
+            Ok(()) => Ok(reply),
+            Err(e) => {
+                self.pending.lock().unwrap().remove(&id);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and block; `Busy` and error frames surface as `Err` with a
+    /// recognisable message (use [`Client::submit`] + [`Reply`] to
+    /// branch on them programmatically).
+    pub fn transform(&self, req: WireRequest) -> anyhow::Result<WireResponse> {
+        match self.submit(req)?.wait() {
+            Reply::Response(r) => Ok(r),
+            Reply::Busy { retry_after_us } => {
+                Err(anyhow!("server busy (retry after {retry_after_us}us)"))
+            }
+            Reply::Error { code, msg } => Err(anyhow!("server error ({code:?}): {msg}")),
+            Reply::Disconnected => Err(anyhow!("connection closed")),
+            other => Err(anyhow!("unexpected reply {other:?}")),
+        }
+    }
+
+    /// Round-trip a ping; returns the measured latency.
+    pub fn ping(&self) -> anyhow::Result<Duration> {
+        let (id, reply) = self.register()?;
+        let t0 = Instant::now();
+        self.write(&Frame::Ping { id })?;
+        match reply.wait() {
+            Reply::Pong => Ok(t0.elapsed()),
+            other => Err(anyhow!("unexpected ping reply {other:?}")),
+        }
+    }
+
+    /// Fetch the server's metrics snapshot.
+    pub fn stats(&self) -> anyhow::Result<WireStats> {
+        let (id, reply) = self.register()?;
+        self.write(&Frame::StatsRequest { id })?;
+        match reply.wait() {
+            Reply::Stats(s) => Ok(s),
+            other => Err(anyhow!("unexpected stats reply {other:?}")),
+        }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        // closing both halves unblocks the reader; pending waiters get
+        // `Disconnected` as the reader drains out
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    pending: &PendingMap,
+    dead: &Arc<AtomicBool>,
+    max_frame_bytes: u32,
+) {
+    loop {
+        match read_frame(&mut stream, max_frame_bytes) {
+            Ok(frame) => {
+                let id = frame.id();
+                let reply = match frame {
+                    Frame::Response(r) => Reply::Response(r),
+                    // id 0 is never assigned by a client: a Busy carrying
+                    // it is the acceptor's *connection-level* shed (the
+                    // handler pool is full and the server is closing this
+                    // socket). Surface it as a retriable Busy to every
+                    // waiter — not as an anonymous disconnect — and stop.
+                    Frame::Busy { id: 0, retry_after_us } => {
+                        dead.store(true, Ordering::Release);
+                        let mut map = pending.lock().unwrap();
+                        for (_, tx) in map.drain() {
+                            let _ = tx.send(Reply::Busy { retry_after_us });
+                        }
+                        return;
+                    }
+                    Frame::Busy { retry_after_us, .. } => Reply::Busy { retry_after_us },
+                    Frame::Error(e) => Reply::Error { code: e.code, msg: e.msg },
+                    Frame::Pong { .. } => Reply::Pong,
+                    Frame::Stats(s) => Reply::Stats(s),
+                    // a server never sends these; drop silently
+                    Frame::Request(_) | Frame::Ping { .. } | Frame::StatsRequest { .. } => {
+                        continue
+                    }
+                };
+                if let Some(tx) = pending.lock().unwrap().remove(&id) {
+                    let _ = tx.send(reply);
+                }
+                // replies whose waiter already went away are dropped
+            }
+            Err(ReadError::Io(_)) | Err(ReadError::Malformed(_)) => {
+                // EOF, reset, or corrupt stream: mark the connection dead
+                // *before* draining, so a concurrent register() either
+                // sees the flag or gets drained here — then fail all
+                // waiters and stop
+                dead.store(true, Ordering::Release);
+                let mut map = pending.lock().unwrap();
+                for (_, tx) in map.drain() {
+                    let _ = tx.send(Reply::Disconnected);
+                }
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! Open-loop load generator for the TCP serving layer.
+//!
+//! Drives a configured QPS of transform requests through [`Client`]
+//! connections — *open loop*: request send times follow the offered-rate
+//! schedule, not the server's completions, so queueing delay shows up in
+//! the measured latency instead of silently throttling the offered load
+//! (the coordinated-omission trap closed-loop benches fall into). The
+//! only concession is a per-connection outstanding-window bound
+//! ([`LoadgenConfig::max_outstanding`]) so a stalled server bounds
+//! memory, not the schedule.
+//!
+//! Traffic models are the [`crate::harness::workload`] mixes
+//! ([`traffic_mix`](crate::harness::workload::traffic_mix)), so the
+//! loadgen exercises exactly the request distributions the in-process
+//! benches measure. Results aggregate into a [`LoadgenReport`] —
+//! achieved QPS, latency percentiles, shed (`Busy`) counts — and convert
+//! to [`BenchRecord`]s for the `BENCH_PR5.json` perf trajectory.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::harness::workload::{ServingWorkload, WorkloadConfig};
+use crate::util::bench::{BenchRecord, Stats};
+use crate::util::error::{self as anyhow, anyhow};
+use crate::util::f16::DType;
+
+use super::client::{Client, PendingReply, Reply};
+use super::wire::WireRequest;
+
+/// Load-generation configuration for one traffic mix.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address.
+    pub addr: String,
+    /// Mix label (reported and recorded; usually a
+    /// [`crate::harness::workload::traffic_mix`] name).
+    pub mix: String,
+    /// The traffic model: sizes, row range, kernel, epilogue, seed.
+    pub workload: WorkloadConfig,
+    /// Offered load in requests/second across all connections
+    /// (`0` = unpaced, send as fast as the window allows).
+    pub qps: f64,
+    /// Total requests to send.
+    pub requests: usize,
+    /// Client connections (requests round-robin across them).
+    pub clients: usize,
+    /// Wire dtype for payloads.
+    pub dtype: DType,
+    /// Per-connection outstanding-reply window (memory bound; large
+    /// enough to never pace an honest server).
+    pub max_outstanding: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: String::new(),
+            mix: "mixed".to_string(),
+            workload: WorkloadConfig::default(),
+            qps: 2000.0,
+            requests: 2000,
+            clients: 4,
+            dtype: DType::F32,
+            // stays under the server's default per-connection pipelining
+            // cap (32) so an honest run never sheds on the window itself
+            max_outstanding: 24,
+        }
+    }
+}
+
+/// Aggregated result of one loadgen run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// Mix label.
+    pub mix: String,
+    /// Offered rate (0 = unpaced).
+    pub offered_qps: f64,
+    /// Completed (ok) requests per wall second.
+    pub achieved_qps: f64,
+    /// Requests sent.
+    pub sent: u64,
+    /// Successful responses.
+    pub ok: u64,
+    /// Retriable `Busy` sheds.
+    pub busy: u64,
+    /// Error replies.
+    pub errors: u64,
+    /// Replies lost to disconnects.
+    pub disconnects: u64,
+    /// Elements transformed (ok responses only).
+    pub elems: u64,
+    /// Wall time of the run.
+    pub wall: Duration,
+    /// Client-observed latencies of ok responses in µs, sorted.
+    pub latencies_us: Vec<f64>,
+}
+
+impl LoadgenReport {
+    /// Latency percentile in µs over ok responses.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        crate::util::bench::percentile(&self.latencies_us, p)
+    }
+
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<12} offered {:>7.0} qps  achieved {:>7.0} qps  ok {}  busy {}  err {}  \
+             p50 {:.0}us  p90 {:.0}us  p99 {:.0}us",
+            self.mix,
+            self.offered_qps,
+            self.achieved_qps,
+            self.ok,
+            self.busy,
+            self.errors + self.disconnects,
+            self.percentile_us(50.0),
+            self.percentile_us(90.0),
+            self.percentile_us(99.0),
+        )
+    }
+
+    /// Convert to a perf-trajectory record (`hadacore-bench-v1` entry):
+    /// the mix's shape envelope as `n`/`rows`, end-to-end element
+    /// throughput, and QPS/latency/shed measurements as extras.
+    pub fn to_record(&self, cfg: &LoadgenConfig) -> BenchRecord {
+        let stats = Stats::from_sorted_us(
+            &format!("loadgen:{}", self.mix),
+            &self.latencies_us,
+        );
+        let melems =
+            self.elems as f64 / self.wall.as_secs_f64().max(1e-9) / 1e6;
+        BenchRecord::serving(
+            "loadgen",
+            cfg.workload.kernel.name(),
+            cfg.workload.sizes.iter().copied().max().unwrap_or(1),
+            cfg.workload.rows_max,
+            cfg.dtype.name(),
+            cfg.clients,
+            stats,
+            melems.max(f64::MIN_POSITIVE),
+        )
+        .with_extra("qps_offered", self.offered_qps)
+        .with_extra("qps_achieved", self.achieved_qps)
+        .with_extra("sent", self.sent as f64)
+        .with_extra("ok", self.ok as f64)
+        .with_extra("busy", self.busy as f64)
+        .with_extra("errors", (self.errors + self.disconnects) as f64)
+        .with_extra("p50_us", self.percentile_us(50.0))
+        .with_extra("p90_us", self.percentile_us(90.0))
+        .with_extra("p99_us", self.percentile_us(99.0))
+    }
+}
+
+/// The open-loop send deadline of global request `index` at `qps`.
+fn due_at(t0: Instant, index: usize, qps: f64) -> Instant {
+    if qps <= 0.0 {
+        return t0;
+    }
+    t0 + Duration::from_secs_f64(index as f64 / qps)
+}
+
+struct Partial {
+    sent: u64,
+    ok: u64,
+    busy: u64,
+    errors: u64,
+    disconnects: u64,
+    elems: u64,
+    latencies_us: Vec<f64>,
+}
+
+/// Run one traffic mix against a server.
+pub fn run(cfg: &LoadgenConfig) -> anyhow::Result<LoadgenReport> {
+    if cfg.clients == 0 || cfg.requests == 0 {
+        return Err(anyhow!("loadgen needs clients >= 1 and requests >= 1"));
+    }
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel::<anyhow::Result<Partial>>();
+    let mut threads = Vec::with_capacity(cfg.clients);
+    for idx in 0..cfg.clients {
+        let cfg = cfg.clone();
+        let tx = tx.clone();
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("hadacore-loadgen-{idx}"))
+                .spawn(move || {
+                    let _ = tx.send(client_thread(&cfg, idx, t0));
+                })
+                .map_err(|e| anyhow!("spawn loadgen client: {e}"))?,
+        );
+    }
+    drop(tx);
+    let mut agg = Partial {
+        sent: 0,
+        ok: 0,
+        busy: 0,
+        errors: 0,
+        disconnects: 0,
+        elems: 0,
+        latencies_us: Vec::new(),
+    };
+    let mut first_err = None;
+    while let Ok(result) = rx.recv() {
+        match result {
+            Ok(p) => {
+                agg.sent += p.sent;
+                agg.ok += p.ok;
+                agg.busy += p.busy;
+                agg.errors += p.errors;
+                agg.disconnects += p.disconnects;
+                agg.elems += p.elems;
+                agg.latencies_us.extend(p.latencies_us);
+            }
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    for h in threads {
+        let _ = h.join();
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall = t0.elapsed();
+    agg.latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(LoadgenReport {
+        mix: cfg.mix.clone(),
+        offered_qps: cfg.qps,
+        achieved_qps: agg.ok as f64 / wall.as_secs_f64().max(1e-9),
+        sent: agg.sent,
+        ok: agg.ok,
+        busy: agg.busy,
+        errors: agg.errors,
+        disconnects: agg.disconnects,
+        elems: agg.elems,
+        wall,
+        latencies_us: agg.latencies_us,
+    })
+}
+
+fn record_reply(p: &mut Partial, sent_at: Instant, reply: Reply) {
+    match reply {
+        Reply::Response(r) => {
+            p.ok += 1;
+            p.elems += r.rows as u64 * r.n as u64;
+            p.latencies_us.push(sent_at.elapsed().as_micros() as f64);
+        }
+        Reply::Busy { .. } => p.busy += 1,
+        Reply::Error { .. } => p.errors += 1,
+        Reply::Disconnected => p.disconnects += 1,
+        // Pong/Stats never answer a transform request
+        _ => p.errors += 1,
+    }
+}
+
+fn drain_ready(p: &mut Partial, outstanding: &mut Vec<(Instant, PendingReply)>) {
+    let mut i = 0;
+    while i < outstanding.len() {
+        match outstanding[i].1.try_wait() {
+            Some(reply) => {
+                let (sent_at, _) = outstanding.remove(i);
+                record_reply(p, sent_at, reply);
+            }
+            None => i += 1,
+        }
+    }
+}
+
+fn client_thread(
+    cfg: &LoadgenConfig,
+    idx: usize,
+    t0: Instant,
+) -> anyhow::Result<Partial> {
+    let client = Client::connect(&cfg.addr)?;
+    // distinct deterministic stream per connection
+    let mut wl = ServingWorkload::new(WorkloadConfig {
+        seed: cfg.workload.seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(idx as u64 + 1)),
+        ..cfg.workload.clone()
+    });
+    let mut p = Partial {
+        sent: 0,
+        ok: 0,
+        busy: 0,
+        errors: 0,
+        disconnects: 0,
+        elems: 0,
+        latencies_us: Vec::new(),
+    };
+    let share = cfg.requests / cfg.clients
+        + usize::from(idx < cfg.requests % cfg.clients);
+    let mut outstanding: Vec<(Instant, PendingReply)> = Vec::new();
+    for i in 0..share {
+        // pace to the open-loop schedule, harvesting replies while idle
+        let due = due_at(t0, i * cfg.clients + idx, cfg.qps);
+        loop {
+            drain_ready(&mut p, &mut outstanding);
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            std::thread::sleep((due - now).min(Duration::from_micros(200)));
+        }
+        let req = wl.next_request();
+        let mut wire =
+            WireRequest::from_f32(0, req.n, &req.data, req.kernel, cfg.dtype);
+        wire.epilogue = req.epilogue;
+        wire.scale = req.scale;
+        wire.force_native = req.force_native;
+        // paced runs charge latency from the *scheduled* send time, so a
+        // send delayed by the outstanding window (or a slow submit) shows
+        // up as latency instead of silently shifting the schedule — the
+        // coordinated-omission correction; unpaced runs have no schedule
+        // and use the actual send instant
+        let basis = if cfg.qps > 0.0 { due } else { Instant::now() };
+        match client.submit(wire) {
+            Ok(pending) => {
+                p.sent += 1;
+                outstanding.push((basis, pending));
+            }
+            Err(_) => {
+                // connection is gone; the failed attempt still counts as
+                // sent (keeping ok+busy+errors+disconnects == sent), and
+                // everything outstanding resolves as disconnected below —
+                // the unsent remainder shows up as sent < requests
+                p.sent += 1;
+                p.errors += 1;
+                break;
+            }
+        }
+        // bound memory: block on the oldest reply past the window
+        while outstanding.len() >= cfg.max_outstanding.max(1) {
+            let (sent_at, pending) = outstanding.remove(0);
+            record_reply(&mut p, sent_at, pending.wait());
+        }
+    }
+    for (sent_at, pending) in outstanding {
+        record_reply(&mut p, sent_at, pending.wait());
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_loop_schedule_is_rate_accurate() {
+        let t0 = Instant::now();
+        // 1000 qps: request k is due k ms after start
+        assert_eq!(due_at(t0, 0, 1000.0), t0);
+        assert_eq!(due_at(t0, 500, 1000.0) - t0, Duration::from_millis(500));
+        // unpaced: everything due immediately
+        assert_eq!(due_at(t0, 12345, 0.0), t0);
+    }
+
+    #[test]
+    fn report_percentiles_and_record() {
+        let report = LoadgenReport {
+            mix: "mixed".to_string(),
+            offered_qps: 100.0,
+            achieved_qps: 95.0,
+            sent: 100,
+            ok: 95,
+            busy: 5,
+            errors: 0,
+            disconnects: 0,
+            elems: 95 * 1024,
+            wall: Duration::from_secs(1),
+            latencies_us: (1..=95).map(|i| i as f64 * 10.0).collect(),
+        };
+        assert!((report.percentile_us(50.0) - 480.0).abs() < 1.0);
+        let line = report.line();
+        assert!(line.contains("busy 5"), "got: {line}");
+        let cfg = LoadgenConfig {
+            workload: WorkloadConfig { sizes: vec![256, 1024], ..Default::default() },
+            ..Default::default()
+        };
+        let rec = report.to_record(&cfg);
+        assert_eq!(rec.n, 1024, "shape envelope = largest size in the mix");
+        assert!(rec.melems_per_s > 0.0);
+        assert!(rec
+            .extras
+            .iter()
+            .any(|(k, v)| k == "busy" && *v == 5.0));
+    }
+}

@@ -1,0 +1,38 @@
+//! Layer 4: the network serving front-end over the [`crate::coordinator`].
+//!
+//! Everything below this module is an in-process function call; this
+//! module is where HadaCore becomes a *service* — the deployment shape
+//! the paper's rotate→quantize primitive actually runs in on an
+//! inference hot path. Zero external dependencies: `std::net` TCP, a
+//! purpose-built binary frame protocol, and `std` threads.
+//!
+//! * [`wire`] — the length-prefixed, versioned frame protocol
+//!   (request/response/error/busy/ping/stats), with strict decode limits
+//!   and bit-exact f32 payloads.
+//! * [`server`] — the TCP acceptor + bounded connection-handler pool:
+//!   decodes frames, applies admission control (global in-flight cap,
+//!   per-connection pipelining cap, batcher queue-depth shedding — all
+//!   answered with a retriable [`wire::Frame::Busy`] rather than
+//!   unbounded queueing), forwards to
+//!   [`Coordinator::submit_with`](crate::coordinator::Coordinator::submit_with),
+//!   and streams responses back out of order by request id.
+//! * [`client`] — the sync pipelining client (tests, examples, loadgen).
+//! * [`loadgen`] — the open-loop QPS load generator over the traffic
+//!   mixes of [`crate::harness::workload`], feeding the
+//!   `BENCH_PR5.json` perf trajectory.
+//!
+//! The acceptance contract (enforced by `rust/tests/serve_e2e.rs`):
+//! responses through this layer are **bit-identical** to direct
+//! `Coordinator::submit` for every kernel × dtype × epilogue
+//! combination, and overload answers `Busy` — no hangs, no dropped
+//! connections.
+
+pub mod client;
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use client::{Client, PendingReply, Reply};
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use server::{serve, ServeConfig, ServeCounters, ServeHandle};
+pub use wire::{Frame, WireRequest, WireResponse, WireStats};

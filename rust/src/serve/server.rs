@@ -1,0 +1,650 @@
+//! The TCP front-end: acceptor, bounded connection handlers, admission
+//! control, and out-of-order response streaming.
+//!
+//! ## Threading model
+//!
+//! One **acceptor** thread owns the [`TcpListener`]. Each admitted
+//! connection gets a **reader** (the spawned handler thread itself) and a
+//! **writer** thread; the pool is bounded by
+//! [`ServeConfig::max_conns`] — connections beyond the bound receive a
+//! retriable [`Frame::Busy`] and are closed, never queued invisibly.
+//!
+//! The reader decodes frames and submits admitted requests to the shared
+//! [`Coordinator`] via [`Coordinator::submit_with`], passing the
+//! connection's single tagged response channel. The writer drains that
+//! channel and encodes response/error frames **in completion order** —
+//! requests pipelined by a client come back possibly out of order,
+//! matched by id. Control frames (`Busy`, `Error`, `Pong`, `Stats`) are
+//! written by the reader under the same write-side mutex, so frames never
+//! interleave mid-frame.
+//!
+//! ## Admission control
+//!
+//! A request is shed with a retriable `Busy` frame (the connection stays
+//! open, nothing hangs) when any of three bounds is hit:
+//!
+//! 1. per-connection pipelining cap ([`ServeConfig::pipeline_depth`]),
+//! 2. global in-flight cap ([`ServeConfig::max_inflight`]),
+//! 3. coordinator queue depth ([`ServeConfig::max_queued_rows`] rows).
+//!
+//! Malformed bytes get an [`ErrorCode::Malformed`] error frame and the
+//! connection closes (there is no way to resynchronise a corrupt length-
+//! prefixed stream). Requests rejected by the router get a
+//! [`ErrorCode::Rejected`] error frame and the connection stays open.
+//!
+//! ## Teardown
+//!
+//! [`ServeHandle::shutdown`] stops the acceptor, lets every reader
+//! notice the flag (bounded by [`ServeConfig::poll_interval`]), and
+//! joins writers — which first flush every in-flight response. Pair it
+//! with [`Coordinator::drain`] for a full graceful stop: requests
+//! admitted before shutdown complete with real responses.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{Coordinator, TaggedResponseTx, TransformResponse};
+use crate::quant::Epilogue;
+use crate::util::error::{self as anyhow, anyhow};
+use crate::util::f16::DType;
+
+use super::wire::{
+    decode_frame, ErrorCode, Frame, WireError, WireResponse, WireStats,
+    DEFAULT_MAX_FRAME_BYTES,
+};
+
+/// Serving-layer configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port — the bound
+    /// address is on [`ServeHandle::addr`]).
+    pub addr: String,
+    /// Connection-handler pool bound; further connections get a `Busy`
+    /// frame and are closed.
+    pub max_conns: usize,
+    /// Global in-flight request cap across all connections.
+    pub max_inflight: usize,
+    /// Per-connection pipelining cap (in-flight requests on one socket).
+    pub pipeline_depth: usize,
+    /// Shed new requests while the coordinator has more than this many
+    /// rows queued (the queue-depth signal of the batcher).
+    pub max_queued_rows: usize,
+    /// Frame-size cap, enforced on inbound frames before any body
+    /// allocation and at admission for outbound ones: a request whose
+    /// *reply* (payload + epilogue scales) could not be encoded under
+    /// the cap is rejected up front.
+    pub max_frame_bytes: u32,
+    /// Reader poll quantum: the latency bound on noticing shutdown while
+    /// a connection is idle.
+    pub poll_interval: Duration,
+    /// Socket write timeout: a client that submits requests but stops
+    /// reading replies fills the send buffer; without this bound its
+    /// blocked `write` would pin the connection's writer (and the write
+    /// mutex) forever and hang teardown. On expiry the connection is
+    /// dead (a partial frame cannot resync) and is closed.
+    pub write_timeout: Duration,
+    /// Backoff hint carried by `Busy` frames.
+    pub busy_retry_us: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 64,
+            max_inflight: 256,
+            pipeline_depth: 32,
+            max_queued_rows: 8192,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            poll_interval: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(5),
+            busy_retry_us: 1000,
+        }
+    }
+}
+
+/// Serve-layer counters (exposed through the `Stats` frame next to the
+/// coordinator metrics).
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Connections admitted to the handler pool.
+    pub conns_accepted: AtomicU64,
+    /// Connections shed at the pool bound.
+    pub conns_rejected: AtomicU64,
+    /// Currently open connections.
+    pub conns_active: AtomicUsize,
+    /// Requests currently in flight (admitted, response not yet written).
+    pub inflight: AtomicUsize,
+    /// Requests shed with a `Busy` frame.
+    pub busy_shed: AtomicU64,
+    /// Malformed frames / protocol violations observed.
+    pub protocol_errors: AtomicU64,
+    /// Requests forwarded to the coordinator.
+    pub requests: AtomicU64,
+}
+
+struct ServeState {
+    coord: Arc<Coordinator>,
+    cfg: ServeConfig,
+    shutdown: AtomicBool,
+    counters: ServeCounters,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Handle to a running server; dropping it shuts the server down.
+pub struct ServeHandle {
+    addr: SocketAddr,
+    state: Arc<ServeState>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+/// Bind and start serving `coord` on `cfg.addr`.
+pub fn serve(coord: Arc<Coordinator>, cfg: ServeConfig) -> anyhow::Result<ServeHandle> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| anyhow!("local_addr: {e}"))?;
+    let state = Arc::new(ServeState {
+        coord,
+        cfg,
+        shutdown: AtomicBool::new(false),
+        counters: ServeCounters::default(),
+        conn_threads: Mutex::new(Vec::new()),
+    });
+    let accept_state = Arc::clone(&state);
+    let accept_thread = std::thread::Builder::new()
+        .name("hadacore-acceptor".to_string())
+        .spawn(move || accept_loop(listener, &accept_state))
+        .map_err(|e| anyhow!("spawn acceptor: {e}"))?;
+    Ok(ServeHandle { addr, state, accept_thread: Some(accept_thread) })
+}
+
+impl ServeHandle {
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve-layer counters.
+    pub fn counters(&self) -> &ServeCounters {
+        &self.state.counters
+    }
+
+    /// Stop accepting, let in-flight responses flush, join all threads.
+    /// Does **not** drain the shared coordinator — call
+    /// [`Coordinator::drain`] after this for a full graceful stop.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.state.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        // wake the blocking accept() with a throwaway connection. A
+        // wildcard bind (0.0.0.0 / ::) is not connectable on every
+        // platform, so aim at loopback on the bound port; bound by a
+        // timeout so shutdown never inherits a hang from the network.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake {
+                SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let woke =
+            TcpStream::connect_timeout(&wake, Duration::from_secs(1)).is_ok();
+        if let Some(h) = self.accept_thread.take() {
+            if woke {
+                let _ = h.join();
+            }
+            // else: the acceptor could not be woken (unreachable bind
+            // address). Leave it parked instead of hanging shutdown —
+            // the flag is set, so if a connection ever does arrive the
+            // loop exits without serving it, and process exit reclaims
+            // the thread either way.
+        }
+        let conns: Vec<JoinHandle<()>> =
+            self.state.conn_threads.lock().unwrap().drain(..).collect();
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: &Arc<ServeState>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if state.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                // e.g. EMFILE under overload: back off instead of
+                // busy-spinning the core the handlers need to free fds
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if state.shutdown.load(Ordering::Acquire) {
+            return; // the wake-up connection (or a late arrival)
+        }
+        // reap finished handlers so the handle list stays bounded by the
+        // number of *live* connections, not the connection history
+        {
+            let mut threads = state.conn_threads.lock().unwrap();
+            let mut live = Vec::with_capacity(threads.len());
+            for h in threads.drain(..) {
+                if h.is_finished() {
+                    let _ = h.join();
+                } else {
+                    live.push(h);
+                }
+            }
+            *threads = live;
+        }
+        if state.counters.conns_active.load(Ordering::Acquire) >= state.cfg.max_conns {
+            state.counters.conns_rejected.fetch_add(1, Ordering::Relaxed);
+            let mut s = stream;
+            let busy =
+                Frame::Busy { id: 0, retry_after_us: state.cfg.busy_retry_us };
+            let _ = s.write_all(&busy.encode());
+            let _ = s.shutdown(Shutdown::Both);
+            continue;
+        }
+        state.counters.conns_active.fetch_add(1, Ordering::AcqRel);
+        state.counters.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        let conn_state = Arc::clone(state);
+        match std::thread::Builder::new()
+            .name("hadacore-conn".to_string())
+            .spawn(move || handle_conn(&conn_state, stream))
+        {
+            Ok(h) => state.conn_threads.lock().unwrap().push(h),
+            Err(_) => {
+                state.counters.conns_active.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+}
+
+/// Write one frame under the connection's write mutex (reader-side
+/// control frames and writer-side responses share it, so frames never
+/// interleave).
+fn send_locked(half: &Mutex<TcpStream>, frame: &Frame) -> std::io::Result<()> {
+    let bytes = frame.encode();
+    let mut s = half.lock().unwrap();
+    s.write_all(&bytes)
+}
+
+fn handle_conn(state: &Arc<ServeState>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(state.cfg.poll_interval));
+    let _ = stream.set_write_timeout(Some(state.cfg.write_timeout));
+    let result = stream.try_clone();
+    match result {
+        Ok(write_stream) => {
+            let write_half = Arc::new(Mutex::new(write_stream));
+            conn_loop(state, stream, &write_half);
+        }
+        Err(_) => drop(stream),
+    }
+    state.counters.conns_active.fetch_sub(1, Ordering::AcqRel);
+}
+
+/// Per-request bookkeeping the writer needs to encode the response in
+/// the dtype the request arrived with.
+type InflightMeta = Arc<Mutex<HashMap<u64, (DType, u32)>>>;
+
+/// The receive side of a connection's tagged response channel.
+type TaggedRx = mpsc::Receiver<(u64, anyhow::Result<TransformResponse>)>;
+
+fn conn_loop(
+    state: &Arc<ServeState>,
+    mut reader: TcpStream,
+    write_half: &Arc<Mutex<TcpStream>>,
+) {
+    let (tx, rx) = mpsc::channel::<(u64, anyhow::Result<TransformResponse>)>();
+    let conn_inflight = Arc::new(AtomicUsize::new(0));
+    let meta: InflightMeta = Arc::new(Mutex::new(HashMap::new()));
+
+    let writer = {
+        let state = Arc::clone(state);
+        let write_half = Arc::clone(write_half);
+        let conn_inflight = Arc::clone(&conn_inflight);
+        let meta = Arc::clone(&meta);
+        std::thread::Builder::new()
+            .name("hadacore-conn-writer".to_string())
+            .spawn(move || writer_loop(&state, &write_half, rx, &conn_inflight, &meta))
+    };
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+
+    // Incremental framing: accumulate bytes and peel complete frames off
+    // the front. The read timeout (the shutdown-poll quantum) is only
+    // ever hit by `read`, which consumes nothing on timeout — a frame
+    // that straddles a network stall stays intact in `buf` instead of
+    // being torn mid-read (which read_exact-style framing would do).
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    'conn: loop {
+        loop {
+            match decode_frame(&buf, state.cfg.max_frame_bytes) {
+                Ok(Some((frame, used))) => {
+                    buf.drain(..used);
+                    if !handle_frame(state, write_half, &tx, &conn_inflight, &meta, frame)
+                    {
+                        break 'conn;
+                    }
+                }
+                Ok(None) => break, // need more bytes
+                Err(msg) => {
+                    state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = send_locked(
+                        write_half,
+                        &Frame::Error(WireError {
+                            id: 0,
+                            code: ErrorCode::Malformed,
+                            msg,
+                        }),
+                    );
+                    break 'conn; // a corrupt length-prefixed stream cannot resync
+                }
+            }
+        }
+        // exit check sits between "answer everything buffered" and
+        // "read more": a client that keeps streaming frames cannot pin
+        // this handler past shutdown (frames already received were
+        // answered above — with Draining errors once the flag is up)
+        if state.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => break, // EOF: client is done
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {} // poll quantum: re-check shutdown above
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break, // reset / hard error
+        }
+    }
+    // dropping our sender lets the writer exit once the coordinator has
+    // delivered (and the writer has flushed) every in-flight response
+    drop(tx);
+    let _ = writer.join();
+    let _ = reader.shutdown(Shutdown::Both);
+}
+
+/// React to one decoded frame; returns false to close the connection.
+///
+/// Every reader-side write propagates its success: a failed (or timed
+/// out) control-frame write may have torn a partial frame into the
+/// stream, so the connection must close — and closing also stops a
+/// non-reading client from costing one write-timeout per buffered
+/// frame.
+fn handle_frame(
+    state: &Arc<ServeState>,
+    write_half: &Arc<Mutex<TcpStream>>,
+    tx: &TaggedResponseTx,
+    conn_inflight: &Arc<AtomicUsize>,
+    meta: &InflightMeta,
+    frame: Frame,
+) -> bool {
+    match frame {
+        Frame::Ping { id } => send_locked(write_half, &Frame::Pong { id }).is_ok(),
+        Frame::StatsRequest { id } => {
+            let stats = build_stats(state, id);
+            send_locked(write_half, &Frame::Stats(stats)).is_ok()
+        }
+        Frame::Request(wr) => {
+            let id = wr.id;
+            if state.shutdown.load(Ordering::Acquire) || state.coord.is_draining() {
+                return send_locked(
+                    write_half,
+                    &Frame::Error(WireError {
+                        id,
+                        code: ErrorCode::Draining,
+                        msg: "server is draining".to_string(),
+                    }),
+                )
+                .is_ok();
+            }
+            // admission control: shed with a retriable Busy instead of
+            // queueing without bound (or hanging the connection)
+            let shed = conn_inflight.load(Ordering::Acquire)
+                >= state.cfg.pipeline_depth
+                || state.counters.inflight.load(Ordering::Acquire)
+                    >= state.cfg.max_inflight
+                || state.coord.queued_rows() > state.cfg.max_queued_rows;
+            if shed {
+                state.counters.busy_shed.fetch_add(1, Ordering::Relaxed);
+                return send_locked(
+                    write_half,
+                    &Frame::Busy { id, retry_after_us: state.cfg.busy_retry_us },
+                )
+                .is_ok();
+            }
+            // the response echoes the payload and adds epilogue scales:
+            // reject a request whose *reply* could not be encoded under
+            // the frame cap (the client's decoder would kill the
+            // connection over a perfectly admitted request otherwise)
+            let elems = wr.rows as u64 * wr.n as u64;
+            let scale_bytes = match wr.epilogue {
+                Epilogue::QuantInt8 { group } => 4 * (elems / group.max(1) as u64) + 8,
+                _ => 8,
+            };
+            let resp_bytes = 96 + wr.payload.len() as u64 + scale_bytes;
+            if resp_bytes > state.cfg.max_frame_bytes as u64 {
+                return send_locked(
+                    write_half,
+                    &Frame::Error(WireError {
+                        id,
+                        code: ErrorCode::Rejected,
+                        msg: format!(
+                            "response would need ~{resp_bytes} bytes, over the \
+                             frame cap {}",
+                            state.cfg.max_frame_bytes
+                        ),
+                    }),
+                )
+                .is_ok();
+            }
+            match meta.lock().unwrap().entry(id) {
+                Entry::Occupied(_) => {
+                    // the frame itself decoded fine, so this is a
+                    // rejected request, not a corrupt stream — Malformed
+                    // would (per the wire contract) imply the connection
+                    // is about to close, which it is not
+                    state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    return send_locked(
+                        write_half,
+                        &Frame::Error(WireError {
+                            id,
+                            code: ErrorCode::Rejected,
+                            msg: format!("duplicate in-flight request id {id}"),
+                        }),
+                    )
+                    .is_ok();
+                }
+                Entry::Vacant(v) => {
+                    v.insert((wr.dtype, wr.n));
+                }
+            }
+            let req = match wr.to_transform() {
+                Ok(req) => req,
+                Err(msg) => {
+                    // defensive (decode already validates the shape):
+                    // Rejected, because the connection stays open
+                    meta.lock().unwrap().remove(&id);
+                    state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    return send_locked(
+                        write_half,
+                        &Frame::Error(WireError {
+                            id,
+                            code: ErrorCode::Rejected,
+                            msg,
+                        }),
+                    )
+                    .is_ok();
+                }
+            };
+            conn_inflight.fetch_add(1, Ordering::AcqRel);
+            state.counters.inflight.fetch_add(1, Ordering::AcqRel);
+            match state.coord.submit_with(req, tx.clone()) {
+                Ok(()) => {
+                    state.counters.requests.fetch_add(1, Ordering::Relaxed);
+                    true
+                }
+                Err(e) => {
+                    conn_inflight.fetch_sub(1, Ordering::AcqRel);
+                    state.counters.inflight.fetch_sub(1, Ordering::AcqRel);
+                    meta.lock().unwrap().remove(&id);
+                    let code = if state.coord.is_draining() {
+                        ErrorCode::Draining
+                    } else {
+                        ErrorCode::Rejected
+                    };
+                    send_locked(write_half, &Frame::Error(WireError { id, code, msg: e.0 }))
+                        .is_ok()
+                }
+            }
+        }
+        // server-to-client frames arriving here are a protocol violation
+        other => {
+            state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = send_locked(
+                write_half,
+                &Frame::Error(WireError {
+                    id: other.id(),
+                    code: ErrorCode::Malformed,
+                    msg: "unexpected frame type from client".to_string(),
+                }),
+            );
+            false
+        }
+    }
+}
+
+fn writer_loop(
+    state: &Arc<ServeState>,
+    write_half: &Arc<Mutex<TcpStream>>,
+    rx: TaggedRx,
+    conn_inflight: &Arc<AtomicUsize>,
+    meta: &InflightMeta,
+) {
+    // after a write failure the client is gone: keep draining the channel
+    // (the coordinator still owns sender clones and the counters must
+    // come back down) but stop encoding
+    let mut dead = false;
+    while let Ok((id, result)) = rx.recv() {
+        let entry = meta.lock().unwrap().remove(&id);
+        if !dead {
+            if let Some((dtype, n)) = entry {
+                let frame = match result {
+                    Ok(resp) => {
+                        Frame::Response(WireResponse::from_transform(&resp, n, dtype))
+                    }
+                    Err(e) => Frame::Error(WireError {
+                        id,
+                        code: ErrorCode::ExecFailed,
+                        msg: e.to_string(),
+                    }),
+                };
+                if send_locked(write_half, &frame).is_err() {
+                    // timeout or reset: a partially written frame cannot
+                    // resync, so the connection is done — close it to
+                    // unblock the (possibly stalled) peer-facing reader
+                    dead = true;
+                    let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
+                }
+            }
+        }
+        conn_inflight.fetch_sub(1, Ordering::AcqRel);
+        state.counters.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Assemble the `Stats` frame: coordinator snapshot + histogram
+/// percentile reconstructions + serve-layer counters, with the full text
+/// report a remote operator would otherwise need shell access for.
+fn build_stats(state: &Arc<ServeState>, id: u64) -> WireStats {
+    let m = state.coord.metrics();
+    let s = m.snapshot();
+    let c = &state.counters;
+    let counters: Vec<(String, u64)> = [
+        ("submitted", s.submitted),
+        ("completed", s.completed),
+        ("rejected", s.rejected),
+        ("failed", s.failed),
+        ("batches", s.batches),
+        ("native_batches", s.native_batches),
+        ("pjrt_batches", s.pjrt_batches),
+        ("rows", s.rows),
+        ("padded_rows", s.padded_rows),
+        ("queue_p50_us", s.queue_p50_us),
+        ("queue_p90_us", s.queue_p90_us),
+        ("queue_p99_us", s.queue_p99_us),
+        ("exec_p50_us", s.exec_p50_us),
+        ("exec_p90_us", s.exec_p90_us),
+        ("exec_p99_us", s.exec_p99_us),
+        ("e2e_p50_us", s.e2e_p50_us),
+        ("e2e_p90_us", s.e2e_p90_us),
+        ("e2e_p95_us", s.e2e_p95_us),
+        ("e2e_p99_us", s.e2e_p99_us),
+        ("e2e_mean_us", s.e2e_mean_us as u64),
+        ("conns_accepted", c.conns_accepted.load(Ordering::Relaxed)),
+        ("conns_rejected", c.conns_rejected.load(Ordering::Relaxed)),
+        ("conns_active", c.conns_active.load(Ordering::Relaxed) as u64),
+        ("inflight", c.inflight.load(Ordering::Relaxed) as u64),
+        ("busy_shed", c.busy_shed.load(Ordering::Relaxed)),
+        ("protocol_errors", c.protocol_errors.load(Ordering::Relaxed)),
+        ("requests", c.requests.load(Ordering::Relaxed)),
+    ]
+    .into_iter()
+    .map(|(k, v)| (k.to_string(), v))
+    .collect();
+    let report = format!(
+        "{}\n{}\n{}\n{}\nserve:    {} conns ({} active, {} shed), {} busy, {} protocol errors",
+        s.report(),
+        m.queue.report("queue"),
+        m.exec.report("exec"),
+        m.e2e.report("e2e"),
+        c.conns_accepted.load(Ordering::Relaxed),
+        c.conns_active.load(Ordering::Relaxed),
+        c.conns_rejected.load(Ordering::Relaxed),
+        c.busy_shed.load(Ordering::Relaxed),
+        c.protocol_errors.load(Ordering::Relaxed),
+    );
+    WireStats { id, counters, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_bounded() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.max_conns > 0);
+        assert!(cfg.max_inflight >= cfg.pipeline_depth);
+        assert!(cfg.max_frame_bytes >= 1 << 20);
+        assert!(cfg.addr.ends_with(":0"), "default binds an ephemeral port");
+    }
+}

@@ -1,0 +1,1066 @@
+//! The length-prefixed binary wire protocol of the TCP serving layer.
+//!
+//! Every frame is `len: u32` (little-endian, counting the bytes *after*
+//! the length field) followed by `len` body bytes. The body starts with a
+//! one-byte protocol version and a one-byte frame tag; the rest is
+//! tag-specific. All integers are little-endian; floats travel as their
+//! IEEE bit patterns, so an f32 payload round-trips **bit-exactly** — the
+//! foundation of the serving layer's bit-identity guarantee against
+//! direct [`Coordinator::submit`](crate::coordinator::Coordinator).
+//!
+//! | tag | frame | body after `(version, tag)` |
+//! |---|---|---|
+//! | 1 | `Request` | `id u64, n u32, rows u32, kernel u8, dtype u8, flags u8, epilogue u8, group u32, scale f32, payload` |
+//! | 2 | `Response` | `id u64, n u32, rows u32, dtype u8, backend u8, batch_rows u32, queue_us u64, exec_us u64, scales, payload` |
+//! | 3 | `Error` | `id u64, code u8, msg_len u16, msg` |
+//! | 4 | `Busy` | `id u64, retry_after_us u32` |
+//! | 5 | `Ping` | `id u64` |
+//! | 6 | `Pong` | `id u64` |
+//! | 7 | `StatsRequest` | `id u64` |
+//! | 8 | `Stats` | `id u64, n u32, n x {key_len u8, key, value u64}, report_len u32, report` |
+//!
+//! Request `flags`: bit 0 = custom scale present (the `scale` field is
+//! its bits; otherwise the field must be zero), bit 1 = force the native
+//! backend; all other bits must be zero. `epilogue`: 0 none, 1 FP8 e4m3,
+//! 2 FP8 e5m2, 3 grouped INT8 (`group` must be nonzero exactly for
+//! INT8). Response `scales`: `tag u8` = 0 none | 1 per-tensor (`f32`)
+//! | 2 per-group (`count u32, count x f32`). Payloads are `rows * n`
+//! elements in the frame's dtype (float32 = 4 bytes/elem, float16 /
+//! bfloat16 = 2, converted with the crate's round-to-nearest-even
+//! [`crate::util::f16`] codecs).
+//!
+//! Decoding is strict by design: an unknown version/tag/enum value, a
+//! payload whose length disagrees with `rows * n * elem_size`, trailing
+//! bytes after a parsed body, or a frame longer than the configured cap
+//! all yield a descriptive [`Err`] — never a panic, and (because the
+//! length prefix is validated before any allocation) never an oversized
+//! allocation. Incomplete input is reported as "need more bytes", which
+//! the server answers by reading on and a buffer-based caller treats as
+//! truncation. `rust/tests/wire_protocol.rs` drives round-trip,
+//! truncation, and garbage property tests over this module.
+
+use crate::coordinator::{TransformRequest, TransformResponse};
+use crate::hadamard::KernelKind;
+use crate::quant::{Epilogue, Fp8Format, QuantScales};
+use crate::util::f16::{DType, Element, BF16, F16};
+
+/// Protocol version carried by every frame.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Default frame-size cap (64 MiB): comfortably above the largest legal
+/// payload (`max_request_rows * MAX_HADAMARD_SIZE` would exceed it, but
+/// serving-realistic batches are far smaller) while bounding what a
+/// malformed length prefix can make the decoder allocate.
+pub const DEFAULT_MAX_FRAME_BYTES: u32 = 1 << 26;
+
+/// Hard cap on `Stats` counter entries (a frame claiming more is
+/// malformed).
+pub const MAX_STATS_COUNTERS: u32 = 4096;
+
+/// Machine-readable error classes carried by [`Frame::Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame could not be decoded; the connection closes after this.
+    Malformed,
+    /// The coordinator's router rejected the request (not retriable as
+    /// sent — the request itself is invalid).
+    Rejected,
+    /// The request was admitted but execution failed.
+    ExecFailed,
+    /// The server is draining; retriable against a fresh server.
+    Draining,
+}
+
+impl ErrorCode {
+    fn tag(self) -> u8 {
+        match self {
+            ErrorCode::Malformed => 1,
+            ErrorCode::Rejected => 2,
+            ErrorCode::ExecFailed => 3,
+            ErrorCode::Draining => 4,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<ErrorCode, String> {
+        match t {
+            1 => Ok(ErrorCode::Malformed),
+            2 => Ok(ErrorCode::Rejected),
+            3 => Ok(ErrorCode::ExecFailed),
+            4 => Ok(ErrorCode::Draining),
+            _ => Err(format!("unknown error code {t}")),
+        }
+    }
+}
+
+/// A transform request as it travels on the wire. `payload` holds
+/// `rows * n` elements encoded in `dtype`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    /// Client-assigned id, echoed by every reply frame.
+    pub id: u64,
+    /// Hadamard size (row length).
+    pub n: u32,
+    /// Row count (`payload.len() == rows * n * dtype.size_bytes()`).
+    pub rows: u32,
+    /// Kernel implementation to run.
+    pub kernel: KernelKind,
+    /// Payload element encoding.
+    pub dtype: DType,
+    /// Output scaling (`None` = orthonormal `1/sqrt(n)`).
+    pub scale: Option<f32>,
+    /// Force the native backend.
+    pub force_native: bool,
+    /// Fused rotate→quantize epilogue.
+    pub epilogue: Epilogue,
+    /// Row-major payload bytes in `dtype`.
+    pub payload: Vec<u8>,
+}
+
+/// A transform response as it travels on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResponse {
+    /// Echoed request id.
+    pub id: u64,
+    /// Hadamard size.
+    pub n: u32,
+    /// Rows in the payload.
+    pub rows: u32,
+    /// Payload element encoding (echoes the request's dtype).
+    pub dtype: DType,
+    /// True when the batch executed on the PJRT backend.
+    pub pjrt: bool,
+    /// Rows in the executed batch (including padding).
+    pub batch_rows: u32,
+    /// Queue-wait time of this request.
+    pub queue_us: u64,
+    /// Kernel execution time of the batch.
+    pub exec_us: u64,
+    /// Epilogue scales ([`QuantScales::None`] for plain requests).
+    pub scales: QuantScales,
+    /// Transformed rows, encoded in `dtype`.
+    pub payload: Vec<u8>,
+}
+
+/// An error reply (also used standalone for protocol errors).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireError {
+    /// The offending request id (0 when no frame could be attributed).
+    pub id: u64,
+    /// Error class.
+    pub code: ErrorCode,
+    /// Human-readable detail.
+    pub msg: String,
+}
+
+/// A server metrics snapshot: named counters plus the text report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireStats {
+    /// Echoed request id.
+    pub id: u64,
+    /// Named counter values (coordinator metrics + serve-layer counters,
+    /// percentiles in µs).
+    pub counters: Vec<(String, u64)>,
+    /// Multi-line human-readable report (the same text an in-process
+    /// caller gets from `MetricsSnapshot::report` + histogram reports).
+    pub report: String,
+}
+
+/// One decoded protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server transform request.
+    Request(WireRequest),
+    /// Server → client transform response (possibly out of order).
+    Response(WireResponse),
+    /// Server → client error reply.
+    Error(WireError),
+    /// Server → client load-shed reply: the request was *not* admitted
+    /// and may be retried after the hinted backoff.
+    Busy {
+        /// Echoed request id.
+        id: u64,
+        /// Suggested client backoff before retrying.
+        retry_after_us: u32,
+    },
+    /// Liveness probe.
+    Ping {
+        /// Echo id.
+        id: u64,
+    },
+    /// Liveness reply.
+    Pong {
+        /// Echoed id.
+        id: u64,
+    },
+    /// Client → server metrics request.
+    StatsRequest {
+        /// Echo id.
+        id: u64,
+    },
+    /// Server → client metrics snapshot.
+    Stats(WireStats),
+}
+
+// ---------------------------------------------------------------------
+// Element payload codecs.
+
+/// Encode f32 values into `dtype` wire bytes (f32 is bit-exact; 16-bit
+/// dtypes narrow with round-to-nearest-even).
+pub fn encode_elems(data: &[f32], dtype: DType) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * dtype.size_bytes());
+    match dtype {
+        DType::F32 => {
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        DType::F16 => {
+            for v in data {
+                out.extend_from_slice(&F16::from_f32(*v).0.to_le_bytes());
+            }
+        }
+        DType::BF16 => {
+            for v in data {
+                out.extend_from_slice(&BF16::from_f32(*v).0.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Decode `dtype` wire bytes into f32 values (widening is exact for all
+/// three dtypes).
+pub fn decode_elems(bytes: &[u8], dtype: DType) -> Result<Vec<f32>, String> {
+    let esize = dtype.size_bytes();
+    if bytes.len() % esize != 0 {
+        return Err(format!(
+            "payload length {} is not a multiple of element size {esize}",
+            bytes.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / esize);
+    match dtype {
+        DType::F32 => {
+            for c in bytes.chunks_exact(4) {
+                out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+        }
+        DType::F16 => {
+            for c in bytes.chunks_exact(2) {
+                out.push(F16(u16::from_le_bytes([c[0], c[1]])).to_f32());
+            }
+        }
+        DType::BF16 => {
+            for c in bytes.chunks_exact(2) {
+                out.push(BF16(u16::from_le_bytes([c[0], c[1]])).to_f32());
+            }
+        }
+    }
+    Ok(out)
+}
+
+impl WireRequest {
+    /// Build a request frame from f32 row data (`data.len()` must be a
+    /// `rows * n` multiple; rows is derived).
+    pub fn from_f32(
+        id: u64,
+        n: usize,
+        data: &[f32],
+        kernel: KernelKind,
+        dtype: DType,
+    ) -> WireRequest {
+        let rows = if n == 0 { 0 } else { data.len() / n };
+        WireRequest {
+            id,
+            n: n as u32,
+            rows: rows as u32,
+            kernel,
+            dtype,
+            scale: None,
+            force_native: false,
+            epilogue: Epilogue::None,
+            payload: encode_elems(data, dtype),
+        }
+    }
+
+    /// Decode the payload and build the coordinator-side request. The
+    /// payload length is re-checked against `rows * n` so a hand-built
+    /// frame can't smuggle a shape mismatch past the router.
+    pub fn to_transform(&self) -> Result<TransformRequest, String> {
+        let n = self.n as usize;
+        let rows = self.rows as usize;
+        let want = (self.rows as u64) * (self.n as u64) * self.dtype.size_bytes() as u64;
+        if self.payload.len() as u64 != want {
+            return Err(format!(
+                "payload length {} != rows {} * n {} * {}B",
+                self.payload.len(),
+                rows,
+                n,
+                self.dtype.size_bytes()
+            ));
+        }
+        Ok(TransformRequest {
+            id: self.id,
+            n,
+            rows,
+            data: decode_elems(&self.payload, self.dtype)?,
+            kernel: self.kernel,
+            scale: self.scale,
+            epilogue: self.epilogue,
+            force_native: self.force_native,
+        })
+    }
+}
+
+impl WireResponse {
+    /// Build a response frame from a coordinator response, encoding the
+    /// payload in the request's wire dtype. `n` comes from the request
+    /// the server tracked for this id.
+    pub fn from_transform(resp: &TransformResponse, n: u32, dtype: DType) -> WireResponse {
+        let rows = if n == 0 { 0 } else { resp.data.len() / n as usize };
+        WireResponse {
+            id: resp.id,
+            n,
+            rows: rows as u32,
+            dtype,
+            pjrt: resp.backend == "pjrt",
+            batch_rows: resp.batch_rows as u32,
+            queue_us: resp.queue_us,
+            exec_us: resp.exec_us,
+            scales: resp.scales.clone(),
+            payload: encode_elems(&resp.data, dtype),
+        }
+    }
+
+    /// Decode the payload back to f32 values.
+    pub fn data_f32(&self) -> Result<Vec<f32>, String> {
+        decode_elems(&self.payload, self.dtype)
+    }
+
+    /// Backend label, mirroring [`TransformResponse::backend`].
+    pub fn backend(&self) -> &'static str {
+        if self.pjrt {
+            "pjrt"
+        } else {
+            "native"
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Encoding.
+
+fn kernel_tag(k: KernelKind) -> u8 {
+    match k {
+        KernelKind::Scalar => 0,
+        KernelKind::Dao => 1,
+        KernelKind::HadaCore => 2,
+    }
+}
+
+fn kernel_from_tag(t: u8) -> Result<KernelKind, String> {
+    match t {
+        0 => Ok(KernelKind::Scalar),
+        1 => Ok(KernelKind::Dao),
+        2 => Ok(KernelKind::HadaCore),
+        _ => Err(format!("unknown kernel tag {t}")),
+    }
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F16 => 1,
+        DType::BF16 => 2,
+    }
+}
+
+fn dtype_from_tag(t: u8) -> Result<DType, String> {
+    match t {
+        0 => Ok(DType::F32),
+        1 => Ok(DType::F16),
+        2 => Ok(DType::BF16),
+        _ => Err(format!("unknown dtype tag {t}")),
+    }
+}
+
+fn epilogue_tags(e: Epilogue) -> (u8, u32) {
+    match e {
+        Epilogue::None => (0, 0),
+        Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 } => (1, 0),
+        Epilogue::QuantFp8 { fmt: Fp8Format::E5M2 } => (2, 0),
+        Epilogue::QuantInt8 { group } => (3, group as u32),
+    }
+}
+
+fn epilogue_from_tags(tag: u8, group: u32) -> Result<Epilogue, String> {
+    match tag {
+        0 | 1 | 2 if group != 0 => {
+            Err(format!("epilogue tag {tag} must carry group 0, got {group}"))
+        }
+        0 => Ok(Epilogue::None),
+        1 => Ok(Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 }),
+        2 => Ok(Epilogue::QuantFp8 { fmt: Fp8Format::E5M2 }),
+        3 if group == 0 => Err("int8 epilogue requires a nonzero group".to_string()),
+        3 => Ok(Epilogue::QuantInt8 { group: group as usize }),
+        _ => Err(format!("unknown epilogue tag {tag}")),
+    }
+}
+
+const TAG_REQUEST: u8 = 1;
+const TAG_RESPONSE: u8 = 2;
+const TAG_ERROR: u8 = 3;
+const TAG_BUSY: u8 = 4;
+const TAG_PING: u8 = 5;
+const TAG_PONG: u8 = 6;
+const TAG_STATS_REQUEST: u8 = 7;
+const TAG_STATS: u8 = 8;
+
+const FLAG_HAS_SCALE: u8 = 1 << 0;
+const FLAG_FORCE_NATIVE: u8 = 1 << 1;
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+impl Frame {
+    /// Encode the whole frame, length prefix included.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(64);
+        body.push(WIRE_VERSION);
+        match self {
+            Frame::Request(r) => {
+                body.push(TAG_REQUEST);
+                put_u64(&mut body, r.id);
+                put_u32(&mut body, r.n);
+                put_u32(&mut body, r.rows);
+                body.push(kernel_tag(r.kernel));
+                body.push(dtype_tag(r.dtype));
+                let mut flags = 0u8;
+                if r.scale.is_some() {
+                    flags |= FLAG_HAS_SCALE;
+                }
+                if r.force_native {
+                    flags |= FLAG_FORCE_NATIVE;
+                }
+                body.push(flags);
+                let (etag, group) = epilogue_tags(r.epilogue);
+                body.push(etag);
+                put_u32(&mut body, group);
+                put_f32(&mut body, r.scale.unwrap_or(0.0));
+                body.extend_from_slice(&r.payload);
+            }
+            Frame::Response(r) => {
+                body.push(TAG_RESPONSE);
+                put_u64(&mut body, r.id);
+                put_u32(&mut body, r.n);
+                put_u32(&mut body, r.rows);
+                body.push(dtype_tag(r.dtype));
+                body.push(r.pjrt as u8);
+                put_u32(&mut body, r.batch_rows);
+                put_u64(&mut body, r.queue_us);
+                put_u64(&mut body, r.exec_us);
+                match &r.scales {
+                    QuantScales::None => body.push(0),
+                    QuantScales::PerTensor(s) => {
+                        body.push(1);
+                        put_f32(&mut body, *s);
+                    }
+                    QuantScales::PerGroup(v) => {
+                        body.push(2);
+                        put_u32(&mut body, v.len() as u32);
+                        for s in v {
+                            put_f32(&mut body, *s);
+                        }
+                    }
+                }
+                body.extend_from_slice(&r.payload);
+            }
+            Frame::Error(e) => {
+                body.push(TAG_ERROR);
+                put_u64(&mut body, e.id);
+                body.push(e.code.tag());
+                // truncate over-long messages on a char boundary so the
+                // emitted frame always decodes
+                let mut end = e.msg.len().min(u16::MAX as usize);
+                while end > 0 && !e.msg.is_char_boundary(end) {
+                    end -= 1;
+                }
+                put_u16(&mut body, end as u16);
+                body.extend_from_slice(&e.msg.as_bytes()[..end]);
+            }
+            Frame::Busy { id, retry_after_us } => {
+                body.push(TAG_BUSY);
+                put_u64(&mut body, *id);
+                put_u32(&mut body, *retry_after_us);
+            }
+            Frame::Ping { id } => {
+                body.push(TAG_PING);
+                put_u64(&mut body, *id);
+            }
+            Frame::Pong { id } => {
+                body.push(TAG_PONG);
+                put_u64(&mut body, *id);
+            }
+            Frame::StatsRequest { id } => {
+                body.push(TAG_STATS_REQUEST);
+                put_u64(&mut body, *id);
+            }
+            Frame::Stats(s) => {
+                body.push(TAG_STATS);
+                put_u64(&mut body, s.id);
+                put_u32(&mut body, s.counters.len() as u32);
+                for (k, v) in &s.counters {
+                    // keys are 1..=255 bytes on the wire; clamp rather
+                    // than panic on degenerate caller input
+                    let kb = if k.is_empty() { b"?" } else { k.as_bytes() };
+                    let len = kb.len().min(u8::MAX as usize);
+                    body.push(len as u8);
+                    body.extend_from_slice(&kb[..len]);
+                    put_u64(&mut body, *v);
+                }
+                let rb = s.report.as_bytes();
+                put_u32(&mut body, rb.len() as u32);
+                body.extend_from_slice(rb);
+            }
+        }
+        let mut out = Vec::with_capacity(4 + body.len());
+        put_u32(&mut out, body.len() as u32);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// The id this frame refers to (every frame type carries one).
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Request(r) => r.id,
+            Frame::Response(r) => r.id,
+            Frame::Error(e) => e.id,
+            Frame::Busy { id, .. }
+            | Frame::Ping { id }
+            | Frame::Pong { id }
+            | Frame::StatsRequest { id } => *id,
+            Frame::Stats(s) => s.id,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decoding.
+
+/// Bounded cursor over a frame body. Every read is checked; overruns
+/// surface as `Err`, never panics.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, len: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < len {
+            return Err(format!(
+                "truncated body: need {len} bytes, have {}",
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32_bits(&mut self) -> Result<u32, String> {
+        self.u32()
+    }
+
+    fn utf8(&mut self, len: usize) -> Result<String, String> {
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "invalid utf-8".to_string())
+    }
+
+    fn finish(self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} trailing bytes after frame body", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+/// Parse one frame body (the bytes after the length prefix).
+pub fn parse_body(body: &[u8]) -> Result<Frame, String> {
+    let mut c = Cursor::new(body);
+    let version = c.u8()?;
+    if version != WIRE_VERSION {
+        return Err(format!("unsupported wire version {version} (want {WIRE_VERSION})"));
+    }
+    let tag = c.u8()?;
+    let frame = match tag {
+        TAG_REQUEST => {
+            let id = c.u64()?;
+            let n = c.u32()?;
+            let rows = c.u32()?;
+            let kernel = kernel_from_tag(c.u8()?)?;
+            let dtype = dtype_from_tag(c.u8()?)?;
+            let flags = c.u8()?;
+            if flags & !(FLAG_HAS_SCALE | FLAG_FORCE_NATIVE) != 0 {
+                return Err(format!("unknown request flags {flags:#x}"));
+            }
+            let etag = c.u8()?;
+            let group = c.u32()?;
+            let epilogue = epilogue_from_tags(etag, group)?;
+            let scale_bits = c.f32_bits()?;
+            let scale = if flags & FLAG_HAS_SCALE != 0 {
+                Some(f32::from_bits(scale_bits))
+            } else {
+                if scale_bits != 0 {
+                    return Err("scale bits set without the scale flag".to_string());
+                }
+                None
+            };
+            let want = (rows as u64) * (n as u64) * dtype.size_bytes() as u64;
+            if c.remaining() as u64 != want {
+                return Err(format!(
+                    "request payload is {} bytes, want rows {rows} * n {n} * {}B = {want}",
+                    c.remaining(),
+                    dtype.size_bytes()
+                ));
+            }
+            let payload = c.take(want as usize)?.to_vec();
+            c.finish()?;
+            Frame::Request(WireRequest {
+                id,
+                n,
+                rows,
+                kernel,
+                dtype,
+                scale,
+                force_native: flags & FLAG_FORCE_NATIVE != 0,
+                epilogue,
+                payload,
+            })
+        }
+        TAG_RESPONSE => {
+            let id = c.u64()?;
+            let n = c.u32()?;
+            let rows = c.u32()?;
+            let dtype = dtype_from_tag(c.u8()?)?;
+            let pjrt = match c.u8()? {
+                0 => false,
+                1 => true,
+                b => return Err(format!("unknown backend tag {b}")),
+            };
+            let batch_rows = c.u32()?;
+            let queue_us = c.u64()?;
+            let exec_us = c.u64()?;
+            let scales = match c.u8()? {
+                0 => QuantScales::None,
+                1 => QuantScales::PerTensor(f32::from_bits(c.f32_bits()?)),
+                2 => {
+                    let count = c.u32()? as usize;
+                    if count * 4 > c.remaining() {
+                        return Err(format!(
+                            "per-group scale count {count} exceeds frame"
+                        ));
+                    }
+                    let mut v = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        v.push(f32::from_bits(c.f32_bits()?));
+                    }
+                    QuantScales::PerGroup(v)
+                }
+                t => return Err(format!("unknown scales tag {t}")),
+            };
+            let want = (rows as u64) * (n as u64) * dtype.size_bytes() as u64;
+            if c.remaining() as u64 != want {
+                return Err(format!(
+                    "response payload is {} bytes, want {want}",
+                    c.remaining()
+                ));
+            }
+            let payload = c.take(want as usize)?.to_vec();
+            c.finish()?;
+            Frame::Response(WireResponse {
+                id,
+                n,
+                rows,
+                dtype,
+                pjrt,
+                batch_rows,
+                queue_us,
+                exec_us,
+                scales,
+                payload,
+            })
+        }
+        TAG_ERROR => {
+            let id = c.u64()?;
+            let code = ErrorCode::from_tag(c.u8()?)?;
+            let len = c.u16()? as usize;
+            let msg = c.utf8(len)?;
+            c.finish()?;
+            Frame::Error(WireError { id, code, msg })
+        }
+        TAG_BUSY => {
+            let id = c.u64()?;
+            let retry_after_us = c.u32()?;
+            c.finish()?;
+            Frame::Busy { id, retry_after_us }
+        }
+        TAG_PING => {
+            let id = c.u64()?;
+            c.finish()?;
+            Frame::Ping { id }
+        }
+        TAG_PONG => {
+            let id = c.u64()?;
+            c.finish()?;
+            Frame::Pong { id }
+        }
+        TAG_STATS_REQUEST => {
+            let id = c.u64()?;
+            c.finish()?;
+            Frame::StatsRequest { id }
+        }
+        TAG_STATS => {
+            let id = c.u64()?;
+            let count = c.u32()?;
+            if count > MAX_STATS_COUNTERS {
+                return Err(format!("stats counter count {count} exceeds cap"));
+            }
+            let mut counters = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                let klen = c.u8()? as usize;
+                if klen == 0 {
+                    return Err("empty stats counter key".to_string());
+                }
+                let key = c.utf8(klen)?;
+                let value = c.u64()?;
+                counters.push((key, value));
+            }
+            let rlen = c.u32()? as usize;
+            if rlen > c.remaining() {
+                return Err(format!("stats report length {rlen} exceeds frame"));
+            }
+            let report = c.utf8(rlen)?;
+            c.finish()?;
+            Frame::Stats(WireStats { id, counters, report })
+        }
+        _ => return Err(format!("unknown frame tag {tag}")),
+    };
+    Ok(frame)
+}
+
+/// Decode one frame from the front of `buf`.
+///
+/// * `Ok(None)` — `buf` holds a valid prefix of a frame; read more bytes.
+/// * `Ok(Some((frame, consumed)))` — one frame decoded; `consumed` bytes
+///   (length prefix included) were used.
+/// * `Err(msg)` — the bytes can never become a valid frame (bad length,
+///   bad version/tag/fields); the connection should answer with an error
+///   frame and close.
+pub fn decode_frame(
+    buf: &[u8],
+    max_frame_bytes: u32,
+) -> Result<Option<(Frame, usize)>, String> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if len < 2 {
+        return Err(format!("frame length {len} is shorter than the header"));
+    }
+    if len > max_frame_bytes {
+        return Err(format!("frame length {len} exceeds cap {max_frame_bytes}"));
+    }
+    let total = 4 + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let frame = parse_body(&buf[4..total])?;
+    Ok(Some((frame, total)))
+}
+
+/// Failure modes of [`read_frame`].
+#[derive(Debug)]
+pub enum ReadError {
+    /// Transport failure (including EOF and read timeouts; the caller
+    /// inspects [`std::io::Error::kind`]).
+    Io(std::io::Error),
+    /// The peer sent bytes that cannot be a valid frame.
+    Malformed(String),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Io(e) => write!(f, "io: {e}"),
+            ReadError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+/// Read one frame from a blocking reader (the server/client transport
+/// path). The length prefix is validated against `max_frame_bytes`
+/// before the body allocation.
+pub fn read_frame<R: std::io::Read>(
+    r: &mut R,
+    max_frame_bytes: u32,
+) -> Result<Frame, ReadError> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes).map_err(ReadError::Io)?;
+    let len = u32::from_le_bytes(len_bytes);
+    if len < 2 {
+        return Err(ReadError::Malformed(format!(
+            "frame length {len} is shorter than the header"
+        )));
+    }
+    if len > max_frame_bytes {
+        return Err(ReadError::Malformed(format!(
+            "frame length {len} exceeds cap {max_frame_bytes}"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).map_err(ReadError::Io)?;
+    parse_body(&body).map_err(ReadError::Malformed)
+}
+
+/// Write one frame to a blocking writer.
+pub fn write_frame<W: std::io::Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.encode())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_frame() -> Frame {
+        Frame::Request(WireRequest::from_f32(
+            7,
+            8,
+            &[1.0, -2.5, 0.25, 3.0, -0.5, 8.0, 0.0, -1.0],
+            KernelKind::HadaCore,
+            DType::F32,
+        ))
+    }
+
+    #[test]
+    fn request_roundtrip_bit_exact() {
+        let frame = req_frame();
+        let bytes = frame.encode();
+        let (decoded, used) = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(decoded, frame);
+    }
+
+    #[test]
+    fn all_frame_types_roundtrip() {
+        let frames = vec![
+            req_frame(),
+            Frame::Response(WireResponse {
+                id: 9,
+                n: 4,
+                rows: 2,
+                dtype: DType::F16,
+                pjrt: true,
+                batch_rows: 16,
+                queue_us: 120,
+                exec_us: 44,
+                scales: QuantScales::PerGroup(vec![0.5, 2.0]),
+                payload: encode_elems(&[1.0; 8], DType::F16),
+            }),
+            Frame::Error(WireError {
+                id: 3,
+                code: ErrorCode::Rejected,
+                msg: "n=10 unsupported".to_string(),
+            }),
+            Frame::Busy { id: 11, retry_after_us: 500 },
+            Frame::Ping { id: 1 },
+            Frame::Pong { id: 1 },
+            Frame::StatsRequest { id: 5 },
+            Frame::Stats(WireStats {
+                id: 5,
+                counters: vec![("submitted".into(), 10), ("e2e_p99_us".into(), 800)],
+                report: "requests: 10 submitted\n".to_string(),
+            }),
+        ];
+        for frame in frames {
+            let bytes = frame.encode();
+            let (decoded, used) = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES)
+                .unwrap()
+                .unwrap();
+            assert_eq!(used, bytes.len(), "{frame:?}");
+            assert_eq!(decoded, frame);
+        }
+    }
+
+    #[test]
+    fn scale_epilogue_and_flags_roundtrip() {
+        let mut r = match req_frame() {
+            Frame::Request(r) => r,
+            _ => unreachable!(),
+        };
+        r.scale = Some(2.5);
+        r.force_native = true;
+        r.epilogue = Epilogue::QuantInt8 { group: 4 };
+        let frame = Frame::Request(r);
+        let bytes = frame.encode();
+        let (decoded, _) = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES)
+            .unwrap()
+            .unwrap();
+        assert_eq!(decoded, frame);
+    }
+
+    #[test]
+    fn incomplete_prefixes_ask_for_more() {
+        let bytes = req_frame().encode();
+        for cut in 0..bytes.len() {
+            let r = decode_frame(&bytes[..cut], DEFAULT_MAX_FRAME_BYTES).unwrap();
+            assert!(r.is_none(), "prefix of {cut} bytes must be incomplete");
+        }
+    }
+
+    #[test]
+    fn malformed_bodies_error_without_panicking() {
+        let good = req_frame().encode();
+
+        // bad version
+        let mut b = good.clone();
+        b[4] = 9;
+        assert!(decode_frame(&b, DEFAULT_MAX_FRAME_BYTES).is_err());
+
+        // unknown tag
+        let mut b = good.clone();
+        b[5] = 200;
+        assert!(decode_frame(&b, DEFAULT_MAX_FRAME_BYTES).is_err());
+
+        // trailing byte: extend the body and bump the length prefix
+        let mut b = good.clone();
+        b.push(0);
+        let len = (b.len() - 4) as u32;
+        b[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(decode_frame(&b, DEFAULT_MAX_FRAME_BYTES).is_err());
+
+        // declared length below the 2-byte header
+        let mut b = good.clone();
+        b[..4].copy_from_slice(&1u32.to_le_bytes());
+        assert!(decode_frame(&b, DEFAULT_MAX_FRAME_BYTES).is_err());
+
+        // oversized declared length
+        let mut b = good;
+        b[..4].copy_from_slice(&(DEFAULT_MAX_FRAME_BYTES + 1).to_le_bytes());
+        assert!(decode_frame(&b, DEFAULT_MAX_FRAME_BYTES).is_err());
+    }
+
+    #[test]
+    fn payload_length_mismatch_is_malformed() {
+        let mut r = match req_frame() {
+            Frame::Request(r) => r,
+            _ => unreachable!(),
+        };
+        r.rows = 3; // payload holds 1 row of 8
+        let bytes = Frame::Request(r).encode();
+        let err = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.contains("payload"), "got: {err}");
+    }
+
+    #[test]
+    fn scale_without_flag_is_malformed() {
+        // hand-corrupt the scale field of a no-scale request
+        let bytes = req_frame().encode();
+        // body layout: ver(1) tag(1) id(8) n(4) rows(4) kernel(1) dtype(1)
+        // flags(1) epi(1) group(4) scale(4) -> scale at body offset 26
+        let mut b = bytes;
+        b[4 + 26] = 1;
+        let err = decode_frame(&b, DEFAULT_MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.contains("scale"), "got: {err}");
+    }
+
+    #[test]
+    fn elems_roundtrip_all_dtypes() {
+        let data = [1.5f32, -0.25, 448.0, 1e-4, -3.75, 0.0];
+        for dtype in [DType::F32, DType::F16, DType::BF16] {
+            let bytes = encode_elems(&data, dtype);
+            assert_eq!(bytes.len(), data.len() * dtype.size_bytes());
+            let back = decode_elems(&bytes, dtype).unwrap();
+            // canonical form: narrow once, widen — re-encoding is stable
+            let canon = encode_elems(&back, dtype);
+            assert_eq!(bytes, canon, "{dtype:?} encode must be idempotent");
+            if dtype == DType::F32 {
+                assert_eq!(back, data, "f32 must be bit-exact");
+            }
+        }
+        assert!(decode_elems(&[0u8; 3], DType::F32).is_err());
+        assert!(decode_elems(&[0u8; 3], DType::F16).is_err());
+    }
+
+    #[test]
+    fn to_transform_checks_shape() {
+        let r = WireRequest::from_f32(1, 4, &[0.0; 8], KernelKind::Dao, DType::F32);
+        let t = r.to_transform().unwrap();
+        assert_eq!((t.n, t.rows), (4, 2));
+        assert_eq!(t.kernel, KernelKind::Dao);
+
+        let mut bad = r;
+        bad.rows = 5;
+        assert!(bad.to_transform().is_err());
+    }
+
+    #[test]
+    fn read_write_frame_over_a_buffer() {
+        let frame = req_frame();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let decoded = read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES).unwrap();
+        assert_eq!(decoded, frame);
+        // EOF on the drained reader is an Io error, not a panic/hang
+        match read_frame(&mut cursor, DEFAULT_MAX_FRAME_BYTES) {
+            Err(ReadError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof)
+            }
+            other => panic!("want EOF, got {other:?}"),
+        }
+    }
+}

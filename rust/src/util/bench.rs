@@ -29,6 +29,29 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Build statistics from observed per-event latencies in µs (sorted
+    /// ascending) — the open-loop serving path, where each "iteration"
+    /// is one request rather than a repeated closed-loop call.
+    pub fn from_sorted_us(name: &str, sorted_us: &[f64]) -> Stats {
+        let ns: Vec<f64> = sorted_us.iter().map(|us| us * 1e3).collect();
+        let median = percentile(&ns, 50.0);
+        let mut devs: Vec<f64> = ns.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            name: name.to_string(),
+            iters: ns.len() as u64,
+            samples: ns.len(),
+            mean_ns: if ns.is_empty() {
+                f64::NAN
+            } else {
+                ns.iter().sum::<f64>() / ns.len() as f64
+            },
+            median_ns: median,
+            min_ns: ns.first().copied().unwrap_or(f64::NAN),
+            mad_ns: percentile(&devs, 50.0),
+        }
+    }
+
     /// Median in microseconds (the unit the paper reports).
     pub fn median_us(&self) -> f64 {
         self.median_ns / 1e3
@@ -184,8 +207,12 @@ pub struct BenchRecord {
     pub threads: usize,
     /// Robust timing statistics of one iteration.
     pub stats: Stats,
-    /// Throughput in mega-elements per second (`rows * n / median`).
+    /// Throughput in mega-elements per second (`rows * n / median` for
+    /// closed-loop micro-benches; measured end-to-end for serving runs).
     pub melems_per_s: f64,
+    /// Additional named measurements (serving runs attach QPS and
+    /// latency percentiles here); appended verbatim to the JSON entry.
+    pub extras: Vec<(String, f64)>,
 }
 
 impl BenchRecord {
@@ -213,11 +240,51 @@ impl BenchRecord {
             threads,
             stats,
             melems_per_s,
+            extras: Vec::new(),
         }
     }
 
+    /// Build a record for an open-loop *serving* measurement, where
+    /// throughput is measured end-to-end (not derived from the median)
+    /// and the latency statistics come from observed per-request
+    /// latencies rather than repeated closed-loop iterations. `n`/`rows`
+    /// describe the traffic mix's shape envelope; fusion depth is
+    /// whatever the engine's autotuner picked (recorded as 1 = "not a
+    /// kernel sweep axis" so trajectory consumers can filter on bench
+    /// name instead of a sentinel).
+    #[allow(clippy::too_many_arguments)]
+    pub fn serving(
+        bench: &str,
+        kernel: &str,
+        n: usize,
+        rows: usize,
+        dtype: &str,
+        threads: usize,
+        stats: Stats,
+        melems_per_s: f64,
+    ) -> BenchRecord {
+        BenchRecord {
+            bench: bench.to_string(),
+            kernel: kernel.to_string(),
+            n,
+            rows,
+            dtype: dtype.to_string(),
+            fusion_depth: 1,
+            threads,
+            stats,
+            melems_per_s,
+            extras: Vec::new(),
+        }
+    }
+
+    /// Attach a named extra measurement (builder-style).
+    pub fn with_extra(mut self, key: &str, value: f64) -> BenchRecord {
+        self.extras.push((key.to_string(), value));
+        self
+    }
+
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("bench", Json::str(self.bench.clone())),
             ("kernel", Json::str(self.kernel.clone())),
             ("n", Json::num(self.n as f64)),
@@ -231,7 +298,11 @@ impl BenchRecord {
             ("iters", Json::num(self.stats.iters as f64)),
             ("samples", Json::num(self.stats.samples as f64)),
             ("melems_per_s", Json::num(self.melems_per_s)),
-        ])
+        ];
+        for (k, v) in &self.extras {
+            fields.push((k.as_str(), Json::num(*v)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -411,6 +482,37 @@ mod tests {
             entries[0].get("fusion_depth").unwrap().as_usize(),
             Some(2)
         );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serving_records_carry_extras_and_validate() {
+        let lat_us = [100.0, 150.0, 200.0, 400.0, 900.0];
+        let stats = Stats::from_sorted_us("loadgen:mixed", &lat_us);
+        assert_eq!(stats.iters, 5);
+        assert!((stats.median_ns - 200_000.0).abs() < 1e-6);
+        assert!((stats.min_ns - 100_000.0).abs() < 1e-6);
+        let rec = BenchRecord::serving(
+            "loadgen", "hadacore", 14336, 8, "float32", 4, stats, 123.4,
+        )
+        .with_extra("qps_offered", 500.0)
+        .with_extra("qps_achieved", 480.5)
+        .with_extra("p99_us", 900.0)
+        .with_extra("busy", 3.0);
+        assert!((rec.melems_per_s - 123.4).abs() < 1e-9);
+
+        let mut out = BenchJson::new();
+        out.push(rec);
+        let path = std::env::temp_dir()
+            .join(format!("hc_servebench_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        assert_eq!(out.write(&path).unwrap(), 1);
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let e = &doc.get("entries").unwrap().as_arr().unwrap()[0];
+        assert_eq!(e.get("qps_achieved").unwrap().as_f64(), Some(480.5));
+        assert_eq!(e.get("p99_us").unwrap().as_f64(), Some(900.0));
+        assert_eq!(e.get("fusion_depth").unwrap().as_usize(), Some(1));
         std::fs::remove_file(&path).ok();
     }
 

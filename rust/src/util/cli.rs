@@ -159,6 +159,17 @@ impl Args {
         &self.positionals
     }
 
+    /// Comma-separated list option as trimmed strings (empty elements
+    /// dropped) — e.g. `--mixes interactive,llama-ffn`.
+    pub fn get_str_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+
     /// Comma-separated list option parsed into numbers.
     pub fn get_list(&self, name: &str) -> Vec<usize> {
         self.get(name)
@@ -218,6 +229,20 @@ mod tests {
             .parse_from(["--sizes=128,256,512".to_string()])
             .unwrap();
         assert_eq!(a.get_list("sizes"), vec![128, 256, 512]);
+    }
+
+    #[test]
+    fn string_list_parsing() {
+        let a = Args::new("t", "test")
+            .opt("mixes", "mixed", "traffic mixes")
+            .parse_from(["--mixes= interactive, llama-ffn ,".to_string()])
+            .unwrap();
+        assert_eq!(a.get_str_list("mixes"), vec!["interactive", "llama-ffn"]);
+        let b = Args::new("t", "test")
+            .opt("mixes", "mixed", "traffic mixes")
+            .parse_from(Vec::<String>::new())
+            .unwrap();
+        assert_eq!(b.get_str_list("mixes"), vec!["mixed"]);
     }
 
     #[test]

@@ -1,0 +1,619 @@
+//! Loopback end-to-end tests of the TCP serving layer — the `serve-e2e`
+//! CI gate.
+//!
+//! Acceptance contract (ISSUE 5):
+//!
+//! * concurrent pipelining clients through the TCP server receive
+//!   responses **bit-identical** to direct `Coordinator::submit` for
+//!   every kernel × dtype × epilogue combination tested (mixed sizes
+//!   including the non-power-of-two 14336 = 28·512);
+//! * overload answers a retriable `Busy` frame — no hang, no dropped
+//!   connection;
+//! * server teardown + `Coordinator::drain` complete in-flight requests
+//!   instead of erroring them.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hadacore::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, TransformRequest,
+};
+use hadacore::hadamard::KernelKind;
+use hadacore::quant::{Epilogue, Fp8Format};
+use hadacore::serve::wire::{decode_elems, encode_elems, ErrorCode, WireRequest};
+use hadacore::serve::{serve, Client, Reply, ServeConfig, ServeHandle};
+use hadacore::util::f16::DType;
+use hadacore::util::rng::Rng;
+
+fn start_coordinator(workers: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(
+            None,
+            CoordinatorConfig {
+                workers,
+                batcher: BatcherConfig {
+                    max_delay: Duration::from_micros(200),
+                    work_conserving: true,
+                },
+                idle_timeout: Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    )
+}
+
+fn start_server(workers: usize, cfg: ServeConfig) -> (Arc<Coordinator>, ServeHandle) {
+    let coord = start_coordinator(workers);
+    let handle = serve(Arc::clone(&coord), cfg).unwrap();
+    (coord, handle)
+}
+
+fn quick_poll() -> ServeConfig {
+    ServeConfig {
+        poll_interval: Duration::from_millis(10),
+        ..Default::default()
+    }
+}
+
+/// One test case of the kernel × dtype × epilogue grid.
+#[derive(Clone)]
+struct Case {
+    n: usize,
+    rows: usize,
+    kernel: KernelKind,
+    dtype: DType,
+    epilogue: Epilogue,
+    seed: u64,
+}
+
+fn case_grid() -> Vec<Case> {
+    let mut cases = Vec::new();
+    let mut seed = 0x5EED;
+    // f32 over the full size mix (incl. npot 768 and 14336 = 28*512),
+    // both fast kernels, all three epilogues
+    for &n in &[256usize, 768, 1024, 4096, 14336] {
+        for &kernel in &[KernelKind::HadaCore, KernelKind::Dao] {
+            for epilogue in [
+                Epilogue::None,
+                Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+                Epilogue::QuantInt8 { group: 64 },
+            ] {
+                seed += 1;
+                cases.push(Case {
+                    n,
+                    rows: 1 + (seed as usize % 3),
+                    kernel,
+                    dtype: DType::F32,
+                    epilogue,
+                    seed,
+                });
+            }
+        }
+    }
+    // 16-bit wire dtypes (payloads canonicalise through narrow->widen)
+    for &dtype in &[DType::F16, DType::BF16] {
+        for &n in &[512usize, 14336] {
+            seed += 1;
+            cases.push(Case {
+                n,
+                rows: 2,
+                kernel: KernelKind::HadaCore,
+                dtype,
+                epilogue: Epilogue::None,
+                seed,
+            });
+        }
+    }
+    // the scalar oracle rides along once
+    cases.push(Case {
+        n: 2048,
+        rows: 2,
+        kernel: KernelKind::Scalar,
+        dtype: DType::F32,
+        epilogue: Epilogue::None,
+        seed: 0x0C0DE,
+    });
+    cases
+}
+
+/// The canonical f32 payload a case's wire bytes decode to on the server.
+fn canonical_payload(case: &Case) -> Vec<f32> {
+    let mut rng = Rng::new(case.seed);
+    let raw = rng.normal_vec(case.rows * case.n);
+    decode_elems(&encode_elems(&raw, case.dtype), case.dtype).unwrap()
+}
+
+#[test]
+fn concurrent_pipelining_clients_bit_identical_to_direct_submit() {
+    let (coord, handle) = start_server(4, quick_poll());
+    let addr = handle.addr().to_string();
+    let cases = case_grid();
+    assert!(cases.len() >= 30, "grid must stay meaningful");
+
+    // >= 8 concurrent clients, each pipelining its whole slice of the
+    // grid before collecting any reply
+    let n_clients = 8;
+    let mut threads = Vec::new();
+    for t in 0..n_clients {
+        let addr = addr.clone();
+        let coord = Arc::clone(&coord);
+        let slice: Vec<Case> = cases
+            .iter()
+            .skip(t)
+            .step_by(n_clients)
+            .cloned()
+            .collect();
+        threads.push(std::thread::spawn(move || {
+            let client = Client::connect(&addr).unwrap();
+            let mut pending = Vec::new();
+            for case in &slice {
+                let data = canonical_payload(case);
+                let mut wire = WireRequest::from_f32(
+                    0, case.n, &data, case.kernel, case.dtype,
+                );
+                wire.epilogue = case.epilogue;
+                pending.push(client.submit(wire).unwrap());
+            }
+            for (case, p) in slice.iter().zip(pending) {
+                let resp = match p.wait() {
+                    Reply::Response(r) => r,
+                    other => panic!(
+                        "case n={} {:?} {:?}: unexpected reply {other:?}",
+                        case.n, case.kernel, case.epilogue
+                    ),
+                };
+                // direct submit of the identical canonical payload
+                // through the very same coordinator
+                let mut req =
+                    TransformRequest::new(1, case.n, canonical_payload(case));
+                req.kernel = case.kernel;
+                req.epilogue = case.epilogue;
+                let direct = coord.transform(req).unwrap();
+
+                assert_eq!(
+                    resp.payload,
+                    encode_elems(&direct.data, case.dtype),
+                    "case n={} {:?} {:?} {:?}: wire bytes must be \
+                     bit-identical to direct submit",
+                    case.n,
+                    case.kernel,
+                    case.dtype,
+                    case.epilogue
+                );
+                assert_eq!(
+                    resp.scales, direct.scales,
+                    "case n={}: epilogue scales must match",
+                    case.n
+                );
+                assert_eq!(resp.n as usize, case.n);
+                assert_eq!(resp.rows as usize, case.rows);
+                assert_eq!(resp.backend(), "native");
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.failed, 0, "no request may fail: {}", snap.report());
+    handle.shutdown();
+    coord.drain();
+}
+
+#[test]
+fn responses_stream_back_out_of_order() {
+    let (coord, handle) = start_server(4, quick_poll());
+    let client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    // a slow scalar batch, then a fast hadacore one, pipelined
+    let slow_data = vec![1.0f32; 8 * 16384];
+    let mut slow = WireRequest::from_f32(
+        0, 16384, &slow_data, KernelKind::Scalar, DType::F32,
+    );
+    slow.force_native = true;
+    let slow_pending = client.submit(slow).unwrap();
+
+    let fast_data = vec![1.0f32; 128];
+    let fast = WireRequest::from_f32(0, 128, &fast_data, KernelKind::HadaCore, DType::F32);
+    let fast_pending = client.submit(fast).unwrap();
+
+    // the fast response must arrive while the slow one is still pending
+    let mut fast_first = false;
+    for _ in 0..2000 {
+        if fast_pending.try_wait().is_some() {
+            fast_first = slow_pending.try_wait().is_none();
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    // the slow response still arrives fine afterwards
+    assert!(matches!(slow_pending.wait(), Reply::Response(_)));
+    assert!(
+        fast_first,
+        "the fast pipelined response must overtake the slow one"
+    );
+    drop(client);
+    handle.shutdown();
+    coord.drain();
+}
+
+#[test]
+fn pipeline_cap_sheds_with_retriable_busy_and_no_hang() {
+    let (coord, handle) = start_server(
+        2,
+        ServeConfig {
+            pipeline_depth: 1,
+            busy_retry_us: 250,
+            poll_interval: Duration::from_millis(10),
+            ..Default::default()
+        },
+    );
+    let client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    // one slow request occupies the whole pipeline window...
+    let slow_data = vec![1.0f32; 16 * 32768];
+    let mut slow = WireRequest::from_f32(
+        0, 32768, &slow_data, KernelKind::Scalar, DType::F32,
+    );
+    slow.force_native = true;
+    let slow_pending = client.submit(slow).unwrap();
+
+    // ...so rapid-fire follow-ups shed with Busy (retriable: the
+    // connection stays open, every reply arrives, nothing hangs)
+    let mut busy = 0;
+    let mut ok = 0;
+    let mut followups = Vec::new();
+    for _ in 0..5 {
+        let data = vec![1.0f32; 256];
+        let req = WireRequest::from_f32(0, 256, &data, KernelKind::HadaCore, DType::F32);
+        followups.push(client.submit(req).unwrap());
+    }
+    for p in followups {
+        match p.wait() {
+            Reply::Busy { retry_after_us } => {
+                assert_eq!(retry_after_us, 250, "busy carries the retry hint");
+                busy += 1;
+            }
+            Reply::Response(_) => ok += 1,
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(busy >= 1, "at least one follow-up must shed (got {ok} ok)");
+    assert!(matches!(slow_pending.wait(), Reply::Response(_)));
+
+    // the shed was load control, not a failure: the connection still
+    // serves once the window frees up
+    let data = vec![0.5f32; 512];
+    let req = WireRequest::from_f32(0, 512, &data, KernelKind::HadaCore, DType::F32);
+    let resp = client.transform(req).unwrap();
+    assert_eq!(resp.rows, 1);
+    assert!(handle.counters().busy_shed.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    drop(client);
+    handle.shutdown();
+    coord.drain();
+}
+
+#[test]
+fn queue_depth_shedding_answers_busy() {
+    // one batcher worker + zero-tolerance queue depth: while the worker
+    // chews a slow batch and a second slow batch waits in the batcher,
+    // new arrivals shed on the queue-depth signal
+    let (coord, handle) = start_server(
+        1,
+        ServeConfig {
+            max_queued_rows: 0,
+            poll_interval: Duration::from_millis(10),
+            ..Default::default()
+        },
+    );
+    let client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    // distinct sizes => distinct batcher buckets, so the two slow
+    // requests can never merge into one batch: whichever the single
+    // worker picks first, the other stays *queued* while it executes
+    let slow_a = vec![1.0f32; 8 * 32768];
+    let mut first_req = WireRequest::from_f32(
+        0, 32768, &slow_a, KernelKind::Scalar, DType::F32,
+    );
+    first_req.force_native = true;
+    let slow_b = vec![1.0f32; 16 * 16384];
+    let mut second_req = WireRequest::from_f32(
+        0, 16384, &slow_b, KernelKind::Scalar, DType::F32,
+    );
+    second_req.force_native = true;
+    let first = client.submit(first_req).unwrap();
+    let second = client.submit(second_req).unwrap();
+
+    let mut busy = 0;
+    let mut followups = Vec::new();
+    for _ in 0..5 {
+        let data = vec![1.0f32; 256];
+        followups.push(
+            client
+                .submit(WireRequest::from_f32(0, 256, &data, KernelKind::HadaCore, DType::F32))
+                .unwrap(),
+        );
+    }
+    for p in followups {
+        match p.wait() {
+            Reply::Busy { .. } => busy += 1,
+            Reply::Response(_) => {}
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(busy >= 1, "queued rows must trigger shedding");
+    assert!(matches!(first.wait(), Reply::Response(_)));
+    assert!(matches!(second.wait(), Reply::Response(_)));
+    drop(client);
+    handle.shutdown();
+    coord.drain();
+}
+
+#[test]
+fn teardown_completes_inflight_and_rejects_late_requests() {
+    let (coord, handle) = start_server(2, quick_poll());
+    let client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    let mut rng = Rng::new(77);
+    let mut pending = Vec::new();
+    for i in 0..20 {
+        let n = [256usize, 1024, 14336][i % 3];
+        let data = rng.normal_vec(n);
+        pending.push(
+            client
+                .submit(WireRequest::from_f32(0, n, &data, KernelKind::HadaCore, DType::F32))
+                .unwrap(),
+        );
+    }
+    // let the reader admit at least the head of the pipeline, then tear
+    // down mid-traffic: front-end first, then the coordinator
+    std::thread::sleep(Duration::from_millis(15));
+    handle.shutdown();
+    coord.drain();
+
+    let mut responses = 0;
+    let mut draining = 0;
+    for p in pending {
+        match p.wait() {
+            Reply::Response(_) => responses += 1,
+            Reply::Error { code: ErrorCode::Draining, .. } => draining += 1,
+            Reply::Disconnected => draining += 1, // raced the close
+            other => panic!("unexpected teardown reply {other:?}"),
+        }
+    }
+    assert_eq!(responses + draining, 20, "every request resolves — no hang");
+    assert!(responses >= 1, "in-flight requests complete, not error");
+
+    // the coordinator now refuses work with a retriable message
+    let err = coord
+        .submit(TransformRequest::new(1, 256, vec![0.0; 256]))
+        .unwrap_err();
+    assert!(err.0.contains("draining"));
+}
+
+#[test]
+fn shutdown_returns_even_while_a_client_keeps_streaming() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let (coord, handle) = start_server(2, quick_poll());
+    let addr = handle.addr().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    // a client that keeps frames flowing faster than the poll quantum
+    let pinger = std::thread::spawn(move || {
+        let client = Client::connect(&addr).unwrap();
+        while !stop2.load(Ordering::Relaxed) {
+            if client.ping().is_err() {
+                break; // the server went away: done
+            }
+        }
+    });
+    std::thread::sleep(Duration::from_millis(50)); // let traffic flow
+    let t0 = std::time::Instant::now();
+    handle.shutdown();
+    coord.drain();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "teardown must not be pinned open by a streaming client"
+    );
+    stop.store(true, Ordering::Relaxed);
+    let _ = pinger.join();
+}
+
+#[test]
+fn submits_after_disconnect_fail_fast_instead_of_hanging() {
+    let (coord, handle) = start_server(2, quick_poll());
+    let client = Client::connect(&handle.addr().to_string()).unwrap();
+    let data = vec![1.0f32; 256];
+    client
+        .transform(WireRequest::from_f32(0, 256, &data, KernelKind::HadaCore, DType::F32))
+        .unwrap();
+
+    // the server goes away; the client's reader observes the close and
+    // marks the connection dead
+    handle.shutdown();
+    coord.drain();
+    let t0 = std::time::Instant::now();
+    while !client.is_dead() && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(client.is_dead(), "reader must notice the closed connection");
+
+    // a submit now errors immediately — it must never register a waiter
+    // that nothing can resolve
+    let err = client
+        .submit(WireRequest::from_f32(0, 256, &data, KernelKind::HadaCore, DType::F32))
+        .unwrap_err();
+    assert!(err.to_string().contains("closed"), "got: {err}");
+}
+
+#[test]
+fn responses_that_cannot_fit_the_frame_cap_are_rejected_not_fatal() {
+    // a tiny server-side frame cap: a request whose *reply* (payload +
+    // int8 per-group scales) would overflow it is rejected with a named
+    // error, instead of the server emitting a frame the client's
+    // decoder would treat as a corrupt stream
+    let (coord, handle) = start_server(
+        2,
+        ServeConfig {
+            max_frame_bytes: 8192,
+            poll_interval: Duration::from_millis(10),
+            ..Default::default()
+        },
+    );
+    let client = Client::connect(&handle.addr().to_string()).unwrap();
+    let data = vec![1.0f32; 1024];
+
+    // group=1 doubles the reply size: 4 KiB payload + 4 KiB scales > cap
+    let mut big_reply =
+        WireRequest::from_f32(0, 1024, &data, KernelKind::HadaCore, DType::F32);
+    big_reply.epilogue = Epilogue::QuantInt8 { group: 1 };
+    match client.submit(big_reply).unwrap().wait() {
+        Reply::Error { code: ErrorCode::Rejected, msg } => {
+            assert!(msg.contains("frame cap"), "got: {msg}");
+        }
+        other => panic!("want a rejection, got {other:?}"),
+    }
+
+    // the same shape without the scale blow-up fits and still serves
+    let ok = client
+        .transform(WireRequest::from_f32(0, 1024, &data, KernelKind::HadaCore, DType::F32))
+        .unwrap();
+    assert_eq!(ok.n, 1024);
+    drop(client);
+    handle.shutdown();
+    coord.drain();
+}
+
+#[test]
+fn stats_and_ping_frames() {
+    let (coord, handle) = start_server(2, quick_poll());
+    let client = Client::connect(&handle.addr().to_string()).unwrap();
+
+    for _ in 0..5 {
+        let data = vec![1.0f32; 512];
+        client
+            .transform(WireRequest::from_f32(0, 512, &data, KernelKind::HadaCore, DType::F32))
+            .unwrap();
+    }
+    let rtt = client.ping().unwrap();
+    assert!(rtt < Duration::from_secs(5));
+
+    let stats = client.stats().unwrap();
+    let get = |k: &str| {
+        stats
+            .counters
+            .iter()
+            .find(|(key, _)| key == k)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("stats must carry '{k}'"))
+    };
+    assert!(get("submitted") >= 5);
+    assert!(get("completed") >= 5);
+    assert_eq!(get("conns_active"), 1);
+    assert!(get("requests") >= 5);
+    // the text report carries the histogram percentile reconstruction
+    assert!(stats.report.contains("p50"), "got: {}", stats.report);
+    assert!(stats.report.contains("p90"), "got: {}", stats.report);
+    assert!(stats.report.contains("serve:"), "got: {}", stats.report);
+    drop(client);
+    handle.shutdown();
+    coord.drain();
+}
+
+#[test]
+fn malformed_frames_get_error_replies_and_the_server_survives() {
+    use std::io::{Read, Write};
+    let (coord, handle) = start_server(2, quick_poll());
+    let addr = handle.addr();
+
+    // hand-written garbage: valid length prefix, bogus version byte
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    let body = [9u8, 1, 0, 0, 0, 0, 0, 0]; // version 9
+    raw.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    raw.write_all(&body).unwrap();
+    // the server answers a Malformed error frame, then closes
+    let mut reply = Vec::new();
+    raw.read_to_end(&mut reply).unwrap();
+    let (frame, _) = hadacore::serve::wire::decode_frame(
+        &reply,
+        hadacore::serve::wire::DEFAULT_MAX_FRAME_BYTES,
+    )
+    .unwrap()
+    .expect("server must answer before closing");
+    match frame {
+        hadacore::serve::wire::Frame::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Malformed);
+            assert!(e.msg.contains("version"), "got: {}", e.msg);
+        }
+        other => panic!("want error frame, got {other:?}"),
+    }
+
+    // an oversized length prefix is also answered + closed, not honoured
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    let mut reply = Vec::new();
+    raw.read_to_end(&mut reply).unwrap();
+    assert!(!reply.is_empty(), "oversized frames get an error reply");
+
+    // the server is still healthy for well-behaved clients
+    let client = Client::connect(&addr.to_string()).unwrap();
+    let data = vec![1.0f32; 256];
+    let resp = client
+        .transform(WireRequest::from_f32(0, 256, &data, KernelKind::HadaCore, DType::F32))
+        .unwrap();
+    assert_eq!(resp.rows, 1);
+    assert!(
+        handle
+            .counters()
+            .protocol_errors
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 2
+    );
+    drop(client);
+    handle.shutdown();
+    coord.drain();
+}
+
+#[test]
+fn loadgen_smoke_end_to_end_with_bench_emission() {
+    use hadacore::harness::workload::traffic_mix;
+    use hadacore::serve::loadgen::{run, LoadgenConfig};
+    use hadacore::util::bench::{validate_bench_json, BenchJson};
+
+    let (coord, handle) = start_server(2, quick_poll());
+    let cfg = LoadgenConfig {
+        addr: handle.addr().to_string(),
+        mix: "mixed".to_string(),
+        workload: traffic_mix("mixed").unwrap(),
+        qps: 0.0, // unpaced smoke
+        requests: 60,
+        clients: 2,
+        dtype: DType::F32,
+        ..Default::default()
+    };
+    let report = run(&cfg).unwrap();
+    assert_eq!(report.sent, 60);
+    assert_eq!(
+        report.ok + report.busy + report.errors + report.disconnects,
+        report.sent,
+        "every request resolves exactly once"
+    );
+    assert!(report.ok > 0, "smoke must complete work: {}", report.line());
+    assert!(report.achieved_qps > 0.0);
+    assert_eq!(report.latencies_us.len() as u64, report.ok);
+
+    // the perf-trajectory emission validates against hadacore-bench-v1
+    let mut out = BenchJson::new();
+    out.push(report.to_record(&cfg));
+    let path = std::env::temp_dir()
+        .join(format!("hc_pr5_smoke_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    assert_eq!(out.write(&path).unwrap(), 1);
+    assert_eq!(validate_bench_json(&path).unwrap(), 1);
+    std::fs::remove_file(&path).ok();
+
+    handle.shutdown();
+    coord.drain();
+}

@@ -1,0 +1,234 @@
+//! Property tests for the serving wire protocol (`serve/wire.rs`) — the
+//! `protocol-fuzz` CI gate.
+//!
+//! Three invariants, each driven over randomized inputs:
+//!
+//! 1. **Round-trip**: any well-formed frame encodes then decodes to an
+//!    equal value (payload bytes compared exactly, so this holds for
+//!    arbitrary payload bit patterns).
+//! 2. **Truncation**: every strict prefix of a valid encoding decodes to
+//!    "need more bytes" — never a frame, never a panic.
+//! 3. **Garbage**: arbitrary byte soup (and single-byte corruptions of
+//!    valid frames) never panics and never over-allocates; the decoder
+//!    answers with a frame, "need more", or a descriptive error.
+
+use hadacore::hadamard::KernelKind;
+use hadacore::quant::{Epilogue, Fp8Format, QuantScales};
+use hadacore::serve::wire::{
+    decode_frame, parse_body, ErrorCode, Frame, WireError, WireRequest, WireResponse,
+    WireStats, DEFAULT_MAX_FRAME_BYTES,
+};
+use hadacore::util::f16::DType;
+use hadacore::util::prop::check;
+use hadacore::util::rng::Rng;
+
+fn random_dtype(rng: &mut Rng) -> DType {
+    [DType::F32, DType::F16, DType::BF16][rng.below(3)]
+}
+
+fn random_kernel(rng: &mut Rng) -> KernelKind {
+    [KernelKind::Scalar, KernelKind::Dao, KernelKind::HadaCore][rng.below(3)]
+}
+
+fn random_epilogue(rng: &mut Rng) -> Epilogue {
+    match rng.below(4) {
+        0 => Epilogue::None,
+        1 => Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+        2 => Epilogue::QuantFp8 { fmt: Fp8Format::E5M2 },
+        _ => Epilogue::QuantInt8 { group: 1 + rng.below(64) },
+    }
+}
+
+fn random_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect()
+}
+
+/// Printable-ish random string (valid UTF-8 by construction).
+fn random_string(rng: &mut Rng, max: usize) -> String {
+    let len = rng.below(max + 1);
+    (0..len)
+        .map(|_| char::from(b'a' + (rng.below(26) as u8)))
+        .collect()
+}
+
+fn random_frame(rng: &mut Rng) -> Frame {
+    match rng.below(8) {
+        0 => {
+            let dtype = random_dtype(rng);
+            let n = 1 + rng.below(64);
+            let rows = rng.below(4);
+            Frame::Request(WireRequest {
+                id: rng.next_u64(),
+                n: n as u32,
+                rows: rows as u32,
+                kernel: random_kernel(rng),
+                dtype,
+                // finite scales only: NaN breaks PartialEq round-trip
+                // comparison (and the router rejects them anyway)
+                scale: rng.chance(0.5).then(|| rng.normal_f32()),
+                force_native: rng.chance(0.5),
+                epilogue: random_epilogue(rng),
+                payload: random_bytes(rng, rows * n * dtype.size_bytes()),
+            })
+        }
+        1 => {
+            let dtype = random_dtype(rng);
+            let n = 1 + rng.below(64);
+            let rows = rng.below(4);
+            let scales = match rng.below(3) {
+                0 => QuantScales::None,
+                1 => QuantScales::PerTensor(rng.normal_f32()),
+                _ => QuantScales::PerGroup(
+                    (0..rng.below(8)).map(|_| rng.normal_f32().abs()).collect(),
+                ),
+            };
+            Frame::Response(WireResponse {
+                id: rng.next_u64(),
+                n: n as u32,
+                rows: rows as u32,
+                dtype,
+                pjrt: rng.chance(0.5),
+                batch_rows: rng.below(512) as u32,
+                queue_us: rng.next_u64() >> 32,
+                exec_us: rng.next_u64() >> 32,
+                scales,
+                payload: random_bytes(rng, rows * n * dtype.size_bytes()),
+            })
+        }
+        2 => Frame::Error(WireError {
+            id: rng.next_u64(),
+            code: [
+                ErrorCode::Malformed,
+                ErrorCode::Rejected,
+                ErrorCode::ExecFailed,
+                ErrorCode::Draining,
+            ][rng.below(4)],
+            msg: random_string(rng, 100),
+        }),
+        3 => Frame::Busy {
+            id: rng.next_u64(),
+            retry_after_us: (rng.next_u64() & 0xffff_ffff) as u32,
+        },
+        4 => Frame::Ping { id: rng.next_u64() },
+        5 => Frame::Pong { id: rng.next_u64() },
+        6 => Frame::StatsRequest { id: rng.next_u64() },
+        _ => Frame::Stats(WireStats {
+            id: rng.next_u64(),
+            counters: (0..rng.below(12))
+                .map(|i| (format!("c{i}_{}", random_string(rng, 8)), rng.next_u64()))
+                .collect(),
+            report: random_string(rng, 200),
+        }),
+    }
+}
+
+#[test]
+fn prop_roundtrip_arbitrary_frames() {
+    check("wire roundtrip", 400, |rng| {
+        let frame = random_frame(rng);
+        let bytes = frame.encode();
+        let (decoded, used) = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES)
+            .expect("valid encoding must decode")
+            .expect("complete encoding must yield a frame");
+        assert_eq!(used, bytes.len(), "must consume exactly one frame");
+        assert_eq!(decoded, frame);
+    });
+}
+
+#[test]
+fn prop_truncated_frames_are_incomplete_never_panic() {
+    check("wire truncation", 300, |rng| {
+        let bytes = random_frame(rng).encode();
+        // a handful of random cut points plus the boundaries
+        for _ in 0..8 {
+            let cut = rng.below(bytes.len());
+            let r = decode_frame(&bytes[..cut], DEFAULT_MAX_FRAME_BYTES);
+            assert!(
+                matches!(r, Ok(None)),
+                "prefix of {cut}/{} bytes must be incomplete, got {r:?}",
+                bytes.len()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_garbage_bytes_never_panic_or_overallocate() {
+    // the decoder must stay total on arbitrary input: any outcome but a
+    // panic. Run under a tiny frame cap so a random length prefix can't
+    // even ask for a large body allocation.
+    check("wire garbage", 400, |rng| {
+        let soup = random_bytes(rng, rng.below(200));
+        let _ = decode_frame(&soup, DEFAULT_MAX_FRAME_BYTES);
+        let _ = decode_frame(&soup, 64);
+        // body-level parser is total too
+        let _ = parse_body(&soup);
+    });
+}
+
+#[test]
+fn prop_single_byte_corruption_never_panics() {
+    check("wire corruption", 300, |rng| {
+        let mut bytes = random_frame(rng).encode();
+        let idx = rng.below(bytes.len());
+        let flip = 1u8 << rng.below(8);
+        bytes[idx] ^= flip;
+        // any outcome but a panic; a corrupted length prefix may also
+        // just look incomplete
+        let _ = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES);
+    });
+}
+
+#[test]
+fn prop_streamed_frames_decode_in_sequence() {
+    check("wire streaming", 150, |rng| {
+        let frames: Vec<Frame> = (0..1 + rng.below(5)).map(|_| random_frame(rng)).collect();
+        let mut buf = Vec::new();
+        for f in &frames {
+            buf.extend_from_slice(&f.encode());
+        }
+        let mut offset = 0;
+        for want in &frames {
+            let (got, used) = decode_frame(&buf[offset..], DEFAULT_MAX_FRAME_BYTES)
+                .expect("stream decodes")
+                .expect("complete frame");
+            assert_eq!(&got, want);
+            offset += used;
+        }
+        assert_eq!(offset, buf.len(), "stream fully consumed");
+    });
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    // a length prefix beyond the cap errors immediately — even though the
+    // buffer holds only 4 bytes, the decoder must not wait for (or try to
+    // allocate) 4 GiB
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&u32::MAX.to_le_bytes());
+    let err = decode_frame(&buf, DEFAULT_MAX_FRAME_BYTES).unwrap_err();
+    assert!(err.contains("exceeds cap"), "got: {err}");
+}
+
+#[test]
+fn shape_payload_disagreement_is_malformed() {
+    let mut r = WireRequest::from_f32(
+        1,
+        16,
+        &vec![0.25f32; 32],
+        KernelKind::HadaCore,
+        DType::F32,
+    );
+    r.rows = 7; // payload carries 2 rows
+    let err = decode_frame(&Frame::Request(r).encode(), DEFAULT_MAX_FRAME_BYTES)
+        .unwrap_err();
+    assert!(err.contains("payload"), "got: {err}");
+}
+
+#[test]
+fn version_bump_is_rejected_with_a_named_error() {
+    let mut bytes = Frame::Ping { id: 3 }.encode();
+    bytes[4] = 2; // body[0] is the version
+    let err = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES).unwrap_err();
+    assert!(err.contains("version"), "got: {err}");
+}
