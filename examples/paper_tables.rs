@@ -6,6 +6,9 @@
 //! * Fig 8 / Fig 9     — in-place ablation grids (Appendix B)
 //! * Fig 10 / Fig 11   — BF16 grids (Appendix C)
 //! * §3.4 roofline     — FLOP ratios + bound classification
+//! * §4 accuracy       — quantised-pipeline SNR with vs without rotation
+//!                       (smoke grid; the full sweep + TABLES_PR6.json
+//!                       lives in `examples/accuracy_study.rs`)
 //!
 //! Run: `cargo run --release --example paper_tables -- --figure all --csv out/`
 //!
@@ -26,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         .opt(
             "figure",
             "all",
-            "a100-fp16|h100-fp16|a100-bf16|h100-bf16|a100-inplace|h100-inplace|roofline|all",
+            "a100-fp16|h100-fp16|a100-bf16|h100-bf16|a100-inplace|h100-inplace|roofline|accuracy|all",
         )
         .opt("csv", "", "directory to also write CSV files into")
         .parse();
@@ -57,6 +60,9 @@ fn main() -> anyhow::Result<()> {
     }
     if all || which == "roofline" {
         roofline_report();
+    }
+    if all || which == "accuracy" {
+        accuracy_report();
     }
     Ok(())
 }
@@ -161,5 +167,19 @@ fn roofline_report() {
          throughput of the matrix units and the removal of shuffle ALU work;\n\
          every paper size is memory-bound on A100, so the win shows up as\n\
          bandwidth efficiency (occupancy + L2 residency), not peak flops."
+    );
+}
+
+fn accuracy_report() {
+    use hadacore::exec::ExecEngine;
+    use hadacore::harness::accuracy::{run_study, StudyConfig};
+    println!("## §4 accuracy: quantised-pipeline SNR with vs without rotation (smoke grid)");
+    let records = run_study(&ExecEngine::default(), &StudyConfig::smoke());
+    for r in &records {
+        println!("{}", r.line());
+    }
+    println!(
+        "\nfull kernel x dtype x scheme sweep + TABLES_PR6.json:\n\
+         cargo run --release --example accuracy_study"
     );
 }

@@ -1,0 +1,359 @@
+"""Bit-exact reference port of the Rust golden-vector pipeline.
+
+The container building these PRs has no Rust toolchain, so the checked-in
+``rust/tests/golden/*.json`` digests are produced (and re-verified) by this
+numpy port instead of the ignored ``regen_golden_vectors`` cargo test. The
+port replicates, bit for bit:
+
+* ``util/rng.rs``        — SplitMix64-seeded xoshiro256++,
+* ``tests/golden_vectors.rs::golden_input`` — the dyadic input stream,
+* ``hadamard/scalar.rs`` — the scalar FWHT association order (base stage
+  in ``c``-order, then the in-block butterfly, then one scale multiply;
+  all three kernels are bitwise-equal f32 butterfly networks, so matching
+  the oracle order matches every kernel),
+* ``hadamard/matrices.rs`` — the Paley-II base tables H12/H20/H28,
+* ``util/f16.rs``        — RNE narrowing to f16 (numpy's cast) and bf16
+  (the ``bits + 0x7fff + lsb`` trick, replicated on uint32),
+* ``hadamard/mod.rs::sign_vector`` — the seeded ±1 rotation prologue.
+
+Every elementwise numpy float32 op is a correctly-rounded IEEE single op,
+and the butterfly pairs within one level are independent, so vectorising
+a level preserves the scalar kernel's bit pattern exactly.
+
+Usage::
+
+    python3 python/goldens.py verify   # recompute + diff all entries
+    python3 python/goldens.py regen    # rewrite rust/tests/golden/*.json
+
+``regen`` refuses to run unless ``verify`` of the non-rotated entries
+passes first — if the port and the Rust tree ever disagree, that is a
+divergence to investigate, not overwrite.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+GOLDEN_SCHEMA = "hadacore-golden-v1"
+GOLDEN_SIZES = [256, 1024, 768, 5120, 14336]
+GOLDEN_SEED = 0x601D
+PREFIX_LEN = 16
+KERNELS = ["scalar", "dao", "hadacore"]
+# rotated (sign-flip prologue) golden entries: same sizes, fixed seed —
+# must match rust/tests/golden_vectors.rs::ROTATED_SEED
+ROTATED_SEED = 0x5EED_0006
+
+
+# -- util/rng.rs ------------------------------------------------------------
+
+def _splitmix64(state: int) -> tuple[int, int]:
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    """xoshiro256++ matching rust/src/util/rng.rs bit for bit."""
+
+    def __init__(self, seed: int):
+        sm = seed & MASK64
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK64, 23) + s[0]) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+
+# -- hadamard/matrices.rs ---------------------------------------------------
+
+def _gf_sub(q: int, a: int, b: int) -> int:
+    if q == 9:
+        a0, a1 = a % 3, a // 3
+        b0, b1 = b % 3, b // 3
+        return (a0 + 3 - b0) % 3 + 3 * ((a1 + 3 - b1) % 3)
+    return (a + q - b) % q
+
+
+def _gf_mul(q: int, a: int, b: int) -> int:
+    if q == 9:
+        a0, a1 = a % 3, a // 3
+        b0, b1 = b % 3, b // 3
+        return (a0 * b0 + 2 * a1 * b1) % 3 + 3 * ((a0 * b1 + a1 * b0) % 3)
+    return (a * b) % q
+
+
+def paley2_hadamard(q: int) -> np.ndarray:
+    assert q % 4 == 1
+    squares = {_gf_mul(q, x, x) for x in range(1, q)}
+
+    def chi(z: int) -> int:
+        return 0 if z == 0 else (1 if z in squares else -1)
+
+    n0 = q + 1
+    c = np.zeros((n0, n0), dtype=np.int64)
+    c[0, 1:] = 1
+    c[1:, 0] = 1
+    for i in range(q):
+        for j in range(q):
+            c[i + 1, j + 1] = chi(_gf_sub(q, i, j))
+
+    m = np.array([[1, 1], [1, -1]], dtype=np.int64)
+    nmat = np.array([[1, -1], [-1, -1]], dtype=np.int64)
+    n = 2 * n0
+    h = np.kron(c, m) + np.kron(np.eye(n0, dtype=np.int64), nmat)
+    assert h.shape == (n, n)
+    assert np.array_equal(h, h.T)
+    assert np.array_equal(h @ h.T, n * np.eye(n, dtype=np.int64))
+    return h.astype(np.float32)
+
+
+_BASES: dict[int, np.ndarray] = {}
+
+
+def hadamard_base(b: int) -> np.ndarray:
+    if b not in _BASES:
+        _BASES[b] = paley2_hadamard({12: 5, 20: 9, 28: 13}[b])
+    return _BASES[b]
+
+
+def split_base(n: int) -> tuple[int, int]:
+    tz = (n & -n).bit_length() - 1
+    odd = n >> tz
+    if odd == 1:
+        return 1, n
+    if odd in (3, 5, 7) and tz >= 2:
+        return {3: 12, 5: 20, 7: 28}[odd], n // {3: 12, 5: 20, 7: 28}[odd]
+    raise ValueError(f"unsupported size {n}")
+
+
+# -- hadamard/scalar.rs (f32, exact association order) ----------------------
+
+def fwht_row_f32(row: np.ndarray, n: int, scale: np.float32) -> np.ndarray:
+    """One row, in the scalar kernel's exact order, float32 throughout."""
+    row = row.astype(np.float32, copy=True)
+    base, m = split_base(n)
+    if base > 1:
+        hb = hadamard_base(base)
+        # y[b*m+t] = sum_c hb[b][c] * x[c*m+t], accumulated in c-order
+        blocks = row.reshape(base, m)
+        out = np.zeros((base, m), dtype=np.float32)
+        for b in range(base):
+            acc = np.zeros(m, dtype=np.float32)
+            for c in range(base):
+                acc = acc + hb[b, c] * blocks[c]
+            out[b] = acc
+        row = out.reshape(-1)
+    # butterfly on each contiguous m-block; pairs within a level are
+    # independent, so the vectorised adds keep the scalar bit pattern
+    blk = row.reshape(base, m)
+    h = 1
+    while h < m:
+        v = blk.reshape(base, m // (2 * h), 2, h)
+        x = v[:, :, 0, :].copy()
+        y = v[:, :, 1, :].copy()
+        v[:, :, 0, :] = x + y
+        v[:, :, 1, :] = x - y
+        h *= 2
+    row = blk.reshape(-1)
+    if scale != np.float32(1.0):
+        row = row * scale
+    return row
+
+
+def normalized_scale(n: int) -> np.float32:
+    return np.float32(1.0) / np.sqrt(np.float32(n))
+
+
+# -- util/f16.rs ------------------------------------------------------------
+
+def f32_to_bf16_bits(v: np.ndarray) -> np.ndarray:
+    bits = v.view(np.uint32)
+    nan = np.isnan(v)
+    lsb = (bits >> np.uint32(16)) & np.uint32(1)
+    rounded = bits + np.uint32(0x7FFF) + lsb  # uint32 wraps like Rust
+    out = (rounded >> np.uint32(16)).astype(np.uint16)
+    out[nan] = ((bits[nan] >> np.uint32(16)).astype(np.uint16)) | np.uint16(0x0040)
+    return out
+
+
+def bf16_bits_to_f32(h: np.ndarray) -> np.ndarray:
+    return (h.astype(np.uint32) << np.uint32(16)).view(np.float32)
+
+
+# -- tests/golden_vectors.rs ------------------------------------------------
+
+def golden_rows(n: int) -> int:
+    return 3 if n <= 1024 else 2
+
+
+def golden_input(n: int) -> np.ndarray:
+    rng = Rng(GOLDEN_SEED ^ n)
+    rows = golden_rows(n)
+    vals = [((rng.next_u64() >> 40) - (1 << 23)) / 65536.0 for _ in range(rows * n)]
+    return np.array(vals, dtype=np.float32)
+
+
+def sign_vector(seed: int, n: int) -> np.ndarray:
+    """Port of hadamard/mod.rs::sign_vector: ±1 from the top bit of each
+    draw of an Rng seeded with ``seed ^ n·0x9E3779B97F4A7C15``."""
+    rng = Rng(seed ^ ((n * 0x9E3779B97F4A7C15) & MASK64))
+    return np.array(
+        [1.0 if (rng.next_u64() >> 63) == 0 else -1.0 for _ in range(n)],
+        dtype=np.float32,
+    )
+
+
+def transform_bits(n: int, dtype: str, prologue_seed: int | None) -> np.ndarray:
+    """Output bit patterns of one (n, dtype, prologue) golden case."""
+    x = golden_input(n)
+    rows = golden_rows(n)
+    scale = normalized_scale(n)
+
+    if dtype == "float16":
+        x = x.astype(np.float16)
+        wide = x.astype(np.float32)
+    elif dtype == "bfloat16":
+        b = f32_to_bf16_bits(x)
+        wide = bf16_bits_to_f32(b)
+    else:
+        wide = x
+
+    if prologue_seed is not None:
+        signs = sign_vector(prologue_seed, n)
+        wide = (wide.reshape(rows, n) * signs).reshape(-1)
+
+    out = np.concatenate(
+        [fwht_row_f32(wide[r * n:(r + 1) * n], n, scale) for r in range(rows)]
+    )
+
+    if dtype == "float32":
+        return out.view(np.uint32)
+    if dtype == "float16":
+        return out.astype(np.float16).view(np.uint16).astype(np.uint32)
+    return f32_to_bf16_bits(out).astype(np.uint32)
+
+
+def fnv64(bits: np.ndarray, dtype: str) -> str:
+    if dtype == "float32":
+        data = bits.astype("<u4").tobytes()
+    else:
+        data = bits.astype("<u2").tobytes()
+    h = 0xCBF29CE484222325
+    for byte in data:
+        h = ((h ^ byte) * 0x100000001B3) & MASK64
+    return f"{h:#018x}"
+
+
+def entry(kernel: str, n: int, dtype: str, prologue_seed: int | None) -> dict:
+    bits = transform_bits(n, dtype, prologue_seed)
+    e = {
+        "kernel": kernel,
+        "n": n,
+        "rows": golden_rows(n),
+        "seed": GOLDEN_SEED ^ n,
+        "prefix_bits": [int(b) for b in bits[:PREFIX_LEN]],
+        "fnv64": fnv64(bits, dtype),
+    }
+    if prologue_seed is not None:
+        e["prologue_seed"] = prologue_seed
+    return e
+
+
+def golden_path(dtype: str) -> str:
+    return os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust", "tests", "golden", f"{dtype}.json",
+    )
+
+
+def verify(require_rotated: bool) -> int:
+    """Recompute every checked-in entry; return the mismatch count."""
+    bad = 0
+    for dtype in ["float32", "float16", "bfloat16"]:
+        with open(golden_path(dtype)) as f:
+            doc = json.load(f)
+        assert doc["schema"] == GOLDEN_SCHEMA
+        cache: dict[tuple, tuple] = {}
+        n_rotated = 0
+        for e in doc["entries"]:
+            seed = e.get("prologue_seed")
+            if seed is not None:
+                n_rotated += 1
+            key = (e["n"], seed)
+            if key not in cache:
+                bits = transform_bits(e["n"], dtype, seed)
+                cache[key] = ([int(b) for b in bits[:PREFIX_LEN]], fnv64(bits, dtype))
+            prefix, digest = cache[key]
+            tag = f"{dtype} {e['kernel']} n={e['n']} prologue={seed}"
+            if e["prefix_bits"] != prefix:
+                print(f"MISMATCH (prefix) {tag}")
+                bad += 1
+            elif e["fnv64"] != digest:
+                print(f"MISMATCH (digest) {tag}")
+                bad += 1
+            else:
+                print(f"ok {tag}  {digest}")
+        if require_rotated and n_rotated != len(GOLDEN_SIZES) * len(KERNELS):
+            print(f"{dtype}: expected rotated entries, found {n_rotated}")
+            bad += 1
+    return bad
+
+
+def regen() -> None:
+    for dtype in ["float32", "float16", "bfloat16"]:
+        entries = []
+        for n in GOLDEN_SIZES:
+            for kernel in KERNELS:
+                entries.append(entry(kernel, n, dtype, None))
+        for n in GOLDEN_SIZES:
+            for kernel in KERNELS:
+                entries.append(entry(kernel, n, dtype, ROTATED_SEED))
+        doc = {
+            "schema": GOLDEN_SCHEMA,
+            "dtype": dtype,
+            "prefix_len": PREFIX_LEN,
+            "entries": entries,
+        }
+        path = golden_path(dtype)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"regenerated {path} ({len(entries)} entries)")
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else "verify"
+    if mode == "verify":
+        sys.exit(1 if verify(require_rotated=True) else 0)
+    elif mode == "verify-plain":
+        sys.exit(1 if verify(require_rotated=False) else 0)
+    elif mode == "regen":
+        if verify(require_rotated=False):
+            sys.exit("refusing to regen: existing entries do not reproduce")
+        regen()
+    else:
+        sys.exit(f"unknown mode {mode}")

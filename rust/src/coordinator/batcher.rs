@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::hadamard::KernelKind;
+use crate::hadamard::{KernelKind, Prologue};
 use crate::quant::Epilogue;
 
 use super::router::Route;
@@ -30,6 +30,10 @@ pub struct BucketKey {
     /// is a NaN bit pattern, which cannot collide with an admitted
     /// custom scale: the router rejects non-finite scales.
     pub scale_bits: u32,
+    /// Fused sign-flip prologue — the sign vector is a pure function of
+    /// `(seed, n)`, so rows of same-seed requests may share a batch; a
+    /// different seed (or no prologue) is a different bucket.
+    pub prologue: Prologue,
     /// Fused quantize epilogue — epilogue buckets never mix with plain
     /// ones (their responses carry scales and they always route native).
     pub epilogue: Epilogue,
@@ -43,6 +47,7 @@ impl BucketKey {
             n: req.n,
             pjrt: matches!(route.backend, super::Backend::Pjrt(_)),
             scale_bits: req.scale.map(f32::to_bits).unwrap_or(0x7fc0_0001),
+            prologue: req.prologue,
             epilogue: req.epilogue,
         }
     }
@@ -383,6 +388,26 @@ mod tests {
         let mut int8b = TransformRequest::new(4, 256, vec![0.0; 256]);
         int8b.epilogue = Epilogue::QuantInt8 { group: 32 };
         assert_ne!(ki, BucketKey::of(&int8b, &route));
+    }
+
+    #[test]
+    fn prologue_buckets_separate_by_seed() {
+        use crate::hadamard::Prologue;
+        let route = Route { backend: Backend::Native, capacity_rows: 8 };
+        let plain = TransformRequest::new(1, 256, vec![0.0; 256]);
+        let mut rot_a = TransformRequest::new(2, 256, vec![0.0; 256]);
+        rot_a.prologue = Prologue::SignFlip { seed: 1 };
+        let mut rot_b = TransformRequest::new(3, 256, vec![0.0; 256]);
+        rot_b.prologue = Prologue::SignFlip { seed: 2 };
+        let kp = BucketKey::of(&plain, &route);
+        let ka = BucketKey::of(&rot_a, &route);
+        let kb = BucketKey::of(&rot_b, &route);
+        assert_ne!(kp, ka, "rotated must not batch with plain");
+        assert_ne!(ka, kb, "different seeds must not share a batch");
+        // same seed → same bucket: rows may share one engine call
+        let mut rot_c = TransformRequest::new(4, 256, vec![0.0; 256]);
+        rot_c.prologue = Prologue::SignFlip { seed: 1 };
+        assert_eq!(ka, BucketKey::of(&rot_c, &route));
     }
 
     fn pjrt_key_route(n: usize, cap: usize) -> (BucketKey, Route) {

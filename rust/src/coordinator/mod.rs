@@ -33,7 +33,7 @@ pub use server::{Coordinator, CoordinatorConfig, SubmitError, TaggedResponseTx};
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::hadamard::KernelKind;
+use crate::hadamard::{KernelKind, Prologue};
 use crate::quant::{Epilogue, QuantScales};
 use crate::util::error as anyhow;
 
@@ -68,6 +68,15 @@ pub struct TransformRequest {
     /// Non-finite scales are rejected at admission (a NaN scale would
     /// collide with the no-scale bucket sentinel and corrupt batchmates).
     pub scale: Option<f32>,
+    /// Fused randomized-rotation prologue ([`Prologue::None`] = plain
+    /// transform): a seeded ±1 sign-flip diagonal applied to each row
+    /// *before* the transform, in the same pass over the data — the
+    /// QuaRot-style rotation `x ← (x·D) @ H_n * scale`. The sign vector
+    /// is a pure function of `(seed, n)`, so batching requests that share
+    /// a seed is safe; requests with different seeds batch separately
+    /// (the seed is part of the [`BucketKey`]) and always execute
+    /// natively (PJRT artifacts have no sign-flip stage).
+    pub prologue: Prologue,
     /// Fused rotate→quantize epilogue ([`Epilogue::None`] = plain
     /// transform). Executed by the engine in the same pass over the data
     /// as the rotation; the response's [`TransformResponse::scales`]
@@ -90,6 +99,7 @@ impl TransformRequest {
             data,
             kernel: KernelKind::HadaCore,
             scale: None,
+            prologue: Prologue::None,
             epilogue: Epilogue::None,
             force_native: false,
         }

@@ -188,6 +188,7 @@ impl Router {
                 return Err(format!("scale {s} is not finite"));
             }
         }
+        req.prologue.validate(req.n)?;
         req.epilogue.validate(req.n)?;
         Ok(())
     }
@@ -196,10 +197,14 @@ impl Router {
     ///
     /// PJRT buckets are only usable when the request's scale is the
     /// artifact's baked-in orthonormal scale, it carries no fused
-    /// epilogue (artifacts have no quantise stage), and its rows fit the
-    /// bucket.
+    /// prologue or epilogue (artifacts have neither a sign-flip nor a
+    /// quantise stage), and its rows fit the bucket.
     pub fn route(&self, req: &TransformRequest) -> Route {
-        if !req.force_native && req.scale.is_none() && req.epilogue.is_none() {
+        if !req.force_native
+            && req.scale.is_none()
+            && req.prologue.is_none()
+            && req.epilogue.is_none()
+        {
             if let Some(bucket) = self.pjrt.get(&(req.kernel, req.n)) {
                 if req.rows <= bucket.rows {
                     return Route {
@@ -389,6 +394,23 @@ mod tests {
 
         // the same request without the epilogue goes to pjrt
         let plain = TransformRequest::new(3, 256, vec![0.0; 256]);
+        assert!(matches!(r.route(&plain).backend, Backend::Pjrt(_)));
+    }
+
+    #[test]
+    fn prologue_admission_and_native_routing() {
+        use crate::hadamard::Prologue;
+        let r = manifest_router();
+
+        // a rotation request admits but always routes native, even when
+        // a matching artifact exists — PJRT modules have no sign-flip
+        let mut rot = TransformRequest::new(1, 256, vec![0.0; 256]);
+        rot.prologue = Prologue::SignFlip { seed: 7 };
+        assert!(r.admit(&rot).is_ok());
+        assert!(matches!(r.route(&rot).backend, Backend::Native));
+
+        // the same request without the prologue goes to pjrt
+        let plain = TransformRequest::new(2, 256, vec![0.0; 256]);
         assert!(matches!(r.route(&plain).backend, Backend::Pjrt(_)));
     }
 

@@ -20,7 +20,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::exec::{ExecConfig, ExecEngine};
-use crate::hadamard::{FwhtOptions, KernelKind};
+use crate::hadamard::{FwhtOptions, KernelKind, Prologue};
 use crate::quant::{Epilogue, QuantScales};
 use crate::runtime::{literal_f32, literal_to_f32, Manifest, Runtime};
 use crate::util::error::{self as anyhow, anyhow};
@@ -500,8 +500,12 @@ fn fail_batch(batch: Batch, msg: &str, metrics: &Metrics) {
     fail_items(batch.items, msg, metrics, Instant::now());
 }
 
-/// Run the gathered batch on the engine under its bucket's epilogue and
-/// return one [`QuantScales`] per request, in item order.
+/// Run the gathered batch on the engine under its bucket's prologue and
+/// epilogue and return one [`QuantScales`] per request, in item order.
+///
+/// The sign-flip prologue is a pure function of `(seed, n)` applied per
+/// row, so one whole-batch engine call rotates every batchmate correctly
+/// — the bucket key guarantees all items share the seed.
 ///
 /// Per-tensor FP8 scales are a *per-request* property (each request is
 /// one tensor), so FP8 batches run the fused two-phase engine call once
@@ -511,18 +515,20 @@ fn fail_batch(batch: Batch, msg: &str, metrics: &Metrics) {
 /// a request boundary (`group` divides `n` and requests are whole rows),
 /// so one whole-batch call suffices and the scale vector splits by
 /// offset.
-fn run_native_epilogue(
+#[allow(clippy::too_many_arguments)]
+fn run_native_stages(
     engine: &ExecEngine,
     kernel: KernelKind,
     data: &mut [f32],
     n: usize,
     opts: &FwhtOptions,
+    prologue: Prologue,
     epilogue: Epilogue,
     items: &[Pending],
 ) -> Vec<QuantScales> {
     match epilogue {
         Epilogue::None => {
-            engine.run_f32(kernel, data, n, opts);
+            engine.run_f32_with_stages(kernel, data, n, opts, prologue, Epilogue::None);
             items.iter().map(|_| QuantScales::None).collect()
         }
         Epilogue::QuantFp8 { .. } => {
@@ -530,11 +536,12 @@ fn run_native_epilogue(
             let mut offset = 0;
             for p in items {
                 let len = p.req.rows * n;
-                out.push(engine.run_f32_with_epilogue(
+                out.push(engine.run_f32_with_stages(
                     kernel,
                     &mut data[offset..offset + len],
                     n,
                     opts,
+                    prologue,
                     epilogue,
                 ));
                 offset += len;
@@ -542,7 +549,8 @@ fn run_native_epilogue(
             out
         }
         Epilogue::QuantInt8 { group } => {
-            match engine.run_f32_with_epilogue(kernel, data, n, opts, epilogue) {
+            match engine.run_f32_with_stages(kernel, data, n, opts, prologue, epilogue)
+            {
                 QuantScales::PerGroup(all) => {
                     let mut out = Vec::with_capacity(items.len());
                     let mut g = 0;
@@ -569,8 +577,16 @@ fn execute_native_batch(batch: Batch, metrics: &Metrics, engine: &ExecEngine) {
         Some(s) => FwhtOptions::with_scale(s),
         None => FwhtOptions::normalized(n),
     };
-    let scales =
-        run_native_epilogue(engine, key.kernel, &mut data, n, &opts, key.epilogue, &items);
+    let scales = run_native_stages(
+        engine,
+        key.kernel,
+        &mut data,
+        n,
+        &opts,
+        key.prologue,
+        key.epilogue,
+        &items,
+    );
     let exec_us = t0.elapsed().as_micros() as u64;
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -620,7 +636,8 @@ fn execute_pjrt_batch(
     }
 
     let Batch { key, items, rows, .. } = batch;
-    // the router never routes epilogue requests to PJRT
+    // the router never routes prologue/epilogue requests to PJRT
+    debug_assert!(key.prologue.is_none(), "prologue batch reached pjrt");
     debug_assert!(key.epilogue.is_none(), "epilogue batch reached pjrt");
     let n = key.n;
     let result: anyhow::Result<Vec<f32>> = (|| {
@@ -956,6 +973,59 @@ mod tests {
             assert_eq!(resp.data, want);
             assert_eq!(resp.scales, QuantScales::PerTensor(scale));
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn prologue_roundtrip_bit_identical_to_premultiplied_reference() {
+        use crate::hadamard::{apply_signs, sign_vector};
+        let c = native_coordinator(2);
+        let mut rng = Rng::new(41);
+        let seed = 0x5EED_CAFEu64;
+        let (rows, n) = (3usize, 768usize);
+        let x = rng.normal_vec(rows * n);
+        let mut req = TransformRequest::new(5, n, x.clone());
+        req.prologue = Prologue::SignFlip { seed };
+        let resp = c.transform(req).unwrap();
+        assert_eq!(resp.backend, "native");
+
+        let mut want = x;
+        apply_signs(&mut want, &sign_vector(seed, n));
+        crate::hadamard::fwht_f32(
+            KernelKind::HadaCore,
+            &mut want,
+            n,
+            &FwhtOptions::normalized(n),
+        );
+        assert_eq!(resp.data, want, "served rotation must match the premultiply");
+        c.shutdown();
+    }
+
+    #[test]
+    fn prologue_composes_with_epilogue_through_server() {
+        use crate::hadamard::{apply_signs, sign_vector};
+        use crate::quant::{fp8_quantize_slice, Fp8Format};
+        let c = native_coordinator(2);
+        let mut rng = Rng::new(42);
+        let seed = 0x5EED_F00Du64;
+        let n = 512;
+        let x = rng.normal_vec(2 * n);
+        let mut req = TransformRequest::new(6, n, x.clone());
+        req.prologue = Prologue::SignFlip { seed };
+        req.epilogue = Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 };
+        let resp = c.transform(req).unwrap();
+
+        let mut want = x;
+        apply_signs(&mut want, &sign_vector(seed, n));
+        crate::hadamard::fwht_f32(
+            KernelKind::HadaCore,
+            &mut want,
+            n,
+            &FwhtOptions::normalized(n),
+        );
+        let scale = fp8_quantize_slice(&mut want, Fp8Format::E4M3);
+        assert_eq!(resp.data, want);
+        assert_eq!(resp.scales, QuantScales::PerTensor(scale));
         c.shutdown();
     }
 

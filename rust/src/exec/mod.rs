@@ -77,7 +77,9 @@ use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::hadamard::hadacore::fwht_hadacore_f32_planned_depth;
-use crate::hadamard::{fwht_f32, validate_dims, FwhtOptions, KernelKind};
+use crate::hadamard::{
+    apply_signs, fwht_f32, validate_dims, FwhtOptions, KernelKind, Prologue,
+};
 use crate::quant::{
     amax_slice, fp8_apply_slice, int_group_apply_slice, Epilogue, Fp8Format,
     IntBits, QuantScales,
@@ -193,6 +195,8 @@ pub struct ExecStats {
     pub scratch_grows: AtomicU64,
     /// Runs that executed a fused quantize epilogue (inline or sharded).
     pub epilogue_runs: AtomicU64,
+    /// Runs that executed a fused sign-flip prologue (inline or sharded).
+    pub prologue_runs: AtomicU64,
     /// Runs whose tuned fusion depth was > 1 (multi-round tiles).
     pub fused_runs: AtomicU64,
 }
@@ -205,6 +209,7 @@ pub struct ExecStatsSnapshot {
     pub chunks: u64,
     pub scratch_grows: u64,
     pub epilogue_runs: u64,
+    pub prologue_runs: u64,
     pub fused_runs: u64,
 }
 
@@ -216,6 +221,7 @@ impl ExecStats {
             chunks: self.chunks.load(Ordering::Relaxed),
             scratch_grows: self.scratch_grows.load(Ordering::Relaxed),
             epilogue_runs: self.epilogue_runs.load(Ordering::Relaxed),
+            prologue_runs: self.prologue_runs.load(Ordering::Relaxed),
             fused_runs: self.fused_runs.load(Ordering::Relaxed),
         }
     }
@@ -345,7 +351,7 @@ impl ExecEngine {
         n: usize,
         opts: &FwhtOptions,
     ) {
-        self.run_with_epilogue(kind, data, n, opts, Epilogue::None);
+        self.run_with_stages(kind, data, n, opts, Prologue::None, Epilogue::None);
     }
 
     /// [`ExecEngine::run`] plus a fused quantize [`Epilogue`], executed
@@ -369,13 +375,47 @@ impl ExecEngine {
         opts: &FwhtOptions,
         epilogue: Epilogue,
     ) -> QuantScales {
+        self.run_with_stages(kind, data, n, opts, Prologue::None, epilogue)
+    }
+
+    /// The full fused pipeline: an optional randomized-rotation
+    /// [`Prologue`] (seeded ±1 sign flip applied to each chunk's rows in
+    /// the same traversal that transforms them — for 16-bit storage the
+    /// flip rides the widening copy, so it costs zero extra passes), the
+    /// transform, and an optional quantize [`Epilogue`].
+    ///
+    /// The prologue is bit-identical to the unfused reference —
+    /// [`crate::hadamard::apply_signs`] over the whole buffer followed by
+    /// the plain engine run: a ±1.0 multiply is exact and commutes with
+    /// widening, so fusing it changes no bits (enforced by
+    /// `rust/tests/rotation_parity.rs`).
+    ///
+    /// Panics on invalid dimensions, epilogue, or prologue — serving
+    /// callers have already validated all three at admission.
+    pub fn run_with_stages<E: ExecElement>(
+        &self,
+        kind: KernelKind,
+        data: &mut [E],
+        n: usize,
+        opts: &FwhtOptions,
+        prologue: Prologue,
+        epilogue: Epilogue,
+    ) -> QuantScales {
         let rows = validate_dims(data.len(), n).expect("invalid dimensions");
         if let Err(e) = epilogue.validate(n) {
             panic!("invalid epilogue: {e}");
         }
+        if let Err(e) = prologue.validate(n) {
+            panic!("invalid prologue: {e}");
+        }
         if !epilogue.is_none() {
             self.stats.epilogue_runs.fetch_add(1, Ordering::Relaxed);
         }
+        if !prologue.is_none() {
+            self.stats.prologue_runs.fetch_add(1, Ordering::Relaxed);
+        }
+        // materialise the sign vector once per run; chunks share it
+        let signs: Option<Arc<Vec<f32>>> = prologue.signs(n).map(Arc::new);
         let plan = plan_for(kind, n);
         // the autotuned fusion depth + chunk refinement for this shape
         // (memoized; a hash lookup after first use). An env-pinned chunk
@@ -405,6 +445,7 @@ impl ExecEngine {
                     opts: *opts,
                     plan: Arc::clone(&plan),
                     fusion_depth,
+                    signs: signs.clone(),
                     stage,
                 };
                 // SAFETY (all submissions below): `data` is a `&mut`
@@ -475,6 +516,7 @@ impl ExecEngine {
                                 &plan,
                                 fusion_depth,
                                 &self.stats,
+                                signs.as_deref().map(Vec::as_slice),
                                 epilogue,
                                 &mut unused,
                             )
@@ -495,6 +537,7 @@ impl ExecEngine {
                                 &plan,
                                 fusion_depth,
                                 &self.stats,
+                                signs.as_deref().map(Vec::as_slice),
                                 epilogue,
                                 &mut scratch,
                             )
@@ -534,6 +577,19 @@ impl ExecEngine {
         self.run_with_epilogue::<f32>(kind, data, n, opts, epilogue)
     }
 
+    /// [`ExecEngine::run_with_stages`] monomorphised for `f32`.
+    pub fn run_f32_with_stages(
+        &self,
+        kind: KernelKind,
+        data: &mut [f32],
+        n: usize,
+        opts: &FwhtOptions,
+        prologue: Prologue,
+        epilogue: Epilogue,
+    ) -> QuantScales {
+        self.run_with_stages::<f32>(kind, data, n, opts, prologue, epilogue)
+    }
+
     /// Rows per chunk for a `rows x n` batch under the static balance
     /// policy: enough chunks to balance the lanes, but never chunks
     /// smaller than `min_chunk_elems`. Delegates to the shared
@@ -547,6 +603,11 @@ impl ExecEngine {
 /// Execute rows `[start_row, start_row + rows_here)` of a payload buffer:
 /// direct for f32, widen-compute-narrow through `scratch` for 16-bit
 /// storage. Shared by pool workers and the inline path.
+///
+/// `signs` (length `n`, from [`Prologue::signs`]) is the fused sign-flip
+/// prologue: chunks cover whole rows, so applying it per chunk equals
+/// applying it to the whole buffer. For f32 it is one in-place multiply
+/// pass; for 16-bit storage it rides the widening copy, costing nothing.
 ///
 /// # Safety
 ///
@@ -563,6 +624,7 @@ pub(crate) unsafe fn execute_range(
     opts: &FwhtOptions,
     plan: &ExecPlan,
     fusion_depth: usize,
+    signs: Option<&[f32]>,
     scratch: &mut Vec<f32>,
     stats: &ExecStats,
 ) {
@@ -572,15 +634,22 @@ pub(crate) unsafe fn execute_range(
     match payload {
         Payload::F32(base) => {
             let data = std::slice::from_raw_parts_mut(base.add(offset), len);
+            if let Some(s) = signs {
+                apply_signs(data, s);
+            }
             run_f32_slice(kind, data, n, opts, plan, fusion_depth);
         }
         Payload::F16(base) => {
             let data = std::slice::from_raw_parts_mut(base.add(offset), len);
-            widen_run_narrow(kind, data, n, opts, plan, fusion_depth, scratch, stats);
+            widen_run_narrow(
+                kind, data, n, opts, plan, fusion_depth, signs, scratch, stats,
+            );
         }
         Payload::BF16(base) => {
             let data = std::slice::from_raw_parts_mut(base.add(offset), len);
-            widen_run_narrow(kind, data, n, opts, plan, fusion_depth, scratch, stats);
+            widen_run_narrow(
+                kind, data, n, opts, plan, fusion_depth, signs, scratch, stats,
+            );
         }
     }
 }
@@ -605,6 +674,7 @@ pub(crate) unsafe fn execute_stage(
     opts: &FwhtOptions,
     plan: &ExecPlan,
     fusion_depth: usize,
+    signs: Option<&[f32]>,
     scratch: &mut Vec<f32>,
     stats: &ExecStats,
 ) {
@@ -612,23 +682,24 @@ pub(crate) unsafe fn execute_stage(
         ChunkStage::Rotate => {
             execute_range(
                 payload, start_row, rows_here, n, kind, opts, plan,
-                fusion_depth, scratch, stats,
+                fusion_depth, signs, scratch, stats,
             );
         }
         ChunkStage::RotateAmax { amax } => {
             execute_range(
                 payload, start_row, rows_here, n, kind, opts, plan,
-                fusion_depth, scratch, stats,
+                fusion_depth, signs, scratch, stats,
             );
             amax.merge(amax_range(payload, start_row, rows_here, n));
         }
         ChunkStage::RotateGroupQuant { group, scales } => {
             execute_range(
                 payload, start_row, rows_here, n, kind, opts, plan,
-                fusion_depth, scratch, stats,
+                fusion_depth, signs, scratch, stats,
             );
             group_quant_range(payload, start_row, rows_here, n, *group, scales.0);
         }
+        // phase 2 of per-tensor FP8: the prologue already ran in phase 1
         ChunkStage::QuantFp8 { scale, fmt } => {
             quant_fp8_range(payload, start_row, rows_here, n, *scale, *fmt);
         }
@@ -652,11 +723,13 @@ unsafe fn run_inline(
     plan: &ExecPlan,
     fusion_depth: usize,
     stats: &ExecStats,
+    signs: Option<&[f32]>,
     epilogue: Epilogue,
     scratch: &mut Vec<f32>,
 ) -> QuantScales {
     execute_range(
-        payload, 0, rows, n, kind, opts, plan, fusion_depth, scratch, stats,
+        payload, 0, rows, n, kind, opts, plan, fusion_depth, signs, scratch,
+        stats,
     );
     match epilogue {
         Epilogue::None => QuantScales::None,
@@ -804,8 +877,10 @@ fn run_f32_slice(
 
 /// The 16-bit chunk path with the reusable workspace: widen into
 /// `scratch`, transform in f32, narrow back with round-to-nearest-even.
-/// Capacity growth (an allocation) is counted; in steady state the
-/// counter is flat.
+/// A sign-flip prologue rides the widening copy (16-bit → f32 widening
+/// is exact and ±1.0 multiply is exact, so fused == premultiplied
+/// bit-for-bit). Capacity growth (an allocation) is counted; in steady
+/// state the counter is flat.
 #[allow(clippy::too_many_arguments)]
 fn widen_run_narrow<E: Element>(
     kind: KernelKind,
@@ -814,12 +889,20 @@ fn widen_run_narrow<E: Element>(
     opts: &FwhtOptions,
     plan: &ExecPlan,
     fusion_depth: usize,
+    signs: Option<&[f32]>,
     scratch: &mut Vec<f32>,
     stats: &ExecStats,
 ) {
     let cap_before = scratch.capacity();
     scratch.clear();
-    scratch.extend(data.iter().map(|v| v.to_f32()));
+    match signs {
+        // chunks cover whole rows, so data.len() is a multiple of n and
+        // the cycled sign vector stays row-aligned
+        Some(s) => scratch.extend(
+            data.iter().zip(s.iter().cycle()).map(|(v, sg)| v.to_f32() * sg),
+        ),
+        None => scratch.extend(data.iter().map(|v| v.to_f32())),
+    }
     run_f32_slice(kind, scratch.as_mut_slice(), n, opts, plan, fusion_depth);
     for (dst, src) in data.iter_mut().zip(scratch.iter()) {
         *dst = E::from_f32(*src);
@@ -1066,6 +1149,132 @@ mod tests {
         );
         assert_eq!(scales, QuantScales::PerGroup(want_scales));
         assert_eq!(unfused, fused);
+    }
+
+    #[test]
+    fn fused_prologue_matches_premultiplied_reference() {
+        // the sign-flip prologue fused into the chunk traversal must be
+        // bit-identical to applying D over the whole buffer first and
+        // then running the plain engine — sharded and inline alike
+        let engine = pooled();
+        let mut rng = Rng::new(21);
+        let seed = 0xD1A6_0001u64;
+        for (rows, n) in [(1usize, 256usize), (33, 1024), (9, 4096)] {
+            let x = rng.normal_vec(rows * n);
+            let opts = FwhtOptions::normalized(n);
+            let signs = crate::hadamard::sign_vector(seed, n);
+            for kind in KernelKind::all() {
+                let mut unfused = x.clone();
+                apply_signs(&mut unfused, &signs);
+                engine.run_f32(kind, &mut unfused, n, &opts);
+
+                let mut fused = x.clone();
+                engine.run_f32_with_stages(
+                    kind,
+                    &mut fused,
+                    n,
+                    &opts,
+                    Prologue::SignFlip { seed },
+                    Epilogue::None,
+                );
+                assert_eq!(unfused, fused, "kind={kind:?} rows={rows} n={n}");
+            }
+        }
+        let s = engine.stats();
+        assert_eq!(s.prologue_runs, 3 * KernelKind::all().len() as u64);
+        assert!(s.jobs > 0, "the 33x1024 batches must shard on this engine");
+        assert!(s.inline_runs > 0, "the 1x256 batches must run inline");
+    }
+
+    #[test]
+    fn fused_prologue_16bit_rides_the_widening_copy() {
+        // 16-bit storage: the fused flip happens on the widened f32
+        // values; the reference flips the narrow values up front. Both
+        // are exact (±1 multiply commutes with exact widening), so the
+        // outputs must agree bit for bit.
+        let engine = pooled();
+        let mut rng = Rng::new(22);
+        let seed = 0xD1A6_0002u64;
+        let (rows, n) = (33usize, 512usize);
+        let x = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+        let signs = crate::hadamard::sign_vector(seed, n);
+
+        let base16: Vec<F16> = x.iter().map(|&v| F16::from_f32(v)).collect();
+        let mut unfused: Vec<F16> = base16
+            .iter()
+            .zip(signs.iter().cycle())
+            .map(|(v, sg)| F16::from_f32(v.to_f32() * sg))
+            .collect();
+        engine.run(KernelKind::HadaCore, &mut unfused, n, &opts);
+        let mut fused = base16;
+        engine.run_with_stages(
+            KernelKind::HadaCore,
+            &mut fused,
+            n,
+            &opts,
+            Prologue::SignFlip { seed },
+            Epilogue::None,
+        );
+        assert_eq!(unfused, fused);
+
+        let basebf: Vec<BF16> = x.iter().map(|&v| BF16::from_f32(v)).collect();
+        let mut unfused: Vec<BF16> = basebf
+            .iter()
+            .zip(signs.iter().cycle())
+            .map(|(v, sg)| BF16::from_f32(v.to_f32() * sg))
+            .collect();
+        engine.run(KernelKind::Dao, &mut unfused, n, &opts);
+        let mut fused = basebf;
+        engine.run_with_stages(
+            KernelKind::Dao,
+            &mut fused,
+            n,
+            &opts,
+            Prologue::SignFlip { seed },
+            Epilogue::None,
+        );
+        assert_eq!(unfused, fused);
+    }
+
+    #[test]
+    fn prologue_composes_with_fused_epilogues() {
+        // rotate-with-prologue + quantize epilogue in one engine call
+        // equals the unfused premultiply + plain epilogue run
+        let engine = pooled();
+        let mut rng = Rng::new(23);
+        let seed = 0xD1A6_0003u64;
+        let (rows, n, group) = (19usize, 512usize, 64usize);
+        let x = rng.normal_vec(rows * n);
+        let opts = FwhtOptions::normalized(n);
+        let signs = crate::hadamard::sign_vector(seed, n);
+
+        for epilogue in [
+            Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+            Epilogue::QuantInt8 { group },
+        ] {
+            let mut unfused = x.clone();
+            apply_signs(&mut unfused, &signs);
+            let want_scales = engine.run_f32_with_epilogue(
+                KernelKind::HadaCore,
+                &mut unfused,
+                n,
+                &opts,
+                epilogue,
+            );
+
+            let mut fused = x.clone();
+            let scales = engine.run_f32_with_stages(
+                KernelKind::HadaCore,
+                &mut fused,
+                n,
+                &opts,
+                Prologue::SignFlip { seed },
+                epilogue,
+            );
+            assert_eq!(scales, want_scales, "{epilogue:?}");
+            assert_eq!(unfused, fused, "{epilogue:?}");
+        }
     }
 
     #[test]

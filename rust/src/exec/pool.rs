@@ -57,6 +57,9 @@ pub(crate) struct JobSpec {
     /// Autotuned round-fusion depth for the HadaCore planned path
     /// (1 = unfused; see [`crate::exec::tune`]).
     pub fusion_depth: usize,
+    /// Fused sign-flip prologue vector (length `n`), shared by all
+    /// chunks; `None` for a plain transform.
+    pub signs: Option<Arc<Vec<f32>>>,
     /// What each chunk executes (plain rotate or an epilogue stage).
     pub stage: ChunkStage,
 }
@@ -128,6 +131,7 @@ struct Claim {
     opts: FwhtOptions,
     plan: Arc<ExecPlan>,
     fusion_depth: usize,
+    signs: Option<Arc<Vec<f32>>>,
     stage: ChunkStage,
     done: Arc<Latch>,
 }
@@ -213,6 +217,7 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
                         opts: front.spec.opts,
                         plan: Arc::clone(&front.spec.plan),
                         fusion_depth: front.spec.fusion_depth,
+                        signs: front.spec.signs.clone(),
                         stage: front.spec.stage.clone(),
                         done: Arc::clone(&front.done),
                     };
@@ -247,6 +252,7 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
                     &claim.opts,
                     &claim.plan,
                     claim.fusion_depth,
+                    claim.signs.as_deref().map(Vec::as_slice),
                     &mut scratch,
                     stats,
                 );

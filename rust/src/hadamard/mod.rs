@@ -110,6 +110,95 @@ impl KernelKind {
     }
 }
 
+/// Deterministic ±1 sign vector: a pure function of `(seed, n)`.
+///
+/// This is the diagonal `D` of the QuaRot-style randomized rotation
+/// `x ← (x·D) @ H_n / √n`: one [`crate::util::rng::Rng`] draw per
+/// element, seeded with `seed ^ n·0x9E3779B97F4A7C15` so different sizes
+/// draw decorrelated streams from the same user seed, taking the top bit
+/// of each draw. Every path that needs the signs (engine prologue, wire
+/// requests, tests, the Python golden port) derives them through this
+/// one function, so they agree byte-for-byte by construction.
+pub fn sign_vector(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng =
+        crate::util::rng::Rng::new(seed ^ (n as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (0..n)
+        .map(|_| if rng.next_u64() >> 63 == 0 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// Multiply every `signs.len()`-sized row of `data` elementwise by
+/// `signs` (`x ← x·D`). Each multiply is by ±1.0, an **exact** IEEE
+/// operation — applying the flip fused inside a chunk traversal, before
+/// or after 16-bit widening, or as a separate pass all produce the same
+/// bits, which is what makes the fused prologue provably identical to
+/// the unfused pre-multiply.
+pub fn apply_signs(data: &mut [f32], signs: &[f32]) {
+    assert!(!signs.is_empty(), "empty sign vector");
+    assert_eq!(data.len() % signs.len(), 0, "data not a multiple of n");
+    for row in data.chunks_exact_mut(signs.len()) {
+        for (v, s) in row.iter_mut().zip(signs) {
+            *v *= *s;
+        }
+    }
+}
+
+/// A randomized-rotation step fused into the transform as a prologue:
+/// the [`crate::exec`] engine sign-flips each chunk's rows in the same
+/// working-set traversal that transforms them (mirror of the fused
+/// [`crate::quant::Epilogue`]), so the rotation `x ← (x·D) @ H_n · s`
+/// costs one multiply per element and zero extra passes over the batch.
+///
+/// The inverse (`unrotate`) is the transform followed by the same sign
+/// flip — see [`unapply`](Prologue::unapply). With the orthonormal
+/// scale, `unrotate(rotate(x)) = x`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Prologue {
+    /// Plain transform, no rotation.
+    #[default]
+    None,
+    /// Seeded ±1 diagonal `D = diag(sign_vector(seed, n))` applied
+    /// before the transform.
+    SignFlip {
+        /// Seed of the sign stream (pure function of `(seed, n)`).
+        seed: u64,
+    },
+}
+
+impl Prologue {
+    /// True for the plain (no-rotation) prologue.
+    pub fn is_none(self) -> bool {
+        matches!(self, Prologue::None)
+    }
+
+    /// Admission-time validation against a transform size. Every
+    /// supported size admits a sign flip; the hook exists so the router
+    /// treats prologues and epilogues uniformly.
+    pub fn validate(self, n: usize) -> Result<(), String> {
+        match self {
+            _ if n == 0 => Err("prologue requires n > 0".to_string()),
+            _ => Ok(()),
+        }
+    }
+
+    /// The materialised sign vector, or `None` for [`Prologue::None`].
+    pub fn signs(self, n: usize) -> Option<Vec<f32>> {
+        match self {
+            Prologue::None => None,
+            Prologue::SignFlip { seed } => Some(sign_vector(seed, n)),
+        }
+    }
+
+    /// Undo this prologue's rotation on already-transformed rows: apply
+    /// the transform again (caller does that part), then flip the same
+    /// signs. `data` holds rows of length `n`.
+    pub fn unapply(self, data: &mut [f32], n: usize) {
+        if let Some(signs) = self.signs(n) {
+            apply_signs(data, &signs);
+        }
+    }
+}
+
 /// Dispatch a f32 transform by kernel kind. `data.len()` must be a
 /// multiple of `n`.
 pub fn fwht_f32(kind: KernelKind, data: &mut [f32], n: usize, opts: &FwhtOptions) {
@@ -232,6 +321,66 @@ mod tests {
             validate_dims(100, 10).unwrap_err().contains("12, 20, 28, 40"),
             "rejection must enumerate the size family"
         );
+    }
+
+    #[test]
+    fn sign_vector_is_deterministic_and_balanced() {
+        let a = sign_vector(7, 1024);
+        let b = sign_vector(7, 1024);
+        assert_eq!(a, b, "pure function of (seed, n)");
+        assert!(a.iter().all(|&s| s == 1.0 || s == -1.0));
+        let plus = a.iter().filter(|&&s| s == 1.0).count();
+        assert!((300..=724).contains(&plus), "degenerate sign stream: {plus}");
+        // different seeds and different sizes draw different streams
+        assert_ne!(a, sign_vector(8, 1024));
+        assert_ne!(a[..512], sign_vector(7, 512)[..]);
+    }
+
+    #[test]
+    fn apply_signs_is_exact_and_involutive() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let n = 256;
+        let x = rng.normal_vec(3 * n);
+        let signs = sign_vector(3, n);
+        let mut y = x.clone();
+        apply_signs(&mut y, &signs);
+        // ±1 multiply flips at most the sign bit — exact
+        for (a, b) in x.iter().zip(y.iter()) {
+            assert_eq!(a.abs().to_bits(), b.abs().to_bits());
+        }
+        apply_signs(&mut y, &signs);
+        assert_eq!(x, y, "D·D = I bit-exactly");
+    }
+
+    #[test]
+    fn prologue_basics() {
+        assert!(Prologue::None.is_none());
+        assert!(!Prologue::SignFlip { seed: 1 }.is_none());
+        assert!(Prologue::None.signs(64).is_none());
+        assert_eq!(
+            Prologue::SignFlip { seed: 5 }.signs(64).unwrap(),
+            sign_vector(5, 64)
+        );
+        assert!(Prologue::SignFlip { seed: 5 }.validate(256).is_ok());
+        assert!(Prologue::SignFlip { seed: 5 }.validate(0).is_err());
+        assert_eq!(Prologue::default(), Prologue::None);
+    }
+
+    #[test]
+    fn rotate_then_unrotate_recovers_input() {
+        // orthonormal scale: unrotate(rotate(x)) == x up to f32 rounding
+        let mut rng = crate::util::rng::Rng::new(33);
+        let n = 512;
+        let x = rng.normal_vec(2 * n);
+        let p = Prologue::SignFlip { seed: 11 };
+        let opts = FwhtOptions::normalized(n);
+        let mut y = x.clone();
+        apply_signs(&mut y, &p.signs(n).unwrap());
+        fwht_f32(KernelKind::HadaCore, &mut y, n, &opts);
+        // inverse: transform, then the same signs
+        fwht_f32(KernelKind::HadaCore, &mut y, n, &opts);
+        p.unapply(&mut y, n);
+        crate::util::prop::assert_close(&y, &x, 1e-4, 1e-4);
     }
 
     #[test]

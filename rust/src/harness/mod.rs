@@ -3,10 +3,14 @@
 //! Everything the bench binaries and `examples/paper_tables.rs` need to
 //! print the paper's tables: grid formatting in the paper's layout
 //! (sizes down, element counts across; runtime in µs, speedup in %),
-//! CSV export for plotting, and serving workload generators.
+//! CSV export for plotting, serving workload generators, and the
+//! quantised-pipeline accuracy study behind `TABLES_PR6.json`
+//! (`examples/accuracy_study.rs`).
 
+pub mod accuracy;
 pub mod tables;
 pub mod workload;
 
+pub use accuracy::{outlier_activations, run_study, StudyConfig};
 pub use tables::{format_runtime_table, format_speedup_table, to_csv, Table};
 pub use workload::{ServingWorkload, WorkloadConfig};

@@ -66,6 +66,44 @@ pub fn quant_mse(orig: &[f32], quant: &[f32]) -> f64 {
         / orig.len().max(1) as f64
 }
 
+/// Signal-to-quantisation-noise ratio in dB:
+/// `10 * log10( ||x||^2 / ||x - q||^2 )`. Higher is better; an exact
+/// reconstruction returns `f64::INFINITY`, and an all-zero signal
+/// returns 0 (no signal, nothing to measure).
+pub fn quant_snr(orig: &[f32], quant: &[f32]) -> f64 {
+    assert_eq!(orig.len(), quant.len());
+    let signal: f64 = orig.iter().map(|v| (*v as f64).powi(2)).sum();
+    if signal == 0.0 {
+        return 0.0;
+    }
+    let noise: f64 = orig
+        .iter()
+        .zip(quant.iter())
+        .map(|(a, b)| ((*a as f64) - (*b as f64)).powi(2))
+        .sum();
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (signal / noise).log10()
+}
+
+/// Max elementwise error relative to the tensor's max magnitude:
+/// `max|x - q| / max|x|` — the paper's accuracy-table metric
+/// (PAPER.md §4.1 reports FP16/BF16 transform error relative to amax).
+/// An all-zero original returns 0.
+pub fn rel_to_amax(orig: &[f32], quant: &[f32]) -> f64 {
+    assert_eq!(orig.len(), quant.len());
+    let amax = orig.iter().fold(0.0f64, |m, v| m.max(v.abs() as f64));
+    if amax == 0.0 {
+        return 0.0;
+    }
+    let maxerr = orig
+        .iter()
+        .zip(quant.iter())
+        .fold(0.0f64, |m, (a, b)| m.max(((*a as f64) - (*b as f64)).abs()));
+    maxerr / amax
+}
+
 /// Quantise a copy of `x` under `scheme` and report the error statistics.
 pub fn evaluate(x: &[f32], scheme: Scheme) -> QuantReport {
     let mut q = x.to_vec();
@@ -148,5 +186,49 @@ mod tests {
     fn quant_mse_basics() {
         assert_eq!(quant_mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
         assert!((quant_mse(&[1.0, 2.0], &[1.5, 2.0]) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quant_snr_basics() {
+        // exact reconstruction: infinite SNR; zero signal: 0
+        assert_eq!(quant_snr(&[1.0, -2.0], &[1.0, -2.0]), f64::INFINITY);
+        assert_eq!(quant_snr(&[0.0, 0.0], &[0.1, 0.0]), 0.0);
+        // signal 100, noise 1 -> exactly 20 dB
+        let snr = quant_snr(&[10.0], &[9.0]);
+        assert!((snr - 20.0).abs() < 1e-9, "got {snr}");
+        // halving the noise power adds ~3.01 dB
+        let better = quant_snr(&[10.0, 10.0], &[9.0, 10.0]);
+        assert!((better - snr - 10.0 * 2.0f64.log10()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rel_to_amax_basics() {
+        assert_eq!(rel_to_amax(&[4.0, -2.0], &[4.0, -2.0]), 0.0);
+        assert_eq!(rel_to_amax(&[0.0; 4], &[1.0; 4]), 0.0);
+        // max error 0.5 against amax 4
+        let r = rel_to_amax(&[4.0, -2.0], &[4.0, -2.5]);
+        assert!((r - 0.125).abs() < 1e-12, "got {r}");
+    }
+
+    #[test]
+    fn rotation_improves_fp8_snr_on_outlier_activations() {
+        // the tentpole claim at unit scale: rotate → quantize beats
+        // quantize alone on heavy-tailed activations
+        let mut rng = Rng::new(17);
+        let n = 4096;
+        let x: Vec<f32> = (0..n).map(|_| rng.outlier_normal(0.005, 40.0)).collect();
+        let mut q = x.clone();
+        crate::quant::fake_quantize(&mut q, Scheme::Fp8E4m3);
+        let plain = quant_snr(&x, &q);
+
+        let mut rot = x.clone();
+        fwht_hadacore_f32(&mut rot, n, &FwhtOptions::normalized(n));
+        let mut rq = rot.clone();
+        crate::quant::fake_quantize(&mut rq, Scheme::Fp8E4m3);
+        let rotated = quant_snr(&rot, &rq);
+        assert!(
+            rotated > plain,
+            "rotation should raise FP8 SNR: plain {plain:.2} dB, rotated {rotated:.2} dB"
+        );
     }
 }

@@ -16,7 +16,7 @@ pub mod metrics;
 pub use fp8::{fp8_apply_slice, fp8_quantize_slice, Fp8Format};
 pub use group::{group_size_sweep, int_group_apply_slice, int_quantize_grouped};
 pub use int::{int_quantize_slice, IntBits};
-pub use metrics::{incoherence, outlier_mass, quant_mse, QuantReport};
+pub use metrics::{incoherence, outlier_mass, quant_mse, quant_snr, rel_to_amax, QuantReport};
 
 /// Max-abs over a slice, widening 16-bit storage through
 /// [`crate::util::f16::Element`]. NaNs are ignored (`f32::max`

@@ -10,7 +10,7 @@
 //!
 //! | tag | frame | body after `(version, tag)` |
 //! |---|---|---|
-//! | 1 | `Request` | `id u64, n u32, rows u32, kernel u8, dtype u8, flags u8, epilogue u8, group u32, scale f32, payload` |
+//! | 1 | `Request` | `id u64, n u32, rows u32, kernel u8, dtype u8, flags u8, epilogue u8, group u32, scale f32, [seed u64,] payload` |
 //! | 2 | `Response` | `id u64, n u32, rows u32, dtype u8, backend u8, batch_rows u32, queue_us u64, exec_us u64, scales, payload` |
 //! | 3 | `Error` | `id u64, code u8, msg_len u16, msg` |
 //! | 4 | `Busy` | `id u64, retry_after_us u32` |
@@ -21,7 +21,10 @@
 //!
 //! Request `flags`: bit 0 = custom scale present (the `scale` field is
 //! its bits; otherwise the field must be zero), bit 1 = force the native
-//! backend; all other bits must be zero. `epilogue`: 0 none, 1 FP8 e4m3,
+//! backend, bit 2 = sign-flip prologue present (a `seed u64` field
+//! follows `scale`; without the flag the field is absent, keeping
+//! plain frames byte-identical to their pre-prologue encoding); all
+//! other bits must be zero. `epilogue`: 0 none, 1 FP8 e4m3,
 //! 2 FP8 e5m2, 3 grouped INT8 (`group` must be nonzero exactly for
 //! INT8). Response `scales`: `tag u8` = 0 none | 1 per-tensor (`f32`)
 //! | 2 per-group (`count u32, count x f32`). Payloads are `rows * n`
@@ -40,7 +43,7 @@
 //! truncation, and garbage property tests over this module.
 
 use crate::coordinator::{TransformRequest, TransformResponse};
-use crate::hadamard::KernelKind;
+use crate::hadamard::{KernelKind, Prologue};
 use crate::quant::{Epilogue, Fp8Format, QuantScales};
 use crate::util::f16::{DType, Element, BF16, F16};
 
@@ -110,6 +113,9 @@ pub struct WireRequest {
     pub scale: Option<f32>,
     /// Force the native backend.
     pub force_native: bool,
+    /// Fused sign-flip rotation prologue (seeded ±1 diagonal applied
+    /// before the transform).
+    pub prologue: Prologue,
     /// Fused rotate→quantize epilogue.
     pub epilogue: Epilogue,
     /// Row-major payload bytes in `dtype`.
@@ -278,6 +284,7 @@ impl WireRequest {
             dtype,
             scale: None,
             force_native: false,
+            prologue: Prologue::None,
             epilogue: Epilogue::None,
             payload: encode_elems(data, dtype),
         }
@@ -306,6 +313,7 @@ impl WireRequest {
             data: decode_elems(&self.payload, self.dtype)?,
             kernel: self.kernel,
             scale: self.scale,
+            prologue: self.prologue,
             epilogue: self.epilogue,
             force_native: self.force_native,
         })
@@ -418,6 +426,7 @@ const TAG_STATS: u8 = 8;
 
 const FLAG_HAS_SCALE: u8 = 1 << 0;
 const FLAG_FORCE_NATIVE: u8 = 1 << 1;
+const FLAG_HAS_PROLOGUE_SEED: u8 = 1 << 2;
 
 fn put_u16(out: &mut Vec<u8>, v: u16) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -455,11 +464,19 @@ impl Frame {
                 if r.force_native {
                     flags |= FLAG_FORCE_NATIVE;
                 }
+                if !r.prologue.is_none() {
+                    flags |= FLAG_HAS_PROLOGUE_SEED;
+                }
                 body.push(flags);
                 let (etag, group) = epilogue_tags(r.epilogue);
                 body.push(etag);
                 put_u32(&mut body, group);
                 put_f32(&mut body, r.scale.unwrap_or(0.0));
+                // the seed field only exists under its flag, so plain
+                // frames stay byte-identical to the pre-prologue layout
+                if let Prologue::SignFlip { seed } = r.prologue {
+                    put_u64(&mut body, seed);
+                }
                 body.extend_from_slice(&r.payload);
             }
             Frame::Response(r) => {
@@ -642,7 +659,9 @@ pub fn parse_body(body: &[u8]) -> Result<Frame, String> {
             let kernel = kernel_from_tag(c.u8()?)?;
             let dtype = dtype_from_tag(c.u8()?)?;
             let flags = c.u8()?;
-            if flags & !(FLAG_HAS_SCALE | FLAG_FORCE_NATIVE) != 0 {
+            if flags & !(FLAG_HAS_SCALE | FLAG_FORCE_NATIVE | FLAG_HAS_PROLOGUE_SEED)
+                != 0
+            {
                 return Err(format!("unknown request flags {flags:#x}"));
             }
             let etag = c.u8()?;
@@ -656,6 +675,11 @@ pub fn parse_body(body: &[u8]) -> Result<Frame, String> {
                     return Err("scale bits set without the scale flag".to_string());
                 }
                 None
+            };
+            let prologue = if flags & FLAG_HAS_PROLOGUE_SEED != 0 {
+                Prologue::SignFlip { seed: c.u64()? }
+            } else {
+                Prologue::None
             };
             let want = (rows as u64) * (n as u64) * dtype.size_bytes() as u64;
             if c.remaining() as u64 != want {
@@ -675,6 +699,7 @@ pub fn parse_body(body: &[u8]) -> Result<Frame, String> {
                 dtype,
                 scale,
                 force_native: flags & FLAG_FORCE_NATIVE != 0,
+                prologue,
                 epilogue,
                 payload,
             })
@@ -944,12 +969,49 @@ mod tests {
         r.scale = Some(2.5);
         r.force_native = true;
         r.epilogue = Epilogue::QuantInt8 { group: 4 };
+        r.prologue = Prologue::SignFlip { seed: 0xDEAD_BEEF_CAFE_F00D };
         let frame = Frame::Request(r);
         let bytes = frame.encode();
         let (decoded, _) = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES)
             .unwrap()
             .unwrap();
         assert_eq!(decoded, frame);
+    }
+
+    #[test]
+    fn prologue_seed_roundtrips_and_plain_frames_keep_the_v1_layout() {
+        // every seed value round-trips, including the 0 and max sentinels
+        for seed in [0u64, 1, u64::MAX, 0x5EED_0006] {
+            let mut r = match req_frame() {
+                Frame::Request(r) => r,
+                _ => unreachable!(),
+            };
+            r.prologue = Prologue::SignFlip { seed };
+            let frame = Frame::Request(r);
+            let bytes = frame.encode();
+            let (decoded, _) = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES)
+                .unwrap()
+                .unwrap();
+            assert_eq!(decoded, frame, "seed={seed:#x}");
+            match decoded {
+                Frame::Request(d) => {
+                    assert_eq!(d.to_transform().unwrap().prologue,
+                        Prologue::SignFlip { seed });
+                }
+                _ => unreachable!(),
+            }
+        }
+        // the seed field only exists under its flag: a plain request is
+        // exactly 8 bytes shorter and stays decodable by a pre-prologue
+        // peer (backward-compatible layout)
+        let plain = req_frame().encode();
+        let mut r = match req_frame() {
+            Frame::Request(r) => r,
+            _ => unreachable!(),
+        };
+        r.prologue = Prologue::SignFlip { seed: 7 };
+        let rotated = Frame::Request(r).encode();
+        assert_eq!(rotated.len(), plain.len() + 8);
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! document (schema `hadacore-bench-v1`), giving the repo a perf
 //! trajectory that CI can archive and diff across commits instead of
 //! scraping stdout. `HADACORE_BENCH_JSON` overrides the output path.
+//!
+//! [`TablesJson`] is the accuracy-side twin: the quantised-pipeline
+//! study (`examples/accuracy_study.rs`) collects one [`TableRecord`]
+//! per (kernel × dtype × scheme × size × rotation) cell and emits a
+//! `TABLES_PR6.json` document (schema `hadacore-tables-v1`) that CI
+//! validates and archives. `HADACORE_TABLES_JSON` overrides the path.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
@@ -397,6 +403,238 @@ pub fn validate_bench_json(path: &str) -> Result<usize, String> {
     Ok(entries.len())
 }
 
+// ---------------------------------------------------------------------
+// Machine-readable accuracy-table output (TABLES_PR6.json).
+
+/// Schema identifier for accuracy-table documents; bump on any
+/// incompatible field change.
+pub const TABLES_SCHEMA: &str = "hadacore-tables-v1";
+
+/// Per-entry fields every consumer of an accuracy table may rely on
+/// (also what [`validate_tables_json`] checks).
+pub const REQUIRED_TABLE_KEYS: [&str; 10] = [
+    "study",
+    "kernel",
+    "n",
+    "rows",
+    "dtype",
+    "scheme",
+    "rotated",
+    "layers",
+    "snr_db",
+    "rel_to_amax",
+];
+
+/// One cell of the quantised-pipeline accuracy study: the error of a
+/// rotate→quantize→matmul→dequantize→unrotate pipeline against its
+/// exact (unquantised) twin, indexed by the workload coordinates the
+/// accuracy trajectory sweeps.
+#[derive(Clone, Debug)]
+pub struct TableRecord {
+    /// Study section (e.g. `"quant_pipeline"`).
+    pub study: String,
+    /// Kernel name (`scalar` | `dao` | `hadacore`).
+    pub kernel: String,
+    /// Transform size.
+    pub n: usize,
+    /// Rows (activation vectors) per measured batch.
+    pub rows: usize,
+    /// Storage dtype name (`float32` | `float16` | `bfloat16`).
+    pub dtype: String,
+    /// Quantisation scheme name (`fp8_e4m3` | `fp8_e5m2` | `int8` | …).
+    pub scheme: String,
+    /// Whether the pipeline wrapped quantisation in a randomized
+    /// Hadamard rotation (the with/without axis of the paper's tables).
+    pub rotated: bool,
+    /// Pipeline depth (number of rotate→quantize→matmul layers).
+    pub layers: usize,
+    /// Signal-to-quantisation-noise ratio of the pipeline output in dB.
+    pub snr_db: f64,
+    /// Max elementwise error relative to amax (PAPER.md §4.1 metric).
+    pub rel_to_amax: f64,
+    /// Additional named measurements (incoherence, per-layer SNR, …);
+    /// appended verbatim to the JSON entry.
+    pub extras: Vec<(String, f64)>,
+}
+
+impl TableRecord {
+    /// Build a record from the measured error metrics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        study: &str,
+        kernel: &str,
+        n: usize,
+        rows: usize,
+        dtype: &str,
+        scheme: &str,
+        rotated: bool,
+        layers: usize,
+        snr_db: f64,
+        rel_to_amax: f64,
+    ) -> TableRecord {
+        TableRecord {
+            study: study.to_string(),
+            kernel: kernel.to_string(),
+            n,
+            rows,
+            dtype: dtype.to_string(),
+            scheme: scheme.to_string(),
+            rotated,
+            layers,
+            snr_db,
+            rel_to_amax,
+            extras: Vec::new(),
+        }
+    }
+
+    /// Attach a named extra measurement (builder-style).
+    pub fn with_extra(mut self, key: &str, value: f64) -> TableRecord {
+        self.extras.push((key.to_string(), value));
+        self
+    }
+
+    /// Human-readable single-line summary (the stdout table row).
+    pub fn line(&self) -> String {
+        format!(
+            "{:<16} {:<9} n={:<6} {:<9} {:<9} rot={:<5} L={} {:>9.2} dB  rel_amax {:.3e}",
+            self.study,
+            self.kernel,
+            self.n,
+            self.dtype,
+            self.scheme,
+            self.rotated,
+            self.layers,
+            self.snr_db,
+            self.rel_to_amax,
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("study", Json::str(self.study.clone())),
+            ("kernel", Json::str(self.kernel.clone())),
+            ("n", Json::num(self.n as f64)),
+            ("rows", Json::num(self.rows as f64)),
+            ("dtype", Json::str(self.dtype.clone())),
+            ("scheme", Json::str(self.scheme.clone())),
+            ("rotated", Json::Bool(self.rotated)),
+            ("layers", Json::num(self.layers as f64)),
+            ("snr_db", Json::num(self.snr_db)),
+            ("rel_to_amax", Json::num(self.rel_to_amax)),
+        ];
+        for (k, v) in &self.extras {
+            fields.push((k.as_str(), Json::num(*v)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Collector for an accuracy study's machine-readable output.
+#[derive(Default)]
+pub struct TablesJson {
+    records: Vec<TableRecord>,
+}
+
+impl TablesJson {
+    /// Empty collector.
+    pub fn new() -> TablesJson {
+        TablesJson::default()
+    }
+
+    /// Add one measured cell.
+    pub fn push(&mut self, record: TableRecord) {
+        self.records.push(record);
+    }
+
+    /// Records collected so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The emitted document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(TABLES_SCHEMA)),
+            ("entries", Json::Arr(self.records.iter().map(TableRecord::to_json).collect())),
+        ])
+    }
+
+    /// Resolve the output path: `HADACORE_TABLES_JSON` env override, else
+    /// `default_path` (the study passes `"TABLES_PR6.json"`, which lands
+    /// in the cargo working directory — `rust/`).
+    pub fn output_path(default_path: &str) -> String {
+        std::env::var("HADACORE_TABLES_JSON").unwrap_or_else(|_| default_path.to_string())
+    }
+
+    /// Write the document (pretty-printed) and re-validate it from disk,
+    /// so a study run can never leave a malformed table file behind.
+    /// Returns the entry count on success.
+    pub fn write(&self, path: &str) -> Result<usize, String> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .map_err(|e| format!("write {path}: {e}"))?;
+        validate_tables_json(path)
+    }
+}
+
+/// Validate an emitted accuracy-table JSON file: parses, checks the
+/// schema tag, requires a non-empty `entries` array, and checks every
+/// entry carries the [`REQUIRED_TABLE_KEYS`] with the right types —
+/// `rotated` a bool, sizes ≥ 1, `snr_db` finite, `rel_to_amax` finite
+/// and non-negative. Additionally requires that the document covers both
+/// sides of the rotation axis (at least one rotated and one unrotated
+/// entry), since a table missing either side cannot support the paper's
+/// with/without comparison. Returns the entry count. Used by the study
+/// binary after writing and by the CI `accuracy-tables` step.
+pub fn validate_tables_json(path: &str) -> Result<usize, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    if doc.get("schema").and_then(Json::as_str) != Some(TABLES_SCHEMA) {
+        return Err(format!("{path}: missing or unknown schema tag"));
+    }
+    let entries = doc
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{path}: entries must be an array"))?;
+    if entries.is_empty() {
+        return Err(format!("{path}: entries array is empty"));
+    }
+    let (mut saw_rotated, mut saw_plain) = (false, false);
+    for (i, e) in entries.iter().enumerate() {
+        for key in REQUIRED_TABLE_KEYS {
+            let v = e
+                .get(key)
+                .ok_or_else(|| format!("{path}: entry {i} missing '{key}'"))?;
+            let ok = match key {
+                "study" | "kernel" | "dtype" | "scheme" => v.as_str().is_some(),
+                "n" | "rows" | "layers" => v.as_usize().is_some_and(|u| u >= 1),
+                "rotated" => v.as_bool().is_some(),
+                "snr_db" => v.as_f64().is_some_and(f64::is_finite),
+                _ => v.as_f64().is_some_and(|f| f.is_finite() && f >= 0.0),
+            };
+            if !ok {
+                return Err(format!("{path}: entry {i} has invalid '{key}'"));
+            }
+        }
+        match e.get("rotated").and_then(Json::as_bool) {
+            Some(true) => saw_rotated = true,
+            Some(false) => saw_plain = true,
+            None => unreachable!("checked above"),
+        }
+    }
+    if !(saw_rotated && saw_plain) {
+        return Err(format!(
+            "{path}: table must cover both rotated and unrotated entries"
+        ));
+    }
+    Ok(entries.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -572,6 +810,136 @@ mod tests {
             std::env::var("HADACORE_BENCH_JSON")
                 .unwrap_or_else(|_| "BENCH_PR4.json".to_string())
         );
+    }
+
+    fn table_fixture(rotated: bool, snr_db: f64) -> TableRecord {
+        TableRecord::new(
+            "quant_pipeline",
+            "hadacore",
+            4096,
+            8,
+            "float32",
+            "fp8_e4m3",
+            rotated,
+            3,
+            snr_db,
+            0.015,
+        )
+    }
+
+    #[test]
+    fn tables_json_roundtrips_and_validates() {
+        let mut out = TablesJson::new();
+        out.push(table_fixture(false, 21.5).with_extra("incoherence", 14.2));
+        out.push(table_fixture(true, 29.75));
+        assert_eq!(out.len(), 2);
+        let path = std::env::temp_dir()
+            .join(format!("hc_tables_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        assert_eq!(out.write(&path).unwrap(), 2);
+        assert_eq!(validate_tables_json(&path).unwrap(), 2);
+
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(TABLES_SCHEMA));
+        let entries = doc.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries[0].get("rotated").unwrap().as_bool(), Some(false));
+        assert_eq!(entries[1].get("rotated").unwrap().as_bool(), Some(true));
+        assert_eq!(entries[0].get("incoherence").unwrap().as_f64(), Some(14.2));
+        assert_eq!(entries[1].get("snr_db").unwrap().as_f64(), Some(29.75));
+        std::fs::remove_file(&path).ok();
+
+        // negative SNR is a legal (terrible) measurement — only
+        // non-finite values are rejected
+        let mut neg = TablesJson::new();
+        neg.push(table_fixture(true, -3.0));
+        neg.push(table_fixture(false, -5.0));
+        assert_eq!(neg.write(&path).unwrap(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tables_json_validation_rejects_malformed_documents() {
+        let dir = std::env::temp_dir();
+        let entry_ok = r#""study": "s", "kernel": "dao", "n": 256, "rows": 1,
+            "dtype": "float32", "scheme": "int8", "layers": 1,
+            "snr_db": 20.0, "rel_to_amax": 0.01"#;
+        let cases = [
+            ("empty", "{}".to_string()),
+            ("bad_schema", r#"{"schema": "nope", "entries": []}"#.to_string()),
+            (
+                "no_entries",
+                format!(r#"{{"schema": "{TABLES_SCHEMA}", "entries": []}}"#),
+            ),
+            (
+                "missing_rotated",
+                format!(r#"{{"schema": "{TABLES_SCHEMA}", "entries": [{{{entry_ok}}}]}}"#),
+            ),
+            (
+                "rotated_not_bool",
+                format!(
+                    r#"{{"schema": "{TABLES_SCHEMA}", "entries": [{{{entry_ok}, "rotated": 1}}]}}"#
+                ),
+            ),
+            (
+                "negative_rel_amax",
+                format!(
+                    r#"{{"schema": "{TABLES_SCHEMA}", "entries": [
+                        {{{entry_ok}, "rotated": true}},
+                        {{"study": "s", "kernel": "dao", "n": 256, "rows": 1,
+                          "dtype": "float32", "scheme": "int8", "layers": 1,
+                          "snr_db": 20.0, "rel_to_amax": -0.5, "rotated": false}}]}}"#
+                ),
+            ),
+            (
+                // both rotation sides must appear or the with/without
+                // comparison is vacuous
+                "only_one_rotation_side",
+                format!(
+                    r#"{{"schema": "{TABLES_SCHEMA}", "entries": [{{{entry_ok}, "rotated": true}}]}}"#
+                ),
+            ),
+        ];
+        for (name, text) in cases {
+            let path = dir
+                .join(format!("hc_badtables_{}_{name}.json", std::process::id()))
+                .to_string_lossy()
+                .into_owned();
+            std::fs::write(&path, text).unwrap();
+            assert!(validate_tables_json(&path).is_err(), "{name} must fail");
+            std::fs::remove_file(&path).ok();
+        }
+        // writing an empty collector must also fail loudly
+        let path = dir
+            .join(format!("hc_emptytables_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        assert!(TablesJson::new().write(&path).is_err());
+        std::fs::remove_file(&path).ok();
+
+        // an infinite SNR must be clamped by the producer, not written
+        let mut inf = TablesJson::new();
+        inf.push(table_fixture(true, f64::INFINITY));
+        inf.push(table_fixture(false, 10.0));
+        assert!(inf.write(&path).is_err(), "non-finite snr must be rejected");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tables_json_env_override_controls_the_path() {
+        assert_eq!(
+            TablesJson::output_path("TABLES_PR6.json"),
+            std::env::var("HADACORE_TABLES_JSON")
+                .unwrap_or_else(|_| "TABLES_PR6.json".to_string())
+        );
+    }
+
+    #[test]
+    fn table_record_line_formats() {
+        let line = table_fixture(true, 25.0).line();
+        assert!(line.contains("hadacore"));
+        assert!(line.contains("fp8_e4m3"));
+        assert!(line.contains("dB"));
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! Coverage: all kernels (scalar / dao / hadacore, plus the planned +
 //! engine hadacore paths) × sizes {256, 1024, 768 = 12·64,
 //! 5120 = 20·256, 14336 = 28·512} × dtypes {f32, f16, bf16}, under the
-//! serving-default orthonormal scale.
+//! serving-default orthonormal scale — each case both plain and with
+//! the seeded sign-flip rotation prologue (`prologue_seed` entries),
+//! so the randomized-rotation path is digest-locked too.
 //!
 //! ## Why the goldens are platform-exact
 //!
@@ -33,7 +35,10 @@
 //! digest flip is exactly what this suite exists to catch.
 
 use hadacore::exec::ExecEngine;
-use hadacore::hadamard::{fwht_f32, fwht_generic, FwhtOptions, KernelKind};
+use hadacore::hadamard::{
+    apply_signs, fwht_f32, fwht_generic, sign_vector, FwhtOptions, KernelKind, Prologue,
+};
+use hadacore::quant::Epilogue;
 use hadacore::util::f16::{DType, Element, BF16, F16};
 use hadacore::util::json::Json;
 use hadacore::util::rng::Rng;
@@ -47,6 +52,10 @@ const GOLDEN_SIZES: [usize; 5] = [256, 1024, 768, 5120, 14336];
 
 /// Base seed; each size derives its own stream as `SEED ^ n`.
 const GOLDEN_SEED: u64 = 0x601D;
+
+/// Fixed rotation seed of the sign-flip-prologue golden entries (must
+/// match `python/goldens.py::ROTATED_SEED`).
+const ROTATED_SEED: u64 = 0x5EED_0006;
 
 /// Output-prefix elements stored verbatim (as bit patterns).
 const PREFIX_LEN: usize = 16;
@@ -84,25 +93,43 @@ impl Fnv64 {
     }
 }
 
-/// The transformed output of one (kernel, n, dtype) case, as bit
-/// patterns (u32 per element for f32, u16 widened to u32 for 16-bit).
-fn transform_bits(kind: KernelKind, n: usize, dtype: DType) -> Vec<u32> {
+/// The transformed output of one (kernel, n, dtype, prologue) case, as
+/// bit patterns (u32 per element for f32, u16 widened to u32 for
+/// 16-bit). Rotated cases apply the sign flip as an **explicit
+/// premultiply** (`apply_signs` on the widened values) before the plain
+/// transform — the unfused reference the engine's fused prologue is
+/// digest-locked against.
+fn transform_bits(kind: KernelKind, n: usize, dtype: DType, prologue: Option<u64>) -> Vec<u32> {
     let input = golden_input(n);
     let opts = FwhtOptions::normalized(n);
+    let signs = prologue.map(|seed| sign_vector(seed, n));
     match dtype {
         DType::F32 => {
             let mut data = input;
+            if let Some(s) = &signs {
+                apply_signs(&mut data, s);
+            }
             fwht_f32(kind, &mut data, n, &opts);
             data.iter().map(|v| v.to_bits()).collect()
         }
         DType::F16 => {
-            let mut data: Vec<F16> = input.iter().map(|&v| F16::from_f32(v)).collect();
+            // flip the *widened* values then narrow back: multiplying
+            // by ±1.0 is exact, so this equals flipping the narrow bits
+            let mut wide: Vec<f32> = input.iter().map(|&v| F16::from_f32(v).to_f32()).collect();
+            if let Some(s) = &signs {
+                apply_signs(&mut wide, s);
+            }
+            let mut data: Vec<F16> = wide.iter().map(|&v| F16::from_f32(v)).collect();
             fwht_generic(kind, &mut data, n, &opts);
             data.iter().map(|v| v.0 as u32).collect()
         }
         DType::BF16 => {
-            let mut data: Vec<BF16> =
-                input.iter().map(|&v| BF16::from_f32(v)).collect();
+            let mut wide: Vec<f32> =
+                input.iter().map(|&v| BF16::from_f32(v).to_f32()).collect();
+            if let Some(s) = &signs {
+                apply_signs(&mut wide, s);
+            }
+            let mut data: Vec<BF16> = wide.iter().map(|&v| BF16::from_f32(v)).collect();
             fwht_generic(kind, &mut data, n, &opts);
             data.iter().map(|v| v.0 as u32).collect()
         }
@@ -110,26 +137,32 @@ fn transform_bits(kind: KernelKind, n: usize, dtype: DType) -> Vec<u32> {
 }
 
 /// Same case through the batched engine (default tuned policy) — must
-/// produce the identical bit stream.
-fn engine_bits(kind: KernelKind, n: usize, dtype: DType) -> Vec<u32> {
+/// produce the identical bit stream. Rotated cases go through the
+/// **fused** [`Prologue::SignFlip`] path, so every golden rotated entry
+/// also re-proves fused == premultiplied at the digest level.
+fn engine_bits(kind: KernelKind, n: usize, dtype: DType, prologue: Option<u64>) -> Vec<u32> {
     let engine = ExecEngine::default();
     let input = golden_input(n);
     let opts = FwhtOptions::normalized(n);
+    let pro = match prologue {
+        Some(seed) => Prologue::SignFlip { seed },
+        None => Prologue::None,
+    };
     match dtype {
         DType::F32 => {
             let mut data = input;
-            engine.run_f32(kind, &mut data, n, &opts);
+            engine.run_with_stages(kind, &mut data, n, &opts, pro, Epilogue::None);
             data.iter().map(|v| v.to_bits()).collect()
         }
         DType::F16 => {
             let mut data: Vec<F16> = input.iter().map(|&v| F16::from_f32(v)).collect();
-            engine.run(kind, &mut data, n, &opts);
+            engine.run_with_stages(kind, &mut data, n, &opts, pro, Epilogue::None);
             data.iter().map(|v| v.0 as u32).collect()
         }
         DType::BF16 => {
             let mut data: Vec<BF16> =
                 input.iter().map(|&v| BF16::from_f32(v)).collect();
-            engine.run(kind, &mut data, n, &opts);
+            engine.run_with_stages(kind, &mut data, n, &opts, pro, Epilogue::None);
             data.iter().map(|v| v.0 as u32).collect()
         }
     }
@@ -154,9 +187,9 @@ fn golden_path(dtype: DType) -> String {
     )
 }
 
-fn entry_json(kind: KernelKind, n: usize, dtype: DType) -> Json {
-    let bits = transform_bits(kind, n, dtype);
-    Json::obj(vec![
+fn entry_json(kind: KernelKind, n: usize, dtype: DType, prologue: Option<u64>) -> Json {
+    let bits = transform_bits(kind, n, dtype, prologue);
+    let mut fields = vec![
         ("kernel", Json::str(kind.name())),
         ("n", Json::num(n as f64)),
         ("rows", Json::num(golden_rows(n) as f64)),
@@ -168,7 +201,11 @@ fn entry_json(kind: KernelKind, n: usize, dtype: DType) -> Json {
             ),
         ),
         ("fnv64", Json::str(digest(&bits, dtype))),
-    ])
+    ];
+    if let Some(seed) = prologue {
+        fields.push(("prologue_seed", Json::num(seed as f64)));
+    }
+    Json::obj(fields)
 }
 
 fn check_dtype(dtype: DType) {
@@ -182,17 +219,26 @@ fn check_dtype(dtype: DType) {
         "{path}: schema tag"
     );
     let entries = doc.get("entries").and_then(Json::as_arr).expect("entries");
+    // every (kernel, size) case appears twice: plain + rotated
     assert_eq!(
         entries.len(),
-        GOLDEN_SIZES.len() * KernelKind::all().len(),
+        2 * GOLDEN_SIZES.len() * KernelKind::all().len(),
         "{path}: entry count"
     );
+    let mut rotated_seen = 0usize;
     for e in entries {
         let kernel = e.get("kernel").and_then(Json::as_str).expect("kernel");
         let kind = KernelKind::parse(kernel).expect("known kernel");
         let n = e.get("n").and_then(Json::as_usize).expect("n");
         let rows = e.get("rows").and_then(Json::as_usize).expect("rows");
         assert_eq!(rows, golden_rows(n), "locked row count changed");
+        let prologue = e
+            .get("prologue_seed")
+            .map(|v| v.as_usize().expect("prologue_seed") as u64);
+        if let Some(seed) = prologue {
+            assert_eq!(seed, ROTATED_SEED, "locked rotation seed changed");
+            rotated_seen += 1;
+        }
         let want_prefix: Vec<u32> = e
             .get("prefix_bits")
             .and_then(Json::as_arr)
@@ -202,30 +248,37 @@ fn check_dtype(dtype: DType) {
             .collect();
         let want_fnv = e.get("fnv64").and_then(Json::as_str).expect("fnv64");
 
-        let bits = transform_bits(kind, n, dtype);
+        let bits = transform_bits(kind, n, dtype, prologue);
         let got_prefix = &bits[..PREFIX_LEN.min(bits.len())];
         assert_eq!(
             got_prefix,
             &want_prefix[..],
-            "golden drift: {kernel} n={n} dtype={} (prefix)",
+            "golden drift: {kernel} n={n} dtype={} prologue={prologue:?} (prefix)",
             dtype.name()
         );
         assert_eq!(
             digest(&bits, dtype),
             want_fnv,
-            "golden drift: {kernel} n={n} dtype={} (digest) — if this \
-             change is intentional, regenerate (file header)",
+            "golden drift: {kernel} n={n} dtype={} prologue={prologue:?} (digest) — if \
+             this change is intentional, regenerate (file header)",
             dtype.name()
         );
 
-        // the batched engine must serve the same bits it locked
+        // the batched engine must serve the same bits it locked; for
+        // rotated entries this runs the fused prologue against the
+        // premultiplied reference digest
         assert_eq!(
-            engine_bits(kind, n, dtype),
+            engine_bits(kind, n, dtype, prologue),
             bits,
-            "engine diverged from the golden path: {kernel} n={n} dtype={}",
+            "engine diverged from the golden path: {kernel} n={n} dtype={} prologue={prologue:?}",
             dtype.name()
         );
     }
+    assert_eq!(
+        rotated_seen,
+        GOLDEN_SIZES.len() * KernelKind::all().len(),
+        "{path}: rotated entry count"
+    );
 }
 
 #[test]
@@ -270,7 +323,12 @@ fn regen_golden_vectors() {
         let mut entries = Vec::new();
         for &n in &GOLDEN_SIZES {
             for kind in KernelKind::all() {
-                entries.push(entry_json(kind, n, dtype));
+                entries.push(entry_json(kind, n, dtype, None));
+            }
+        }
+        for &n in &GOLDEN_SIZES {
+            for kind in KernelKind::all() {
+                entries.push(entry_json(kind, n, dtype, Some(ROTATED_SEED)));
             }
         }
         let doc = Json::obj(vec![

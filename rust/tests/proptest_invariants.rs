@@ -16,10 +16,10 @@ use hadacore::hadamard::hadacore::{
     HadaCorePlan,
 };
 use hadacore::hadamard::{
-    fwht_dao_f32, fwht_f32, fwht_hadacore_f32, fwht_scalar_f32, FwhtOptions,
-    KernelKind,
+    apply_signs, fwht_dao_f32, fwht_f32, fwht_hadacore_f32, fwht_scalar_f32, sign_vector,
+    FwhtOptions, KernelKind, Prologue,
 };
-use hadacore::quant::{fake_quantize, Scheme};
+use hadacore::quant::{fake_quantize, Epilogue, Scheme};
 use hadacore::util::prop::{
     assert_close, check, integer_vec, max_abs_diff, random_supported_size, rel_l2,
 };
@@ -346,6 +346,160 @@ fn prop_quantisation_error_bounded_and_rotation_helps() {
             e_rot < e_direct * 1.05,
             "rotation should not hurt int8: {e_rot} vs {e_direct}"
         );
+    });
+}
+
+#[test]
+fn prop_rotation_roundtrip_bit_exact_on_integer_payloads() {
+    // unrotate(rotate(x)) == n·x BIT-exact: rotate = sign flip + raw
+    // transform (fused prologue through the engine), unrotate = raw
+    // transform + the same sign flip. With integer payloads in [-4, 4]
+    // every intermediate telescopes to a partial Hadamard transform
+    // bounded by base·4n < 2^24, so both transforms are exact integer
+    // arithmetic and the sign flips are exact ±1 multiplies — the
+    // round-trip must reproduce n·x to the bit, across random sizes,
+    // seeds, lane counts and chunk boundaries.
+    check("rotation round-trip: integer payloads", 16, |rng| {
+        let n = random_supported_size(rng, 8); // up to 40·256 = 10240
+        let rows = rng.range(1, 5);
+        let seed = rng.next_u64();
+        let x = integer_vec(rng, rows * n, 4);
+        let opts = FwhtOptions::raw();
+        let engine = ExecEngine::new(ExecConfig {
+            threads: [1usize, 3, 8][rng.below(3)],
+            chunks_per_thread: rng.range(1, 5),
+            min_chunk_elems: 1usize << rng.range(6, 12),
+            tune: TunePolicy::FixedDepth(rng.range(1, 4)),
+        });
+        let kernel = [KernelKind::Scalar, KernelKind::Dao, KernelKind::HadaCore]
+            [rng.below(3)];
+
+        let mut data = x.clone();
+        // rotate: x ← H·(D·x), fused prologue
+        engine.run_with_stages(
+            kernel,
+            &mut data,
+            n,
+            &opts,
+            Prologue::SignFlip { seed },
+            Epilogue::None,
+        );
+        // unrotate: x ← D·(H·x)
+        engine.run(kernel, &mut data, n, &opts);
+        Prologue::SignFlip { seed }.unapply(&mut data, n);
+
+        // n·x is an exact f32 product (integer result < 2^24)
+        let want: Vec<f32> = x.iter().map(|v| v * n as f32).collect();
+        assert_eq!(
+            data, want,
+            "round-trip drift: kernel={kernel:?} n={n} rows={rows} seed={seed:#x}"
+        );
+    });
+}
+
+#[test]
+fn prop_fused_prologue_matches_premultiply_all_kernels() {
+    // fused sign-flip prologue == explicit apply_signs + plain
+    // transform, bit for bit, on arbitrary real payloads — multiplying
+    // by ±1.0 is exact, so fusion placement cannot change a single bit.
+    // Random kernels × engine shapes × scales, both engine and direct
+    // kernel reference.
+    check("fused prologue == premultiply", 20, |rng| {
+        let n = random_supported_size(rng, 8);
+        let rows = rng.range(1, 5);
+        let seed = rng.next_u64();
+        let x = rng.normal_vec(rows * n);
+        let opts = if rng.chance(0.5) {
+            FwhtOptions::normalized(n)
+        } else {
+            FwhtOptions::with_scale(rng.f32() + 0.5)
+        };
+        let kernel = [KernelKind::Scalar, KernelKind::Dao, KernelKind::HadaCore]
+            [rng.below(3)];
+        let engine = ExecEngine::new(ExecConfig {
+            threads: [1usize, 4][rng.below(2)],
+            chunks_per_thread: 2,
+            min_chunk_elems: 1usize << rng.range(6, 11),
+            tune: TunePolicy::FixedDepth(rng.range(1, 4)),
+        });
+
+        // reference: unfused premultiply, then the plain direct kernel
+        let signs = sign_vector(seed, n);
+        let mut want = x.clone();
+        apply_signs(&mut want, &signs);
+        fwht_f32(kernel, &mut want, n, &opts);
+
+        // fused engine path
+        let mut fused = x.clone();
+        engine.run_with_stages(
+            kernel,
+            &mut fused,
+            n,
+            &opts,
+            Prologue::SignFlip { seed },
+            Epilogue::None,
+        );
+        assert_eq!(fused, want, "engine fused: kernel={kernel:?} n={n} rows={rows}");
+
+        // premultiplied engine run must also agree (fusion is placement,
+        // not arithmetic)
+        let mut pre = x;
+        apply_signs(&mut pre, &signs);
+        engine.run_f32(kernel, &mut pre, n, &opts);
+        assert_eq!(pre, want, "engine premultiplied: kernel={kernel:?} n={n}");
+    });
+}
+
+#[test]
+fn prop_sign_vector_is_a_pure_function_of_seed_and_n() {
+    // every path that materialises the ±1 diagonal — direct
+    // sign_vector, the engine's Prologue::signs, and a wire-protocol
+    // round-trip — must agree byte-for-byte
+    use hadacore::serve::wire::{decode_frame, Frame, WireRequest, DEFAULT_MAX_FRAME_BYTES};
+    use hadacore::util::f16::DType;
+    check("sign vector purity", 30, |rng| {
+        let n = random_supported_size(rng, 7);
+        let seed = rng.next_u64();
+
+        let direct = sign_vector(seed, n);
+        assert_eq!(direct.len(), n);
+        assert!(direct.iter().all(|s| *s == 1.0 || *s == -1.0));
+        // deterministic, and the engine's materialisation path agrees
+        assert_eq!(sign_vector(seed, n), direct);
+        let engine_signs = Prologue::SignFlip { seed }.signs(n).unwrap();
+        assert_eq!(
+            engine_signs.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            direct.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+        );
+
+        // wire round-trip: the seed survives framing, and the decoded
+        // prologue derives the identical vector
+        let mut req = WireRequest::from_f32(
+            7,
+            n as u32,
+            &vec![0.5f32; n],
+            KernelKind::HadaCore,
+            DType::F32,
+        );
+        req.prologue = Prologue::SignFlip { seed };
+        let bytes = Frame::Request(req).encode();
+        let (frame, _) = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES)
+            .expect("decodes")
+            .expect("complete");
+        let Frame::Request(decoded) = frame else {
+            panic!("not a request")
+        };
+        let wire_signs = decoded.prologue.signs(n).expect("rotated");
+        assert_eq!(
+            wire_signs.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            direct.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+        );
+
+        // non-vacuity: a different seed draws a different stream (skip
+        // tiny n where a 2^-n collision is plausible)
+        if n >= 32 {
+            assert_ne!(sign_vector(seed ^ 1, n), direct, "seed must matter (n={n})");
+        }
     });
 }
 

@@ -12,7 +12,7 @@
 //!    valid frames) never panics and never over-allocates; the decoder
 //!    answers with a frame, "need more", or a descriptive error.
 
-use hadacore::hadamard::KernelKind;
+use hadacore::hadamard::{KernelKind, Prologue};
 use hadacore::quant::{Epilogue, Fp8Format, QuantScales};
 use hadacore::serve::wire::{
     decode_frame, parse_body, ErrorCode, Frame, WireError, WireRequest, WireResponse,
@@ -67,6 +67,11 @@ fn random_frame(rng: &mut Rng) -> Frame {
                 // comparison (and the router rejects them anyway)
                 scale: rng.chance(0.5).then(|| rng.normal_f32()),
                 force_native: rng.chance(0.5),
+                prologue: if rng.chance(0.5) {
+                    Prologue::SignFlip { seed: rng.next_u64() }
+                } else {
+                    Prologue::None
+                },
                 epilogue: random_epilogue(rng),
                 payload: random_bytes(rng, rows * n * dtype.size_bytes()),
             })
