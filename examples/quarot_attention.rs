@@ -23,6 +23,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use hadacore::coordinator::{Coordinator, CoordinatorConfig};
+use hadacore::hadamard::Prologue;
 use hadacore::harness::workload::{ServingWorkload, WorkloadConfig};
 use hadacore::quant::{fp8_quantize_slice, Epilogue, Fp8Format};
 use hadacore::runtime::xla;
@@ -51,8 +52,15 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
+/// The shared randomised-rotation seed: QuaRot composes the Hadamard
+/// with a random ±1 diagonal, and both pipelines below must draw the
+/// *same* diagonal or the bit-identity comparison is vacuous.
+const ROTATION_SEED: u64 = 0x9A07_5EED;
+
 /// The no-artifact path: QuaRot-style rotate→FP8 serving through the
 /// coordinator's fused epilogue, vs the two-pass client-side pattern.
+/// Both arms carry the seeded sign-flip prologue, so what is measured is
+/// the paper's full randomised rotation (D·H), not the bare transform.
 fn run_native_fused(requests: usize) -> anyhow::Result<()> {
     // one attention block's K/V rows at the Llama-3 8B FFN width:
     // 14336 = 28 * 512 — a real down-projection rotation dim, only
@@ -76,33 +84,36 @@ fn run_native_fused(requests: usize) -> anyhow::Result<()> {
     // identical payload stream (same seed), no fused epilogue
     let plain_cfg = WorkloadConfig { epilogue: Epilogue::None, ..fused_cfg.clone() };
 
-    // fused: the server rotates and fp8-quantises in one pass; the
-    // response carries the per-request quantisation scale
+    // fused: the server sign-flips, rotates, and fp8-quantises in one
+    // pass; the response carries the per-request quantisation scale
     let mut wl = ServingWorkload::new(fused_cfg);
     let mut fused_ms: Vec<f64> = Vec::with_capacity(requests);
     let mut fused_out: Vec<(Vec<f32>, f32)> = Vec::with_capacity(requests);
     for _ in 0..requests {
-        let req = wl.next_request();
+        let mut req = wl.next_request();
+        req.prologue = Prologue::SignFlip { seed: ROTATION_SEED };
         let t0 = Instant::now();
         let resp = coord.transform(req)?;
         fused_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         let scale = resp.scales.per_tensor().unwrap_or(1.0);
-        fused_out.push((resp.data, scale));
+        fused_out.push((resp.data.into_vec(), scale));
     }
 
-    // two-pass: plain rotation served, then the client traverses the
-    // whole tensor again to quantise — the avoidable data exchange the
-    // fused epilogue removes
+    // two-pass: the seeded rotation served plain, then the client
+    // traverses the whole tensor again to quantise — the avoidable data
+    // exchange the fused epilogue removes (same prologue seed, so the
+    // rotation itself is identical)
     let mut wl = ServingWorkload::new(plain_cfg);
     let mut two_ms: Vec<f64> = Vec::with_capacity(requests);
     let mut two_out: Vec<(Vec<f32>, f32)> = Vec::with_capacity(requests);
     for _ in 0..requests {
-        let req = wl.next_request();
+        let mut req = wl.next_request();
+        req.prologue = Prologue::SignFlip { seed: ROTATION_SEED };
         let t0 = Instant::now();
         let mut resp = coord.transform(req)?;
         let scale = fp8_quantize_slice(&mut resp.data, Fp8Format::E4M3);
         two_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-        two_out.push((resp.data, scale));
+        two_out.push((resp.data.into_vec(), scale));
     }
     coord.shutdown();
 
@@ -135,8 +146,9 @@ fn run_native_fused(requests: usize) -> anyhow::Result<()> {
     let speedup = percentile(&two_ms, 50.0) / percentile(&fused_ms, 50.0).max(1e-9);
     println!(
         "\nclaims checked: fused == two-pass bit-for-bit on all {requests} \
-         requests; per-request scales returned by the server; fused p50 \
-         speedup {speedup:.2}x (one pass saved per tensor)."
+         requests (both under the seeded ±1 rotation prologue, seed \
+         {ROTATION_SEED:#x}); per-request scales returned by the server; \
+         fused p50 speedup {speedup:.2}x (one pass saved per tensor)."
     );
     Ok(())
 }

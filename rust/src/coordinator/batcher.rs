@@ -106,14 +106,26 @@ pub struct Batcher {
 struct State {
     buckets: HashMap<BucketKey, Bucket>,
     shutdown: bool,
+    /// Emptied batch `items` vectors handed back by workers via
+    /// [`Batcher::recycle`]; a flush pops one instead of allocating a
+    /// fresh `Vec<Pending>` per batch (zero-copy serve path).
+    spare: Vec<Vec<Pending>>,
 }
+
+/// Most spare batch vectors retained; beyond this they drop normally
+/// (bounds idle memory — one per worker is plenty in steady state).
+const SPARE_CAP: usize = 32;
 
 impl Batcher {
     /// Empty batcher.
     pub fn new(cfg: BatcherConfig) -> Batcher {
         Batcher {
             cfg,
-            state: Mutex::new(State { buckets: HashMap::new(), shutdown: false }),
+            state: Mutex::new(State {
+                buckets: HashMap::new(),
+                shutdown: false,
+                spare: Vec::with_capacity(SPARE_CAP),
+            }),
             ready: Condvar::new(),
         }
     }
@@ -188,6 +200,9 @@ impl Batcher {
             }
             let chosen = chosen.or(fallback.map(|(k, _)| k));
             if let Some(key) = chosen {
+                // recycled batch vector: retained capacity means no
+                // allocation per flush in steady state
+                let mut items = st.spare.pop().unwrap_or_default();
                 let bucket = st.buckets.get_mut(&key).unwrap();
                 // flush up to capacity rows, keeping arrival order; requests
                 // beyond capacity stay queued for the next batch
@@ -201,7 +216,7 @@ impl Batcher {
                     rows += p.req.rows;
                     take += 1;
                 }
-                let items: Vec<Pending> = bucket.items.drain(..take).collect();
+                items.extend(bucket.items.drain(..take));
                 bucket.rows -= rows;
                 if !bucket.items.is_empty() {
                     bucket.oldest = items
@@ -233,6 +248,16 @@ impl Batcher {
             if st.shutdown && st.buckets.values().all(|b| b.items.is_empty()) {
                 return None;
             }
+        }
+    }
+
+    /// Hand an emptied [`Batch::items`] vector back for reuse by a later
+    /// flush. Clears it defensively; keeps at most [`SPARE_CAP`] spares.
+    pub fn recycle(&self, mut v: Vec<Pending>) {
+        v.clear(); // drop any stragglers outside the lock
+        let mut st = self.state.lock().unwrap();
+        if st.spare.len() < SPARE_CAP {
+            st.spare.push(v);
         }
     }
 
@@ -486,6 +511,29 @@ mod tests {
             "pjrt bucket flushed before its deadline: {:?}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn recycled_vectors_are_reused_by_later_flushes() {
+        let b = Batcher::new(BatcherConfig {
+            max_delay: Duration::from_millis(1),
+            work_conserving: true,
+        });
+        let (key, route) = key_route(64, 4);
+        let (p, _rx) = pending(1, 64, 1);
+        assert!(b.push(key, route.clone(), p));
+        let batch = b.next_batch(Duration::from_millis(100)).unwrap();
+        let mut items = batch.items;
+        items.clear();
+        items.reserve(16);
+        let ptr = items.as_ptr();
+        b.recycle(items);
+        // the next flush must pop the recycled storage, not allocate
+        let (p, _rx2) = pending(2, 64, 1);
+        assert!(b.push(key, route, p));
+        let batch = b.next_batch(Duration::from_millis(100)).unwrap();
+        assert_eq!(batch.items.len(), 1);
+        assert_eq!(batch.items.as_ptr(), ptr, "flush must reuse the spare");
     }
 
     #[test]

@@ -30,12 +30,14 @@ pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use router::{Backend, Route, Router, RouterConfig};
 pub use server::{Coordinator, CoordinatorConfig, SubmitError, TaggedResponseTx};
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::hadamard::{KernelKind, Prologue};
 use crate::quant::{Epilogue, QuantScales};
 use crate::util::error as anyhow;
+use crate::util::pool::PooledBuf;
 
 /// A transform request: `rows` rows of size `n`, transformed in place
 /// semantically (the response carries the transformed buffer back).
@@ -55,8 +57,11 @@ pub struct TransformRequest {
     pub n: usize,
     /// Number of rows in `data` (`data.len() == rows * n`).
     pub rows: usize,
-    /// Row-major payload.
-    pub data: Vec<f32>,
+    /// Row-major payload. A [`PooledBuf`] so the serving layer can hand
+    /// over a pool-affiliated buffer that is transformed **in place**
+    /// and travels on into the response unchanged; plain `Vec<f32>`
+    /// callers convert implicitly via `From` (unpooled, drops normally).
+    pub data: PooledBuf,
     /// Which kernel implementation to use.
     pub kernel: KernelKind,
     /// Output scaling, matching [`crate::hadamard::FwhtOptions`]:
@@ -89,8 +94,11 @@ pub struct TransformRequest {
 }
 
 impl TransformRequest {
-    /// A default-shaped request.
-    pub fn new(id: u64, n: usize, data: Vec<f32>) -> Self {
+    /// A default-shaped request. Accepts a plain `Vec<f32>` (the public
+    /// in-process API, wrapped unpooled) or an already-pooled buffer
+    /// (the serving layer's zero-copy path).
+    pub fn new(id: u64, n: usize, data: impl Into<PooledBuf>) -> Self {
+        let data = data.into();
         let rows = data.len() / n.max(1);
         TransformRequest {
             id,
@@ -113,7 +121,10 @@ pub struct TransformResponse {
     pub id: u64,
     /// Transformed rows (same shape as the request payload):
     /// `data[r*n..][..n] = (request.data[r*n..][..n] @ H_n) * scale`.
-    pub data: Vec<f32>,
+    /// On the native path this is the **request's own buffer**,
+    /// transformed in place — no scatter copy; dropping the response
+    /// returns a pooled buffer to its pool.
+    pub data: PooledBuf,
     /// Time spent queued before execution.
     pub queue_us: u64,
     /// Kernel execution time of the batch this request rode in.
@@ -144,6 +155,12 @@ pub enum ResponseTx {
     /// Shared per-connection channel; the id travels with the result
     /// (the `submit_with` path used by the serving layer).
     Tagged(mpsc::Sender<(u64, anyhow::Result<TransformResponse>)>),
+    /// Shared per-connection [`ReplyRing`] — like `Tagged`, but the
+    /// queue storage is pre-reserved and reused, so delivering a
+    /// response performs no heap allocation (std's `mpsc` allocates a
+    /// node per message, which would break the serve path's zero-alloc
+    /// steady state).
+    Ring(ReplyTx),
 }
 
 impl ResponseTx {
@@ -157,6 +174,107 @@ impl ResponseTx {
             ResponseTx::Tagged(tx) => {
                 let _ = tx.send((id, result));
             }
+            ResponseTx::Ring(tx) => tx.send(id, result),
+        }
+    }
+}
+
+/// One queued reply: `(request id, completion result)`.
+type Reply = (u64, anyhow::Result<TransformResponse>);
+
+struct RingState {
+    queue: VecDeque<Reply>,
+    /// Live [`ReplyTx`] handles; `recv` returns `None` once this hits
+    /// zero with the queue drained (mpsc disconnect semantics).
+    senders: usize,
+}
+
+/// A bounded-storage MPSC reply queue for the serving layer: the
+/// connection's writer thread `recv`s, the coordinator's workers `send`
+/// through per-request [`ReplyTx`] clones. The deque is pre-reserved to
+/// the connection's pipeline depth and retained across messages, so
+/// steady-state delivery allocates nothing.
+pub struct ReplyRing {
+    state: Mutex<RingState>,
+    cv: Condvar,
+}
+
+impl ReplyRing {
+    /// A ring pre-reserving room for `depth` in-flight replies, plus its
+    /// first sender handle.
+    pub fn with_depth(depth: usize) -> (Arc<ReplyRing>, ReplyTx) {
+        let ring = Arc::new(ReplyRing {
+            state: Mutex::new(RingState {
+                queue: VecDeque::with_capacity(depth.max(1)),
+                senders: 1,
+            }),
+            cv: Condvar::new(),
+        });
+        let tx = ReplyTx { ring: Arc::clone(&ring) };
+        (ring, tx)
+    }
+
+    /// Block until a reply is available (`Some`) or every sender has
+    /// dropped with the queue drained (`None`).
+    pub fn recv(&self) -> Option<Reply> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(reply) = st.queue.pop_front() {
+                return Some(reply);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Replies currently queued (test/observability hook).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Whether no replies are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Sending handle of a [`ReplyRing`]. Clones track a sender count inside
+/// the ring's mutex (no allocation); dropping the last sender wakes the
+/// receiver so it can observe disconnection.
+pub struct ReplyTx {
+    ring: Arc<ReplyRing>,
+}
+
+impl ReplyTx {
+    /// Queue a reply, ignoring a hung-up receiver (the connection's
+    /// writer exits only after every sender is gone, so "hung up" here
+    /// means the whole ring is being torn down).
+    pub fn send(&self, id: u64, result: anyhow::Result<TransformResponse>) {
+        let mut st = self.ring.state.lock().unwrap();
+        st.queue.push_back((id, result));
+        drop(st);
+        self.ring.cv.notify_one();
+    }
+}
+
+impl Clone for ReplyTx {
+    fn clone(&self) -> Self {
+        self.ring.state.lock().unwrap().senders += 1;
+        ReplyTx { ring: Arc::clone(&self.ring) }
+    }
+}
+
+impl Drop for ReplyTx {
+    fn drop(&mut self) {
+        let mut st = self.ring.state.lock().unwrap();
+        st.senders -= 1;
+        let disconnected = st.senders == 0;
+        drop(st);
+        if disconnected {
+            // wake a receiver blocked in `recv` so it can return None
+            self.ring.cv.notify_all();
         }
     }
 }

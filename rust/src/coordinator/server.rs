@@ -19,7 +19,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::exec::{ExecConfig, ExecEngine};
+use crate::exec::{ExecConfig, ExecEngine, RowRegion};
 use crate::hadamard::{FwhtOptions, KernelKind, Prologue};
 use crate::quant::{Epilogue, QuantScales};
 use crate::runtime::{literal_f32, literal_to_f32, Manifest, Runtime};
@@ -243,6 +243,19 @@ impl Coordinator {
         self.submit_inner(req, ResponseTx::Tagged(tx))
     }
 
+    /// Submit a request with an explicit response channel. The TCP
+    /// serving layer uses this with [`ResponseTx::Ring`]: the reply
+    /// queue's storage is pre-reserved per connection, so completing a
+    /// request allocates nothing (unlike `mpsc`, which allocates a node
+    /// per message).
+    pub fn submit_to(
+        &self,
+        req: TransformRequest,
+        tx: ResponseTx,
+    ) -> Result<(), SubmitError> {
+        self.submit_inner(req, tx)
+    }
+
     /// Convenience: submit and block for the response.
     pub fn transform(
         &self,
@@ -306,8 +319,9 @@ impl Coordinator {
         // nothing can land behind the joined workers — but if a future
         // change ever broke that invariant, executing stragglers inline
         // here keeps "no pending request is ever stranded" true
+        let mut scratch = NativeScratch::default();
         while let Some(batch) = self.batcher.next_batch(Duration::from_millis(1)) {
-            execute_native_batch(batch, &self.metrics, &self.engine);
+            let _ = execute_native_batch(batch, &self.metrics, &self.engine, &mut scratch);
         }
         // workers have drained the batcher; closing the channel stops the
         // executor after it finishes forwarded batches
@@ -325,6 +339,15 @@ impl Drop for Coordinator {
     }
 }
 
+/// Worker-owned reusable execution scratch: the scatter-gather region
+/// table and the per-item scales vector. Both retain their capacity
+/// across batches, so steady-state native dispatch allocates nothing.
+#[derive(Default)]
+struct NativeScratch {
+    regions: Vec<RowRegion>,
+    scales: Vec<QuantScales>,
+}
+
 fn worker_loop(
     batcher: &Batcher,
     metrics: &Metrics,
@@ -333,10 +356,24 @@ fn worker_loop(
     idle: Duration,
     min_pjrt_fill: f64,
 ) {
+    // coordinator workers execute serving batches: count their
+    // allocations when the count-alloc gate is measuring
+    crate::util::alloc::track_current_thread(true);
+    let mut scratch = NativeScratch::default();
     loop {
         match batcher.next_batch(idle) {
             Some(batch) => {
-                dispatch_batch(batch, metrics, engine, pjrt_tx.as_ref(), min_pjrt_fill)
+                if let Some(spent) = dispatch_batch(
+                    batch,
+                    metrics,
+                    engine,
+                    pjrt_tx.as_ref(),
+                    min_pjrt_fill,
+                    &mut scratch,
+                ) {
+                    // hand the emptied items vector back for the next flush
+                    batcher.recycle(spent);
+                }
             }
             // None = idle timeout (keep polling) or shutdown (exit)
             None if batcher.is_shutdown() => return,
@@ -347,30 +384,36 @@ fn worker_loop(
 
 /// Route one flushed batch to its executor. PJRT batches divert to the
 /// native engine when the executor is missing or the fill policy says so
-/// ([`pjrt_needs_native_fallback`]).
+/// ([`pjrt_needs_native_fallback`]). Returns the batch's emptied `items`
+/// vector when it was consumed locally, so the caller can recycle its
+/// storage into the batcher.
 fn dispatch_batch(
     batch: Batch,
     metrics: &Metrics,
     engine: &ExecEngine,
     pjrt_tx: Option<&mpsc::Sender<Batch>>,
     min_pjrt_fill: f64,
-) {
+    scratch: &mut NativeScratch,
+) -> Option<Vec<Pending>> {
     match &batch.route.backend {
-        Backend::Native => execute_native_batch(batch, metrics, engine),
+        Backend::Native => {
+            Some(execute_native_batch(batch, metrics, engine, scratch))
+        }
         Backend::Pjrt(_) => {
             let Some(tx) = pjrt_tx else {
-                return execute_native_batch(batch, metrics, engine);
+                return Some(execute_native_batch(batch, metrics, engine, scratch));
             };
             if pjrt_needs_native_fallback(
                 batch.rows,
                 batch.route.capacity_rows,
                 min_pjrt_fill,
             ) {
-                return execute_native_batch(batch, metrics, engine);
+                return Some(execute_native_batch(batch, metrics, engine, scratch));
             }
             if let Err(mpsc::SendError(batch)) = tx.send(batch) {
                 fail_batch(batch, "pjrt executor unavailable", metrics);
             }
+            None
         }
     }
 }
@@ -402,6 +445,7 @@ fn pjrt_executor_loop(
     preload: bool,
     engine: &ExecEngine,
 ) {
+    crate::util::alloc::track_current_thread(true);
     let runtime = match Runtime::open(&dir) {
         Ok(rt) => rt,
         Err(e) => {
@@ -426,8 +470,9 @@ fn pjrt_executor_loop(
         }
     }
     let _ = ready_tx.send(Ok(()));
+    let mut scratch = NativeScratch::default();
     while let Ok(batch) = rx.recv() {
-        execute_pjrt_batch(batch, &runtime, metrics, engine);
+        execute_pjrt_batch(batch, &runtime, metrics, engine, &mut scratch);
     }
 }
 
@@ -439,8 +484,46 @@ fn gather(items: &[Pending], rows: usize, n: usize) -> Vec<f32> {
     data
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Complete every request of a natively-executed batch **in place**: each
+/// request's own (transformed) buffer moves into its response — no
+/// scatter copy, no allocation. Drains `items` and `scales`, leaving
+/// their storage for reuse.
 fn complete(
+    items: &mut Vec<Pending>,
+    scales: &mut Vec<QuantScales>,
+    exec_start: Instant,
+    exec_us: u64,
+    batch_rows: usize,
+    backend: &'static str,
+    metrics: &Metrics,
+) {
+    debug_assert_eq!(items.len(), scales.len());
+    for (p, scales) in items.drain(..).zip(scales.drain(..)) {
+        let Pending { req, tx, enqueued } = p;
+        let queue_us =
+            exec_start.saturating_duration_since(enqueued).as_micros() as u64;
+        let id = req.id;
+        let resp = TransformResponse {
+            id,
+            data: req.data,
+            queue_us,
+            exec_us,
+            batch_rows,
+            backend,
+            scales,
+        };
+        metrics.queue.record(queue_us);
+        metrics.e2e.record(enqueued.elapsed().as_micros() as u64);
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
+        tx.send(id, Ok(resp));
+    }
+}
+
+/// Complete requests of a batch whose output lives in a separate gathered
+/// buffer (the PJRT path): each response gets a fresh copy of its row
+/// span. The native path never takes this route.
+#[allow(clippy::too_many_arguments)]
+fn complete_scattered(
     items: Vec<Pending>,
     scales: Vec<QuantScales>,
     out: &[f32],
@@ -461,7 +544,7 @@ fn complete(
             .as_micros() as u64;
         let resp = TransformResponse {
             id,
-            data: out[offset..offset + len].to_vec(),
+            data: out[offset..offset + len].to_vec().into(),
             queue_us,
             exec_us,
             batch_rows,
@@ -500,92 +583,109 @@ fn fail_batch(batch: Batch, msg: &str, metrics: &Metrics) {
     fail_items(batch.items, msg, metrics, Instant::now());
 }
 
-/// Run the gathered batch on the engine under its bucket's prologue and
-/// epilogue and return one [`QuantScales`] per request, in item order.
+/// Run a native batch on the engine **in the requests' own buffers**,
+/// under its bucket's prologue and epilogue, filling `scratch.scales`
+/// with one [`QuantScales`] per request in item order.
 ///
-/// The sign-flip prologue is a pure function of `(seed, n)` applied per
-/// row, so one whole-batch engine call rotates every batchmate correctly
-/// — the bucket key guarantees all items share the seed.
+/// Plain batches hand the engine a scatter-gather region table (one
+/// [`RowRegion`] per request buffer) via
+/// [`ExecEngine::run_f32_regions`] — no gather copy, and the chunking
+/// over the logical concatenation matches the old gathered batch, so
+/// the bytes are identical. The sign-flip prologue is a pure function of
+/// `(seed, n)` applied per row, so it distributes over regions — the
+/// bucket key guarantees all items share the seed.
 ///
-/// Per-tensor FP8 scales are a *per-request* property (each request is
-/// one tensor), so FP8 batches run the fused two-phase engine call once
-/// per request region — each region is still rotated, amax-reduced, and
-/// rounded in a single pass over cache-hot chunks, and large regions
-/// still shard across the engine lanes. Grouped-INT8 scales never cross
-/// a request boundary (`group` divides `n` and requests are whole rows),
-/// so one whole-batch call suffices and the scale vector splits by
-/// offset.
+/// Epilogue batches run one fused engine call per request: per-tensor
+/// FP8 scales are a per-request property (each request is one tensor),
+/// and grouped-INT8 scales never cross a request boundary (`group`
+/// divides `n` and requests are whole rows), so per-request execution is
+/// bit-identical to the whole-batch call while writing each request's
+/// scales directly — no batch-wide scale vector to split and copy.
 #[allow(clippy::too_many_arguments)]
 fn run_native_stages(
     engine: &ExecEngine,
     kernel: KernelKind,
-    data: &mut [f32],
     n: usize,
     opts: &FwhtOptions,
     prologue: Prologue,
     epilogue: Epilogue,
-    items: &[Pending],
-) -> Vec<QuantScales> {
+    items: &mut [Pending],
+    scratch: &mut NativeScratch,
+) {
+    scratch.scales.clear();
     match epilogue {
         Epilogue::None => {
-            engine.run_f32_with_stages(kernel, data, n, opts, prologue, Epilogue::None);
-            items.iter().map(|_| QuantScales::None).collect()
-        }
-        Epilogue::QuantFp8 { .. } => {
-            let mut out = Vec::with_capacity(items.len());
-            let mut offset = 0;
-            for p in items {
-                let len = p.req.rows * n;
-                out.push(engine.run_f32_with_stages(
+            if let [only] = items {
+                engine.run_f32_with_stages(
                     kernel,
-                    &mut data[offset..offset + len],
+                    &mut only.req.data,
+                    n,
+                    opts,
+                    prologue,
+                    Epilogue::None,
+                );
+            } else {
+                scratch.regions.clear();
+                scratch.regions.extend(items.iter_mut().map(|p| RowRegion {
+                    ptr: p.req.data.as_mut_ptr(),
+                    rows: p.req.rows,
+                }));
+                // SAFETY: each region is a distinct request's own buffer
+                // of exactly `rows * n` elements (router admission), we
+                // hold the exclusive borrow of every item for the call,
+                // and the engine blocks until all chunks finish.
+                unsafe {
+                    engine.run_f32_regions(
+                        kernel,
+                        &scratch.regions,
+                        n,
+                        opts,
+                        prologue,
+                    );
+                }
+            }
+            scratch.scales.extend(items.iter().map(|_| QuantScales::None));
+        }
+        Epilogue::QuantFp8 { .. } | Epilogue::QuantInt8 { .. } => {
+            for p in items.iter_mut() {
+                let s = engine.run_f32_with_stages(
+                    kernel,
+                    &mut p.req.data,
                     n,
                     opts,
                     prologue,
                     epilogue,
-                ));
-                offset += len;
-            }
-            out
-        }
-        Epilogue::QuantInt8 { group } => {
-            match engine.run_f32_with_stages(kernel, data, n, opts, prologue, epilogue)
-            {
-                QuantScales::PerGroup(all) => {
-                    let mut out = Vec::with_capacity(items.len());
-                    let mut g = 0;
-                    for p in items {
-                        let count = p.req.rows * n / group;
-                        out.push(QuantScales::PerGroup(all[g..g + count].to_vec()));
-                        g += count;
-                    }
-                    out
-                }
-                // the engine's contract: QuantInt8 always yields PerGroup
-                _ => unreachable!("int8 epilogue must produce per-group scales"),
+                );
+                scratch.scales.push(s);
             }
         }
     }
 }
 
-fn execute_native_batch(batch: Batch, metrics: &Metrics, engine: &ExecEngine) {
-    let Batch { key, items, rows, .. } = batch;
+/// Execute a native batch in place and complete its requests. Returns
+/// the emptied `items` vector for recycling into the batcher.
+fn execute_native_batch(
+    batch: Batch,
+    metrics: &Metrics,
+    engine: &ExecEngine,
+    scratch: &mut NativeScratch,
+) -> Vec<Pending> {
+    let Batch { key, mut items, rows, .. } = batch;
     let n = key.n;
     let t0 = Instant::now();
-    let mut data = gather(&items, rows, n);
     let opts = match items[0].req.scale {
         Some(s) => FwhtOptions::with_scale(s),
         None => FwhtOptions::normalized(n),
     };
-    let scales = run_native_stages(
+    run_native_stages(
         engine,
         key.kernel,
-        &mut data,
         n,
         &opts,
         key.prologue,
         key.epilogue,
-        &items,
+        &mut items,
+        scratch,
     );
     let exec_us = t0.elapsed().as_micros() as u64;
 
@@ -593,7 +693,16 @@ fn execute_native_batch(batch: Batch, metrics: &Metrics, engine: &ExecEngine) {
     metrics.native_batches.fetch_add(1, Ordering::Relaxed);
     metrics.rows.fetch_add(rows as u64, Ordering::Relaxed);
     metrics.exec.record(exec_us);
-    complete(items, scales, &data, n, t0, exec_us, rows, "native", metrics);
+    complete(
+        &mut items,
+        &mut scratch.scales,
+        t0,
+        exec_us,
+        rows,
+        "native",
+        metrics,
+    );
+    items
 }
 
 fn execute_pjrt_batch(
@@ -601,6 +710,7 @@ fn execute_pjrt_batch(
     runtime: &Runtime,
     metrics: &Metrics,
     engine: &ExecEngine,
+    scratch: &mut NativeScratch,
 ) {
     let bucket = match &batch.route.backend {
         Backend::Pjrt(bucket) => bucket.clone(),
@@ -631,7 +741,7 @@ fn execute_pjrt_batch(
     };
     let cap = art.entry.rows.unwrap_or(batch.rows);
     if batch.rows > cap {
-        execute_native_batch(batch, metrics, engine);
+        let _ = execute_native_batch(batch, metrics, engine, scratch);
         return;
     }
 
@@ -662,7 +772,9 @@ fn execute_pjrt_batch(
     match result {
         Ok(out) => {
             let scales = items.iter().map(|_| QuantScales::None).collect();
-            complete(items, scales, &out, n, t0, exec_us, cap, "pjrt", metrics);
+            complete_scattered(
+                items, scales, &out, n, t0, exec_us, cap, "pjrt", metrics,
+            );
         }
         Err(e) => {
             fail_items(items, &format!("batch execution failed: {e}"), metrics, t0);
@@ -894,6 +1006,26 @@ mod tests {
     }
 
     #[test]
+    fn native_responses_carry_the_request_buffer_through() {
+        use crate::util::pool::BufferPool;
+        let c = native_coordinator(2);
+        let pool = BufferPool::new(4);
+        let n = 256;
+        let buf = pool.get_copy(&vec![1.0f32; n]);
+        let ptr = buf.as_ptr() as usize;
+        let resp = c.transform(TransformRequest::new(1, n, buf)).unwrap();
+        assert_eq!(
+            resp.data.as_ptr() as usize,
+            ptr,
+            "the response must be the request's own buffer, transformed in place"
+        );
+        assert!(resp.data.is_pooled());
+        drop(resp);
+        assert_eq!(pool.outstanding(), 0, "drop must return the buffer to its pool");
+        c.shutdown();
+    }
+
+    #[test]
     fn fp8_epilogue_roundtrip_bit_identical_to_two_pass() {
         use crate::quant::{fp8_quantize_slice, Fp8Format};
         let c = native_coordinator(2);
@@ -1084,8 +1216,14 @@ mod tests {
             rows,
         };
         let (fwd_tx, fwd_rx) = mpsc::channel::<Batch>();
-        dispatch_batch(batch, &metrics, &engine, Some(&fwd_tx), 0.25);
+        let mut scratch = NativeScratch::default();
+        let spent =
+            dispatch_batch(batch, &metrics, &engine, Some(&fwd_tx), 0.25, &mut scratch);
         assert!(fwd_rx.try_recv().is_err(), "overfull batch must not reach pjrt");
+        assert!(
+            spent.map(|v| v.is_empty()).unwrap_or(false),
+            "locally-executed batch must hand back its emptied items vec"
+        );
         let resp = resp_rx.recv().unwrap().unwrap();
         assert_eq!(resp.backend, "native");
         let mut want = x;

@@ -103,6 +103,46 @@ pub enum Payload {
 // whose callers guarantee exclusive, disjoint access (see pool.rs).
 unsafe impl Send for Payload {}
 
+/// One contiguous run of f32 rows inside a scatter-gather batch: the
+/// serving layer's zero-copy path hands the engine one region per
+/// request buffer instead of gathering them into a batch `Vec` (see
+/// [`ExecEngine::run_f32_regions`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RowRegion {
+    /// Base pointer of the region (`rows * n` contiguous f32).
+    pub ptr: *mut f32,
+    /// Rows in this region.
+    pub rows: usize,
+}
+
+// SAFETY: a RowRegion is only dereferenced through
+// `execute_regions_range`, whose callers guarantee the regions are
+// valid, mutually disjoint, and exclusively borrowed for the job.
+unsafe impl Send for RowRegion {}
+unsafe impl Sync for RowRegion {}
+
+/// Raw view of a caller-owned `&[RowRegion]` slice, shipped to pool
+/// workers inside a [`pool::JobSpec`]. The submitter blocks on the job's
+/// latch, so the slice outlives every worker access.
+#[derive(Clone, Copy)]
+pub(crate) struct RegionsRef {
+    pub(crate) base: *const RowRegion,
+    pub(crate) len: usize,
+}
+
+// SAFETY: see RowRegion — the submitter keeps the slice alive and the
+// regions exclusively borrowed until the job's latch opens.
+unsafe impl Send for RegionsRef {}
+
+impl RegionsRef {
+    /// # Safety
+    /// The originating slice must still be live (guaranteed by the
+    /// blocking submit).
+    pub(crate) unsafe fn as_slice(&self) -> &[RowRegion] {
+        std::slice::from_raw_parts(self.base, self.len)
+    }
+}
+
 /// Storage dtypes the engine can execute: `f32` directly, [`F16`] and
 /// [`BF16`] through the per-thread f32 workspace.
 pub trait ExecElement: Element {
@@ -140,6 +180,12 @@ pub(crate) struct AmaxCell(AtomicU32);
 impl AmaxCell {
     fn new() -> AmaxCell {
         AmaxCell(AtomicU32::new(0))
+    }
+
+    /// Re-arm for the next job (same reuse contract as the pool's
+    /// submit latch: the previous job's workers have all finished).
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
     }
 
     pub(crate) fn merge(&self, v: f32) {
@@ -291,6 +337,30 @@ thread_local! {
     // counted through `ExecStats::scratch_grows` by `widen_run_narrow`;
     // retention is bounded by `INLINE_SCRATCH_RETAIN_ELEMS`.
     static INLINE_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+
+    // Reusable per-tensor amax accumulator for the two-phase FP8
+    // epilogue — one per submitting thread, re-armed per job (the
+    // blocking submit guarantees the previous job's workers are done),
+    // so steady-state FP8 serving allocates no per-job Arc.
+    static SUBMIT_AMAX: RefCell<Option<Arc<AmaxCell>>> = const { RefCell::new(None) };
+}
+
+/// This submitter's reusable amax cell, re-armed to zero.
+fn recycled_amax_cell() -> Arc<AmaxCell> {
+    SUBMIT_AMAX.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        match slot.as_ref() {
+            Some(amax) => {
+                amax.reset();
+                Arc::clone(amax)
+            }
+            None => {
+                let amax = Arc::new(AmaxCell::new());
+                *slot = Some(Arc::clone(&amax));
+                amax
+            }
+        }
+    })
 }
 
 /// The batched execution engine. One instance owns one worker pool;
@@ -447,6 +517,7 @@ impl ExecEngine {
                     fusion_depth,
                     signs: signs.clone(),
                     stage,
+                    regions: None,
                 };
                 // SAFETY (all submissions below): `data` is a `&mut`
                 // borrow we hold for the whole call, covering exactly
@@ -459,8 +530,9 @@ impl ExecEngine {
                     }
                     Epilogue::QuantFp8 { fmt } => {
                         // phase 1: rotate + merge per-chunk amax into the
-                        // shared accumulator
-                        let amax = Arc::new(AmaxCell::new());
+                        // shared accumulator (reused across this
+                        // submitter's jobs — no per-job allocation)
+                        let amax = recycled_amax_cell();
                         unsafe {
                             pool.submit_and_wait(spec(ChunkStage::RotateAmax {
                                 amax: Arc::clone(&amax),
@@ -590,6 +662,105 @@ impl ExecEngine {
         self.run_with_stages::<f32>(kind, data, n, opts, prologue, epilogue)
     }
 
+    /// Transform a **scatter-gather batch** of f32 row regions in place:
+    /// the rows are the logical concatenation of `regions`, chunked and
+    /// sharded exactly like a contiguous batch of the same total row
+    /// count. This is the coordinator's zero-copy native path — one
+    /// region per request buffer, no gather copy, no scatter copy.
+    ///
+    /// Row transforms are independent, so the output of every region is
+    /// bit-identical to running the engine on that region's buffer
+    /// alone (and to the gathered-batch result the serving layer
+    /// produced before pooling).
+    ///
+    /// Only the plain-rotate stage (optionally with a sign-flip
+    /// `prologue`) is supported; quantize epilogues are per-request on
+    /// the serving path and use [`ExecEngine::run_f32_with_stages`] on
+    /// the request's own buffer.
+    ///
+    /// # Safety
+    ///
+    /// Every region must point at `rows * n` valid f32 elements, the
+    /// regions must be mutually disjoint, and the caller must hold
+    /// exclusive access to all of them for the duration of the call
+    /// (it blocks until every chunk has executed).
+    #[doc(hidden)]
+    pub unsafe fn run_f32_regions(
+        &self,
+        kind: KernelKind,
+        regions: &[RowRegion],
+        n: usize,
+        opts: &FwhtOptions,
+        prologue: Prologue,
+    ) {
+        let rows: usize = regions.iter().map(|r| r.rows).sum();
+        if rows == 0 {
+            return;
+        }
+        validate_dims(rows * n, n).expect("invalid dimensions");
+        if let Err(e) = prologue.validate(n) {
+            panic!("invalid prologue: {e}");
+        }
+        if !prologue.is_none() {
+            self.stats.prologue_runs.fetch_add(1, Ordering::Relaxed);
+        }
+        let signs: Option<Arc<Vec<f32>>> = prologue.signs(n).map(Arc::new);
+        let plan = plan_for(kind, n);
+        let tuning =
+            tune::tuning_for_plan(&self.cfg, &plan, rows, <f32 as Element>::DTYPE);
+        let chunk_rows = if tuning.chunk_pinned {
+            tuning.chunk_rows
+        } else {
+            tuning.chunk_rows.min(self.chunk_rows_for(rows, n)).max(1)
+        };
+        let fusion_depth = tuning.fusion_depth;
+        if fusion_depth > 1 {
+            self.stats.fused_runs.fetch_add(1, Ordering::Relaxed);
+        }
+        let chunks = (rows + chunk_rows - 1) / chunk_rows;
+        match &self.pool {
+            Some(pool) if chunks > 1 => {
+                self.stats.jobs.fetch_add(1, Ordering::Relaxed);
+                // SAFETY: forwards the caller's contract; the submit
+                // blocks, so `regions` outlives every worker access.
+                pool.submit_and_wait(JobSpec {
+                    // never dereferenced on the regions path
+                    payload: Payload::F32(std::ptr::null_mut()),
+                    rows,
+                    n,
+                    chunk_rows,
+                    kind,
+                    opts: *opts,
+                    plan,
+                    fusion_depth,
+                    signs,
+                    stage: ChunkStage::Rotate,
+                    regions: Some(RegionsRef {
+                        base: regions.as_ptr(),
+                        len: regions.len(),
+                    }),
+                });
+            }
+            _ => {
+                self.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
+                // SAFETY: whole logical batch as one chunk, under the
+                // caller's exclusive borrow of every region.
+                execute_regions_range(
+                    regions,
+                    0,
+                    rows,
+                    n,
+                    kind,
+                    opts,
+                    &plan,
+                    fusion_depth,
+                    signs.as_deref().map(Vec::as_slice),
+                    &self.stats,
+                );
+            }
+        }
+    }
+
     /// Rows per chunk for a `rows x n` batch under the static balance
     /// policy: enough chunks to balance the lanes, but never chunks
     /// smaller than `min_chunk_elems`. Delegates to the shared
@@ -650,6 +821,57 @@ pub(crate) unsafe fn execute_range(
             widen_run_narrow(
                 kind, data, n, opts, plan, fusion_depth, signs, scratch, stats,
             );
+        }
+    }
+}
+
+/// Execute rows `[start_row, start_row + rows_here)` of the **logical
+/// concatenation** of `regions`: the scatter-gather analogue of
+/// [`execute_range`], shared by pool workers (regions jobs) and the
+/// inline path of [`ExecEngine::run_f32_regions`]. Row transforms are
+/// independent, so splitting a chunk across region boundaries is
+/// bit-identical to transforming a gathered copy.
+///
+/// # Safety
+///
+/// Every region must point at `rows * n` valid f32 elements; the regions
+/// must be mutually disjoint; and no other thread may access the
+/// addressed logical row range for the duration (chunk claims are unique
+/// and row-disjoint, so concurrent chunks of the same job are fine).
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn execute_regions_range(
+    regions: &[RowRegion],
+    start_row: usize,
+    rows_here: usize,
+    n: usize,
+    kind: KernelKind,
+    opts: &FwhtOptions,
+    plan: &ExecPlan,
+    fusion_depth: usize,
+    signs: Option<&[f32]>,
+    stats: &ExecStats,
+) {
+    stats.chunks.fetch_add(1, Ordering::Relaxed);
+    let end_row = start_row + rows_here;
+    // running cursor: the first logical row of the current region
+    let mut region_start = 0usize;
+    for r in regions {
+        let region_end = region_start + r.rows;
+        let lo = start_row.max(region_start);
+        let hi = end_row.min(region_end);
+        if lo < hi {
+            let data = std::slice::from_raw_parts_mut(
+                r.ptr.add((lo - region_start) * n),
+                (hi - lo) * n,
+            );
+            if let Some(s) = signs {
+                apply_signs(data, s);
+            }
+            run_f32_slice(kind, data, n, opts, plan, fusion_depth);
+        }
+        region_start = region_end;
+        if region_start >= end_row {
+            break;
         }
     }
 }
@@ -943,6 +1165,55 @@ mod tests {
             }
         }
         assert!(engine.stats().jobs > 0, "large batches must use the pool");
+    }
+
+    /// The scatter-gather path must be bit-identical to gathering the
+    /// same rows into one contiguous batch — both sharded (pool) and
+    /// inline, with and without a sign-flip prologue.
+    #[test]
+    fn regions_are_bit_identical_to_gathered() {
+        let mut rng = Rng::new(7);
+        let n = 1024usize;
+        for (engine, prologue) in [
+            (pooled(), Prologue::None),
+            (pooled(), Prologue::SignFlip { seed: 0x5eed }),
+            (ExecEngine::single_threaded(), Prologue::SignFlip { seed: 9 }),
+        ] {
+            // uneven region heights so chunks straddle region boundaries
+            let mut bufs: Vec<Vec<f32>> = [3usize, 8, 1, 5]
+                .iter()
+                .map(|&rows| rng.normal_vec(rows * n))
+                .collect();
+            let mut gathered: Vec<f32> =
+                bufs.iter().flat_map(|b| b.iter().copied()).collect();
+            let opts = FwhtOptions::normalized(n);
+            engine.run_f32_with_stages(
+                KernelKind::HadaCore,
+                &mut gathered,
+                n,
+                &opts,
+                prologue,
+                Epilogue::None,
+            );
+            let regions: Vec<RowRegion> = bufs
+                .iter_mut()
+                .map(|b| RowRegion { ptr: b.as_mut_ptr(), rows: b.len() / n })
+                .collect();
+            // SAFETY: each region points at its own live Vec, regions are
+            // disjoint, and `bufs` outlives the blocking call.
+            unsafe {
+                engine.run_f32_regions(
+                    KernelKind::HadaCore,
+                    &regions,
+                    n,
+                    &opts,
+                    prologue,
+                );
+            }
+            let scattered: Vec<f32> =
+                bufs.iter().flat_map(|b| b.iter().copied()).collect();
+            assert_eq!(gathered, scattered, "prologue={prologue:?}");
+        }
     }
 
     #[test]

@@ -27,6 +27,7 @@
 //! shape it never allocates again (steady-state zero-allocation — see
 //! [`super::ExecStats::scratch_grows`]).
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
@@ -35,7 +36,10 @@ use std::thread::JoinHandle;
 use crate::hadamard::{FwhtOptions, KernelKind};
 
 use super::plan::ExecPlan;
-use super::{execute_stage, ChunkStage, ExecStats, Payload};
+use super::{
+    execute_regions_range, execute_stage, ChunkStage, ExecStats, Payload,
+    RegionsRef,
+};
 
 /// Everything a worker needs to run one chunk or the submitter needs to
 /// enqueue a batch.
@@ -62,6 +66,10 @@ pub(crate) struct JobSpec {
     pub signs: Option<Arc<Vec<f32>>>,
     /// What each chunk executes (plain rotate or an epilogue stage).
     pub stage: ChunkStage,
+    /// Scatter-gather view: when set, row indices address the logical
+    /// concatenation of these regions instead of `payload` (which is
+    /// then ignored). Regions-jobs only support [`ChunkStage::Rotate`].
+    pub regions: Option<RegionsRef>,
 }
 
 struct Job {
@@ -90,6 +98,17 @@ impl Latch {
         }
     }
 
+    /// Re-arm a drained latch for the next job on this submitter. Safe
+    /// because `wait` only returns once every chunk has called
+    /// `finish_one` — a stale worker may still hold the `Arc`, but it
+    /// never touches the latch again after its own `finish_one`.
+    fn reset(&self, chunks: usize) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert_eq!(st.remaining, 0, "latch reset while a job is in flight");
+        st.remaining = chunks;
+        st.panicked = false;
+    }
+
     fn finish_one(&self, panicked: bool) {
         let mut st = self.state.lock().unwrap();
         st.remaining -= 1;
@@ -108,6 +127,12 @@ impl Latch {
             panic!("exec worker panicked while executing a batch chunk");
         }
     }
+}
+
+thread_local! {
+    // One reusable completion latch per submitting thread (const-init:
+    // no destructor-ordering hazards; the Arc is freed at thread exit).
+    static SUBMIT_LATCH: RefCell<Option<Arc<Latch>>> = const { RefCell::new(None) };
 }
 
 struct PoolState {
@@ -133,6 +158,7 @@ struct Claim {
     fusion_depth: usize,
     signs: Option<Arc<Vec<f32>>>,
     stage: ChunkStage,
+    regions: Option<RegionsRef>,
     done: Arc<Latch>,
 }
 
@@ -174,7 +200,23 @@ impl WorkerPool {
     pub unsafe fn submit_and_wait(&self, spec: JobSpec) {
         debug_assert!(spec.chunk_rows >= 1 && spec.rows >= 1);
         let chunks = (spec.rows + spec.chunk_rows - 1) / spec.chunk_rows;
-        let done = Arc::new(Latch::new(chunks));
+        // reuse this submitter's latch across jobs: `submit_and_wait`
+        // blocks until the latch drains, so by the next call it is idle
+        // and re-armable — no per-job Arc allocation in steady state
+        let done = SUBMIT_LATCH.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            match slot.as_ref() {
+                Some(latch) => {
+                    latch.reset(chunks);
+                    Arc::clone(latch)
+                }
+                None => {
+                    let latch = Arc::new(Latch::new(chunks));
+                    *slot = Some(Arc::clone(&latch));
+                    latch
+                }
+            }
+        });
         {
             let mut st = self.shared.state.lock().unwrap();
             st.queue.push_back(Job {
@@ -200,6 +242,9 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(shared: &Shared, stats: &ExecStats) {
+    // exec workers execute serving batches: count their allocations
+    // when the count-alloc gate is measuring (no-op otherwise)
+    crate::util::alloc::track_current_thread(true);
     // the per-thread reusable f32 workspace for the 16-bit path
     let mut scratch: Vec<f32> = Vec::new();
     loop {
@@ -219,6 +264,7 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
                         fusion_depth: front.spec.fusion_depth,
                         signs: front.spec.signs.clone(),
                         stage: front.spec.stage.clone(),
+                        regions: front.spec.regions,
                         done: Arc::clone(&front.done),
                     };
                     front.next_chunk += 1;
@@ -239,23 +285,44 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
             let rows_here = claim.chunk_rows.min(claim.rows - start_row);
             // SAFETY: chunk indices are claimed uniquely under the queue
             // lock and map to disjoint row (and scale-slot) ranges; the
-            // submitter keeps the buffer exclusively borrowed until the
-            // latch opens (the contract of `submit_and_wait`).
+            // submitter keeps the buffer(s) exclusively borrowed until
+            // the latch opens (the contract of `submit_and_wait` /
+            // `ExecEngine::run_f32_regions`).
             unsafe {
-                execute_stage(
-                    &claim.stage,
-                    claim.payload,
-                    start_row,
-                    rows_here,
-                    claim.n,
-                    claim.kind,
-                    &claim.opts,
-                    &claim.plan,
-                    claim.fusion_depth,
-                    claim.signs.as_deref().map(Vec::as_slice),
-                    &mut scratch,
-                    stats,
-                );
+                match claim.regions {
+                    Some(regions) => {
+                        debug_assert!(
+                            matches!(claim.stage, ChunkStage::Rotate),
+                            "regions jobs only support the plain rotate stage"
+                        );
+                        execute_regions_range(
+                            regions.as_slice(),
+                            start_row,
+                            rows_here,
+                            claim.n,
+                            claim.kind,
+                            &claim.opts,
+                            &claim.plan,
+                            claim.fusion_depth,
+                            claim.signs.as_deref().map(Vec::as_slice),
+                            stats,
+                        );
+                    }
+                    None => execute_stage(
+                        &claim.stage,
+                        claim.payload,
+                        start_row,
+                        rows_here,
+                        claim.n,
+                        claim.kind,
+                        &claim.opts,
+                        &claim.plan,
+                        claim.fusion_depth,
+                        claim.signs.as_deref().map(Vec::as_slice),
+                        &mut scratch,
+                        stats,
+                    ),
+                }
             }
         }))
         .is_err();

@@ -10,7 +10,10 @@
 //! * `loadgen`   — open-loop load generator: drive configurable QPS /
 //!                 traffic mixes through the client library against a
 //!                 server (or a self-hosted in-process one) and emit the
-//!                 `BENCH_PR5.json` perf trajectory.
+//!                 `BENCH_PR7.json` perf trajectory. Built with
+//!                 `--features count-alloc` it also measures server-side
+//!                 heap allocations per request (`--assert-zero-alloc`
+//!                 turns the zero-alloc steady state into a hard gate).
 //! * `tables`    — regenerate the paper's evaluation tables from the GPU
 //!                 model (see also `examples/paper_tables.rs`).
 
@@ -32,7 +35,18 @@ use hadacore::util::error as anyhow;
 use hadacore::util::f16::DType;
 use hadacore::util::rng::Rng;
 
+/// With `--features count-alloc` the binary runs under the counting
+/// allocator, so a self-hosted `loadgen` can measure (and gate on) the
+/// serve path's per-request heap allocations. Pure delegation to the
+/// system allocator otherwise — see [`hadacore::util::alloc`].
+#[cfg(feature = "count-alloc")]
+#[global_allocator]
+static COUNTING_ALLOC: hadacore::util::alloc::CountingAlloc =
+    hadacore::util::alloc::CountingAlloc;
+
 fn main() -> anyhow::Result<()> {
+    #[cfg(feature = "count-alloc")]
+    hadacore::util::alloc::mark_installed();
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     match cmd.as_str() {
@@ -201,10 +215,16 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
         )
         .opt("dtype", "float32", "wire dtype: float32|float16|bfloat16")
         .opt("kernel", "hadacore", "kernel: hadacore|dao|scalar")
-        .opt("json", "BENCH_PR5.json", "perf-trajectory output path")
+        .opt("json", "BENCH_PR7.json", "perf-trajectory output path")
         .opt("workers", "4", "self-hosted server: batcher workers")
         .opt("exec-threads", "0", "self-hosted server: engine lanes (0 = default)")
         .switch("smoke", "tiny CI run (few requests, unpaced)")
+        .switch(
+            "assert-zero-alloc",
+            "fail unless the measured (post-warmup) run performed zero \
+             server-side heap allocations; needs --features count-alloc \
+             and the self-hosted server ('' addr)",
+        )
         .parse_from(argv)
         .map_err(|e| anyhow::anyhow!(e))?;
     let dtype = DType::parse(&args.get("dtype"))
@@ -216,6 +236,21 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
     } else {
         (args.get_as("requests"), args.get_as("qps"))
     };
+    let assert_zero = args.flag("assert-zero-alloc");
+    if assert_zero {
+        if !args.get("addr").is_empty() {
+            anyhow::bail!(
+                "--assert-zero-alloc measures in-process server threads; \
+                 it requires the self-hosted server (leave --addr empty)"
+            );
+        }
+        if !hadacore::util::alloc::is_counting() {
+            anyhow::bail!(
+                "--assert-zero-alloc needs the counting allocator: \
+                 rebuild with `--features count-alloc`"
+            );
+        }
+    }
 
     // '' = self-host: bind an ephemeral in-process server so one command
     // exercises the full stack (the CI smoke path)
@@ -257,10 +292,39 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
             dtype,
             ..Default::default()
         };
+        // warmup pass: populate the buffer-pool shelves, batcher spare
+        // vectors, and per-thread scratch so the measured run sees the
+        // steady state the zero-alloc gate is defined over (unpaced —
+        // warmup throughput is not a measurement)
+        let warmup = LoadgenConfig {
+            requests: (cfg.requests / 4).max(40),
+            qps: 0.0,
+            ..cfg.clone()
+        };
+        let _ = lg::run(&warmup)?;
         let report = lg::run(&cfg)?;
         println!("{}", report.line());
+        if report.alloc_counting {
+            println!(
+                "{:<12} allocs/req {:.3}  ({} allocs, {} bytes over {} ok, post-warmup)",
+                report.mix,
+                report.allocs_per_request(),
+                report.alloc_allocs,
+                report.alloc_bytes,
+                report.ok,
+            );
+        }
         if report.ok == 0 {
             anyhow::bail!("mix {}: no successful responses", cfg.mix);
+        }
+        if assert_zero && report.alloc_allocs > 0 {
+            anyhow::bail!(
+                "mix {}: {} server-side heap allocations over {} requests \
+                 after warmup (expected 0)",
+                cfg.mix,
+                report.alloc_allocs,
+                report.ok,
+            );
         }
         out.push(report.to_record(&cfg));
     }

@@ -15,7 +15,7 @@
 //! off and retries).
 
 use std::collections::HashMap;
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -25,7 +25,7 @@ use std::time::{Duration, Instant};
 use crate::util::error::{self as anyhow, anyhow};
 
 use super::wire::{
-    read_frame, write_frame, Frame, ReadError, WireRequest, WireResponse, WireStats,
+    decode_frame, write_frame, Frame, WireRequest, WireResponse, WireStats,
     DEFAULT_MAX_FRAME_BYTES,
 };
 
@@ -219,55 +219,80 @@ impl Drop for Client {
     }
 }
 
+/// Mark the connection dead *before* draining, so a concurrent
+/// `register()` either sees the flag or gets drained here — no
+/// interleaving leaves a waiter stranded. Every waiter gets `reply`.
+fn fail_all(pending: &PendingMap, dead: &Arc<AtomicBool>, reply: &Reply) {
+    dead.store(true, Ordering::Release);
+    let mut map = pending.lock().unwrap();
+    for (_, tx) in map.drain() {
+        let _ = tx.send(reply.clone());
+    }
+}
+
 fn reader_loop(
     mut stream: TcpStream,
     pending: &PendingMap,
     dead: &Arc<AtomicBool>,
     max_frame_bytes: u32,
 ) {
+    // Incremental framing, mirroring the server's connection reader: one
+    // retained accumulator instead of a fresh length-sized Vec per frame
+    // (`read_frame`) keeps the client reader allocation-quiet once its
+    // buffer has grown to the connection's largest frame.
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
     loop {
-        match read_frame(&mut stream, max_frame_bytes) {
-            Ok(frame) => {
-                let id = frame.id();
-                let reply = match frame {
-                    Frame::Response(r) => Reply::Response(r),
-                    // id 0 is never assigned by a client: a Busy carrying
-                    // it is the acceptor's *connection-level* shed (the
-                    // handler pool is full and the server is closing this
-                    // socket). Surface it as a retriable Busy to every
-                    // waiter — not as an anonymous disconnect — and stop.
-                    Frame::Busy { id: 0, retry_after_us } => {
-                        dead.store(true, Ordering::Release);
-                        let mut map = pending.lock().unwrap();
-                        for (_, tx) in map.drain() {
-                            let _ = tx.send(Reply::Busy { retry_after_us });
-                        }
-                        return;
-                    }
-                    Frame::Busy { retry_after_us, .. } => Reply::Busy { retry_after_us },
-                    Frame::Error(e) => Reply::Error { code: e.code, msg: e.msg },
-                    Frame::Pong { .. } => Reply::Pong,
-                    Frame::Stats(s) => Reply::Stats(s),
-                    // a server never sends these; drop silently
-                    Frame::Request(_) | Frame::Ping { .. } | Frame::StatsRequest { .. } => {
-                        continue
-                    }
-                };
-                if let Some(tx) = pending.lock().unwrap().remove(&id) {
-                    let _ = tx.send(reply);
+        loop {
+            let frame = match decode_frame(&buf, max_frame_bytes) {
+                Ok(Some((frame, used))) => {
+                    buf.drain(..used);
+                    frame
                 }
-                // replies whose waiter already went away are dropped
+                Ok(None) => break, // need more bytes
+                Err(_) => {
+                    // corrupt length-prefixed stream: cannot resync
+                    fail_all(pending, dead, &Reply::Disconnected);
+                    return;
+                }
+            };
+            let id = frame.id();
+            let reply = match frame {
+                Frame::Response(r) => Reply::Response(r),
+                // id 0 is never assigned by a client: a Busy carrying
+                // it is the acceptor's *connection-level* shed (the
+                // handler pool is full and the server is closing this
+                // socket). Surface it as a retriable Busy to every
+                // waiter — not as an anonymous disconnect — and stop.
+                Frame::Busy { id: 0, retry_after_us } => {
+                    fail_all(pending, dead, &Reply::Busy { retry_after_us });
+                    return;
+                }
+                Frame::Busy { retry_after_us, .. } => Reply::Busy { retry_after_us },
+                Frame::Error(e) => Reply::Error { code: e.code, msg: e.msg },
+                Frame::Pong { .. } => Reply::Pong,
+                Frame::Stats(s) => Reply::Stats(s),
+                // a server never sends these; drop silently
+                Frame::Request(_) | Frame::Ping { .. } | Frame::StatsRequest { .. } => {
+                    continue
+                }
+            };
+            if let Some(tx) = pending.lock().unwrap().remove(&id) {
+                let _ = tx.send(reply);
             }
-            Err(ReadError::Io(_)) | Err(ReadError::Malformed(_)) => {
-                // EOF, reset, or corrupt stream: mark the connection dead
-                // *before* draining, so a concurrent register() either
-                // sees the flag or gets drained here — then fail all
-                // waiters and stop
-                dead.store(true, Ordering::Release);
-                let mut map = pending.lock().unwrap();
-                for (_, tx) in map.drain() {
-                    let _ = tx.send(Reply::Disconnected);
-                }
+            // replies whose waiter already went away are dropped
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                // EOF: the server is done with us
+                fail_all(pending, dead, &Reply::Disconnected);
+                return;
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                // reset or hard error
+                fail_all(pending, dead, &Reply::Disconnected);
                 return;
             }
         }

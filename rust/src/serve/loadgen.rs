@@ -13,13 +13,16 @@
 //! ([`traffic_mix`](crate::harness::workload::traffic_mix)), so the
 //! loadgen exercises exactly the request distributions the in-process
 //! benches measure. Results aggregate into a [`LoadgenReport`] —
-//! achieved QPS, latency percentiles, shed (`Busy`) counts — and convert
-//! to [`BenchRecord`]s for the `BENCH_PR5.json` perf trajectory.
+//! achieved QPS, latency percentiles, shed (`Busy`) counts, and the
+//! tracked-thread allocation delta (the zero-alloc serving gate; see
+//! [`crate::util::alloc`]) — and convert to [`BenchRecord`]s for the
+//! `BENCH_PR7.json` perf trajectory.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::harness::workload::{ServingWorkload, WorkloadConfig};
+use crate::util::alloc;
 use crate::util::bench::{BenchRecord, Stats};
 use crate::util::error::{self as anyhow, anyhow};
 use crate::util::f16::DType;
@@ -93,6 +96,16 @@ pub struct LoadgenReport {
     pub wall: Duration,
     /// Client-observed latencies of ok responses in µs, sorted.
     pub latencies_us: Vec<f64>,
+    /// Heap-allocation calls observed on *tracked* (server-side) threads
+    /// over this run's window. Meaningful only when `alloc_counting`;
+    /// loadgen client threads are never tracked, so a self-hosted run
+    /// measures exactly the serve path (see [`crate::util::alloc`]).
+    pub alloc_allocs: u64,
+    /// Bytes requested by those allocation calls.
+    pub alloc_bytes: u64,
+    /// Whether the counting allocator was installed (`count-alloc`
+    /// feature); `false` means the alloc fields are vacuously zero.
+    pub alloc_counting: bool,
 }
 
 impl LoadgenReport {
@@ -147,6 +160,21 @@ impl LoadgenReport {
         .with_extra("p50_us", self.percentile_us(50.0))
         .with_extra("p90_us", self.percentile_us(90.0))
         .with_extra("p99_us", self.percentile_us(99.0))
+        .with_extra("alloc_counting", f64::from(u8::from(self.alloc_counting)))
+        .with_extra("allocs_steady", self.alloc_allocs as f64)
+        .with_extra("alloc_per_req", self.allocs_per_request())
+        .with_extra("alloc_bytes_per_req", self.alloc_bytes_per_request())
+    }
+
+    /// Tracked server-side allocation calls per ok response (the
+    /// zero-alloc gate's headline number; 0.0 when nothing completed).
+    pub fn allocs_per_request(&self) -> f64 {
+        self.alloc_allocs as f64 / (self.ok as f64).max(1.0)
+    }
+
+    /// Tracked server-side allocated bytes per ok response.
+    pub fn alloc_bytes_per_request(&self) -> f64 {
+        self.alloc_bytes as f64 / (self.ok as f64).max(1.0)
     }
 }
 
@@ -173,6 +201,10 @@ pub fn run(cfg: &LoadgenConfig) -> anyhow::Result<LoadgenReport> {
     if cfg.clients == 0 || cfg.requests == 0 {
         return Err(anyhow!("loadgen needs clients >= 1 and requests >= 1"));
     }
+    // tracked-thread (server-side) allocation window for this run; the
+    // caller decides what the delta means (a measured run is preceded by
+    // a warmup run that populates the pool shelves and scratch buffers)
+    let alloc0 = alloc::tracked();
     let t0 = Instant::now();
     let (tx, rx) = mpsc::channel::<anyhow::Result<Partial>>();
     let mut threads = Vec::with_capacity(cfg.clients);
@@ -220,6 +252,7 @@ pub fn run(cfg: &LoadgenConfig) -> anyhow::Result<LoadgenReport> {
         return Err(e);
     }
     let wall = t0.elapsed();
+    let alloc_delta = alloc::tracked().since(alloc0);
     agg.latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
     Ok(LoadgenReport {
         mix: cfg.mix.clone(),
@@ -233,6 +266,9 @@ pub fn run(cfg: &LoadgenConfig) -> anyhow::Result<LoadgenReport> {
         elems: agg.elems,
         wall,
         latencies_us: agg.latencies_us,
+        alloc_allocs: alloc_delta.allocs,
+        alloc_bytes: alloc_delta.bytes,
+        alloc_counting: alloc::is_counting(),
     })
 }
 
@@ -365,6 +401,9 @@ mod tests {
             elems: 95 * 1024,
             wall: Duration::from_secs(1),
             latencies_us: (1..=95).map(|i| i as f64 * 10.0).collect(),
+            alloc_allocs: 0,
+            alloc_bytes: 0,
+            alloc_counting: false,
         };
         assert!((report.percentile_us(50.0) - 480.0).abs() < 1.0);
         let line = report.line();
@@ -380,5 +419,13 @@ mod tests {
             .extras
             .iter()
             .any(|(k, v)| k == "busy" && *v == 5.0));
+        assert!(
+            rec.extras
+                .iter()
+                .any(|(k, v)| k == "alloc_counting" && *v == 0.0),
+            "records must carry the counting-active flag so a zero \
+             allocs_steady is distinguishable from an unmeasured run"
+        );
+        assert!(rec.extras.iter().any(|(k, _)| k == "alloc_per_req"));
     }
 }

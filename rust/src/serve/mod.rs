@@ -10,22 +10,28 @@
 //!   (request/response/error/busy/ping/stats), with strict decode limits
 //!   and bit-exact f32 payloads.
 //! * [`server`] — the TCP acceptor + bounded connection-handler pool:
-//!   decodes frames, applies admission control (global in-flight cap,
-//!   per-connection pipelining cap, batcher queue-depth shedding — all
-//!   answered with a retriable [`wire::Frame::Busy`] rather than
-//!   unbounded queueing), forwards to
-//!   [`Coordinator::submit_with`](crate::coordinator::Coordinator::submit_with),
-//!   and streams responses back out of order by request id.
+//!   decodes each request payload **directly into a pooled buffer**
+//!   ([`crate::util::pool`]), applies admission control (global
+//!   in-flight cap, per-connection pipelining cap, batcher queue-depth
+//!   shedding — all answered with a retriable [`wire::Frame::Busy`]
+//!   rather than unbounded queueing), forwards to
+//!   [`Coordinator::submit_to`](crate::coordinator::Coordinator::submit_to)
+//!   over a pre-reserved per-connection reply ring, and streams
+//!   responses back out of order by request id — framing the *same*
+//!   buffer the transform ran in (vectored header + payload write, no
+//!   gather or encode copy).
 //! * [`client`] — the sync pipelining client (tests, examples, loadgen).
 //! * [`loadgen`] — the open-loop QPS load generator over the traffic
 //!   mixes of [`crate::harness::workload`], feeding the
-//!   `BENCH_PR5.json` perf trajectory.
+//!   `BENCH_PR7.json` perf trajectory; with the `count-alloc` feature it
+//!   also measures server-side heap allocations per request.
 //!
-//! The acceptance contract (enforced by `rust/tests/serve_e2e.rs`):
-//! responses through this layer are **bit-identical** to direct
-//! `Coordinator::submit` for every kernel × dtype × epilogue
-//! combination, and overload answers `Busy` — no hangs, no dropped
-//! connections.
+//! The acceptance contract (enforced by `rust/tests/serve_e2e.rs` and
+//! `rust/tests/zero_alloc_pool.rs`): responses through this layer are
+//! **bit-identical** to direct `Coordinator::submit` for every kernel ×
+//! dtype × epilogue combination; overload answers `Busy` — no hangs, no
+//! dropped connections; and the steady-state request path performs zero
+//! heap allocations end to end.
 
 pub mod client;
 pub mod loadgen;

@@ -9,14 +9,29 @@
 //! [`ServeConfig::max_conns`] — connections beyond the bound receive a
 //! retriable [`Frame::Busy`] and are closed, never queued invisibly.
 //!
-//! The reader decodes frames and submits admitted requests to the shared
-//! [`Coordinator`] via [`Coordinator::submit_with`], passing the
-//! connection's single tagged response channel. The writer drains that
-//! channel and encodes response/error frames **in completion order** —
-//! requests pipelined by a client come back possibly out of order,
-//! matched by id. Control frames (`Busy`, `Error`, `Pong`, `Stats`) are
-//! written by the reader under the same write-side mutex, so frames never
-//! interleave mid-frame.
+//! The reader decodes frames **directly into pooled buffers**
+//! ([`decode_server_frame`] + the shared [`serve_pool`]) and submits
+//! admitted requests to the shared [`Coordinator`] via
+//! [`Coordinator::submit_to`], passing per-request clones of the
+//! connection's [`ReplyRing`] sender. The writer drains the ring and
+//! frames responses **in completion order** — requests pipelined by a
+//! client come back possibly out of order, matched by id. Control frames
+//! (`Busy`, `Error`, `Pong`, `Stats`) are written by the reader under the
+//! same write-side mutex, so frames never interleave mid-frame.
+//!
+//! ## Zero-copy request path
+//!
+//! A payload touches exactly one buffer for its whole server-side life:
+//! the reader widens wire bytes into a [`PooledBuf`](crate::util::pool)
+//! sized for `rows * n`, the coordinator's batcher hands the exec engine
+//! a scatter-gather region view of that same buffer (transform runs
+//! in place), and the writer serialises the response by framing the
+//! buffer's raw bytes with a [`ResponseFramer`] + vectored write — no
+//! gather copy, no encode copy. The buffer returns to the pool when the
+//! response drops, on *every* path (shed, error, teardown) via RAII.
+//! In steady state (pool shelves warm, ring and scratch at capacity) a
+//! request performs **zero heap allocations** end to end — asserted by
+//! `tests/zero_alloc_pool.rs` under the `count-alloc` feature.
 //!
 //! ## Admission control
 //!
@@ -45,18 +60,20 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::coordinator::{Coordinator, TaggedResponseTx, TransformResponse};
+use crate::coordinator::{Coordinator, ReplyRing, ReplyTx, ResponseTx};
 use crate::quant::Epilogue;
+use crate::util::alloc::track_current_thread;
 use crate::util::error::{self as anyhow, anyhow};
 use crate::util::f16::DType;
+use crate::util::pool::serve_pool;
 
 use super::wire::{
-    decode_frame, ErrorCode, Frame, WireError, WireResponse, WireStats,
-    DEFAULT_MAX_FRAME_BYTES,
+    decode_server_frame, write_frame_parts, ErrorCode, Frame, ResponseFramer,
+    ServerFrame, WireError, WireStats, DEFAULT_MAX_FRAME_BYTES,
 };
 
 /// Serving-layer configuration.
@@ -290,6 +307,9 @@ fn send_locked(half: &Mutex<TcpStream>, frame: &Frame) -> std::io::Result<()> {
 }
 
 fn handle_conn(state: &Arc<ServeState>, stream: TcpStream) {
+    // connection readers widen payloads into pooled buffers: count their
+    // allocations when the count-alloc gate is measuring (no-op otherwise)
+    track_current_thread(true);
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(state.cfg.poll_interval));
     let _ = stream.set_write_timeout(Some(state.cfg.write_timeout));
@@ -308,15 +328,15 @@ fn handle_conn(state: &Arc<ServeState>, stream: TcpStream) {
 /// the dtype the request arrived with.
 type InflightMeta = Arc<Mutex<HashMap<u64, (DType, u32)>>>;
 
-/// The receive side of a connection's tagged response channel.
-type TaggedRx = mpsc::Receiver<(u64, anyhow::Result<TransformResponse>)>;
-
 fn conn_loop(
     state: &Arc<ServeState>,
     mut reader: TcpStream,
     write_half: &Arc<Mutex<TcpStream>>,
 ) {
-    let (tx, rx) = mpsc::channel::<(u64, anyhow::Result<TransformResponse>)>();
+    // a ReplyRing instead of std mpsc: mpsc allocates a node per message,
+    // which would be one heap allocation per response in steady state.
+    // Depth 2x the pipeline cap so admission never sends into a full ring.
+    let (ring, tx) = ReplyRing::with_depth(state.cfg.pipeline_depth * 2);
     let conn_inflight = Arc::new(AtomicUsize::new(0));
     let meta: InflightMeta = Arc::new(Mutex::new(HashMap::new()));
 
@@ -327,7 +347,7 @@ fn conn_loop(
         let meta = Arc::clone(&meta);
         std::thread::Builder::new()
             .name("hadacore-conn-writer".to_string())
-            .spawn(move || writer_loop(&state, &write_half, rx, &conn_inflight, &meta))
+            .spawn(move || writer_loop(&state, &write_half, &ring, &conn_inflight, &meta))
     };
     let writer = match writer {
         Ok(w) => w,
@@ -343,7 +363,7 @@ fn conn_loop(
     let mut chunk = [0u8; 16 * 1024];
     'conn: loop {
         loop {
-            match decode_frame(&buf, state.cfg.max_frame_bytes) {
+            match decode_server_frame(&buf, state.cfg.max_frame_bytes, serve_pool()) {
                 Ok(Some((frame, used))) => {
                     buf.drain(..used);
                     if !handle_frame(state, write_half, &tx, &conn_inflight, &meta, frame)
@@ -402,19 +422,21 @@ fn conn_loop(
 fn handle_frame(
     state: &Arc<ServeState>,
     write_half: &Arc<Mutex<TcpStream>>,
-    tx: &TaggedResponseTx,
+    tx: &ReplyTx,
     conn_inflight: &Arc<AtomicUsize>,
     meta: &InflightMeta,
-    frame: Frame,
+    frame: ServerFrame,
 ) -> bool {
     match frame {
-        Frame::Ping { id } => send_locked(write_half, &Frame::Pong { id }).is_ok(),
-        Frame::StatsRequest { id } => {
+        ServerFrame::Control(Frame::Ping { id }) => {
+            send_locked(write_half, &Frame::Pong { id }).is_ok()
+        }
+        ServerFrame::Control(Frame::StatsRequest { id }) => {
             let stats = build_stats(state, id);
             send_locked(write_half, &Frame::Stats(stats)).is_ok()
         }
-        Frame::Request(wr) => {
-            let id = wr.id;
+        ServerFrame::Request(pr) => {
+            let id = pr.id;
             if state.shutdown.load(Ordering::Acquire) || state.coord.is_draining() {
                 return send_locked(
                     write_half,
@@ -444,13 +466,16 @@ fn handle_frame(
             // the response echoes the payload and adds epilogue scales:
             // reject a request whose *reply* could not be encoded under
             // the frame cap (the client's decoder would kill the
-            // connection over a perfectly admitted request otherwise)
-            let elems = wr.rows as u64 * wr.n as u64;
-            let scale_bytes = match wr.epilogue {
+            // connection over a perfectly admitted request otherwise).
+            // The payload size is recomputed from the wire shape — the
+            // raw bytes were already widened into the pooled buffer.
+            let elems = pr.rows as u64 * pr.n as u64;
+            let scale_bytes = match pr.epilogue {
                 Epilogue::QuantInt8 { group } => 4 * (elems / group.max(1) as u64) + 8,
                 _ => 8,
             };
-            let resp_bytes = 96 + wr.payload.len() as u64 + scale_bytes;
+            let payload_bytes = elems * pr.dtype.size_bytes() as u64;
+            let resp_bytes = 96 + payload_bytes + scale_bytes;
             if resp_bytes > state.cfg.max_frame_bytes as u64 {
                 return send_locked(
                     write_half,
@@ -484,30 +509,15 @@ fn handle_frame(
                     .is_ok();
                 }
                 Entry::Vacant(v) => {
-                    v.insert((wr.dtype, wr.n));
+                    v.insert((pr.dtype, pr.n));
                 }
             }
-            let req = match wr.to_transform() {
-                Ok(req) => req,
-                Err(msg) => {
-                    // defensive (decode already validates the shape):
-                    // Rejected, because the connection stays open
-                    meta.lock().unwrap().remove(&id);
-                    state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
-                    return send_locked(
-                        write_half,
-                        &Frame::Error(WireError {
-                            id,
-                            code: ErrorCode::Rejected,
-                            msg,
-                        }),
-                    )
-                    .is_ok();
-                }
-            };
+            // infallible: decode already enforced the strict shape check,
+            // and the pooled buffer moves straight into the request
+            let req = pr.into_transform();
             conn_inflight.fetch_add(1, Ordering::AcqRel);
             state.counters.inflight.fetch_add(1, Ordering::AcqRel);
-            match state.coord.submit_with(req, tx.clone()) {
+            match state.coord.submit_to(req, ResponseTx::Ring(tx.clone())) {
                 Ok(()) => {
                     state.counters.requests.fetch_add(1, Ordering::Relaxed);
                     true
@@ -527,7 +537,7 @@ fn handle_frame(
             }
         }
         // server-to-client frames arriving here are a protocol violation
-        other => {
+        ServerFrame::Control(other) => {
             state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
             let _ = send_locked(
                 write_half,
@@ -545,29 +555,48 @@ fn handle_frame(
 fn writer_loop(
     state: &Arc<ServeState>,
     write_half: &Arc<Mutex<TcpStream>>,
-    rx: TaggedRx,
+    ring: &ReplyRing,
     conn_inflight: &Arc<AtomicUsize>,
     meta: &InflightMeta,
 ) {
-    // after a write failure the client is gone: keep draining the channel
+    // writers frame pooled response buffers: count their allocations when
+    // the count-alloc gate is measuring (no-op otherwise)
+    track_current_thread(true);
+    // the connection-owned framing scratch: header bytes (and, for 16-bit
+    // dtypes, the narrowing buffer) are built here and retained across
+    // responses, so steady-state framing allocates nothing
+    let mut framer = ResponseFramer::new();
+    // after a write failure the client is gone: keep draining the ring
     // (the coordinator still owns sender clones and the counters must
     // come back down) but stop encoding
     let mut dead = false;
-    while let Ok((id, result)) = rx.recv() {
+    while let Some((id, result)) = ring.recv() {
         let entry = meta.lock().unwrap().remove(&id);
         if !dead {
             if let Some((dtype, n)) = entry {
-                let frame = match result {
+                let ok = match result {
                     Ok(resp) => {
-                        Frame::Response(WireResponse::from_transform(&resp, n, dtype))
+                        // zero-copy response: the header is framed next
+                        // to a raw byte view of the transformed request
+                        // buffer and both hit the socket in one vectored
+                        // write — the payload is never re-encoded.
+                        // `resp` (and its pooled buffer) drops right
+                        // after, returning the buffer to the pool.
+                        let (header, payload) = framer.frame(&resp, n, dtype);
+                        let mut s = write_half.lock().unwrap();
+                        write_frame_parts(&mut *s, header, payload).is_ok()
                     }
-                    Err(e) => Frame::Error(WireError {
-                        id,
-                        code: ErrorCode::ExecFailed,
-                        msg: e.to_string(),
-                    }),
+                    Err(e) => send_locked(
+                        write_half,
+                        &Frame::Error(WireError {
+                            id,
+                            code: ErrorCode::ExecFailed,
+                            msg: e.to_string(),
+                        }),
+                    )
+                    .is_ok(),
                 };
-                if send_locked(write_half, &frame).is_err() {
+                if !ok {
                     // timeout or reset: a partially written frame cannot
                     // resync, so the connection is done — close it to
                     // unblock the (possibly stalled) peer-facing reader

@@ -46,6 +46,7 @@ use crate::coordinator::{TransformRequest, TransformResponse};
 use crate::hadamard::{KernelKind, Prologue};
 use crate::quant::{Epilogue, Fp8Format, QuantScales};
 use crate::util::f16::{DType, Element, BF16, F16};
+use crate::util::pool::{BufferPool, PooledBuf};
 
 /// Protocol version carried by every frame.
 pub const WIRE_VERSION: u8 = 1;
@@ -245,6 +246,15 @@ pub fn decode_elems(bytes: &[u8], dtype: DType) -> Result<Vec<f32>, String> {
         ));
     }
     let mut out = Vec::with_capacity(bytes.len() / esize);
+    widen_into(bytes, dtype, &mut out);
+    Ok(out)
+}
+
+/// Widen `dtype` wire bytes into `out` (caller guarantees `bytes.len()`
+/// is an element-size multiple and `out` has the capacity — the pooled
+/// decode path relies on this appending nothing beyond capacity, i.e.
+/// never allocating).
+fn widen_into(bytes: &[u8], dtype: DType, out: &mut Vec<f32>) {
     match dtype {
         DType::F32 => {
             for c in bytes.chunks_exact(4) {
@@ -262,7 +272,6 @@ pub fn decode_elems(bytes: &[u8], dtype: DType) -> Result<Vec<f32>, String> {
             }
         }
     }
-    Ok(out)
 }
 
 impl WireRequest {
@@ -310,7 +319,7 @@ impl WireRequest {
             id: self.id,
             n,
             rows,
-            data: decode_elems(&self.payload, self.dtype)?,
+            data: decode_elems(&self.payload, self.dtype)?.into(),
             kernel: self.kernel,
             scale: self.scale,
             prologue: self.prologue,
@@ -643,6 +652,72 @@ impl<'a> Cursor<'a> {
     }
 }
 
+/// The fixed-size fields of a request body, parsed up to (but not
+/// including) the payload bytes. Shared by [`parse_body`] and the
+/// server's pooled decode ([`decode_server_frame`]) so the two paths can
+/// never drift: one strict parser, two payload destinations.
+struct ReqHeader {
+    id: u64,
+    n: u32,
+    rows: u32,
+    kernel: KernelKind,
+    dtype: DType,
+    scale: Option<f32>,
+    force_native: bool,
+    prologue: Prologue,
+    epilogue: Epilogue,
+}
+
+/// Parse a request body's header fields and validate that exactly
+/// `rows * n * elem_size` payload bytes remain in the cursor.
+fn parse_request_header(c: &mut Cursor) -> Result<ReqHeader, String> {
+    let id = c.u64()?;
+    let n = c.u32()?;
+    let rows = c.u32()?;
+    let kernel = kernel_from_tag(c.u8()?)?;
+    let dtype = dtype_from_tag(c.u8()?)?;
+    let flags = c.u8()?;
+    if flags & !(FLAG_HAS_SCALE | FLAG_FORCE_NATIVE | FLAG_HAS_PROLOGUE_SEED) != 0 {
+        return Err(format!("unknown request flags {flags:#x}"));
+    }
+    let etag = c.u8()?;
+    let group = c.u32()?;
+    let epilogue = epilogue_from_tags(etag, group)?;
+    let scale_bits = c.f32_bits()?;
+    let scale = if flags & FLAG_HAS_SCALE != 0 {
+        Some(f32::from_bits(scale_bits))
+    } else {
+        if scale_bits != 0 {
+            return Err("scale bits set without the scale flag".to_string());
+        }
+        None
+    };
+    let prologue = if flags & FLAG_HAS_PROLOGUE_SEED != 0 {
+        Prologue::SignFlip { seed: c.u64()? }
+    } else {
+        Prologue::None
+    };
+    let want = (rows as u64) * (n as u64) * dtype.size_bytes() as u64;
+    if c.remaining() as u64 != want {
+        return Err(format!(
+            "request payload is {} bytes, want rows {rows} * n {n} * {}B = {want}",
+            c.remaining(),
+            dtype.size_bytes()
+        ));
+    }
+    Ok(ReqHeader {
+        id,
+        n,
+        rows,
+        kernel,
+        dtype,
+        scale,
+        force_native: flags & FLAG_FORCE_NATIVE != 0,
+        prologue,
+        epilogue,
+    })
+}
+
 /// Parse one frame body (the bytes after the length prefix).
 pub fn parse_body(body: &[u8]) -> Result<Frame, String> {
     let mut c = Cursor::new(body);
@@ -653,54 +728,20 @@ pub fn parse_body(body: &[u8]) -> Result<Frame, String> {
     let tag = c.u8()?;
     let frame = match tag {
         TAG_REQUEST => {
-            let id = c.u64()?;
-            let n = c.u32()?;
-            let rows = c.u32()?;
-            let kernel = kernel_from_tag(c.u8()?)?;
-            let dtype = dtype_from_tag(c.u8()?)?;
-            let flags = c.u8()?;
-            if flags & !(FLAG_HAS_SCALE | FLAG_FORCE_NATIVE | FLAG_HAS_PROLOGUE_SEED)
-                != 0
-            {
-                return Err(format!("unknown request flags {flags:#x}"));
-            }
-            let etag = c.u8()?;
-            let group = c.u32()?;
-            let epilogue = epilogue_from_tags(etag, group)?;
-            let scale_bits = c.f32_bits()?;
-            let scale = if flags & FLAG_HAS_SCALE != 0 {
-                Some(f32::from_bits(scale_bits))
-            } else {
-                if scale_bits != 0 {
-                    return Err("scale bits set without the scale flag".to_string());
-                }
-                None
-            };
-            let prologue = if flags & FLAG_HAS_PROLOGUE_SEED != 0 {
-                Prologue::SignFlip { seed: c.u64()? }
-            } else {
-                Prologue::None
-            };
-            let want = (rows as u64) * (n as u64) * dtype.size_bytes() as u64;
-            if c.remaining() as u64 != want {
-                return Err(format!(
-                    "request payload is {} bytes, want rows {rows} * n {n} * {}B = {want}",
-                    c.remaining(),
-                    dtype.size_bytes()
-                ));
-            }
-            let payload = c.take(want as usize)?.to_vec();
+            let h = parse_request_header(&mut c)?;
+            let payload_len = c.remaining();
+            let payload = c.take(payload_len)?.to_vec();
             c.finish()?;
             Frame::Request(WireRequest {
-                id,
-                n,
-                rows,
-                kernel,
-                dtype,
-                scale,
-                force_native: flags & FLAG_FORCE_NATIVE != 0,
-                prologue,
-                epilogue,
+                id: h.id,
+                n: h.n,
+                rows: h.rows,
+                kernel: h.kernel,
+                dtype: h.dtype,
+                scale: h.scale,
+                force_native: h.force_native,
+                prologue: h.prologue,
+                epilogue: h.epilogue,
                 payload,
             })
         }
@@ -843,6 +884,259 @@ pub fn decode_frame(
     }
     let frame = parse_body(&buf[4..total])?;
     Ok(Some((frame, total)))
+}
+
+// ---------------------------------------------------------------------
+// The server's zero-copy request/response path.
+
+/// A transform request decoded **directly into a pooled buffer**: the
+/// payload bytes are widened to f32 in the same pass that parses the
+/// frame, landing in a [`PooledBuf`] from the server's pool — the one
+/// and only time the payload is materialised. No intermediate
+/// `Vec<u8>` payload copy, no second `Vec<f32>` decode.
+#[derive(Debug)]
+pub struct PooledRequest {
+    /// Client-assigned id.
+    pub id: u64,
+    /// Hadamard size.
+    pub n: u32,
+    /// Row count.
+    pub rows: u32,
+    /// Kernel implementation to run.
+    pub kernel: KernelKind,
+    /// The wire dtype the payload arrived in (and the response returns).
+    pub dtype: DType,
+    /// Output scaling (`None` = orthonormal).
+    pub scale: Option<f32>,
+    /// Force the native backend.
+    pub force_native: bool,
+    /// Fused sign-flip prologue.
+    pub prologue: Prologue,
+    /// Fused quantize epilogue.
+    pub epilogue: Epilogue,
+    /// The decoded f32 payload, pool-affiliated: it travels into the
+    /// coordinator, is transformed in place, comes back in the response,
+    /// is framed from directly, and returns to the pool on drop.
+    pub data: PooledBuf,
+}
+
+impl PooledRequest {
+    /// Hand the buffer to the coordinator. Shape consistency was
+    /// enforced during decode (strict `rows * n * elem_size` check).
+    pub fn into_transform(self) -> TransformRequest {
+        TransformRequest {
+            id: self.id,
+            n: self.n as usize,
+            rows: self.rows as usize,
+            data: self.data,
+            kernel: self.kernel,
+            scale: self.scale,
+            prologue: self.prologue,
+            epilogue: self.epilogue,
+            force_native: self.force_native,
+        }
+    }
+}
+
+/// What [`decode_server_frame`] yields: requests take the pooled fast
+/// path, everything else decodes as a regular [`Frame`].
+#[derive(Debug)]
+pub enum ServerFrame {
+    /// A transform request, payload already widened into a pooled buffer.
+    Request(PooledRequest),
+    /// Any other frame (ping, stats, or a client-misdirected frame the
+    /// connection loop answers with an error).
+    Control(Frame),
+}
+
+/// [`decode_frame`] specialised for the server's connection loop:
+/// request payloads decode straight into a buffer from `pool` (one
+/// widening pass, zero intermediate copies); every other frame falls
+/// back to [`parse_body`]. Same strictness, same `Ok(None)` = "need
+/// more bytes" contract.
+pub fn decode_server_frame(
+    buf: &[u8],
+    max_frame_bytes: u32,
+    pool: &BufferPool,
+) -> Result<Option<(ServerFrame, usize)>, String> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if len < 2 {
+        return Err(format!("frame length {len} is shorter than the header"));
+    }
+    if len > max_frame_bytes {
+        return Err(format!("frame length {len} exceeds cap {max_frame_bytes}"));
+    }
+    let total = 4 + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let body = &buf[4..total];
+    let mut c = Cursor::new(body);
+    let version = c.u8()?;
+    if version != WIRE_VERSION {
+        return Err(format!("unsupported wire version {version} (want {WIRE_VERSION})"));
+    }
+    if c.u8()? != TAG_REQUEST {
+        let frame = parse_body(body)?;
+        return Ok(Some((ServerFrame::Control(frame), total)));
+    }
+    let h = parse_request_header(&mut c)?;
+    let elems = (h.rows as usize) * (h.n as usize);
+    let mut data = pool.get(elems);
+    let payload_len = c.remaining();
+    // the header parser proved payload_len == rows * n * elem_size, so
+    // this extends exactly `elems` values into the reserved capacity —
+    // no reallocation on a pooled (shelf-hit) buffer
+    widen_into(c.take(payload_len)?, h.dtype, &mut data);
+    c.finish()?;
+    Ok(Some((
+        ServerFrame::Request(PooledRequest {
+            id: h.id,
+            n: h.n,
+            rows: h.rows,
+            kernel: h.kernel,
+            dtype: h.dtype,
+            scale: h.scale,
+            force_native: h.force_native,
+            prologue: h.prologue,
+            epilogue: h.epilogue,
+            data,
+        }),
+        total,
+    )))
+}
+
+/// Reusable response-frame builder for the server's writer thread: the
+/// length prefix, response header, and scale fields build into a
+/// retained scratch, and the payload is **a view of the response's own
+/// buffer** whenever the dtype allows (f32 on little-endian hosts: the
+/// wire format *is* the in-memory IEEE bit pattern). 16-bit dtypes (and
+/// big-endian hosts) narrow into a second retained scratch. Either way,
+/// framing a response performs no heap allocation in steady state —
+/// pair with [`write_frame_parts`] to put both parts on the socket in
+/// one vectored write.
+///
+/// The emitted bytes are identical to
+/// `Frame::Response(WireResponse::from_transform(..)).encode()` —
+/// enforced by this module's `framer_matches_frame_encode` test.
+#[derive(Debug, Default)]
+pub struct ResponseFramer {
+    header: Vec<u8>,
+    payload: Vec<u8>,
+}
+
+impl ResponseFramer {
+    /// An empty framer (scratch grows to steady size on first use).
+    pub fn new() -> ResponseFramer {
+        ResponseFramer { header: Vec::with_capacity(96), payload: Vec::new() }
+    }
+
+    /// Frame `resp` for the wire: returns `(prefix, payload)` where
+    /// `prefix` is the length prefix + full response header (scales
+    /// included) and `payload` is the encoded element bytes. Valid until
+    /// the next `frame` call.
+    pub fn frame<'a>(
+        &'a mut self,
+        resp: &'a TransformResponse,
+        n: u32,
+        dtype: DType,
+    ) -> (&'a [u8], &'a [u8]) {
+        let rows = if n == 0 { 0 } else { resp.data.len() / n as usize };
+        self.header.clear();
+        put_u32(&mut self.header, 0); // length prefix, patched below
+        self.header.push(WIRE_VERSION);
+        self.header.push(TAG_RESPONSE);
+        put_u64(&mut self.header, resp.id);
+        put_u32(&mut self.header, n);
+        put_u32(&mut self.header, rows as u32);
+        self.header.push(dtype_tag(dtype));
+        self.header.push((resp.backend == "pjrt") as u8);
+        put_u32(&mut self.header, resp.batch_rows as u32);
+        put_u64(&mut self.header, resp.queue_us);
+        put_u64(&mut self.header, resp.exec_us);
+        match &resp.scales {
+            QuantScales::None => self.header.push(0),
+            QuantScales::PerTensor(s) => {
+                self.header.push(1);
+                put_f32(&mut self.header, *s);
+            }
+            QuantScales::PerGroup(v) => {
+                self.header.push(2);
+                put_u32(&mut self.header, v.len() as u32);
+                for s in v {
+                    put_f32(&mut self.header, *s);
+                }
+            }
+        }
+        // f32 payloads on little-endian hosts go out as a raw view of
+        // the response buffer: `f32::to_le_bytes` is exactly the
+        // in-memory representation, so the bytes are identical to
+        // `encode_elems` without the copy
+        let direct = dtype == DType::F32 && cfg!(target_endian = "little");
+        if !direct {
+            self.payload.clear();
+            match dtype {
+                DType::F32 => {
+                    for v in resp.data.iter() {
+                        self.payload.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                DType::F16 => {
+                    for v in resp.data.iter() {
+                        self.payload
+                            .extend_from_slice(&F16::from_f32(*v).0.to_le_bytes());
+                    }
+                }
+                DType::BF16 => {
+                    for v in resp.data.iter() {
+                        self.payload
+                            .extend_from_slice(&BF16::from_f32(*v).0.to_le_bytes());
+                    }
+                }
+            }
+        }
+        let payload: &[u8] = if direct {
+            // SAFETY: f32 has no padding or invalid bit patterns; the
+            // view covers exactly the buffer's initialised elements and
+            // lives as long as `resp`'s borrow.
+            unsafe {
+                std::slice::from_raw_parts(
+                    resp.data.as_ptr().cast::<u8>(),
+                    resp.data.len() * 4,
+                )
+            }
+        } else {
+            &self.payload
+        };
+        let body_len = (self.header.len() - 4) + payload.len();
+        self.header[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+        (&self.header, payload)
+    }
+}
+
+/// Write a two-part frame ([`ResponseFramer::frame`] output) with one
+/// vectored syscall attempt, falling back to `write_all` for any
+/// remainder — the header and the payload hit the socket without ever
+/// being joined into a contiguous allocation.
+pub fn write_frame_parts<W: std::io::Write>(
+    w: &mut W,
+    header: &[u8],
+    payload: &[u8],
+) -> std::io::Result<()> {
+    use std::io::IoSlice;
+    let mut wrote =
+        w.write_vectored(&[IoSlice::new(header), IoSlice::new(payload)])?;
+    if wrote >= header.len() + payload.len() {
+        return Ok(());
+    }
+    if wrote < header.len() {
+        w.write_all(&header[wrote..])?;
+        wrote = header.len();
+    }
+    w.write_all(&payload[wrote - header.len()..])
 }
 
 /// Failure modes of [`read_frame`].
@@ -1107,6 +1401,121 @@ mod tests {
         let mut bad = r;
         bad.rows = 5;
         assert!(bad.to_transform().is_err());
+    }
+
+    #[test]
+    fn pooled_decode_matches_parse_body_on_identical_bytes() {
+        let pool = BufferPool::new(8);
+        let mut variants = Vec::new();
+        for dtype in [DType::F32, DType::F16, DType::BF16] {
+            let mut r = WireRequest::from_f32(
+                42,
+                8,
+                &[1.0, -2.5, 0.25, 3.0, -0.5, 8.0, 0.0, -1.0],
+                KernelKind::HadaCore,
+                dtype,
+            );
+            r.scale = Some(2.5);
+            r.force_native = true;
+            r.prologue = Prologue::SignFlip { seed: 0x5EED };
+            r.epilogue = Epilogue::QuantInt8 { group: 4 };
+            variants.push(r);
+        }
+        variants.push(req_frame_inner());
+        for wr in variants {
+            let bytes = Frame::Request(wr.clone()).encode();
+            let want = wr.to_transform().unwrap();
+            let (sf, used) =
+                decode_server_frame(&bytes, DEFAULT_MAX_FRAME_BYTES, &pool)
+                    .unwrap()
+                    .unwrap();
+            assert_eq!(used, bytes.len());
+            let pr = match sf {
+                ServerFrame::Request(pr) => pr,
+                other => panic!("want Request, got {other:?}"),
+            };
+            assert!(pr.data.is_pooled(), "server decode must use the pool");
+            let got = pr.into_transform();
+            assert_eq!(got.id, want.id);
+            assert_eq!((got.n, got.rows), (want.n, want.rows));
+            assert_eq!(got.kernel, want.kernel);
+            assert_eq!(got.scale, want.scale);
+            assert_eq!(got.force_native, want.force_native);
+            assert_eq!(got.prologue, want.prologue);
+            assert_eq!(got.epilogue, want.epilogue);
+            assert_eq!(got.data, want.data, "widened payloads must be bit-equal");
+        }
+        // non-request frames fall through as Control, byte-compatible
+        // with the plain decoder
+        let ping = Frame::Ping { id: 3 }.encode();
+        match decode_server_frame(&ping, DEFAULT_MAX_FRAME_BYTES, &pool).unwrap() {
+            Some((ServerFrame::Control(f), _)) => {
+                assert_eq!(f, Frame::Ping { id: 3 })
+            }
+            other => panic!("want Control(Ping), got {other:?}"),
+        }
+        // incomplete prefixes still ask for more
+        assert!(decode_server_frame(&ping[..3], DEFAULT_MAX_FRAME_BYTES, &pool)
+            .unwrap()
+            .is_none());
+        // malformed input still errors (and leaks no pooled buffer —
+        // covered by tests/zero_alloc_pool.rs end to end)
+        let mut bad = req_frame().encode();
+        bad[4] = 9; // bad version
+        assert!(decode_server_frame(&bad, DEFAULT_MAX_FRAME_BYTES, &pool).is_err());
+    }
+
+    fn req_frame_inner() -> WireRequest {
+        match req_frame() {
+            Frame::Request(r) => r,
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn framer_matches_frame_encode() {
+        let mut framer = ResponseFramer::new();
+        for dtype in [DType::F32, DType::F16, DType::BF16] {
+            for scales in [
+                QuantScales::None,
+                QuantScales::PerTensor(0.125),
+                QuantScales::PerGroup(vec![0.5, 2.0, -1.25, 3.0]),
+            ] {
+                let resp = TransformResponse {
+                    id: 77,
+                    data: vec![1.0f32, -2.5, 0.25, 3.0, -0.5, 8.0, 0.0, -1.0]
+                        .into(),
+                    queue_us: 12,
+                    exec_us: 34,
+                    batch_rows: 4,
+                    backend: "native",
+                    scales: scales.clone(),
+                };
+                let want = Frame::Response(WireResponse::from_transform(
+                    &resp,
+                    4,
+                    dtype,
+                ))
+                .encode();
+                let (header, payload) = framer.frame(&resp, 4, dtype);
+                let got: Vec<u8> =
+                    header.iter().chain(payload.iter()).copied().collect();
+                assert_eq!(got, want, "dtype={dtype:?} scales={scales:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_frame_parts_concatenates() {
+        let mut out = Vec::new();
+        write_frame_parts(&mut out, b"head", b"payload").unwrap();
+        assert_eq!(out, b"headpayload");
+        let mut out = Vec::new();
+        write_frame_parts(&mut out, b"", b"p").unwrap();
+        assert_eq!(out, b"p");
+        let mut out = Vec::new();
+        write_frame_parts(&mut out, b"h", b"").unwrap();
+        assert_eq!(out, b"h");
     }
 
     #[test]

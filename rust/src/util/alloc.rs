@@ -1,0 +1,175 @@
+//! Thread-aware allocation counting for the zero-alloc serving gate.
+//!
+//! [`CountingAlloc`] is a [`GlobalAlloc`] that delegates every call to
+//! [`System`] and, for **tracked threads only**, bumps process-wide
+//! counters on each allocation. The serving stack marks its own threads
+//! (acceptor, per-connection reader/writer, coordinator workers, exec
+//! pool workers) as tracked at spawn; load-generator client threads stay
+//! untracked, so a self-hosted `loadgen` run measures exactly the
+//! server-side request path and nothing else.
+//!
+//! The allocator is only *installed* when the `count-alloc` cargo
+//! feature is enabled (a `#[global_allocator]` item in the binary and in
+//! the zero-alloc integration test). Everything here is still compiled
+//! and callable without the feature — [`track_current_thread`] is then a
+//! cheap no-op flag write and [`is_counting`] reports `false`, so the
+//! serving layer calls it unconditionally.
+//!
+//! Implementation notes for correctness inside `GlobalAlloc`:
+//! * the per-thread tracked flag is a **const-initialised**
+//!   `thread_local!` `Cell<bool>` — no lazy initialisation (which could
+//!   allocate) and no destructor (so no TLS re-entrancy at thread exit);
+//!   reads go through `try_with`, which returns an error instead of
+//!   panicking during thread teardown.
+//! * counters are relaxed atomics; callers snapshot before/after a
+//!   measured window ([`tracked`]) and look at the delta, so no
+//!   ordering edge beyond the caller's own synchronisation is needed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Allocation calls observed on tracked threads.
+static TRACKED_ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Bytes requested by those calls.
+static TRACKED_BYTES: AtomicU64 = AtomicU64::new(0);
+/// Whether a [`CountingAlloc`] is installed as the global allocator
+/// (set by [`mark_installed`] from the registration site).
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    // Const-init: safe to read from inside the allocator (doc above).
+    static TRACK_THIS_THREAD: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Counting global allocator; see the module doc. Install with
+/// `#[global_allocator]` behind the `count-alloc` feature and call
+/// [`mark_installed`] once at startup.
+pub struct CountingAlloc;
+
+#[inline]
+fn record(bytes: usize) {
+    let tracked = TRACK_THIS_THREAD.try_with(Cell::get).unwrap_or(false);
+    if tracked {
+        TRACKED_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        TRACKED_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+}
+
+// SAFETY: pure delegation to `System`; the only additions are atomic
+// counter bumps and a const-init TLS read, neither of which allocates
+// or re-enters the allocator.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        // a grow is the allocation the serving path must not perform
+        record(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Record that a [`CountingAlloc`] is the process's global allocator.
+/// Called once from the `count-alloc`-gated registration site; without
+/// it, [`is_counting`] stays `false` and zero-alloc assertions know the
+/// measurement is inactive rather than vacuously passing.
+pub fn mark_installed() {
+    INSTALLED.store(true, Ordering::Relaxed);
+}
+
+/// Whether allocation counting is live (allocator installed).
+pub fn is_counting() -> bool {
+    INSTALLED.load(Ordering::Relaxed)
+}
+
+/// Mark (or unmark) the current thread as tracked. Serving threads call
+/// this at spawn, unconditionally — without the `count-alloc` feature it
+/// is a no-op flag write.
+pub fn track_current_thread(enable: bool) {
+    let _ = TRACK_THIS_THREAD.try_with(|c| c.set(enable));
+}
+
+/// Whether the current thread is tracked (test hook).
+pub fn current_thread_tracked() -> bool {
+    TRACK_THIS_THREAD.try_with(Cell::get).unwrap_or(false)
+}
+
+/// Point-in-time totals of tracked-thread allocation activity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    /// Allocation calls (alloc / alloc_zeroed / realloc-grow).
+    pub allocs: u64,
+    /// Bytes requested by those calls.
+    pub bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Counters accrued since `earlier` (saturating).
+    pub fn since(&self, earlier: AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            allocs: self.allocs.saturating_sub(earlier.allocs),
+            bytes: self.bytes.saturating_sub(earlier.bytes),
+        }
+    }
+}
+
+/// Snapshot the tracked-thread counters.
+pub fn tracked() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: TRACKED_ALLOCS.load(Ordering::Relaxed),
+        bytes: TRACKED_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracking_flag_is_per_thread() {
+        track_current_thread(true);
+        assert!(current_thread_tracked());
+        let other = std::thread::spawn(current_thread_tracked)
+            .join()
+            .unwrap();
+        assert!(!other, "a new thread must start untracked");
+        track_current_thread(false);
+        assert!(!current_thread_tracked());
+    }
+
+    #[test]
+    fn snapshot_delta_is_saturating_and_monotone() {
+        let a = tracked();
+        let b = tracked();
+        let d = b.since(a);
+        // counters only move when the allocator is installed AND the
+        // thread is tracked; either way the delta is well-formed
+        assert!(d.allocs <= b.allocs);
+        assert_eq!(a.since(b).allocs, 0, "reverse delta saturates to zero");
+    }
+
+    #[test]
+    fn counting_inactive_without_registration() {
+        // this test binary does not register the allocator; the flag
+        // must reflect that so zero-alloc asserts can refuse to pass
+        // vacuously (the count-alloc loadgen run calls mark_installed)
+        assert!(!is_counting());
+    }
+}

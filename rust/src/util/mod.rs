@@ -15,12 +15,18 @@
 //! * [`prop`] — mini property-based test driver (random cases + replay seed).
 //! * [`error`] — message-carrying error type + context chaining (mini-anyhow).
 //! * [`lazy`] — lazily-initialised statics over [`std::sync::OnceLock`].
+//! * [`pool`] — size-classed f32 buffer pool with RAII return (the
+//!   zero-copy serving path's payload storage).
+//! * [`alloc`] — thread-aware counting global allocator (installed behind
+//!   the `count-alloc` feature) proving the zero-alloc steady state.
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod f16;
 pub mod json;
 pub mod lazy;
+pub mod pool;
 pub mod prop;
 pub mod rng;

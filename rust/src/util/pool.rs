@@ -1,0 +1,506 @@
+//! Size-classed f32 buffer pool with RAII return — the allocation-free
+//! substrate of the zero-copy serving path.
+//!
+//! A request payload lands in a [`PooledBuf`] once, at wire decode, and
+//! that same buffer is transformed in place and framed into the response
+//! bytes; when the response is dropped (after its bytes hit the socket)
+//! the buffer's `Drop` returns it to the pool for the next request. In
+//! steady state the serve path therefore performs **zero** payload
+//! allocations per request — the property the `count-alloc` gate
+//! measures (see [`crate::util::alloc`]).
+//!
+//! Design:
+//! * **power-of-two size classes** from [`MIN_CLASS_ELEMS`] up to
+//!   [`MAX_CLASS_ELEMS`]; a `get(len)` rounds up to its class so a
+//!   returned buffer is reusable by any request of the same class, not
+//!   just the same exact size. Requests above the top class fall back to
+//!   a plain allocation that is *not* pooled (dropped normally) — they
+//!   are outside the serving sweet spot and must not pin huge buffers.
+//! * **bounded shelves**: each class keeps at most `shelf_cap` idle
+//!   buffers (shelf vectors are pre-reserved, so returning a buffer
+//!   never allocates). A return to a full shelf frees the buffer.
+//! * **RAII**: [`PooledBuf`] derefs to `Vec<f32>` and returns itself on
+//!   `Drop`, so every exit path — response written, request shed Busy,
+//!   connection torn down mid-flight, malformed follow-up frame — gives
+//!   the buffer back without bookkeeping at the call sites.
+//! * **unpooled shim**: `From<Vec<f32>>` wraps a caller-owned vector
+//!   without pool affiliation, keeping the public
+//!   `Coordinator::transform` / test API source-compatible: such buffers
+//!   simply drop like the `Vec` they wrap.
+//!
+//! [`serve_pool`] is the process-wide pool the TCP serving layer decodes
+//! into; unit tests build private pools via [`BufferPool::new`].
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::lazy::Lazy;
+
+/// Smallest pooled capacity: 256 f32 (1 KiB) — one interactive-mix row.
+pub const MIN_CLASS_ELEMS: usize = 1 << 8;
+/// Largest pooled capacity: 4 Mi f32 (16 MiB) — covers the router's
+/// default per-request ceiling (`2^16` rows) at serving row lengths.
+pub const MAX_CLASS_ELEMS: usize = 1 << 22;
+/// Number of power-of-two classes in `[MIN_CLASS_ELEMS, MAX_CLASS_ELEMS]`.
+const NUM_CLASSES: usize = 15;
+/// Default idle buffers retained per class.
+const DEFAULT_SHELF_CAP: usize = 32;
+
+/// Class that can satisfy a request for `elems` (round capacity *up*),
+/// or `None` above the top class.
+fn class_for_request(elems: usize) -> Option<usize> {
+    if elems > MAX_CLASS_ELEMS {
+        return None;
+    }
+    let cap = elems.max(MIN_CLASS_ELEMS).next_power_of_two();
+    Some(cap.trailing_zeros() as usize - MIN_CLASS_ELEMS.trailing_zeros() as usize)
+}
+
+/// Class a buffer of `capacity` can serve (round *down*): its capacity
+/// covers every request of that class or below.
+fn class_for_capacity(capacity: usize) -> Option<usize> {
+    if capacity < MIN_CLASS_ELEMS {
+        return None;
+    }
+    let idx = (usize::BITS - 1 - capacity.leading_zeros()) as usize
+        - MIN_CLASS_ELEMS.trailing_zeros() as usize;
+    Some(idx.min(NUM_CLASSES - 1))
+}
+
+/// Capacity (elements) of class `idx`.
+fn class_elems(idx: usize) -> usize {
+    MIN_CLASS_ELEMS << idx
+}
+
+struct PoolInner {
+    shelves: Vec<Mutex<Vec<Vec<f32>>>>,
+    shelf_cap: usize,
+    allocated: AtomicU64,
+    reused: AtomicU64,
+    returned: AtomicU64,
+    shelf_full_drops: AtomicU64,
+    unpooled: AtomicU64,
+    detached: AtomicU64,
+    outstanding: AtomicI64,
+}
+
+impl PoolInner {
+    /// Return a buffer to its (floor) class shelf, or free it if the
+    /// shelf is full. The shelf vector is pre-reserved to `shelf_cap`,
+    /// so the push itself never allocates.
+    fn put(&self, mut buf: Vec<f32>) {
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+        self.returned.fetch_add(1, Ordering::Relaxed);
+        let Some(class) = class_for_capacity(buf.capacity()) else {
+            self.shelf_full_drops.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        buf.clear();
+        let mut shelf = self.shelves[class].lock().unwrap();
+        if shelf.len() < self.shelf_cap {
+            shelf.push(buf);
+        } else {
+            drop(shelf);
+            self.shelf_full_drops.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Counter snapshot of a [`BufferPool`]; the leak-detection tests key on
+/// `outstanding` returning to its baseline after traffic drains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers created because no shelf had one (warmup / bursts).
+    pub allocated: u64,
+    /// `get` calls satisfied from a shelf — the zero-alloc hits.
+    pub reused: u64,
+    /// Buffers handed back through `Drop`.
+    pub returned: u64,
+    /// Returns that freed the buffer (full shelf or off-class capacity).
+    pub shelf_full_drops: u64,
+    /// `get` calls above [`MAX_CLASS_ELEMS`] served unpooled.
+    pub unpooled: u64,
+    /// Pooled buffers whose storage was detached via
+    /// [`PooledBuf::into_vec`] (ownership transfers, not leaks).
+    pub detached: u64,
+    /// Pool-affiliated buffers currently held by callers.
+    pub outstanding: i64,
+}
+
+/// Size-classed pool of reusable `Vec<f32>` payload buffers (module doc).
+/// Cheap to clone-share internally; all methods take `&self`.
+pub struct BufferPool {
+    inner: Arc<PoolInner>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new(DEFAULT_SHELF_CAP)
+    }
+}
+
+impl BufferPool {
+    /// A pool retaining at most `shelf_cap` idle buffers per size class.
+    pub fn new(shelf_cap: usize) -> BufferPool {
+        let shelf_cap = shelf_cap.max(1);
+        let shelves = (0..NUM_CLASSES)
+            .map(|_| Mutex::new(Vec::with_capacity(shelf_cap)))
+            .collect();
+        BufferPool {
+            inner: Arc::new(PoolInner {
+                shelves,
+                shelf_cap,
+                allocated: AtomicU64::new(0),
+                reused: AtomicU64::new(0),
+                returned: AtomicU64::new(0),
+                shelf_full_drops: AtomicU64::new(0),
+                unpooled: AtomicU64::new(0),
+                detached: AtomicU64::new(0),
+                outstanding: AtomicI64::new(0),
+            }),
+        }
+    }
+
+    /// An **empty** buffer with capacity for at least `elems` elements.
+    /// Callers fill it with `extend`/`push` (the wire decoder widens
+    /// directly into it); no zero-fill pass is paid.
+    pub fn get(&self, elems: usize) -> PooledBuf {
+        let Some(class) = class_for_request(elems) else {
+            // above the top class: plain allocation, not pooled
+            self.inner.unpooled.fetch_add(1, Ordering::Relaxed);
+            return PooledBuf { data: Vec::with_capacity(elems), pool: None };
+        };
+        let recycled = self.inner.shelves[class].lock().unwrap().pop();
+        let data = match recycled {
+            Some(buf) => {
+                self.inner.reused.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.inner.allocated.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(class_elems(class))
+            }
+        };
+        self.inner.outstanding.fetch_add(1, Ordering::Relaxed);
+        PooledBuf { data, pool: Some(Arc::clone(&self.inner)) }
+    }
+
+    /// A pooled buffer filled with a copy of `src` (convenience for the
+    /// scatter paths that cannot reuse a request buffer, e.g. PJRT).
+    pub fn get_copy(&self, src: &[f32]) -> PooledBuf {
+        let mut buf = self.get(src.len());
+        buf.extend_from_slice(src);
+        buf
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PoolStats {
+        let i = &self.inner;
+        PoolStats {
+            allocated: i.allocated.load(Ordering::Relaxed),
+            reused: i.reused.load(Ordering::Relaxed),
+            returned: i.returned.load(Ordering::Relaxed),
+            shelf_full_drops: i.shelf_full_drops.load(Ordering::Relaxed),
+            unpooled: i.unpooled.load(Ordering::Relaxed),
+            detached: i.detached.load(Ordering::Relaxed),
+            outstanding: i.outstanding.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Buffers currently held by callers (0 == no leaks).
+    pub fn outstanding(&self) -> i64 {
+        self.inner.outstanding.load(Ordering::Relaxed)
+    }
+}
+
+impl Clone for BufferPool {
+    fn clone(&self) -> Self {
+        BufferPool { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("BufferPool").field("stats", &self.stats()).finish()
+    }
+}
+
+/// The process-wide pool the TCP serving layer decodes request payloads
+/// into (one shared pool: a connection's buffers are reusable by every
+/// other connection, which is what keeps bursty multi-client traffic
+/// allocation-free).
+static SERVE_POOL: Lazy<BufferPool> = Lazy::new(BufferPool::default);
+
+/// The shared serving pool.
+pub fn serve_pool() -> &'static BufferPool {
+    &SERVE_POOL
+}
+
+/// An owned f32 payload buffer, optionally affiliated with a
+/// [`BufferPool`] it returns to on `Drop`. Derefs to `Vec<f32>`, so all
+/// existing `&resp.data` / `resp.data.len()` call sites compile
+/// unchanged; `From<Vec<f32>>` keeps `TransformRequest::new(id, n, vec)`
+/// source-compatible (such buffers are unpooled and drop normally).
+pub struct PooledBuf {
+    data: Vec<f32>,
+    pool: Option<Arc<PoolInner>>,
+}
+
+impl PooledBuf {
+    /// Wrap a caller-owned vector without pool affiliation.
+    pub fn unpooled(data: Vec<f32>) -> PooledBuf {
+        PooledBuf { data, pool: None }
+    }
+
+    /// Whether this buffer returns to a pool on drop.
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Detach the underlying vector (the buffer does **not** return to
+    /// its pool — the caller now owns the storage outright). This is an
+    /// ownership transfer, not a leak: the pool's `outstanding` gauge is
+    /// released and the detach is counted in [`PoolStats::detached`].
+    pub fn into_vec(mut self) -> Vec<f32> {
+        if let Some(pool) = self.pool.take() {
+            pool.outstanding.fetch_sub(1, Ordering::Relaxed);
+            pool.detached.fetch_add(1, Ordering::Relaxed);
+        }
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+impl Deref for PooledBuf {
+    type Target = Vec<f32>;
+    fn deref(&self) -> &Vec<f32> {
+        &self.data
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.data
+    }
+}
+
+impl From<Vec<f32>> for PooledBuf {
+    fn from(data: Vec<f32>) -> PooledBuf {
+        PooledBuf::unpooled(data)
+    }
+}
+
+/// Deep copy, **unpooled** — cloning is a test/debug convenience and must
+/// not silently multiply claims on a pool shelf.
+impl Clone for PooledBuf {
+    fn clone(&self) -> Self {
+        PooledBuf::unpooled(self.data.clone())
+    }
+}
+
+impl fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.data.fmt(f)
+    }
+}
+
+impl PartialEq for PooledBuf {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        self.data == other.data
+    }
+}
+
+impl PartialEq<Vec<f32>> for PooledBuf {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        &self.data == other
+    }
+}
+
+impl PartialEq<PooledBuf> for Vec<f32> {
+    fn eq(&self, other: &PooledBuf) -> bool {
+        self == &other.data
+    }
+}
+
+impl PartialEq<[f32]> for PooledBuf {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.data.as_slice() == other
+    }
+}
+
+impl PartialEq<&[f32]> for PooledBuf {
+    fn eq(&self, other: &&[f32]) -> bool {
+        self.data.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_rounding_up_and_down() {
+        assert_eq!(class_for_request(0), Some(0));
+        assert_eq!(class_for_request(1), Some(0));
+        assert_eq!(class_for_request(256), Some(0));
+        assert_eq!(class_for_request(257), Some(1));
+        assert_eq!(class_for_request(512), Some(1));
+        assert_eq!(class_for_request(MAX_CLASS_ELEMS), Some(NUM_CLASSES - 1));
+        assert_eq!(class_for_request(MAX_CLASS_ELEMS + 1), None);
+
+        assert_eq!(class_for_capacity(255), None);
+        assert_eq!(class_for_capacity(256), Some(0));
+        assert_eq!(class_for_capacity(511), Some(0));
+        assert_eq!(class_for_capacity(512), Some(1));
+        // capacities above the top class still land on the top shelf
+        assert_eq!(class_for_capacity(MAX_CLASS_ELEMS * 2), Some(NUM_CLASSES - 1));
+        // round-trip: a request's class capacity serves that request
+        for elems in [1usize, 100, 256, 300, 4096, 14336, 1 << 20] {
+            let class = class_for_request(elems).unwrap();
+            assert!(class_elems(class) >= elems);
+            assert_eq!(class_for_capacity(class_elems(class)), Some(class));
+        }
+    }
+
+    #[test]
+    fn get_returns_empty_buffer_with_capacity() {
+        let pool = BufferPool::new(4);
+        let buf = pool.get(1000);
+        assert!(buf.is_empty());
+        assert!(buf.capacity() >= 1000);
+        assert!(buf.is_pooled());
+        assert_eq!(pool.outstanding(), 1);
+    }
+
+    #[test]
+    fn drop_returns_and_get_reuses() {
+        let pool = BufferPool::new(4);
+        let ptr = {
+            let mut buf = pool.get(512);
+            buf.extend_from_slice(&[1.0; 512]);
+            buf.as_ptr()
+        };
+        let s = pool.stats();
+        assert_eq!((s.allocated, s.returned, s.outstanding), (1, 1, 0));
+        // the same storage comes back, cleared
+        let buf = pool.get(512);
+        assert_eq!(buf.as_ptr(), ptr);
+        assert!(buf.is_empty());
+        assert_eq!(pool.stats().reused, 1);
+    }
+
+    #[test]
+    fn different_sizes_share_a_class_shelf() {
+        let pool = BufferPool::new(4);
+        drop(pool.get(300)); // class 1 (512)
+        let buf = pool.get(512); // same class: reuse
+        assert_eq!(pool.stats().reused, 1);
+        drop(buf);
+        let _big = pool.get(4096); // class 4: fresh allocation
+        assert_eq!(pool.stats().allocated, 2);
+    }
+
+    #[test]
+    fn shelf_cap_bounds_retention() {
+        let pool = BufferPool::new(2);
+        let bufs: Vec<PooledBuf> = (0..5).map(|_| pool.get(256)).collect();
+        assert_eq!(pool.stats().allocated, 5);
+        drop(bufs);
+        let s = pool.stats();
+        assert_eq!(s.returned, 5);
+        assert_eq!(s.shelf_full_drops, 3, "only shelf_cap buffers retained");
+        assert_eq!(s.outstanding, 0);
+    }
+
+    #[test]
+    fn oversized_requests_are_unpooled() {
+        let pool = BufferPool::new(4);
+        let buf = pool.get(MAX_CLASS_ELEMS + 1);
+        assert!(!buf.is_pooled());
+        assert!(buf.capacity() > MAX_CLASS_ELEMS);
+        drop(buf);
+        let s = pool.stats();
+        assert_eq!(s.unpooled, 1);
+        assert_eq!(s.outstanding, 0, "unpooled buffers never count outstanding");
+    }
+
+    #[test]
+    fn unpooled_shim_and_into_vec() {
+        let pool = BufferPool::new(4);
+        let shim: PooledBuf = vec![1.0f32, 2.0].into();
+        assert!(!shim.is_pooled());
+        assert_eq!(shim, vec![1.0f32, 2.0]);
+        drop(shim); // plain drop, no pool interaction
+
+        let mut buf = pool.get(256);
+        buf.push(3.0);
+        let v = buf.into_vec();
+        assert_eq!(v, vec![3.0f32]);
+        // detached: the pool never gets it back, and the gauge must not
+        // stay pinned — into_vec is an ownership transfer, not a leak
+        let s = pool.stats();
+        assert_eq!(s.returned, 0);
+        assert_eq!(s.detached, 1);
+        assert_eq!(s.outstanding, 0);
+    }
+
+    #[test]
+    fn clone_is_deep_and_unpooled() {
+        let pool = BufferPool::new(4);
+        let mut buf = pool.get(256);
+        buf.extend_from_slice(&[5.0; 8]);
+        let c = buf.clone();
+        assert!(!c.is_pooled());
+        assert_eq!(c, buf);
+        drop(buf);
+        assert_eq!(pool.outstanding(), 0);
+        assert_eq!(c.len(), 8);
+    }
+
+    #[test]
+    fn equality_across_vec_and_slice() {
+        let b = PooledBuf::unpooled(vec![1.0f32, 2.0, 3.0]);
+        assert_eq!(b, vec![1.0f32, 2.0, 3.0]);
+        assert_eq!(vec![1.0f32, 2.0, 3.0], b);
+        assert_eq!(b, [1.0f32, 2.0, 3.0][..]);
+        assert!(b != vec![1.0f32, 2.0]);
+    }
+
+    #[test]
+    fn concurrent_get_put_is_leak_free() {
+        let pool = BufferPool::new(8);
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for i in 0..200 {
+                        let elems = 256 << ((t + i) % 4);
+                        let mut buf = pool.get(elems);
+                        buf.resize(elems, t as f32);
+                        assert!(buf.iter().all(|&v| v == t as f32));
+                    }
+                });
+            }
+        });
+        let s = pool.stats();
+        assert_eq!(s.outstanding, 0);
+        assert!(s.reused > 0, "contended traffic must hit the shelves");
+        assert_eq!(s.allocated + s.reused, 8 * 200);
+    }
+
+    #[test]
+    fn serve_pool_is_shared() {
+        let a = serve_pool();
+        let b = serve_pool();
+        assert!(std::ptr::eq(a, b));
+    }
+}
