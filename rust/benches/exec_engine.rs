@@ -12,6 +12,12 @@
 //! perf trajectory. The file is re-read and schema-validated before the
 //! binary exits, so a malformed emission fails the run.
 //!
+//! Every run additionally writes `BENCH_PR8.json` (override with
+//! `HADACORE_BENCH_PR8_JSON`): the scalar-table-vs-SIMD dispatch
+//! comparison per (size × fusion depth), with the backend each case ran
+//! under recorded in the `bench` field (`simd:<backend>`) and the
+//! vector width in the `simd_lanes` extra.
+//!
 //! The headline numbers are the **pool speedup** — batch throughput with
 //! the worker pool over the same batch on one thread — and the **fusion
 //! speedup** — the tuned multi-round tile traversal over the classic
@@ -138,6 +144,90 @@ fn fusion_sweep(
     }
 }
 
+/// Scalar-table-vs-SIMD dispatch comparison (ISSUE 8): per (size ×
+/// fusion depth), bench the direct planned kernel once under the forced
+/// scalar table and once under the auto-detected vector backend, and
+/// print the throughput ratio. Records land in the PR8 trajectory file:
+/// `bench` = `simd:<backend>` names the table each case ran under,
+/// `simd_lanes` carries the vector width (1 = scalar). When no vector
+/// ISA is reachable (or `HADACORE_SIMD=off` froze the choice) only the
+/// scalar rows are emitted — the file still records which backend was
+/// active.
+fn simd_compare(
+    sizes: &[usize],
+    elems: usize,
+    cfg: &BenchConfig,
+    wl: &mut ServingWorkload,
+    out: &mut BenchJson,
+) {
+    use hadacore::hadamard::simd::{self, Backend};
+    let best = simd::detect();
+    println!(
+        "\n## simd dispatch compare (forced scalar table vs {}, direct planned kernel)",
+        best.name()
+    );
+    let prev = simd::active();
+    let mut backends = vec![Backend::Scalar];
+    if best != Backend::Scalar {
+        backends.push(best);
+    }
+    for &n in sizes {
+        let rows = (elems / n).max(1);
+        let base = wl.next_matrix(rows, n);
+        let opts = FwhtOptions::normalized(n);
+        let plan = HadaCorePlan::new(n, &HadaCoreConfig::default());
+        for depth in 1..=plan.max_fusion_depth() {
+            let mut scalar_ns = f64::NAN;
+            for &backend in &backends {
+                simd::force(backend).expect("compare backend reachable");
+                let b = base.clone();
+                let mut buf = base.clone();
+                let p = plan.clone();
+                let s = bench(
+                    &format!("simd_{}_d{depth}_{rows}x{n}", backend.name()),
+                    cfg,
+                    move |_| {
+                        buf.copy_from_slice(&b);
+                        fwht_hadacore_f32_planned_depth(&mut buf, &p, &opts, depth);
+                        buf[0]
+                    },
+                );
+                println!("{}", s.line());
+                if backend == Backend::Scalar {
+                    scalar_ns = s.median_ns;
+                } else {
+                    println!(
+                        "    -> simd speedup vs scalar table: {:.2}x ({} lanes)",
+                        scalar_ns / s.median_ns,
+                        backend.lanes()
+                    );
+                }
+                out.push(
+                    BenchRecord::new(
+                        &format!("simd:{}", backend.name()),
+                        "hadacore",
+                        n,
+                        rows,
+                        DType::F32.name(),
+                        depth,
+                        0,
+                        s,
+                    )
+                    .with_extra("simd_lanes", backend.lanes() as f64),
+                );
+            }
+        }
+    }
+    simd::force(prev).expect("restore backend after compare");
+}
+
+/// Resolve the PR8 trajectory path: `HADACORE_BENCH_PR8_JSON` env
+/// override, else `BENCH_PR8.json` in the cargo working directory.
+fn pr8_json_path() -> String {
+    std::env::var("HADACORE_BENCH_PR8_JSON")
+        .unwrap_or_else(|_| "BENCH_PR8.json".to_string())
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -170,6 +260,9 @@ fn main() {
             &mut out,
         );
         finish_json(&out, &json_path);
+        let mut out8 = BenchJson::new();
+        simd_compare(&[256, 768], 1 << 14, &cfg, &mut wl, &mut out8);
+        finish_json(&out8, &pr8_json_path());
         return;
     }
 
@@ -327,6 +420,11 @@ fn main() {
     ));
 
     finish_json(&out, &json_path);
+
+    // -- scalar table vs SIMD dispatch (the PR8 trajectory) ------------
+    let mut out8 = BenchJson::new();
+    simd_compare(&[256, 1024, 4096, 14336], elems, &cfg, &mut wl, &mut out8);
+    finish_json(&out8, &pr8_json_path());
 }
 
 /// Write + re-validate the machine-readable output; a malformed emission

@@ -247,7 +247,10 @@ pub struct ExecStats {
     pub fused_runs: AtomicU64,
 }
 
-/// Point-in-time copy of [`ExecStats`].
+/// Point-in-time copy of [`ExecStats`], plus the process-wide SIMD
+/// dispatch state (which vector backend the butterfly kernels run on,
+/// and how many dispatches it has served — the non-vacuity signal the
+/// forced-dispatch test matrix asserts on).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ExecStatsSnapshot {
     pub jobs: u64,
@@ -257,10 +260,17 @@ pub struct ExecStatsSnapshot {
     pub epilogue_runs: u64,
     pub prologue_runs: u64,
     pub fused_runs: u64,
+    /// Name of the active [`crate::hadamard::simd::Backend`]
+    /// (process-wide, not per-engine).
+    pub simd_backend: &'static str,
+    /// Kernel dispatches the active backend has served so far
+    /// (process-wide monotone counter).
+    pub simd_dispatches: u64,
 }
 
 impl ExecStats {
     fn snapshot(&self) -> ExecStatsSnapshot {
+        let backend = crate::hadamard::simd::active();
         ExecStatsSnapshot {
             jobs: self.jobs.load(Ordering::Relaxed),
             inline_runs: self.inline_runs.load(Ordering::Relaxed),
@@ -269,6 +279,8 @@ impl ExecStats {
             epilogue_runs: self.epilogue_runs.load(Ordering::Relaxed),
             prologue_runs: self.prologue_runs.load(Ordering::Relaxed),
             fused_runs: self.fused_runs.load(Ordering::Relaxed),
+            simd_backend: backend.name(),
+            simd_dispatches: crate::hadamard::simd::dispatch_count(backend),
         }
     }
 }
@@ -484,8 +496,9 @@ impl ExecEngine {
         if !prologue.is_none() {
             self.stats.prologue_runs.fetch_add(1, Ordering::Relaxed);
         }
-        // materialise the sign vector once per run; chunks share it
-        let signs: Option<Arc<Vec<f32>>> = prologue.signs(n).map(Arc::new);
+        // the sign vector is served from the process-wide (seed, n)
+        // cache — zero-alloc after warmup; chunks share the Arc
+        let signs: Option<Arc<Vec<f32>>> = prologue.signs_cached(n);
         let plan = plan_for(kind, n);
         // the autotuned fusion depth + chunk refinement for this shape
         // (memoized; a hash lookup after first use). An env-pinned chunk
@@ -704,7 +717,7 @@ impl ExecEngine {
         if !prologue.is_none() {
             self.stats.prologue_runs.fetch_add(1, Ordering::Relaxed);
         }
-        let signs: Option<Arc<Vec<f32>>> = prologue.signs(n).map(Arc::new);
+        let signs: Option<Arc<Vec<f32>>> = prologue.signs_cached(n);
         let plan = plan_for(kind, n);
         let tuning =
             tune::tuning_for_plan(&self.cfg, &plan, rows, <f32 as Element>::DTYPE);

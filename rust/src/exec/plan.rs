@@ -13,9 +13,11 @@
 //! it is a hash lookup.
 //!
 //! The same module memoizes the autotuner's one-shot micro-measurement
-//! ([`measurement_for`]) per `(kernel, n)`: the fastest fusion depth
-//! and the observed per-element cost are host physics, not engine
-//! configuration, so every engine in the process shares them. The
+//! ([`measurement_for`]) per `(kernel, n, simd backend)`: the fastest
+//! fusion depth and the observed per-element cost are host physics —
+//! of the *vector backend actually dispatched*, hence the backend in
+//! the key — not engine configuration, so every engine in the process
+//! shares them. The
 //! measurement runs *outside* the cache lock (it takes ~a millisecond;
 //! concurrent first lookups may both measure, first insert wins — a
 //! benign race that trades a duplicated measurement for never blocking
@@ -68,18 +70,24 @@ pub fn cached_plan_count() -> usize {
     CACHE.lock().unwrap().len()
 }
 
-type TuneCache = Mutex<HashMap<(KernelKind, usize), Measurement>>;
+type TuneCache =
+    Mutex<HashMap<(KernelKind, usize, crate::hadamard::simd::Backend), Measurement>>;
 
 static TUNE_CACHE: Lazy<TuneCache> = Lazy::new(|| Mutex::new(HashMap::new()));
 
 /// Get (measuring and memoizing on first use) the autotuner's
-/// micro-measurement for `(kind, n)`. The sweep runs on the f32
-/// compute image — 16-bit storage only rescales the cost estimate at
-/// resolve time, so mixed-dtype traffic at one size shares a single
-/// measurement. `seed_depth` is the roofline model's proposal, used to
-/// narrow the candidate sweep on a miss; hits ignore it.
+/// micro-measurement for `(kind, n)` **under the active SIMD backend**
+/// — the memo key carries [`crate::hadamard::simd::active`], so a
+/// measurement taken against AVX-512 butterflies is never replayed for
+/// the scalar fallback (their depth/chunk optima differ; forcing a
+/// backend mid-process re-measures rather than serving stale physics).
+/// The sweep runs on the f32 compute image — 16-bit storage only
+/// rescales the cost estimate at resolve time, so mixed-dtype traffic
+/// at one size shares a single measurement. `seed_depth` is the
+/// roofline model's proposal, used to narrow the candidate sweep on a
+/// miss; hits ignore it.
 pub fn measurement_for(kind: KernelKind, n: usize, seed_depth: usize) -> Measurement {
-    let key = (kind, n);
+    let key = (kind, n, crate::hadamard::simd::active());
     if let Some(m) = TUNE_CACHE.lock().unwrap().get(&key) {
         return *m;
     }

@@ -19,11 +19,13 @@
 //!    ignored. All env knobs are read once per process.
 //! 2. **Config policy**: [`TunePolicy`] on [`super::ExecConfig`] —
 //!    what the parity-grid tests use to force every depth.
-//! 3. **Model seed**: [`crate::gpu_model::roofline::recommend_fusion_depth`]
-//!    proposes the deepest depth whose fused tile fits
-//!    [`FUSION_CACHE_BUDGET`] — the transform is memory-bound
-//!    (`gpu_model::roofline`), so fewer buffer traversals win iff the
-//!    tile stays cache-resident.
+//! 3. **Model seed**:
+//!    [`crate::gpu_model::roofline::recommend_fusion_depth_for_lanes`]
+//!    proposes a depth within the cache budget
+//!    ([`FUSION_CACHE_BUDGET`]), weighted by the active SIMD backend's
+//!    lane count — wide vector backends are memory-bound and fuse to
+//!    the cache cap; the scalar fallback hits its compute floor first
+//!    and seeds shallow.
 //! 4. **One-shot micro-measurement** (default policy): the seed is
 //!    checked against its neighbours and the no-fusion baseline on a
 //!    small synthetic buffer — well under a millisecond, once per
@@ -50,7 +52,7 @@
 
 use std::time::Instant;
 
-use crate::gpu_model::roofline::recommend_fusion_depth_for;
+use crate::gpu_model::roofline::recommend_fusion_depth_for_lanes;
 use crate::hadamard::hadacore::HadaCorePlan;
 use crate::hadamard::{FwhtOptions, KernelKind};
 use crate::util::f16::DType;
@@ -185,11 +187,15 @@ pub fn tuning_for_plan(
         Some(_) | None => cfg.tune,
     };
 
-    // model seed (from the cached plan — no construction per batch)
+    // model seed (from the cached plan — no construction per batch).
+    // Lane-aware: the SIMD backend moved the compute roofline, so the
+    // model only recommends fusing while memory time still exceeds the
+    // backend's compute floor (scalar fallback → depth 1 seed).
+    let lanes = crate::hadamard::simd::active().lanes();
     let seed_depth = plan
         .hadacore
         .as_ref()
-        .map(|hp| recommend_fusion_depth_for(hp, FUSION_CACHE_BUDGET))
+        .map(|hp| recommend_fusion_depth_for_lanes(hp, FUSION_CACHE_BUDGET, lanes))
         .unwrap_or(1)
         .min(max_depth);
 
@@ -376,7 +382,9 @@ fn run_measured(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gpu_model::roofline::recommend_fusion_depth;
+    use crate::gpu_model::roofline::{
+        recommend_fusion_depth, recommend_fusion_depth_lanes,
+    };
 
     fn cfg() -> ExecConfig {
         ExecConfig {
@@ -425,9 +433,17 @@ mod tests {
         let b = tuning_for(&c, KernelKind::HadaCore, 4096, 64, DType::F32);
         assert_eq!(a.fusion_depth, b.fusion_depth);
         assert_eq!(a.chunk_rows, b.chunk_rows);
+        // the seed is the *lane-aware* recommendation for whatever
+        // backend is active in this process (under HADACORE_SIMD=off
+        // the scalar compute floor suppresses fusion; wide vectors keep
+        // the cache-budget depth), and never exceeds the cache budget
+        let lanes = crate::hadamard::simd::active().lanes();
         assert_eq!(
             a.fusion_depth,
-            recommend_fusion_depth(4096, FUSION_CACHE_BUDGET)
+            recommend_fusion_depth_lanes(4096, FUSION_CACHE_BUDGET, lanes)
+        );
+        assert!(
+            a.fusion_depth <= recommend_fusion_depth(4096, FUSION_CACHE_BUDGET)
         );
         assert_eq!(a.source, TuneSource::Model);
     }

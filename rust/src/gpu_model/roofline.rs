@@ -143,6 +143,63 @@ pub fn recommend_fusion_depth_for(
     1
 }
 
+// ---------------------------------------------------------------------
+// Lane-aware refinement (ISSUE 8): fusion trades memory passes for a
+// cache-blocked compute schedule, so its payoff depends on how far the
+// execution sits from the compute roofline — and the SIMD dispatch
+// moved that roofline. A 16-lane AVX-512 butterfly retires ~16x the
+// per-cycle work of the scalar loop, so the memory wall that justified
+// depth-3 fusion for vector backends is *not* binding for the scalar
+// fallback, where the compute floor is already above the single-pass
+// memory time and fusing only shrinks the chunk rows the measured
+// refinement can work with.
+
+/// Modelled per-element memory cost of one buffer traversal
+/// (read + write through the cache hierarchy), in nanoseconds.
+pub const MEM_NS_PER_ELEM_PASS: f64 = 0.5;
+
+/// Modelled per-element compute cost of one butterfly round at one
+/// f32 lane, in nanoseconds. A backend with `l` lanes divides this.
+pub const COMP_NS_PER_ELEM_ROUND: f64 = 2.0;
+
+/// Lane-aware [`recommend_fusion_depth`]: the shallowest depth (within
+/// the cache-budget recommendation) whose remaining memory time has
+/// already dropped to the backend's compute floor — fusing deeper than
+/// that cannot help, and shallower schedules give the measured
+/// refinement more chunk granularity. Falls back to the cache-budget
+/// depth when memory still binds at every admissible depth (the wide-
+/// vector regime).
+///
+/// `lanes` is [`crate::hadamard::simd::Backend::lanes`] of the active
+/// backend; `lanes == 1` models the scalar fallback.
+pub fn recommend_fusion_depth_for_lanes(
+    plan: &crate::hadamard::hadacore::HadaCorePlan,
+    cache_bytes: usize,
+    lanes: usize,
+) -> usize {
+    let cache_cap = recommend_fusion_depth_for(plan, cache_bytes);
+    let rounds = plan.max_fusion_depth() as f64;
+    let compute_ns = COMP_NS_PER_ELEM_ROUND * rounds / lanes.max(1) as f64;
+    for depth in 1..=cache_cap {
+        if MEM_NS_PER_ELEM_PASS * plan.passes_at(depth) as f64 <= compute_ns {
+            return depth;
+        }
+    }
+    cache_cap
+}
+
+/// [`recommend_fusion_depth_for_lanes`] by size — builds the default
+/// plan (tests / one-off callers; the tuner uses the `_for_lanes` form
+/// on its cached plan).
+pub fn recommend_fusion_depth_lanes(n: usize, cache_bytes: usize, lanes: usize) -> usize {
+    use crate::hadamard::hadacore::{HadaCoreConfig, HadaCorePlan};
+    recommend_fusion_depth_for_lanes(
+        &HadaCorePlan::new(n, &HadaCoreConfig::default()),
+        cache_bytes,
+        lanes,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +271,32 @@ mod tests {
         // 32768 at full fusion needs 256 KiB of tile; a 64 KiB budget
         // backs off to depth 2 (16 KiB tile)
         assert_eq!(recommend_fusion_depth(32768, 64 << 10), 2);
+    }
+
+    #[test]
+    fn lane_aware_depth_tracks_the_compute_floor() {
+        // n = 4096: three pow2 rounds, cache cap 3 at a 1 MiB budget.
+        // Wide vectors (8/16 lanes): compute floor is far below even the
+        // fully-fused single pass — memory binds everywhere, keep the
+        // cache-cap depth.
+        assert_eq!(recommend_fusion_depth_lanes(4096, 1 << 20, 16), 3);
+        assert_eq!(recommend_fusion_depth_lanes(4096, 1 << 20, 8), 3);
+        // NEON (4 lanes): compute 2.0*3/4 = 1.5 ns/elem equals the
+        // unfused 3-pass memory time — depth 1 already sits on the
+        // floor, fusion can't pay.
+        assert_eq!(recommend_fusion_depth_lanes(4096, 1 << 20, 4), 1);
+        // scalar: compute-bound outright at depth 1
+        assert_eq!(recommend_fusion_depth_lanes(4096, 1 << 20, 1), 1);
+        // the cache budget still caps the vector regime
+        assert_eq!(
+            recommend_fusion_depth_lanes(4096, 4 << 10, 16),
+            recommend_fusion_depth(4096, 4 << 10)
+        );
+        // degenerate lanes=0 treated as scalar, never panics
+        assert_eq!(
+            recommend_fusion_depth_lanes(4096, 1 << 20, 0),
+            recommend_fusion_depth_lanes(4096, 1 << 20, 1)
+        );
     }
 
     #[test]

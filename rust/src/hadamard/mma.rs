@@ -16,6 +16,8 @@
 //! * [`mm16`] — plain 16x16 x 16x16 product used by tests and the padded
 //!   cross-chunk round.
 
+use super::simd;
+
 /// C = A @ B for 16x16 row-major tiles (f32, FP32 accumulate).
 #[inline]
 pub fn mm16(a: &[f32; 256], b: &[f32; 256], c: &mut [f32; 256]) {
@@ -166,32 +168,11 @@ pub fn left_mul_base_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32]
     debug_assert_eq!(b.len(), size * inner);
     debug_assert_eq!(m.len(), size * size);
     assert!(size <= MAX_BASE, "base order {size} exceeds {MAX_BASE}");
-    const TILE: usize = 64;
-    let mut tmp = [0.0f32; MAX_BASE * TILE];
-    let mut col = 0;
-    while col < inner {
-        let w = TILE.min(inner - col);
-        for i in 0..size {
-            let out = &mut tmp[i * w..(i + 1) * w];
-            out.iter_mut().for_each(|v| *v = 0.0);
-            for k in 0..size {
-                let mik = m[i * size + k];
-                let src = &b[k * inner + col..k * inner + col + w];
-                for (o, s) in out.iter_mut().zip(src.iter()) {
-                    *o += mik * s;
-                }
-            }
-        }
-        for i in 0..size {
-            b[i * inner + col..i * inner + col + w]
-                .copy_from_slice(&tmp[i * w..(i + 1) * w]);
-        }
-        col += w;
-    }
+    (simd::ops().left_mul_base_strided)(b, size, inner, m)
 }
 
 // ---------------------------------------------------------------------
-// Fast constant-factor paths (§Perf).
+// Fast constant-factor paths (§Perf), now runtime-dispatched.
 //
 // The generic tile kernels above multiply by an arbitrary 16x16 matrix —
 // the faithful stand-in for a Tensor Core/MXU `mma`, and what the tests
@@ -203,45 +184,30 @@ pub fn left_mul_base_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32]
 // branch-and-multiply pattern defeats SLP vectorisation; these
 // specialisations are the optimisation the perf pass landed
 // (EXPERIMENTS.md §Perf has the before/after).
-
-/// Butterfly stages `h = 1,2,..,2^(stages-1)` on one contiguous 16-group.
-#[inline(always)]
-fn fwht16_stages(c: &mut [f32], stages: u32) {
-    let mut h = 1usize;
-    for _ in 0..stages {
-        let mut i = 0;
-        while i < 16 {
-            for j in i..i + h {
-                let a = c[j];
-                let b = c[j + h];
-                c[j] = a + b;
-                c[j + h] = a - b;
-            }
-            i += 2 * h;
-        }
-        h *= 2;
-    }
-}
+//
+// Since ISSUE 8 the butterfly bodies live in [`super::simd`]: the
+// wrappers below validate shapes and dispatch through the process-wide
+// backend table (AVX2 / AVX-512 / NEON / scalar, `HADACORE_SIMD`
+// override). Every backend is bit-identical — see `simd` and
+// `docs/KERNEL_MATH.md` §8 — so callers never observe which one ran
+// except through `simd::dispatch_count`.
 
 /// Fast `X <- X @ H16` over a `(rows, 16)` contiguous buffer:
 /// the 16x16 constant product realised as 4 radix-2 stages per row.
 pub fn right_mul_h16_fast(x: &mut [f32]) {
     debug_assert!(x.len() % 16 == 0);
-    for chunk in x.chunks_exact_mut(16) {
-        fwht16_stages(chunk, 4);
-    }
+    (simd::ops().right_mul_h16)(x)
 }
 
 /// Fast `X <- X @ (I kron H_{2^m})` over a `(rows, 16)` contiguous buffer
 /// (the paper's §3.3 block-diagonal residual round): m stages per group.
 pub fn right_mul_bd_fast(x: &mut [f32], m: u32) {
     debug_assert!(m < 4);
+    debug_assert!(x.len() % 16 == 0);
     if m == 0 {
-        return; // identity
+        return; // identity — not a dispatch
     }
-    for chunk in x.chunks_exact_mut(16) {
-        fwht16_stages(chunk, m);
-    }
+    (simd::ops().right_mul_bd)(x, m)
 }
 
 /// Fused round 0 for the block-diagonal path (§Perf iteration 2): the BD
@@ -253,31 +219,7 @@ pub fn right_mul_bd_fast(x: &mut [f32], m: u32) {
 pub fn right_mul_fused_chunk_fast(x: &mut [f32], chunk: usize) {
     debug_assert!(chunk.is_power_of_two() && (16..=128).contains(&chunk));
     debug_assert!(x.len() % chunk == 0);
-    // stages 1..4 as fully-unrolled 16-groups (H16 fast-axis; the
-    // fixed-16 bound lets LLVM unroll + SLP-vectorise) ...
-    for g in x.chunks_exact_mut(16) {
-        fwht16_stages(g, 4);
-    }
-    // ... then the 2^m factor as levels h = 16,32,64: contiguous runs of
-    // h elements, which vectorise at full width (Kronecker factors on
-    // disjoint axes commute, so the order swap is exact).
-    for c in x.chunks_exact_mut(chunk) {
-        let mut h = 16usize;
-        while h < chunk {
-            let mut i = 0;
-            while i < chunk {
-                let (lo, hi) = c[i..i + 2 * h].split_at_mut(h);
-                for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let xa = *a;
-                    let xb = *b;
-                    *a = xa + xb;
-                    *b = xa - xb;
-                }
-                i += 2 * h;
-            }
-            h *= 2;
-        }
-    }
+    (simd::ops().right_mul_fused_chunk)(x, chunk)
 }
 
 /// Fast `B <- H16 @ B` for a `(16, inner)` block with row stride `inner`:
@@ -294,25 +236,7 @@ pub fn right_mul_fused_chunk_fast(x: &mut [f32], chunk: usize) {
 /// medians over 12 samples were compared. See EXPERIMENTS.md §Perf.
 pub fn left_mul_h16_strided_fast(b: &mut [f32], inner: usize) {
     debug_assert_eq!(b.len(), 16 * inner);
-    let mut h = 1usize;
-    for _ in 0..4 {
-        let mut i = 0;
-        while i < 16 {
-            for j in i..i + h {
-                let (head, tail) = b.split_at_mut((j + h) * inner);
-                let row_a = &mut head[j * inner..j * inner + inner];
-                let row_b = &mut tail[..inner];
-                for (a, v) in row_a.iter_mut().zip(row_b.iter_mut()) {
-                    let x = *a;
-                    let y = *v;
-                    *a = x + y;
-                    *v = x - y;
-                }
-            }
-            i += 2 * h;
-        }
-        h *= 2;
-    }
+    (simd::ops().left_mul_h16_strided)(b, inner)
 }
 
 /// Fast `B <- H_size @ B` for a small `(size, inner)` block (size in
@@ -320,25 +244,7 @@ pub fn left_mul_h16_strided_fast(b: &mut [f32], inner: usize) {
 pub fn left_mul_small_strided_fast(b: &mut [f32], size: usize, inner: usize) {
     debug_assert_eq!(b.len(), size * inner);
     debug_assert!(size.is_power_of_two() && size <= 16);
-    let mut h = 1usize;
-    while h < size {
-        let mut i = 0;
-        while i < size {
-            for j in i..i + h {
-                let (head, tail) = b.split_at_mut((j + h) * inner);
-                let row_a = &mut head[j * inner..j * inner + inner];
-                let row_b = &mut tail[..inner];
-                for (a, v) in row_a.iter_mut().zip(row_b.iter_mut()) {
-                    let x = *a;
-                    let y = *v;
-                    *a = x + y;
-                    *v = x - y;
-                }
-            }
-            i += 2 * h;
-        }
-        h *= 2;
-    }
+    (simd::ops().left_mul_small_strided)(b, size, inner)
 }
 
 #[cfg(test)]
@@ -544,6 +450,86 @@ mod tests {
                 assert!((b[i * inner + c] - want).abs() < 1e-3);
             }
         }
+    }
+
+    /// Every reachable SIMD backend must produce the **bit-identical**
+    /// output of the scalar backend on every dispatched entry point —
+    /// the unit-level face of the `tests/simd_parity.rs` matrix.
+    /// Serialised against other backend-forcing tests via the global
+    /// counter semantics: bit-identity makes cross-test interleaving
+    /// benign, and the previous backend is always restored.
+    #[test]
+    fn all_reachable_backends_are_bit_identical_to_scalar() {
+        use crate::hadamard::matrices::hadamard_base;
+        use crate::hadamard::simd::{self, Backend};
+        let mut rng = Rng::new(26);
+        let prev = simd::force(Backend::Scalar).unwrap();
+        for backend in Backend::all() {
+            if !simd::reachable(backend) {
+                continue;
+            }
+            let sc = simd::ops_for(Backend::Scalar);
+            let ops = simd::ops_for(backend);
+
+            for rows in [1usize, 3, 8] {
+                let x = rng.normal_vec(rows * 16);
+                let (mut a, mut b) = (x.clone(), x);
+                (sc.right_mul_h16)(&mut a);
+                (ops.right_mul_h16)(&mut b);
+                assert_eq!(bits(&a), bits(&b), "{backend:?} right_mul_h16");
+                for m in 1..4u32 {
+                    let x = rng.normal_vec(rows * 16);
+                    let (mut a, mut b) = (x.clone(), x);
+                    (sc.right_mul_bd)(&mut a, m);
+                    (ops.right_mul_bd)(&mut b, m);
+                    assert_eq!(bits(&a), bits(&b), "{backend:?} right_mul_bd m={m}");
+                }
+            }
+            for chunk in [16usize, 32, 64, 128] {
+                let x = rng.normal_vec(3 * chunk);
+                let (mut a, mut b) = (x.clone(), x);
+                (sc.right_mul_fused_chunk)(&mut a, chunk);
+                (ops.right_mul_fused_chunk)(&mut b, chunk);
+                assert_eq!(bits(&a), bits(&b), "{backend:?} fused chunk={chunk}");
+            }
+            for inner in [1usize, 2, 7, 37, 256] {
+                let x = rng.normal_vec(16 * inner);
+                let (mut a, mut b) = (x.clone(), x);
+                (sc.left_mul_h16_strided)(&mut a, inner);
+                (ops.left_mul_h16_strided)(&mut b, inner);
+                assert_eq!(bits(&a), bits(&b), "{backend:?} h16 inner={inner}");
+                for size in [2usize, 4, 8] {
+                    let x = rng.normal_vec(size * inner);
+                    let (mut a, mut b) = (x.clone(), x);
+                    (sc.left_mul_small_strided)(&mut a, size, inner);
+                    (ops.left_mul_small_strided)(&mut b, size, inner);
+                    assert_eq!(
+                        bits(&a),
+                        bits(&b),
+                        "{backend:?} small size={size} inner={inner}"
+                    );
+                }
+            }
+            for base in [12usize, 20, 28, 40] {
+                let h = hadamard_base(base);
+                for inner in [1usize, 5, 64, 100] {
+                    let x = rng.normal_vec(base * inner);
+                    let (mut a, mut b) = (x.clone(), x);
+                    (sc.left_mul_base_strided)(&mut a, base, inner, h);
+                    (ops.left_mul_base_strided)(&mut b, base, inner, h);
+                    assert_eq!(
+                        bits(&a),
+                        bits(&b),
+                        "{backend:?} base={base} inner={inner}"
+                    );
+                }
+            }
+        }
+        simd::force(prev).unwrap();
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
     }
 
     #[test]

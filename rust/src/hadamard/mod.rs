@@ -38,6 +38,7 @@ pub mod hadacore;
 pub mod matrices;
 pub mod mma;
 pub mod scalar;
+pub mod simd;
 
 use crate::util::f16::Element;
 
@@ -127,6 +128,35 @@ pub fn sign_vector(seed: u64, n: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Process-wide cap on distinct `(seed, n)` sign vectors kept alive by
+/// [`sign_vector_cached`]. Steady-state serving traffic uses a handful
+/// of rotation seeds; the cap exists so adversarial seed churn (or a
+/// randomized test) cannot grow the cache without bound.
+const SIGN_CACHE_CAP: usize = 64;
+
+/// Memoised [`sign_vector`]: one shared `Arc` per `(seed, n)`, so the
+/// per-batch prologue materialisation the exec engine used to perform
+/// (`Vec` + `Arc` per batch — the PR 7 allocation caveat) becomes two
+/// map lookups after warmup. Misses past [`SIGN_CACHE_CAP`] allocate a
+/// fresh uncached vector instead of evicting: the first
+/// `SIGN_CACHE_CAP` working-set seeds stay permanently zero-alloc, and
+/// overflow traffic degrades to exactly the old per-batch behaviour.
+pub fn sign_vector_cached(seed: u64, n: usize) -> std::sync::Arc<Vec<f32>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+    static CACHE: crate::util::lazy::Lazy<Mutex<HashMap<(u64, usize), Arc<Vec<f32>>>>> =
+        crate::util::lazy::Lazy::new(|| Mutex::new(HashMap::new()));
+    let mut cache = CACHE.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(hit) = cache.get(&(seed, n)) {
+        return Arc::clone(hit);
+    }
+    let fresh = Arc::new(sign_vector(seed, n));
+    if cache.len() < SIGN_CACHE_CAP {
+        cache.insert((seed, n), Arc::clone(&fresh));
+    }
+    fresh
+}
+
 /// Multiply every `signs.len()`-sized row of `data` elementwise by
 /// `signs` (`x ← x·D`). Each multiply is by ±1.0, an **exact** IEEE
 /// operation — applying the flip fused inside a chunk traversal, before
@@ -186,6 +216,18 @@ impl Prologue {
         match self {
             Prologue::None => None,
             Prologue::SignFlip { seed } => Some(sign_vector(seed, n)),
+        }
+    }
+
+    /// Like [`signs`](Prologue::signs), but served from the process-wide
+    /// [`sign_vector_cached`] pool — the steady-state path the exec
+    /// engine uses so rotated serving traffic stays zero-alloc after
+    /// warmup (a sign vector is a pure function of `(seed, n)`, so
+    /// sharing the `Arc` across batches is exact).
+    pub fn signs_cached(self, n: usize) -> Option<std::sync::Arc<Vec<f32>>> {
+        match self {
+            Prologue::None => None,
+            Prologue::SignFlip { seed } => Some(sign_vector_cached(seed, n)),
         }
     }
 

@@ -1,0 +1,258 @@
+//! AVX2 backend: 16-element butterfly tiles on two 256-bit registers.
+//!
+//! Lane mapping (`docs/KERNEL_MATH.md` §8): one contiguous 16-group is
+//! `(v0, v1)` = lanes 0–7 / 8–15. Stages `h = 1, 2, 4` are in-register
+//! shuffles (`s[j] = v[j ^ h]`) followed by one add and one sub with a
+//! blend selecting the sub into the `j + h` lanes; stage `h = 8` is the
+//! cross-register pair `(v0 + v1, v0 - v1)`. Each output lane is the
+//! same single `a + b` / `a - b` the scalar butterfly performs, in the
+//! same operand order, so the results are bit-identical.
+//!
+//! **No FMA**: the base-stage contraction uses an explicit
+//! `_mm256_mul_ps` + `_mm256_add_ps` pair (two roundings), never
+//! `_mm256_fmadd_ps` (one rounding) — scalar Rust does not contract
+//! `acc + m*s`, and bit-identity to the scalar kernel is the contract.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::SimdOps;
+use crate::hadamard::mma::MAX_BASE;
+
+/// One in-register butterfly stage: `s = v` shuffled by `SHUF`
+/// (`s[j] = v[j ^ h]`), then `plus = v + s`, `minus = s - v`, with
+/// `BLEND` selecting `minus` into the upper (`j + h`) lanes — where
+/// `s[j+h] = v[j]`, so `minus[j+h] = v[j] - v[j+h]`, the scalar
+/// `a - b`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn bf_lane<const SHUF: i32, const BLEND: i32>(v: __m256) -> __m256 {
+    let s = _mm256_permute_ps::<SHUF>(v);
+    let plus = _mm256_add_ps(v, s);
+    let minus = _mm256_sub_ps(s, v);
+    _mm256_blend_ps::<BLEND>(plus, minus)
+}
+
+/// Stage `h = 4`: swap the 128-bit halves of the register.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn bf_cross128(v: __m256) -> __m256 {
+    let s = _mm256_permute2f128_ps::<0x01>(v, v);
+    let plus = _mm256_add_ps(v, s);
+    let minus = _mm256_sub_ps(s, v);
+    _mm256_blend_ps::<0xF0>(plus, minus)
+}
+
+/// The first `stages` butterfly stages (h = 1, 2, 4, 8) of one
+/// 16-group held as `(v0, v1)`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn stages16(mut v0: __m256, mut v1: __m256, stages: u32) -> (__m256, __m256) {
+    if stages >= 1 {
+        v0 = bf_lane::<0xB1, 0xAA>(v0); // h=1: swap adjacent lanes
+        v1 = bf_lane::<0xB1, 0xAA>(v1);
+    }
+    if stages >= 2 {
+        v0 = bf_lane::<0x4E, 0xCC>(v0); // h=2: swap lane pairs
+        v1 = bf_lane::<0x4E, 0xCC>(v1);
+    }
+    if stages >= 3 {
+        v0 = bf_cross128(v0); // h=4: swap 128-bit halves
+        v1 = bf_cross128(v1);
+    }
+    if stages >= 4 {
+        // h=8: cross-register — minus lands wholly in v1
+        let plus = _mm256_add_ps(v0, v1);
+        let minus = _mm256_sub_ps(v0, v1);
+        v0 = plus;
+        v1 = minus;
+    }
+    (v0, v1)
+}
+
+/// Run `stages` butterfly stages over every contiguous 16-group.
+#[target_feature(enable = "avx2")]
+unsafe fn stages_over_groups(x: &mut [f32], stages: u32) {
+    for g in x.chunks_exact_mut(16) {
+        let p = g.as_mut_ptr();
+        let (v0, v1) =
+            stages16(_mm256_loadu_ps(p), _mm256_loadu_ps(p.add(8)), stages);
+        _mm256_storeu_ps(p, v0);
+        _mm256_storeu_ps(p.add(8), v1);
+    }
+}
+
+/// Elementwise `(a, b) <- (a + b, a - b)` over two equal-length rows —
+/// the strided butterfly body. Vector main loop + scalar tail, both in
+/// ascending index order (each element is independent, so any split is
+/// bit-identical).
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn add_sub_rows(a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let pa = a.as_mut_ptr();
+    let pb = b.as_mut_ptr();
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm256_loadu_ps(pa.add(i));
+        let vb = _mm256_loadu_ps(pb.add(i));
+        _mm256_storeu_ps(pa.add(i), _mm256_add_ps(va, vb));
+        _mm256_storeu_ps(pb.add(i), _mm256_sub_ps(va, vb));
+        i += 8;
+    }
+    while i < n {
+        let xa = *pa.add(i);
+        let xb = *pb.add(i);
+        *pa.add(i) = xa + xb;
+        *pb.add(i) = xa - xb;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn right_mul_h16(x: &mut [f32]) {
+    stages_over_groups(x, 4);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn right_mul_bd(x: &mut [f32], m: u32) {
+    stages_over_groups(x, m);
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn right_mul_fused_chunk(x: &mut [f32], chunk: usize) {
+    stages_over_groups(x, 4);
+    for c in x.chunks_exact_mut(chunk) {
+        let mut h = 16usize;
+        while h < chunk {
+            let mut i = 0;
+            while i < chunk {
+                let (lo, hi) = c[i..i + 2 * h].split_at_mut(h);
+                add_sub_rows(lo, hi);
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn left_mul_h16_strided(b: &mut [f32], inner: usize) {
+    let mut h = 1usize;
+    for _ in 0..4 {
+        let mut i = 0;
+        while i < 16 {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                add_sub_rows(
+                    &mut head[j * inner..j * inner + inner],
+                    &mut tail[..inner],
+                );
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn left_mul_small_strided(b: &mut [f32], size: usize, inner: usize) {
+    let mut h = 1usize;
+    while h < size {
+        let mut i = 0;
+        while i < size {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                add_sub_rows(
+                    &mut head[j * inner..j * inner + inner],
+                    &mut tail[..inner],
+                );
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn left_mul_base_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    const TILE: usize = 64;
+    let mut tmp = [0.0f32; MAX_BASE * TILE];
+    let mut col = 0;
+    while col < inner {
+        let w = TILE.min(inner - col);
+        for i in 0..size {
+            let po = tmp[i * w..(i + 1) * w].as_mut_ptr();
+            let mut j = 0;
+            while j + 8 <= w {
+                _mm256_storeu_ps(po.add(j), _mm256_setzero_ps());
+                j += 8;
+            }
+            while j < w {
+                *po.add(j) = 0.0;
+                j += 1;
+            }
+            for k in 0..size {
+                let mik = m[i * size + k];
+                let vm = _mm256_set1_ps(mik);
+                let ps = b.as_ptr().add(k * inner + col);
+                let mut j = 0;
+                while j + 8 <= w {
+                    let acc = _mm256_loadu_ps(po.add(j));
+                    let s = _mm256_loadu_ps(ps.add(j));
+                    // mul then add, never fmadd: the scalar `*o += mik*s`
+                    // rounds twice, and bit-identity demands the same
+                    let prod = _mm256_mul_ps(vm, s);
+                    _mm256_storeu_ps(po.add(j), _mm256_add_ps(acc, prod));
+                    j += 8;
+                }
+                while j < w {
+                    *po.add(j) += mik * *ps.add(j);
+                    j += 1;
+                }
+            }
+        }
+        for i in 0..size {
+            b[i * inner + col..i * inner + col + w]
+                .copy_from_slice(&tmp[i * w..(i + 1) * w]);
+        }
+        col += w;
+    }
+}
+
+// Safe wrappers — SAFETY throughout: this table is only installed by
+// `simd::ops_for` after `is_x86_feature_detected!("avx2")` confirmed
+// the feature on this host, and the kernels use no other unchecked
+// preconditions (pointers derive from the argument slices and every
+// debug-checked shape invariant is re-asserted by the `mma` wrappers).
+
+fn right_mul_h16_s(x: &mut [f32]) {
+    unsafe { right_mul_h16(x) }
+}
+fn right_mul_bd_s(x: &mut [f32], m: u32) {
+    unsafe { right_mul_bd(x, m) }
+}
+fn right_mul_fused_chunk_s(x: &mut [f32], chunk: usize) {
+    unsafe { right_mul_fused_chunk(x, chunk) }
+}
+fn left_mul_h16_strided_s(b: &mut [f32], inner: usize) {
+    unsafe { left_mul_h16_strided(b, inner) }
+}
+fn left_mul_small_strided_s(b: &mut [f32], size: usize, inner: usize) {
+    unsafe { left_mul_small_strided(b, size, inner) }
+}
+fn left_mul_base_strided_s(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    unsafe { left_mul_base_strided(b, size, inner, m) }
+}
+
+/// The AVX2 dispatch table.
+pub static OPS: SimdOps = SimdOps {
+    right_mul_h16: right_mul_h16_s,
+    right_mul_bd: right_mul_bd_s,
+    right_mul_fused_chunk: right_mul_fused_chunk_s,
+    left_mul_h16_strided: left_mul_h16_strided_s,
+    left_mul_small_strided: left_mul_small_strided_s,
+    left_mul_base_strided: left_mul_base_strided_s,
+};

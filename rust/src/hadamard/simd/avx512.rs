@@ -1,0 +1,241 @@
+//! AVX-512F backend: one 16-element butterfly tile per 512-bit
+//! register.
+//!
+//! Lane mapping (`docs/KERNEL_MATH.md` §8): a contiguous 16-group is
+//! exactly one zmm register, so all four stages are in-register.
+//! Stages `h = 1, 2` shuffle within 128-bit lanes
+//! (`_mm512_permute_ps`), stages `h = 4, 8` shuffle whole 128-bit
+//! lanes (`_mm512_shuffle_f32x4`); each stage computes `plus = v + s`,
+//! `minus = s - v` and mask-blends `minus` into the `j + h` lanes —
+//! where `s[j+h] = v[j]`, so `minus[j+h] = v[j] - v[j+h]`, the scalar
+//! `a - b` in the scalar operand order.
+//!
+//! **No FMA** (same contract as the AVX2 backend): the base-stage
+//! contraction is `_mm512_mul_ps` + `_mm512_add_ps`, never
+//! `_mm512_fmadd_ps`.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::SimdOps;
+use crate::hadamard::mma::MAX_BASE;
+
+/// In-128-bit-lane butterfly stage (`h = 1` or `2`): `SHUF` is the
+/// within-lane shuffle (`s[j] = v[j ^ h]`), `MINUS` the lane mask that
+/// receives `s - v`.
+#[target_feature(enable = "avx512f")]
+#[inline]
+unsafe fn bf_lane<const SHUF: i32>(v: __m512, minus_mask: __mmask16) -> __m512 {
+    let s = _mm512_permute_ps::<SHUF>(v);
+    let plus = _mm512_add_ps(v, s);
+    let minus = _mm512_sub_ps(s, v);
+    _mm512_mask_blend_ps(minus_mask, plus, minus)
+}
+
+/// Cross-128-bit-lane butterfly stage (`h = 4` or `8`): `SHUF` permutes
+/// whole 128-bit lanes.
+#[target_feature(enable = "avx512f")]
+#[inline]
+unsafe fn bf_cross<const SHUF: i32>(v: __m512, minus_mask: __mmask16) -> __m512 {
+    let s = _mm512_shuffle_f32x4::<SHUF>(v, v);
+    let plus = _mm512_add_ps(v, s);
+    let minus = _mm512_sub_ps(s, v);
+    _mm512_mask_blend_ps(minus_mask, plus, minus)
+}
+
+/// The first `stages` butterfly stages (h = 1, 2, 4, 8) of one
+/// 16-group held in a single zmm.
+#[target_feature(enable = "avx512f")]
+#[inline]
+unsafe fn stages16(mut v: __m512, stages: u32) -> __m512 {
+    if stages >= 1 {
+        v = bf_lane::<0xB1>(v, 0xAAAA); // h=1: swap adjacent lanes
+    }
+    if stages >= 2 {
+        v = bf_lane::<0x4E>(v, 0xCCCC); // h=2: swap lane pairs
+    }
+    if stages >= 3 {
+        v = bf_cross::<0xB1>(v, 0xF0F0); // h=4: swap adjacent 128-bit lanes
+    }
+    if stages >= 4 {
+        v = bf_cross::<0x4E>(v, 0xFF00); // h=8: swap 256-bit halves
+    }
+    v
+}
+
+/// Run `stages` butterfly stages over every contiguous 16-group.
+#[target_feature(enable = "avx512f")]
+unsafe fn stages_over_groups(x: &mut [f32], stages: u32) {
+    for g in x.chunks_exact_mut(16) {
+        let p = g.as_mut_ptr();
+        _mm512_storeu_ps(p, stages16(_mm512_loadu_ps(p), stages));
+    }
+}
+
+/// Elementwise `(a, b) <- (a + b, a - b)` over two equal-length rows.
+#[target_feature(enable = "avx512f")]
+#[inline]
+unsafe fn add_sub_rows(a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let pa = a.as_mut_ptr();
+    let pb = b.as_mut_ptr();
+    let mut i = 0;
+    while i + 16 <= n {
+        let va = _mm512_loadu_ps(pa.add(i));
+        let vb = _mm512_loadu_ps(pb.add(i));
+        _mm512_storeu_ps(pa.add(i), _mm512_add_ps(va, vb));
+        _mm512_storeu_ps(pb.add(i), _mm512_sub_ps(va, vb));
+        i += 16;
+    }
+    while i < n {
+        let xa = *pa.add(i);
+        let xb = *pb.add(i);
+        *pa.add(i) = xa + xb;
+        *pb.add(i) = xa - xb;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn right_mul_h16(x: &mut [f32]) {
+    stages_over_groups(x, 4);
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn right_mul_bd(x: &mut [f32], m: u32) {
+    stages_over_groups(x, m);
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn right_mul_fused_chunk(x: &mut [f32], chunk: usize) {
+    stages_over_groups(x, 4);
+    for c in x.chunks_exact_mut(chunk) {
+        let mut h = 16usize;
+        while h < chunk {
+            let mut i = 0;
+            while i < chunk {
+                let (lo, hi) = c[i..i + 2 * h].split_at_mut(h);
+                add_sub_rows(lo, hi);
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn left_mul_h16_strided(b: &mut [f32], inner: usize) {
+    let mut h = 1usize;
+    for _ in 0..4 {
+        let mut i = 0;
+        while i < 16 {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                add_sub_rows(
+                    &mut head[j * inner..j * inner + inner],
+                    &mut tail[..inner],
+                );
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn left_mul_small_strided(b: &mut [f32], size: usize, inner: usize) {
+    let mut h = 1usize;
+    while h < size {
+        let mut i = 0;
+        while i < size {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                add_sub_rows(
+                    &mut head[j * inner..j * inner + inner],
+                    &mut tail[..inner],
+                );
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn left_mul_base_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    const TILE: usize = 64;
+    let mut tmp = [0.0f32; MAX_BASE * TILE];
+    let mut col = 0;
+    while col < inner {
+        let w = TILE.min(inner - col);
+        for i in 0..size {
+            let po = tmp[i * w..(i + 1) * w].as_mut_ptr();
+            let mut j = 0;
+            while j + 16 <= w {
+                _mm512_storeu_ps(po.add(j), _mm512_setzero_ps());
+                j += 16;
+            }
+            while j < w {
+                *po.add(j) = 0.0;
+                j += 1;
+            }
+            for k in 0..size {
+                let mik = m[i * size + k];
+                let vm = _mm512_set1_ps(mik);
+                let ps = b.as_ptr().add(k * inner + col);
+                let mut j = 0;
+                while j + 16 <= w {
+                    let acc = _mm512_loadu_ps(po.add(j));
+                    let s = _mm512_loadu_ps(ps.add(j));
+                    // mul then add, never fmadd (two roundings, like scalar)
+                    let prod = _mm512_mul_ps(vm, s);
+                    _mm512_storeu_ps(po.add(j), _mm512_add_ps(acc, prod));
+                    j += 16;
+                }
+                while j < w {
+                    *po.add(j) += mik * *ps.add(j);
+                    j += 1;
+                }
+            }
+        }
+        for i in 0..size {
+            b[i * inner + col..i * inner + col + w]
+                .copy_from_slice(&tmp[i * w..(i + 1) * w]);
+        }
+        col += w;
+    }
+}
+
+// Safe wrappers — SAFETY throughout: only installed by `simd::ops_for`
+// after `is_x86_feature_detected!("avx512f")` confirmed the feature.
+
+fn right_mul_h16_s(x: &mut [f32]) {
+    unsafe { right_mul_h16(x) }
+}
+fn right_mul_bd_s(x: &mut [f32], m: u32) {
+    unsafe { right_mul_bd(x, m) }
+}
+fn right_mul_fused_chunk_s(x: &mut [f32], chunk: usize) {
+    unsafe { right_mul_fused_chunk(x, chunk) }
+}
+fn left_mul_h16_strided_s(b: &mut [f32], inner: usize) {
+    unsafe { left_mul_h16_strided(b, inner) }
+}
+fn left_mul_small_strided_s(b: &mut [f32], size: usize, inner: usize) {
+    unsafe { left_mul_small_strided(b, size, inner) }
+}
+fn left_mul_base_strided_s(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    unsafe { left_mul_base_strided(b, size, inner, m) }
+}
+
+/// The AVX-512F dispatch table.
+pub static OPS: SimdOps = SimdOps {
+    right_mul_h16: right_mul_h16_s,
+    right_mul_bd: right_mul_bd_s,
+    right_mul_fused_chunk: right_mul_fused_chunk_s,
+    left_mul_h16_strided: left_mul_h16_strided_s,
+    left_mul_small_strided: left_mul_small_strided_s,
+    left_mul_base_strided: left_mul_base_strided_s,
+};

@@ -1,0 +1,301 @@
+//! Runtime-dispatched SIMD backends for the hot butterfly kernels.
+//!
+//! The paper maps 16×16 butterfly tiles onto Tensor Core `mma`
+//! instructions; the CPU analogue is mapping the same tiles onto the
+//! widest vector unit the host exposes. This module provides AVX2,
+//! AVX-512 and NEON implementations of the six hot entry points in
+//! [`crate::hadamard::mma`] (the 16-group butterfly rounds, the fused
+//! chunk round, the strided row rounds, and the dense base-matrix
+//! stage), selected **once per process** behind a dispatch table:
+//!
+//! * detection: [`is_x86_feature_detected!`] on x86-64 (AVX-512F >
+//!   AVX2 > scalar), compile-time NEON on aarch64, scalar everywhere
+//!   else;
+//! * override: `HADACORE_SIMD=off|scalar|avx2|avx512|neon|auto`, read
+//!   **once** and frozen at first dispatch (same contract as
+//!   `HADACORE_TUNE` in [`crate::exec::tune`]). Forcing a backend the
+//!   host cannot run falls back to scalar with a warning rather than
+//!   crashing;
+//! * tests: [`force`] switches the active backend programmatically
+//!   (the forced-dispatch parity matrix in `tests/simd_parity.rs`),
+//!   and per-backend [`dispatch_count`] counters prove non-vacuously
+//!   which backend actually executed.
+//!
+//! ## Bit-identity contract
+//!
+//! Every backend must be **bit-identical** to [`Backend::Scalar`] (and
+//! therefore to `fwht_scalar` and the golden digests): each butterfly
+//! output is a single IEEE add or sub of two inputs, and the base-stage
+//! contraction is a fixed-order chain of mul-then-add pairs — both
+//! reorder freely across *lanes* without touching the per-element
+//! operation sequence. The derivation lives in `docs/KERNEL_MATH.md`
+//! §8; the one sharp edge is that **no backend may use fused
+//! multiply-add** (scalar Rust never contracts `a*b + c`, so an FMA's
+//! single rounding would diverge). See the per-ISA modules.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::util::lazy::Lazy;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub mod avx512;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+pub mod scalar;
+
+/// One SIMD implementation of the hot kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Backend {
+    /// Portable scalar loops — the reference the others are pinned to.
+    Scalar = 0,
+    /// 256-bit AVX2 (x86-64).
+    Avx2 = 1,
+    /// 512-bit AVX-512F (x86-64).
+    Avx512 = 2,
+    /// 128-bit NEON (aarch64 baseline).
+    Neon = 3,
+}
+
+impl Backend {
+    /// All backends, scalar first (index order matches the enum
+    /// discriminants and the dispatch-counter array).
+    pub fn all() -> [Backend; 4] {
+        [Backend::Scalar, Backend::Avx2, Backend::Avx512, Backend::Neon]
+    }
+
+    /// Stable lowercase name (env values, bench records, stats).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Avx512 => "avx512",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Parse an explicit backend name (`off` is an alias for `scalar`;
+    /// `auto` is *not* a backend and is handled by the env reader).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "scalar" => Some(Backend::Scalar),
+            "avx2" => Some(Backend::Avx2),
+            "avx512" => Some(Backend::Avx512),
+            "neon" => Some(Backend::Neon),
+            _ => None,
+        }
+    }
+
+    /// f32 lanes per vector register — the throughput width the
+    /// roofline model feeds into
+    /// [`crate::gpu_model::roofline::recommend_fusion_depth_for_lanes`].
+    pub fn lanes(self) -> usize {
+        match self {
+            Backend::Scalar => 1,
+            Backend::Avx2 => 8,
+            Backend::Avx512 => 16,
+            Backend::Neon => 4,
+        }
+    }
+
+    fn from_index(i: usize) -> Backend {
+        match i {
+            1 => Backend::Avx2,
+            2 => Backend::Avx512,
+            3 => Backend::Neon,
+            _ => Backend::Scalar,
+        }
+    }
+}
+
+/// The six hot entry points every backend implements. All function
+/// pointers are *safe* wrappers; the per-ISA modules guarantee their
+/// internal `unsafe` (target-feature intrinsics) is sound because a
+/// backend's table is only ever installed after [`reachable`] confirmed
+/// the feature on this host.
+pub struct SimdOps {
+    /// `X <- X @ H16` over a `(rows, 16)` contiguous buffer.
+    pub right_mul_h16: fn(&mut [f32]),
+    /// `X <- X @ (I kron H_{2^m})`, `m` in `1..=3` stages per 16-group.
+    pub right_mul_bd: fn(&mut [f32], u32),
+    /// Fused round 0: 4 stages per 16-group, then levels `h=16..chunk/2`.
+    pub right_mul_fused_chunk: fn(&mut [f32], usize),
+    /// `B <- H16 @ B` for a `(16, inner)` row-strided block.
+    pub left_mul_h16_strided: fn(&mut [f32], usize),
+    /// `B <- H_size @ B` for a small pow2 `(size, inner)` block.
+    pub left_mul_small_strided: fn(&mut [f32], usize, usize),
+    /// `B <- M @ B` for a dense `(size, size)` base factor.
+    pub left_mul_base_strided: fn(&mut [f32], usize, usize, &[f32]),
+}
+
+/// True if this host can execute `backend`.
+pub fn reachable(backend: Backend) -> bool {
+    match backend {
+        Backend::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx512 => is_x86_feature_detected!("avx512f"),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => true,
+        #[cfg(not(target_arch = "x86_64"))]
+        Backend::Avx2 | Backend::Avx512 => false,
+        #[cfg(not(target_arch = "aarch64"))]
+        Backend::Neon => false,
+    }
+}
+
+/// The best backend this host can run (widest first).
+pub fn detect() -> Backend {
+    for b in [Backend::Avx512, Backend::Avx2, Backend::Neon] {
+        if reachable(b) {
+            return b;
+        }
+    }
+    Backend::Scalar
+}
+
+/// `HADACORE_SIMD`, read once per process (first dispatch) and frozen —
+/// later `set_var` calls are deliberately ignored, mirroring
+/// `HADACORE_TUNE`.
+static ENV_CHOICE: Lazy<Backend> = Lazy::new(env_choice);
+
+fn env_choice() -> Backend {
+    match std::env::var("HADACORE_SIMD") {
+        Ok(v) if v.eq_ignore_ascii_case("auto") || v.is_empty() => detect(),
+        Ok(v) => match Backend::parse(&v) {
+            Some(b) if reachable(b) => b,
+            Some(b) => {
+                eprintln!(
+                    "HADACORE_SIMD={}: backend not reachable on this host, \
+                     falling back to scalar",
+                    b.name()
+                );
+                Backend::Scalar
+            }
+            None => {
+                eprintln!("HADACORE_SIMD={v}: unknown backend, using auto-detection");
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    }
+}
+
+/// Discriminant of the active backend; `usize::MAX` = not yet frozen.
+static ACTIVE: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Per-backend dispatch counters (indexed by discriminant). Relaxed:
+/// they are non-vacuity evidence, not synchronisation.
+static DISPATCHES: [AtomicU64; 4] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// The active backend, freezing the `HADACORE_SIMD` choice on first
+/// call.
+pub fn active() -> Backend {
+    let cur = ACTIVE.load(Ordering::Acquire);
+    if cur != usize::MAX {
+        return Backend::from_index(cur);
+    }
+    let choice = *ENV_CHOICE.force();
+    // racing first calls agree: env_choice is memoised by the Lazy
+    ACTIVE.store(choice as usize, Ordering::Release);
+    choice
+}
+
+/// Switch the active backend (tests / benches). Returns the previously
+/// active backend so callers can restore it; errs if `backend` is not
+/// reachable on this host. This is the *programmatic* override — the
+/// env var stays frozen and is simply superseded.
+pub fn force(backend: Backend) -> Result<Backend, String> {
+    if !reachable(backend) {
+        return Err(format!("backend {} not reachable on this host", backend.name()));
+    }
+    let prev = active(); // freeze the env choice first
+    ACTIVE.store(backend as usize, Ordering::Release);
+    Ok(prev)
+}
+
+/// How many kernel dispatches `backend` has served so far in this
+/// process (monotone; never reset).
+pub fn dispatch_count(backend: Backend) -> u64 {
+    DISPATCHES[backend as usize].load(Ordering::Relaxed)
+}
+
+/// Total dispatches across all backends.
+pub fn dispatch_total() -> u64 {
+    Backend::all().iter().map(|&b| dispatch_count(b)).sum()
+}
+
+/// The ops table of `backend`. Unreachable backends fall back to
+/// scalar (callers guard with [`reachable`]; this keeps the function
+/// total).
+pub fn ops_for(backend: Backend) -> &'static SimdOps {
+    match backend {
+        Backend::Scalar => &scalar::OPS,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if reachable(Backend::Avx2) => &avx2::OPS,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx512 if reachable(Backend::Avx512) => &avx512::OPS,
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => &neon::OPS,
+        _ => &scalar::OPS,
+    }
+}
+
+/// The active ops table, counting this dispatch. Called by the
+/// [`crate::hadamard::mma`] wrappers on every kernel entry.
+pub(crate) fn ops() -> &'static SimdOps {
+    let b = active();
+    DISPATCHES[b as usize].fetch_add(1, Ordering::Relaxed);
+    ops_for(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_parse_round_trip() {
+        for b in Backend::all() {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("off"), Some(Backend::Scalar));
+        assert_eq!(Backend::parse("AVX2"), Some(Backend::Avx2));
+        assert_eq!(Backend::parse("auto"), None);
+        assert_eq!(Backend::parse("sse9"), None);
+    }
+
+    #[test]
+    fn lanes_are_the_register_widths() {
+        assert_eq!(Backend::Scalar.lanes(), 1);
+        assert_eq!(Backend::Neon.lanes(), 4);
+        assert_eq!(Backend::Avx2.lanes(), 8);
+        assert_eq!(Backend::Avx512.lanes(), 16);
+    }
+
+    #[test]
+    fn scalar_is_always_reachable_and_detect_is_reachable() {
+        assert!(reachable(Backend::Scalar));
+        assert!(reachable(detect()));
+    }
+
+    #[test]
+    fn force_rejects_unreachable_and_restores() {
+        if let Some(&bad) = Backend::all().iter().find(|&&b| !reachable(b)) {
+            assert!(force(bad).is_err());
+        }
+        let prev = force(Backend::Scalar).expect("scalar always forceable");
+        let before = dispatch_count(Backend::Scalar);
+        let mut x = [1.0f32; 16];
+        crate::hadamard::mma::right_mul_h16_fast(&mut x);
+        assert!(dispatch_count(Backend::Scalar) > before, "forced backend must run");
+        force(prev).unwrap();
+        assert_eq!(active(), prev);
+    }
+}

@@ -1,0 +1,268 @@
+//! NEON backend (aarch64): 16-element butterfly tiles on four 128-bit
+//! registers.
+//!
+//! Lane mapping (`docs/KERNEL_MATH.md` §8): one contiguous 16-group is
+//! `(q0, q1, q2, q3)` = lanes 0–3 / 4–7 / 8–11 / 12–15. Stage `h = 1`
+//! is `vrev64q_f32` (swap adjacent lanes), stage `h = 2` is
+//! `vextq_f32::<2>` (rotate halves), each followed by one add and one
+//! sub with `vbslq_f32` selecting the sub into the `j + h` lanes;
+//! stages `h = 4, 8` are cross-register `(a + b, a - b)` pairs. Every
+//! output lane is the scalar butterfly's single add or sub in the same
+//! operand order — bit-identical.
+//!
+//! **No FMA**: the base-stage contraction must use `vmulq_f32` +
+//! `vaddq_f32` (two roundings). `vmlaq_f32` is *banned* here — on
+//! aarch64 it lowers to a fused FMLA instruction whose single rounding
+//! would diverge from the scalar `*o += mik * s`.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::aarch64::*;
+
+use super::SimdOps;
+use crate::hadamard::mma::MAX_BASE;
+
+/// Lane masks selecting the `j + h` (minus) lanes of a stage.
+const MINUS_H1: [u32; 4] = [0, u32::MAX, 0, u32::MAX];
+const MINUS_H2: [u32; 4] = [0, 0, u32::MAX, u32::MAX];
+
+/// Stage `h = 1` on one 4-lane register: `s[j] = v[j ^ 1]`.
+#[inline(always)]
+unsafe fn bf1(v: float32x4_t) -> float32x4_t {
+    let s = vrev64q_f32(v);
+    let plus = vaddq_f32(v, s);
+    let minus = vsubq_f32(s, v);
+    vbslq_f32(vld1q_u32(MINUS_H1.as_ptr()), minus, plus)
+}
+
+/// Stage `h = 2` on one 4-lane register: `s[j] = v[j ^ 2]`.
+#[inline(always)]
+unsafe fn bf2(v: float32x4_t) -> float32x4_t {
+    let s = vextq_f32::<2>(v, v);
+    let plus = vaddq_f32(v, s);
+    let minus = vsubq_f32(s, v);
+    vbslq_f32(vld1q_u32(MINUS_H2.as_ptr()), minus, plus)
+}
+
+/// The first `stages` butterfly stages (h = 1, 2, 4, 8) of one
+/// 16-group held as `(q0, q1, q2, q3)`.
+#[inline(always)]
+unsafe fn stages16(
+    mut q0: float32x4_t,
+    mut q1: float32x4_t,
+    mut q2: float32x4_t,
+    mut q3: float32x4_t,
+    stages: u32,
+) -> (float32x4_t, float32x4_t, float32x4_t, float32x4_t) {
+    if stages >= 1 {
+        q0 = bf1(q0);
+        q1 = bf1(q1);
+        q2 = bf1(q2);
+        q3 = bf1(q3);
+    }
+    if stages >= 2 {
+        q0 = bf2(q0);
+        q1 = bf2(q1);
+        q2 = bf2(q2);
+        q3 = bf2(q3);
+    }
+    if stages >= 3 {
+        // h=4: register pairs (q0,q1) and (q2,q3)
+        let (p0, m0) = (vaddq_f32(q0, q1), vsubq_f32(q0, q1));
+        let (p1, m1) = (vaddq_f32(q2, q3), vsubq_f32(q2, q3));
+        q0 = p0;
+        q1 = m0;
+        q2 = p1;
+        q3 = m1;
+    }
+    if stages >= 4 {
+        // h=8: register pairs (q0,q2) and (q1,q3)
+        let (p0, m0) = (vaddq_f32(q0, q2), vsubq_f32(q0, q2));
+        let (p1, m1) = (vaddq_f32(q1, q3), vsubq_f32(q1, q3));
+        q0 = p0;
+        q1 = p1;
+        q2 = m0;
+        q3 = m1;
+    }
+    (q0, q1, q2, q3)
+}
+
+/// Run `stages` butterfly stages over every contiguous 16-group.
+unsafe fn stages_over_groups(x: &mut [f32], stages: u32) {
+    for g in x.chunks_exact_mut(16) {
+        let p = g.as_mut_ptr();
+        let (q0, q1, q2, q3) = stages16(
+            vld1q_f32(p),
+            vld1q_f32(p.add(4)),
+            vld1q_f32(p.add(8)),
+            vld1q_f32(p.add(12)),
+            stages,
+        );
+        vst1q_f32(p, q0);
+        vst1q_f32(p.add(4), q1);
+        vst1q_f32(p.add(8), q2);
+        vst1q_f32(p.add(12), q3);
+    }
+}
+
+/// Elementwise `(a, b) <- (a + b, a - b)` over two equal-length rows.
+#[inline(always)]
+unsafe fn add_sub_rows(a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let pa = a.as_mut_ptr();
+    let pb = b.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let va = vld1q_f32(pa.add(i));
+        let vb = vld1q_f32(pb.add(i));
+        vst1q_f32(pa.add(i), vaddq_f32(va, vb));
+        vst1q_f32(pb.add(i), vsubq_f32(va, vb));
+        i += 4;
+    }
+    while i < n {
+        let xa = *pa.add(i);
+        let xb = *pb.add(i);
+        *pa.add(i) = xa + xb;
+        *pb.add(i) = xa - xb;
+        i += 1;
+    }
+}
+
+unsafe fn right_mul_h16(x: &mut [f32]) {
+    stages_over_groups(x, 4);
+}
+
+unsafe fn right_mul_bd(x: &mut [f32], m: u32) {
+    stages_over_groups(x, m);
+}
+
+unsafe fn right_mul_fused_chunk(x: &mut [f32], chunk: usize) {
+    stages_over_groups(x, 4);
+    for c in x.chunks_exact_mut(chunk) {
+        let mut h = 16usize;
+        while h < chunk {
+            let mut i = 0;
+            while i < chunk {
+                let (lo, hi) = c[i..i + 2 * h].split_at_mut(h);
+                add_sub_rows(lo, hi);
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+    }
+}
+
+unsafe fn left_mul_h16_strided(b: &mut [f32], inner: usize) {
+    let mut h = 1usize;
+    for _ in 0..4 {
+        let mut i = 0;
+        while i < 16 {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                add_sub_rows(
+                    &mut head[j * inner..j * inner + inner],
+                    &mut tail[..inner],
+                );
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+unsafe fn left_mul_small_strided(b: &mut [f32], size: usize, inner: usize) {
+    let mut h = 1usize;
+    while h < size {
+        let mut i = 0;
+        while i < size {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                add_sub_rows(
+                    &mut head[j * inner..j * inner + inner],
+                    &mut tail[..inner],
+                );
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+unsafe fn left_mul_base_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    const TILE: usize = 64;
+    let mut tmp = [0.0f32; MAX_BASE * TILE];
+    let mut col = 0;
+    while col < inner {
+        let w = TILE.min(inner - col);
+        for i in 0..size {
+            let po = tmp[i * w..(i + 1) * w].as_mut_ptr();
+            let mut j = 0;
+            while j + 4 <= w {
+                vst1q_f32(po.add(j), vdupq_n_f32(0.0));
+                j += 4;
+            }
+            while j < w {
+                *po.add(j) = 0.0;
+                j += 1;
+            }
+            for k in 0..size {
+                let mik = m[i * size + k];
+                let vm = vdupq_n_f32(mik);
+                let ps = b.as_ptr().add(k * inner + col);
+                let mut j = 0;
+                while j + 4 <= w {
+                    let acc = vld1q_f32(po.add(j));
+                    let s = vld1q_f32(ps.add(j));
+                    // vmulq + vaddq, never vmlaq (FMLA fuses the rounding)
+                    let prod = vmulq_f32(vm, s);
+                    vst1q_f32(po.add(j), vaddq_f32(acc, prod));
+                    j += 4;
+                }
+                while j < w {
+                    *po.add(j) += mik * *ps.add(j);
+                    j += 1;
+                }
+            }
+        }
+        for i in 0..size {
+            b[i * inner + col..i * inner + col + w]
+                .copy_from_slice(&tmp[i * w..(i + 1) * w]);
+        }
+        col += w;
+    }
+}
+
+// Safe wrappers — SAFETY throughout: NEON is a baseline feature of
+// every aarch64 target this crate compiles for (the module itself is
+// `cfg(target_arch = "aarch64")`-gated), and the kernels use no other
+// unchecked preconditions.
+
+fn right_mul_h16_s(x: &mut [f32]) {
+    unsafe { right_mul_h16(x) }
+}
+fn right_mul_bd_s(x: &mut [f32], m: u32) {
+    unsafe { right_mul_bd(x, m) }
+}
+fn right_mul_fused_chunk_s(x: &mut [f32], chunk: usize) {
+    unsafe { right_mul_fused_chunk(x, chunk) }
+}
+fn left_mul_h16_strided_s(b: &mut [f32], inner: usize) {
+    unsafe { left_mul_h16_strided(b, inner) }
+}
+fn left_mul_small_strided_s(b: &mut [f32], size: usize, inner: usize) {
+    unsafe { left_mul_small_strided(b, size, inner) }
+}
+fn left_mul_base_strided_s(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    unsafe { left_mul_base_strided(b, size, inner, m) }
+}
+
+/// The NEON dispatch table.
+pub static OPS: SimdOps = SimdOps {
+    right_mul_h16: right_mul_h16_s,
+    right_mul_bd: right_mul_bd_s,
+    right_mul_fused_chunk: right_mul_fused_chunk_s,
+    left_mul_h16_strided: left_mul_h16_strided_s,
+    left_mul_small_strided: left_mul_small_strided_s,
+    left_mul_base_strided: left_mul_base_strided_s,
+};

@@ -1,0 +1,171 @@
+//! Scalar reference backend — the exact loop nests the crate shipped
+//! before runtime dispatch existed (moved verbatim from
+//! `hadamard/mma.rs`). Every other backend is pinned bit-for-bit to
+//! these bodies; the golden digests in `tests/golden/` were produced by
+//! them.
+//!
+//! The loops are written so LLVM's auto-vectoriser can still do its
+//! thing (this is the `HADACORE_SIMD=off` fallback, not a deliberately
+//! slow path) — the explicit-intrinsic backends exist to remove the
+//! dependence on what the auto-vectoriser happens to find.
+
+use super::SimdOps;
+use crate::hadamard::mma::MAX_BASE;
+
+/// Butterfly stages `h = 1,2,..,2^(stages-1)` on one contiguous
+/// 16-group.
+#[inline(always)]
+pub(crate) fn fwht16_stages(c: &mut [f32], stages: u32) {
+    let mut h = 1usize;
+    for _ in 0..stages {
+        let mut i = 0;
+        while i < 16 {
+            for j in i..i + h {
+                let a = c[j];
+                let b = c[j + h];
+                c[j] = a + b;
+                c[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// `X <- X @ H16`: 4 radix-2 stages per contiguous 16-row.
+pub fn right_mul_h16(x: &mut [f32]) {
+    debug_assert!(x.len() % 16 == 0);
+    for chunk in x.chunks_exact_mut(16) {
+        fwht16_stages(chunk, 4);
+    }
+}
+
+/// `X <- X @ (I kron H_{2^m})`: m stages per 16-group (`1 <= m < 4`;
+/// the `m == 0` identity returns in the dispatch wrapper).
+pub fn right_mul_bd(x: &mut [f32], m: u32) {
+    debug_assert!(m >= 1 && m < 4);
+    for chunk in x.chunks_exact_mut(16) {
+        fwht16_stages(chunk, m);
+    }
+}
+
+/// Fused round 0: 4 stages per 16-group, then contiguous levels
+/// `h = 16, 32, 64` inside each `chunk`-sized run.
+pub fn right_mul_fused_chunk(x: &mut [f32], chunk: usize) {
+    debug_assert!(chunk.is_power_of_two() && (16..=128).contains(&chunk));
+    debug_assert!(x.len() % chunk == 0);
+    for g in x.chunks_exact_mut(16) {
+        fwht16_stages(g, 4);
+    }
+    for c in x.chunks_exact_mut(chunk) {
+        let mut h = 16usize;
+        while h < chunk {
+            let mut i = 0;
+            while i < chunk {
+                let (lo, hi) = c[i..i + 2 * h].split_at_mut(h);
+                for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let xa = *a;
+                    let xb = *b;
+                    *a = xa + xb;
+                    *b = xa - xb;
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+    }
+}
+
+/// `B <- H16 @ B` for a `(16, inner)` row-strided block: 4 stages over
+/// the row index, each an elementwise add/sub of two `inner`-rows.
+pub fn left_mul_h16_strided(b: &mut [f32], inner: usize) {
+    debug_assert_eq!(b.len(), 16 * inner);
+    let mut h = 1usize;
+    for _ in 0..4 {
+        let mut i = 0;
+        while i < 16 {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                let row_a = &mut head[j * inner..j * inner + inner];
+                let row_b = &mut tail[..inner];
+                for (a, v) in row_a.iter_mut().zip(row_b.iter_mut()) {
+                    let x = *a;
+                    let y = *v;
+                    *a = x + y;
+                    *v = x - y;
+                }
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// `B <- H_size @ B` for a small pow2 `(size, inner)` block:
+/// log2(size) row-stages.
+pub fn left_mul_small_strided(b: &mut [f32], size: usize, inner: usize) {
+    debug_assert_eq!(b.len(), size * inner);
+    debug_assert!(size.is_power_of_two() && size <= 16);
+    let mut h = 1usize;
+    while h < size {
+        let mut i = 0;
+        while i < size {
+            for j in i..i + h {
+                let (head, tail) = b.split_at_mut((j + h) * inner);
+                let row_a = &mut head[j * inner..j * inner + inner];
+                let row_b = &mut tail[..inner];
+                for (a, v) in row_a.iter_mut().zip(row_b.iter_mut()) {
+                    let x = *a;
+                    let y = *v;
+                    *a = x + y;
+                    *v = x - y;
+                }
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// `B <- M @ B` for a dense `size x size` base factor, gather-compute-
+/// scatter over 64-column tiles. The k-loop is a strict mul-then-add
+/// chain per element — the operation order every vector backend must
+/// reproduce exactly (no FMA, no zero-skipping: `o + 0.0*s` can flip
+/// the sign of a negative zero, so even the ±0 products are performed).
+pub fn left_mul_base_strided(b: &mut [f32], size: usize, inner: usize, m: &[f32]) {
+    debug_assert_eq!(b.len(), size * inner);
+    debug_assert_eq!(m.len(), size * size);
+    debug_assert!(size <= MAX_BASE);
+    const TILE: usize = 64;
+    let mut tmp = [0.0f32; MAX_BASE * TILE];
+    let mut col = 0;
+    while col < inner {
+        let w = TILE.min(inner - col);
+        for i in 0..size {
+            let out = &mut tmp[i * w..(i + 1) * w];
+            out.iter_mut().for_each(|v| *v = 0.0);
+            for k in 0..size {
+                let mik = m[i * size + k];
+                let src = &b[k * inner + col..k * inner + col + w];
+                for (o, s) in out.iter_mut().zip(src.iter()) {
+                    *o += mik * s;
+                }
+            }
+        }
+        for i in 0..size {
+            b[i * inner + col..i * inner + col + w]
+                .copy_from_slice(&tmp[i * w..(i + 1) * w]);
+        }
+        col += w;
+    }
+}
+
+/// The scalar dispatch table.
+pub static OPS: SimdOps = SimdOps {
+    right_mul_h16,
+    right_mul_bd,
+    right_mul_fused_chunk,
+    left_mul_h16_strided,
+    left_mul_small_strided,
+    left_mul_base_strided,
+};

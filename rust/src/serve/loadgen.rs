@@ -164,6 +164,12 @@ impl LoadgenReport {
         .with_extra("allocs_steady", self.alloc_allocs as f64)
         .with_extra("alloc_per_req", self.allocs_per_request())
         .with_extra("alloc_bytes_per_req", self.alloc_bytes_per_request())
+        // which SIMD dispatch table served the run (1 = scalar): the
+        // perf trajectory must attribute throughput to the vector ISA
+        .with_extra(
+            "simd_lanes",
+            crate::hadamard::simd::active().lanes() as f64,
+        )
     }
 
     /// Tracked server-side allocation calls per ok response (the
@@ -427,5 +433,14 @@ mod tests {
              allocs_steady is distinguishable from an unmeasured run"
         );
         assert!(rec.extras.iter().any(|(k, _)| k == "alloc_per_req"));
+        // the dispatch provenance: lanes of whatever backend is active
+        // in this process (1 when the scalar table is frozen in)
+        let want_lanes = crate::hadamard::simd::active().lanes() as f64;
+        assert!(
+            rec.extras
+                .iter()
+                .any(|(k, v)| k == "simd_lanes" && *v == want_lanes),
+            "records must attribute throughput to the active SIMD backend"
+        );
     }
 }

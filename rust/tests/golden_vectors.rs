@@ -296,6 +296,33 @@ fn golden_vectors_bf16() {
     check_dtype(DType::BF16);
 }
 
+/// Every reachable SIMD backend must reproduce **all 90 golden
+/// digests** (30 entries × 3 dtypes) without regeneration: the vector
+/// butterflies are bit-identical to the scalar bodies by construction
+/// (`docs/KERNEL_MATH.md` §8), so the goldens pinned before the SIMD
+/// dispatch existed stay valid under every table. Forcing is
+/// process-global but benign for the sibling tests in this binary —
+/// they assert the very property (backend-independence of the bits)
+/// this test sweeps.
+#[test]
+fn golden_vectors_hold_under_every_forced_simd_backend() {
+    use hadacore::hadamard::simd::{self, Backend};
+    for backend in Backend::all().into_iter().filter(|&b| simd::reachable(b)) {
+        let prev = simd::force(backend).expect("backend reachable");
+        let before = simd::dispatch_count(backend);
+        for dtype in [DType::F32, DType::F16, DType::BF16] {
+            check_dtype(dtype);
+        }
+        let after = simd::dispatch_count(backend);
+        simd::force(prev).expect("restore backend");
+        assert!(
+            after > before,
+            "non-vacuity: goldens never dispatched through {}",
+            backend.name()
+        );
+    }
+}
+
 #[test]
 fn golden_inputs_are_dyadic_and_deterministic() {
     // the platform-exactness argument rests on these two properties

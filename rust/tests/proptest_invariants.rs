@@ -504,6 +504,64 @@ fn prop_sign_vector_is_a_pure_function_of_seed_and_n() {
 }
 
 #[test]
+fn prop_forced_simd_backend_bit_identical_to_scalar_table() {
+    // Random dispatch forcing (ISSUE 8): each case draws a reachable
+    // SIMD backend, a kernel family, an engine shape and an integer
+    // payload, runs the identical transform once under the forced
+    // scalar table and once under the forced vector table, and demands
+    // **bit equality** — compared via to_bits, so a -0.0/+0.0 skew
+    // (the zero-skipping hazard in the base stage) cannot hide behind
+    // `-0.0 == 0.0`. Forcing is process-global; sibling tests in this
+    // binary tolerate it because the very property under test is that
+    // the bits are backend-independent.
+    use hadacore::hadamard::simd::{self, Backend};
+    check("forced dispatch: vector bits == scalar bits", 16, |rng| {
+        let reachable: Vec<Backend> =
+            Backend::all().into_iter().filter(|&b| simd::reachable(b)).collect();
+        let backend = reachable[rng.below(reachable.len())];
+        let n = random_supported_size(rng, 9); // up to 40·512 = 20480
+        let rows = rng.range(1, 6);
+        let x = integer_vec(rng, rows * n, 4);
+        let opts = FwhtOptions::raw();
+        let kernel = [KernelKind::Dao, KernelKind::HadaCore][rng.below(2)];
+        let engine = ExecEngine::new(ExecConfig {
+            threads: [1usize, 3, 8][rng.below(3)],
+            chunks_per_thread: rng.range(1, 5),
+            min_chunk_elems: 1usize << rng.range(6, 12),
+            tune: TunePolicy::FixedDepth(rng.range(1, 4)),
+        });
+        let run = |data: &mut Vec<f32>, direct: bool| {
+            if direct {
+                fwht_f32(kernel, data, n, &opts);
+            } else {
+                engine.run_f32(kernel, data, n, &opts);
+            }
+        };
+        let direct = rng.chance(0.5);
+
+        let prev = simd::force(Backend::Scalar).expect("scalar always reachable");
+        let mut want = x.clone();
+        run(&mut want, direct);
+        simd::force(backend).expect("drawn backend reachable");
+        let before = simd::dispatch_count(backend);
+        let mut got = x.clone();
+        run(&mut got, direct);
+        let after = simd::dispatch_count(backend);
+        simd::force(prev).expect("restore");
+
+        assert!(after > before, "non-vacuity: {} never dispatched", backend.name());
+        let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            got_bits, want_bits,
+            "{} diverged from scalar table: kernel={kernel:?} n={n} rows={rows} \
+             direct={direct}",
+            backend.name()
+        );
+    });
+}
+
+#[test]
 fn prop_batcher_state_never_leaks_rows() {
     // after any request pattern completes, the batcher holds zero rows
     let coord = coordinator(2);

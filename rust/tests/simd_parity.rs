@@ -1,0 +1,293 @@
+//! Forced-dispatch SIMD parity matrix (ISSUE 8 acceptance gate).
+//!
+//! For **every backend reachable on this host**, force it through
+//! [`hadacore::hadamard::simd::force`] and assert the transform output
+//! is **bit-for-bit identical** to the same transform executed with the
+//! dispatch table forced to [`Backend::Scalar`] — the portable
+//! reference bodies in `hadamard/simd/scalar.rs` that every vector
+//! kernel must reproduce exactly (no FMA, no reassociation, no
+//! zero-skipping; see `docs/KERNEL_MATH.md` §8). The grid:
+//!
+//! * sizes {256, 1024, 768 = 12·64, 5120 = 20·256, 14336 = 28·512,
+//!   32768} — pow2 plus every non-pow2 base family;
+//! * every admissible fusion depth of the planned HadaCore path (plus
+//!   one past the round count, which clamps);
+//! * batch lane counts (rows) 1 / 3 / 8;
+//! * engine chunk boundaries (a sharded multi-chunk engine with a tiny
+//!   chunk floor vs the single-threaded inline path);
+//! * both dispatched kernel families (HadaCore and the Dao baseline)
+//!   and the fused sign-flip prologue rail.
+//!
+//! **Non-vacuity**: each forced leg also asserts the backend's
+//! process-wide dispatch counter advanced — a backend that silently
+//! fell back to scalar would pass every bit-equality check, so the
+//! counters are the proof the vector path actually ran (surfaced
+//! through `ExecStatsSnapshot::{simd_backend, simd_dispatches}` too).
+//!
+//! The dispatch state is process-global, so every test here serialises
+//! on one lock and restores the previously active backend before
+//! releasing it. Interleaving with *other* test binaries is a
+//! non-issue: they are separate processes.
+
+use std::sync::{Mutex, MutexGuard};
+
+use hadacore::exec::{ExecConfig, ExecEngine, TunePolicy};
+use hadacore::hadamard::hadacore::{
+    fwht_hadacore_f32_planned_depth, HadaCoreConfig, HadaCorePlan,
+};
+use hadacore::hadamard::simd::{self, Backend};
+use hadacore::hadamard::{fwht_f32, FwhtOptions, KernelKind, Prologue};
+use hadacore::quant::Epilogue;
+use hadacore::util::rng::Rng;
+
+/// The full size grid: {256, 1024, 12·64, 20·256, 28·512, 32768}.
+const SIZES: [usize; 6] = [256, 1024, 768, 5120, 14336, 32768];
+
+/// Batch lane counts (rows per batch).
+const ROWS: [usize; 3] = [1, 3, 8];
+
+static DISPATCH_LOCK: Mutex<()> = Mutex::new(());
+
+fn dispatch_guard() -> MutexGuard<'static, ()> {
+    DISPATCH_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn reachable_backends() -> Vec<Backend> {
+    Backend::all().into_iter().filter(|&b| simd::reachable(b)).collect()
+}
+
+/// Dyadic deterministic inputs (`k / 2^16`, |v| < 128): bit-exact on
+/// every platform, same construction as the golden vectors.
+fn dyadic_input(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..len)
+        .map(|_| ((rng.next_u64() >> 40) as i64 - (1 << 23)) as f32 / 65536.0)
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Force `backend`, run `body`, restore the previous backend, and
+/// return `body`'s result. The non-vacuity counter check lives in the
+/// call sites that need it (forcing Scalar for the oracle leg must not
+/// require *vector* dispatches, for instance).
+fn under<R>(backend: Backend, body: impl FnOnce() -> R) -> R {
+    let prev = simd::force(backend).expect("backend reachable");
+    let out = body();
+    simd::force(prev).expect("restore backend");
+    out
+}
+
+/// [`under`] plus the non-vacuity assertion: the forced backend's
+/// dispatch counter must advance while `body` runs.
+fn under_counted<R>(backend: Backend, body: impl FnOnce() -> R) -> R {
+    let before = simd::dispatch_count(backend);
+    let out = under(backend, body);
+    let after = simd::dispatch_count(backend);
+    assert!(
+        after > before,
+        "non-vacuity: forced backend {} served no dispatches",
+        backend.name()
+    );
+    out
+}
+
+/// Direct planned-path grid: every (size × fusion depth × rows ×
+/// kernel) cell, per reachable backend, bit-identical to the same cell
+/// under the forced scalar table.
+#[test]
+fn forced_backends_match_scalar_across_sizes_depths_and_rows() {
+    let _g = dispatch_guard();
+    let backends = reachable_backends();
+    for &n in &SIZES {
+        let plan = HadaCorePlan::new(n, &HadaCoreConfig::default());
+        let opts = FwhtOptions::normalized(n);
+        for &rows in &ROWS {
+            let input = dyadic_input(0x51_3D ^ n as u64, rows * n);
+            // one transform closure per cell so the oracle and every
+            // backend run byte-for-byte the same code path
+            for depth in 1..=plan.max_fusion_depth() + 1 {
+                let cell = || {
+                    let mut got = input.clone();
+                    for row in got.chunks_exact_mut(n) {
+                        fwht_hadacore_f32_planned_depth(row, &plan, &opts, depth);
+                    }
+                    bits(&got)
+                };
+                let want = under(Backend::Scalar, cell);
+                for &backend in &backends {
+                    let got = under_counted(backend, cell);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} diverged: n={n} rows={rows} depth={depth}",
+                        backend.name()
+                    );
+                }
+            }
+            // the Dao baseline shares the dispatched strided/base entry
+            // points — cover that family too
+            let dao_cell = || {
+                let mut got = input.clone();
+                fwht_f32(KernelKind::Dao, &mut got, n, &opts);
+                bits(&got)
+            };
+            let want = under(Backend::Scalar, dao_cell);
+            for &backend in &backends {
+                let got = under_counted(backend, dao_cell);
+                assert_eq!(
+                    got,
+                    want,
+                    "{} dao diverged: n={n} rows={rows}",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+/// Engine grid: chunk boundaries (sharded pool with a tiny chunk floor
+/// vs inline single-thread), every forced fusion depth, rotated
+/// prologue included — each cell bit-identical to the same engine cell
+/// under the forced scalar table.
+#[test]
+fn forced_backends_match_scalar_through_the_engine_and_chunking() {
+    let _g = dispatch_guard();
+    let backends = reachable_backends();
+    let seed = 0x5EED_0008u64;
+    for &n in &[1024usize, 5120, 14336] {
+        let opts = FwhtOptions::normalized(n);
+        let rows = 9; // odd: exercises ragged chunk tails
+        let input = dyadic_input(0xE7_91 ^ n as u64, rows * n);
+        let plan = HadaCorePlan::new(n, &HadaCoreConfig::default());
+        for depth in 1..=plan.max_fusion_depth() {
+            for threads in [1usize, 4] {
+                let make_engine = || {
+                    ExecEngine::new(ExecConfig {
+                        threads,
+                        chunks_per_thread: 4,
+                        // tiny floor => many chunks => boundaries
+                        min_chunk_elems: 1,
+                        tune: TunePolicy::FixedDepth(depth),
+                    })
+                };
+                let plain = || {
+                    let engine = make_engine();
+                    let mut got = input.clone();
+                    engine.run_f32(KernelKind::HadaCore, &mut got, n, &opts);
+                    bits(&got)
+                };
+                let want = under(Backend::Scalar, plain);
+                for &backend in &backends {
+                    let got = under_counted(backend, plain);
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} engine diverged: n={n} depth={depth} threads={threads}",
+                        backend.name()
+                    );
+                }
+                // rotated: the fused sign-flip prologue rides the same
+                // dispatched chunk traversal
+                let rotated = || {
+                    let engine = make_engine();
+                    let mut got = input.clone();
+                    let _ = engine.run_f32_with_stages(
+                        KernelKind::HadaCore,
+                        &mut got,
+                        n,
+                        &opts,
+                        Prologue::SignFlip { seed },
+                        Epilogue::None,
+                    );
+                    bits(&got)
+                };
+                let want_rot = under(Backend::Scalar, rotated);
+                for &backend in &backends {
+                    let got = under_counted(backend, rotated);
+                    assert_eq!(
+                        got,
+                        want_rot,
+                        "{} rotated engine diverged: n={n} depth={depth} \
+                         threads={threads}",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The engine's stats snapshot reports the forced backend by name and a
+/// dispatch count that advances with traffic — the observable the
+/// loadgen/bench records carry.
+#[test]
+fn stats_snapshot_reports_the_forced_backend_and_counts() {
+    let _g = dispatch_guard();
+    for backend in reachable_backends() {
+        under(backend, || {
+            let engine = ExecEngine::single_threaded();
+            let s0 = engine.stats();
+            assert_eq!(s0.simd_backend, backend.name());
+            let n = 1024;
+            let opts = FwhtOptions::normalized(n);
+            let mut data = dyadic_input(7, 4 * n);
+            engine.run_f32(KernelKind::HadaCore, &mut data, n, &opts);
+            let s1 = engine.stats();
+            assert!(
+                s1.simd_dispatches > s0.simd_dispatches,
+                "{}: dispatch counter must advance",
+                backend.name()
+            );
+        });
+    }
+}
+
+/// The env choice is frozen at first use: mutating `HADACORE_SIMD`
+/// after the first dispatch must not move the active backend (the
+/// same freeze contract as `HADACORE_TUNE`).
+#[test]
+fn env_choice_is_frozen_after_first_dispatch() {
+    let _g = dispatch_guard();
+    let original = std::env::var("HADACORE_SIMD").ok();
+    let active = simd::active(); // freezes the env choice
+    std::env::set_var(
+        "HADACORE_SIMD",
+        if active == Backend::Scalar { "auto" } else { "off" },
+    );
+    assert_eq!(
+        simd::active(),
+        active,
+        "HADACORE_SIMD must be frozen at first use"
+    );
+    match original {
+        Some(v) => std::env::set_var("HADACORE_SIMD", v),
+        None => std::env::remove_var("HADACORE_SIMD"),
+    }
+}
+
+/// Forcing never changes *results*, only provenance: a full transform
+/// under each backend in sequence produces one identical bit stream.
+/// (This is the property that makes global-dispatch races benign for
+/// every other test in the repo.)
+#[test]
+fn backend_switching_mid_process_is_observably_pure() {
+    let _g = dispatch_guard();
+    let n = 768;
+    let opts = FwhtOptions::normalized(n);
+    let input = dyadic_input(0xABCD, 3 * n);
+    let mut outputs: Vec<Vec<u32>> = Vec::new();
+    for backend in reachable_backends() {
+        let got = under(backend, || {
+            let mut got = input.clone();
+            fwht_f32(KernelKind::HadaCore, &mut got, n, &opts);
+            bits(&got)
+        });
+        outputs.push(got);
+    }
+    for w in outputs.windows(2) {
+        assert_eq!(w[0], w[1], "backends disagree");
+    }
+}

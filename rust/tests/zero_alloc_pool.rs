@@ -24,7 +24,7 @@ use std::time::Duration;
 use hadacore::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, TransformRequest,
 };
-use hadacore::hadamard::KernelKind;
+use hadacore::hadamard::{KernelKind, Prologue};
 use hadacore::quant::{Epilogue, Fp8Format};
 use hadacore::serve::wire::{decode_elems, encode_elems, WireRequest};
 use hadacore::serve::{serve, Client, Reply, ServeConfig, ServeHandle};
@@ -79,14 +79,34 @@ fn quick_poll() -> ServeConfig {
 
 /// The request shapes every phase drives: a latency-ish f32 shape, the
 /// FP8 rotate→quantize epilogue, a 16-bit wire dtype (widen + narrow on
-/// the same pooled buffer), and a non-power-of-two size.
-fn shape_grid() -> Vec<(usize, usize, DType, Epilogue)> {
+/// the same pooled buffer), a non-power-of-two size — and rotated
+/// (sign-flip prologue) variants with **fixed seeds**, so the rotated
+/// steady state exercises the process-wide `(seed, n)` sign-vector
+/// cache: after warmup the fused prologue must cost zero allocations
+/// per batch (the Arc is a cache hit, not a fresh materialisation).
+fn shape_grid() -> Vec<(usize, usize, DType, Epilogue, Prologue)> {
     vec![
-        (256, 2, DType::F32, Epilogue::None),
-        (1024, 4, DType::F32, Epilogue::None),
-        (1024, 3, DType::F32, Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 }),
-        (512, 2, DType::F16, Epilogue::None),
-        (768, 1, DType::F32, Epilogue::None),
+        (256, 2, DType::F32, Epilogue::None, Prologue::None),
+        (1024, 4, DType::F32, Epilogue::None, Prologue::None),
+        (
+            1024,
+            3,
+            DType::F32,
+            Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+            Prologue::None,
+        ),
+        (512, 2, DType::F16, Epilogue::None, Prologue::None),
+        (768, 1, DType::F32, Epilogue::None, Prologue::None),
+        // rotated workload: plain, rotate→quantize, and 16-bit widening
+        (1024, 2, DType::F32, Epilogue::None, Prologue::SignFlip { seed: 0x5EED_0101 }),
+        (
+            768,
+            2,
+            DType::F32,
+            Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 },
+            Prologue::SignFlip { seed: 0x5EED_0202 },
+        ),
+        (512, 2, DType::F16, Epilogue::None, Prologue::SignFlip { seed: 0x5EED_0303 }),
     ]
 }
 
@@ -96,10 +116,12 @@ fn make_wire(
     rows: usize,
     dtype: DType,
     epilogue: Epilogue,
+    prologue: Prologue,
 ) -> WireRequest {
     let data = rng.normal_vec(rows * n);
     let mut wire = WireRequest::from_f32(0, n, &data, KernelKind::HadaCore, dtype);
     wire.epilogue = epilogue;
+    wire.prologue = prologue;
     wire
 }
 
@@ -107,8 +129,8 @@ fn make_wire(
 fn drive(client: &Client, rng: &mut Rng, passes: usize) -> usize {
     let mut ok = 0;
     for _ in 0..passes {
-        for (n, rows, dtype, epilogue) in shape_grid() {
-            let wire = make_wire(rng, n, rows, dtype, epilogue);
+        for (n, rows, dtype, epilogue, prologue) in shape_grid() {
+            let wire = make_wire(rng, n, rows, dtype, epilogue, prologue);
             let resp = client.transform(wire).expect("transform");
             assert_eq!(resp.rows as usize, rows);
             assert_eq!(resp.n as usize, n);
@@ -154,7 +176,8 @@ fn serve_path_returns_every_pooled_buffer_and_hits_zero_allocs() {
         let addr = handle.addr().to_string();
         let client = Client::connect(&addr).unwrap();
         for _ in 0..8 {
-            let wire = make_wire(&mut rng, 256, 2, DType::F32, Epilogue::None);
+            let wire =
+                make_wire(&mut rng, 256, 2, DType::F32, Epilogue::None, Prologue::None);
             match client.submit(wire).unwrap().wait() {
                 Reply::Busy { retry_after_us } => assert!(retry_after_us > 0),
                 other => panic!("pipeline_depth 0 must shed, got {other:?}"),
@@ -172,7 +195,7 @@ fn serve_path_returns_every_pooled_buffer_and_hits_zero_allocs() {
 
         // a partial request frame abandoned mid-stream (reader holds the
         // bytes, never completes the frame, connection closes)
-        let wire = make_wire(&mut rng, 256, 1, DType::F32, Epilogue::None);
+        let wire = make_wire(&mut rng, 256, 1, DType::F32, Epilogue::None, Prologue::None);
         let bytes = hadacore::serve::wire::Frame::Request(wire).encode();
         let mut raw = TcpStream::connect(&addr).unwrap();
         raw.write_all(&bytes[..bytes.len() / 2]).unwrap();
@@ -192,7 +215,9 @@ fn serve_path_returns_every_pooled_buffer_and_hits_zero_allocs() {
         let (coord, handle) = start_server(quick_poll());
         let client = Client::connect(&handle.addr().to_string()).unwrap();
         // warmup: populate pool shelves, batcher spares, reply rings,
-        // framer scratch, plan/tuning caches for every shape measured
+        // framer scratch, plan/tuning caches, and the (seed, n)
+        // sign-vector cache for every shape measured — the rotated
+        // entries must then be zero-alloc too (ISSUE 8 satellite)
         drive(&client, &mut rng, 6);
 
         let before = alloc::tracked();
@@ -263,8 +288,8 @@ fn pooled_tcp_responses_match_direct_submit_bytes() {
     let (coord, handle) = start_server(quick_poll());
     let client = Client::connect(&handle.addr().to_string()).unwrap();
     let mut rng = Rng::new(0xB17E5);
-    for (n, rows, dtype, epilogue) in shape_grid() {
-        let wire = make_wire(&mut rng, n, rows, dtype, epilogue);
+    for (n, rows, dtype, epilogue, prologue) in shape_grid() {
+        let wire = make_wire(&mut rng, n, rows, dtype, epilogue, prologue);
         // the server sees the *narrowed* payload: canonicalise through
         // the wire encoding before running the reference transform
         let canon = decode_elems(&wire.payload, dtype).unwrap();
@@ -273,6 +298,7 @@ fn pooled_tcp_responses_match_direct_submit_bytes() {
         let mut direct = TransformRequest::new(0, n, canon);
         direct.kernel = KernelKind::HadaCore;
         direct.epilogue = epilogue;
+        direct.prologue = prologue;
         let direct = coord.transform(direct).unwrap();
 
         assert_eq!(
