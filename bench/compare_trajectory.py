@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Compare two hadacore-bench-v1 JSON documents at fixed workload keys.
+
+Usage:
+    python3 bench/compare_trajectory.py NEW.json [BASELINE.json] [--strict]
+                                        [--threshold PCT]
+
+Joins entries of NEW against BASELINE at the fixed key
+(bench, kernel, n, rows, dtype, fusion_depth, threads) and reports the
+relative change in throughput (``melems_per_s``, plus ``qps_achieved``
+where both sides carry it). Entries whose key appears several times in
+one document (e.g. two traffic mixes sharing a shape envelope) are
+paired positionally within the key group.
+
+A drop larger than the threshold (default 15%) on any matched entry is
+reported as a REGRESSION. By default the script only *warns* (exit 0)
+so a noisy CI runner can't hard-fail the pipeline; pass ``--strict`` to
+exit non-zero on regressions instead.
+
+If BASELINE is omitted it defaults to the newest ``BENCH_PR*.json``
+under ``bench/trajectory/`` that is not the NEW file itself; when no
+baseline exists yet (first recorded run) the script prints a note and
+exits 0 — the comparison becomes meaningful from the second record on.
+
+Zero dependencies beyond the Python 3 standard library, mirroring the
+repo's no-deps policy.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+SCHEMA = "hadacore-bench-v1"
+KEY_FIELDS = ("bench", "kernel", "n", "rows", "dtype", "fusion_depth", "threads")
+THROUGHPUT_FIELDS = ("melems_per_s", "qps_achieved")
+
+
+def load(path: Path) -> list[dict]:
+    doc = json.loads(path.read_text())
+    if doc.get("schema") != SCHEMA:
+        sys.exit(f"error: {path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        sys.exit(f"error: {path}: no entries")
+    return entries
+
+
+def key_of(entry: dict) -> tuple:
+    return tuple(entry.get(f) for f in KEY_FIELDS)
+
+
+def group(entries: list[dict]) -> dict[tuple, list[dict]]:
+    groups: dict[tuple, list[dict]] = {}
+    for e in entries:
+        groups.setdefault(key_of(e), []).append(e)
+    return groups
+
+
+def pr_number(path: Path) -> int:
+    m = re.search(r"BENCH_PR(\d+)\.json$", path.name)
+    return int(m.group(1)) if m else -1
+
+
+def default_baseline(new_path: Path) -> Path | None:
+    trajectory = Path(__file__).resolve().parent / "trajectory"
+    candidates = [
+        p
+        for p in sorted(trajectory.glob("BENCH_PR*.json"), key=pr_number)
+        if p.resolve() != new_path.resolve()
+    ]
+    return candidates[-1] if candidates else None
+
+
+def main(argv: list[str]) -> int:
+    strict = "--strict" in argv
+    argv = [a for a in argv if a != "--strict"]
+    threshold = 15.0
+    if "--threshold" in argv:
+        i = argv.index("--threshold")
+        threshold = float(argv[i + 1])
+        del argv[i : i + 2]
+    if not 1 <= len(argv) <= 2:
+        sys.exit(__doc__)
+
+    new_path = Path(argv[0])
+    base_path = Path(argv[1]) if len(argv) == 2 else default_baseline(new_path)
+    if base_path is None or not base_path.exists():
+        print(
+            f"compare_trajectory: no baseline for {new_path.name} — "
+            "first recorded run, nothing to compare against"
+        )
+        return 0
+
+    new_groups = group(load(new_path))
+    base_groups = group(load(base_path))
+
+    matched = 0
+    regressions = []
+    for key, new_entries in sorted(new_groups.items(), key=repr):
+        base_entries = base_groups.get(key)
+        if not base_entries:
+            continue
+        for new_e, base_e in zip(new_entries, base_entries):
+            matched += 1
+            label = "/".join(str(k) for k in key)
+            for field in THROUGHPUT_FIELDS:
+                new_v, base_v = new_e.get(field), base_e.get(field)
+                if not isinstance(new_v, (int, float)) or not isinstance(
+                    base_v, (int, float)
+                ):
+                    continue
+                if base_v <= 0:
+                    continue
+                delta_pct = (new_v - base_v) / base_v * 100.0
+                line = (
+                    f"  {label} {field}: {base_v:.3f} -> {new_v:.3f} "
+                    f"({delta_pct:+.1f}%)"
+                )
+                if delta_pct < -threshold:
+                    regressions.append(line)
+                    print(f"REGRESSION{line}")
+                else:
+                    print(f"ok{line}")
+
+    print(
+        f"compare_trajectory: {new_path.name} vs {base_path.name}: "
+        f"{matched} matched entr{'y' if matched == 1 else 'ies'}, "
+        f"{len(regressions)} regression(s) beyond {threshold:.0f}%"
+    )
+    if matched == 0:
+        print(
+            "compare_trajectory: note: no shared keys — benches measure "
+            "disjoint workloads, comparison is vacuous"
+        )
+    if regressions and strict:
+        return 1
+    if regressions:
+        print(
+            "compare_trajectory: warning only (pass --strict to fail the "
+            "build on regressions)"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

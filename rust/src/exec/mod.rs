@@ -568,7 +568,11 @@ impl ExecEngine {
                         QuantScales::PerTensor(scale)
                     }
                     Epilogue::QuantInt8 { group } => {
-                        let mut scales = vec![0.0f32; rows * n / group];
+                        // recycled vector: the serve writer returns it
+                        // to the scale pool after framing, so steady
+                        // grouped-INT8 traffic allocates no scales
+                        let mut scales = crate::util::pool::scale_pool()
+                            .get_zeroed(rows * n / group);
                         // SAFETY of ScalesPtr: `scales` outlives the
                         // blocking submission and chunks write disjoint
                         // slot ranges (group divides n).
@@ -978,7 +982,9 @@ unsafe fn run_inline(
             QuantScales::PerTensor(scale)
         }
         Epilogue::QuantInt8 { group } => {
-            let mut scales = vec![0.0f32; rows * n / group];
+            // same recycled source as the pooled path above
+            let mut scales =
+                crate::util::pool::scale_pool().get_zeroed(rows * n / group);
             group_quant_range(payload, 0, rows, n, group, scales.as_mut_ptr());
             QuantScales::PerGroup(scales)
         }

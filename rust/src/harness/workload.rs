@@ -55,8 +55,8 @@ impl Default for WorkloadConfig {
 /// serving story, so `hadacore loadgen --mixes interactive,llama-ffn`
 /// reuses exactly the request distributions the in-process benches
 /// measure.
-pub const TRAFFIC_MIXES: [&str; 5] =
-    ["interactive", "batch", "llama-ffn", "quantized", "mixed"];
+pub const TRAFFIC_MIXES: [&str; 6] =
+    ["interactive", "batch", "llama-ffn", "quantized", "int8-grouped", "mixed"];
 
 /// Resolve a named traffic mix (see [`TRAFFIC_MIXES`]); `None` for an
 /// unknown name.
@@ -67,6 +67,10 @@ pub const TRAFFIC_MIXES: [&str; 5] =
 ///   non-power-of-two production shape.
 /// * `quantized` — FP8 rotate→quantize epilogue on attention-sized rows
 ///   (the paper's FP8-attention setting).
+/// * `int8-grouped` — grouped-INT8 rotate→quantize epilogue (QuaRot's
+///   weight/activation format): exercises the per-response scale
+///   vector, which must come from the recycler — this mix is in the
+///   `--assert-zero-alloc` gate precisely so that stays true.
 /// * `mixed` — everything at once, the general-traffic soak.
 pub fn traffic_mix(name: &str) -> Option<WorkloadConfig> {
     let base = WorkloadConfig::default();
@@ -94,6 +98,13 @@ pub fn traffic_mix(name: &str) -> Option<WorkloadConfig> {
             rows_min: 1,
             rows_max: 8,
             epilogue: Epilogue::QuantFp8 { fmt: crate::quant::Fp8Format::E4M3 },
+            ..base
+        }),
+        "int8-grouped" => Some(WorkloadConfig {
+            sizes: vec![1024, 4096],
+            rows_min: 1,
+            rows_max: 8,
+            epilogue: Epilogue::QuantInt8 { group: 64 },
             ..base
         }),
         "mixed" => Some(WorkloadConfig {
@@ -292,6 +303,11 @@ mod tests {
         assert_eq!(cfg.epilogue, Epilogue::QuantFp8 { fmt: Fp8Format::E4M3 });
         let cfg = traffic_mix("llama-ffn").unwrap();
         assert_eq!(cfg.sizes, vec![14336]);
+        // the grouped-INT8 mix must carry a group that divides every
+        // size it generates, or admission would reject the traffic
+        let cfg = traffic_mix("int8-grouped").unwrap();
+        assert_eq!(cfg.epilogue, Epilogue::QuantInt8 { group: 64 });
+        assert!(cfg.sizes.iter().all(|n| n % 64 == 0));
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! * `serve`     — run the TCP serving layer (`serve/`) over the
 //!                 coordinator: wire-protocol server with admission
 //!                 control and graceful drain.
+//! * `cluster`   — run the scale-out tier (`serve/cluster.rs`): a
+//!                 routing proxy over N backend serve processes (given
+//!                 via `--backends` or spawned as children with
+//!                 `--spawn`), with homogeneous shard routing, health
+//!                 checks, and retriable failover.
 //! * `loadgen`   — open-loop load generator: drive configurable QPS /
 //!                 traffic mixes through the client library against a
 //!                 server (or a self-hosted in-process one) and emit the
@@ -14,6 +19,9 @@
 //!                 `--features count-alloc` it also measures server-side
 //!                 heap allocations per request (`--assert-zero-alloc`
 //!                 turns the zero-alloc steady state into a hard gate).
+//!                 `--cluster` self-hosts a whole fleet behind the
+//!                 routing proxy instead and emits fleet-wide plus
+//!                 per-backend records (`BENCH_PR9.json`).
 //! * `tables`    — regenerate the paper's evaluation tables from the GPU
 //!                 model (see also `examples/paper_tables.rs`).
 
@@ -28,8 +36,11 @@ use hadacore::hadamard::KernelKind;
 use hadacore::harness::tables::{format_runtime_table, format_speedup_table};
 use hadacore::harness::workload::{traffic_mix, TRAFFIC_MIXES};
 use hadacore::runtime::Runtime;
-use hadacore::serve::{loadgen as lg, serve as serve_tcp, LoadgenConfig, ServeConfig};
-use hadacore::util::bench::BenchJson;
+use hadacore::serve::{
+    cluster as cluster_tier, loadgen as lg, serve as serve_tcp, Client, ClusterConfig,
+    ClusterHandle, LoadgenConfig, ServeConfig, ServeHandle, WireStats,
+};
+use hadacore::util::bench::{BenchJson, BenchRecord, Stats};
 use hadacore::util::cli::Args;
 use hadacore::util::error as anyhow;
 use hadacore::util::f16::DType;
@@ -53,12 +64,13 @@ fn main() -> anyhow::Result<()> {
         "info" => info(argv),
         "transform" => transform(argv),
         "serve" => serve(argv),
+        "cluster" => cluster_cmd(argv),
         "loadgen" => loadgen(argv),
         "tables" => tables(argv),
         _ => {
             println!(
                 "hadacore {} — matrix-unit-accelerated Hadamard transform server\n\n\
-                 usage: hadacore <info|transform|serve|loadgen|tables> [flags]\n\
+                 usage: hadacore <info|transform|serve|cluster|loadgen|tables> [flags]\n\
                  run `hadacore <cmd> --help` for per-command flags",
                 hadacore::VERSION
             );
@@ -202,6 +214,158 @@ fn serve(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Launch one child `hadacore serve` backend on an ephemeral port and
+/// parse its bound address off the "hadacore serving on …" banner. The
+/// rest of the child's stdout is forwarded line-by-line with a
+/// `[backend i]` prefix so fleet logs stay attributable.
+fn spawn_backend(
+    i: usize,
+    workers: &str,
+    exec_threads: &str,
+    pipeline: &str,
+) -> anyhow::Result<(std::process::Child, String)> {
+    use std::io::BufRead;
+    let exe = std::env::current_exe().map_err(|e| anyhow::anyhow!("current_exe: {e}"))?;
+    let mut child = std::process::Command::new(exe)
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--artifacts",
+            "",
+            "--workers",
+            workers,
+            "--exec-threads",
+            exec_threads,
+            "--pipeline",
+            pipeline,
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .map_err(|e| anyhow::anyhow!("spawn backend {i}: {e}"))?;
+    let stdout = child
+        .stdout
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("backend {i}: no stdout"))?;
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let addr = loop {
+        match lines.next() {
+            Some(Ok(line)) => {
+                if let Some(rest) = line.strip_prefix("hadacore serving on ") {
+                    if let Some(addr) = rest.split_whitespace().next() {
+                        break addr.to_string();
+                    }
+                }
+                println!("[backend {i}] {line}");
+            }
+            Some(Err(e)) => {
+                let _ = child.kill();
+                return Err(anyhow::anyhow!("backend {i} stdout: {e}"));
+            }
+            None => {
+                let _ = child.kill();
+                return Err(anyhow::anyhow!("backend {i} exited before binding"));
+            }
+        }
+    };
+    std::thread::spawn(move || {
+        for line in lines.map_while(Result::ok) {
+            println!("[backend {i}] {line}");
+        }
+    });
+    Ok((child, addr))
+}
+
+fn cluster_cmd(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new(
+        "hadacore cluster",
+        "routing proxy over N backend serve processes (wire protocol v1)",
+    )
+    .opt("addr", "127.0.0.1:7390", "proxy bind address (port 0 = ephemeral)")
+    .opt("backends", "", "comma-separated addresses of already-running backends")
+    .opt("spawn", "0", "spawn N child `hadacore serve` backends on ephemeral ports")
+    .opt("workers", "4", "spawned backends: batcher worker threads")
+    .opt("exec-threads", "0", "spawned backends: engine lanes (0 = default)")
+    .opt(
+        "pipeline",
+        "256",
+        "spawned backends: per-connection pipelining cap — the proxy \
+         multiplexes every client over one upstream connection per \
+         backend, so this should exceed the expected fleet in-flight",
+    )
+    .opt("max-inflight", "1024", "proxy-wide in-flight request cap")
+    .opt("duration", "0", "seconds to run (0 = until killed)")
+    .parse_from(argv)
+    .map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut backends: Vec<String> = args.get_str_list("backends");
+    let spawn: usize = args.get_as("spawn");
+    let mut children = Vec::new();
+    for i in 0..spawn {
+        let (child, addr) = spawn_backend(
+            i,
+            &args.get("workers"),
+            &args.get("exec-threads"),
+            &args.get("pipeline"),
+        )?;
+        println!("spawned backend {i} on {addr}");
+        backends.push(addr);
+        children.push(child);
+    }
+    if backends.is_empty() {
+        for mut c in children {
+            let _ = c.kill();
+        }
+        anyhow::bail!("no backends: pass --backends addr,addr or --spawn N");
+    }
+
+    let handle = cluster_tier(ClusterConfig {
+        addr: args.get("addr"),
+        backends: backends.clone(),
+        max_inflight: args.get_as("max-inflight"),
+        ..Default::default()
+    })
+    .map_err(|e| {
+        for c in children.iter_mut() {
+            let _ = c.kill();
+        }
+        e
+    })?;
+    println!(
+        "hadacore cluster proxy on {} fronting {} backends: {}",
+        handle.addr(),
+        backends.len(),
+        backends.join(", ")
+    );
+
+    let secs: u64 = args.get_as("duration");
+    if secs == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs));
+
+    // stop the proxy first (relays flush their in-flight replies), then
+    // the owned children
+    handle.shutdown();
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    Ok(())
+}
+
+/// Look up one counter in a proxy stats frame (0 when absent).
+fn stat(stats: &WireStats, key: &str) -> u64 {
+    stats
+        .counters
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| *v)
+        .unwrap_or(0)
+}
+
 fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("hadacore loadgen", "open-loop TCP load generator")
         .opt("addr", "", "server address ('' = self-host an in-process server)")
@@ -211,13 +375,26 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
         .opt(
             "mixes",
             "mixed",
-            "comma-separated traffic mixes (interactive|batch|llama-ffn|quantized|mixed)",
+            "comma-separated traffic mixes \
+             (interactive|batch|llama-ffn|quantized|int8-grouped|mixed)",
         )
         .opt("dtype", "float32", "wire dtype: float32|float16|bfloat16")
         .opt("kernel", "hadacore", "kernel: hadacore|dao|scalar")
-        .opt("json", "BENCH_PR7.json", "perf-trajectory output path")
+        .opt(
+            "json",
+            "BENCH_PR7.json",
+            "perf-trajectory output path (--cluster defaults to BENCH_PR9.json)",
+        )
         .opt("workers", "4", "self-hosted server: batcher workers")
         .opt("exec-threads", "0", "self-hosted server: engine lanes (0 = default)")
+        .switch(
+            "cluster",
+            "drive a sharded fleet behind the routing proxy instead of one \
+             server; '' --addr self-hosts the whole fleet in-process, a \
+             non-empty --addr points at a running `hadacore cluster` proxy. \
+             Emits fleet-wide and per-backend records",
+        )
+        .opt("cluster-backends", "3", "--cluster self-host: backend count")
         .switch("smoke", "tiny CI run (few requests, unpaced)")
         .switch(
             "assert-zero-alloc",
@@ -236,8 +413,16 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
     } else {
         (args.get_as("requests"), args.get_as("qps"))
     };
+    let cluster_mode = args.flag("cluster");
     let assert_zero = args.flag("assert-zero-alloc");
     if assert_zero {
+        if cluster_mode {
+            anyhow::bail!(
+                "--assert-zero-alloc covers the single-server path; the \
+                 proxy's failover bookkeeping allocates by design, so the \
+                 two flags don't compose"
+            );
+        }
         if !args.get("addr").is_empty() {
             anyhow::bail!(
                 "--assert-zero-alloc measures in-process server threads; \
@@ -252,12 +437,50 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
         }
     }
 
-    // '' = self-host: bind an ephemeral in-process server so one command
-    // exercises the full stack (the CI smoke path)
-    let mut selfhost = None;
+    // '' = self-host: bind an ephemeral in-process server (or, with
+    // --cluster, a whole fleet behind the routing proxy) so one command
+    // exercises the full stack (the CI smoke paths)
+    let mut selfhost: Option<(Arc<Coordinator>, ServeHandle)> = None;
+    let mut fleet: Vec<(Arc<Coordinator>, ServeHandle)> = Vec::new();
+    let mut proxy: Option<ClusterHandle> = None;
     let addr = {
         let a = args.get("addr");
-        if a.is_empty() {
+        if !a.is_empty() {
+            a
+        } else if cluster_mode {
+            let n: usize = args.get_as("cluster-backends");
+            let n = n.max(1);
+            for _ in 0..n {
+                let coord = Arc::new(Coordinator::start(
+                    None,
+                    CoordinatorConfig {
+                        workers: args.get_as("workers"),
+                        exec: exec_config(&args),
+                        ..Default::default()
+                    },
+                )?);
+                // the proxy funnels every client through one upstream
+                // connection per backend, so the per-connection
+                // pipelining cap must absorb the fleet-wide in-flight
+                let handle = serve_tcp(
+                    Arc::clone(&coord),
+                    ServeConfig {
+                        pipeline_depth: 256,
+                        max_inflight: 1024,
+                        ..Default::default()
+                    },
+                )?;
+                fleet.push((coord, handle));
+            }
+            let handle = cluster_tier(ClusterConfig {
+                backends: fleet.iter().map(|(_, h)| h.addr().to_string()).collect(),
+                ..Default::default()
+            })?;
+            let addr = handle.addr().to_string();
+            println!("self-hosted cluster: proxy on {addr} fronting {n} backends");
+            proxy = Some(handle);
+            addr
+        } else {
             let coord = Arc::new(Coordinator::start(
                 None,
                 CoordinatorConfig {
@@ -271,10 +494,19 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
             println!("self-hosted server on {addr}");
             selfhost = Some((coord, handle));
             addr
-        } else {
-            a
         }
     };
+
+    // in cluster mode the per-backend records are deltas of the proxy's
+    // stats frame across the run, so both the self-hosted and the
+    // remote-proxy paths report the same way
+    let stats_client = if cluster_mode { Some(Client::connect(&addr)?) } else { None };
+    let stats_before = match &stats_client {
+        Some(c) => Some(c.stats()?),
+        None => None,
+    };
+    let run_start = Instant::now();
+    let mut fleet_latencies: Vec<f64> = Vec::new();
 
     let mut out = BenchJson::new();
     for name in args.get_str_list("mixes") {
@@ -326,13 +558,104 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
                 report.ok,
             );
         }
-        out.push(report.to_record(&cfg));
+        let mut rec = report.to_record(&cfg);
+        if cluster_mode {
+            fleet_latencies.extend_from_slice(&report.latencies_us);
+            rec = rec.with_extra("cluster", 1.0);
+        }
+        out.push(rec);
     }
 
-    let path = BenchJson::output_path(&args.get("json"));
+    // cluster mode: per-backend and fleet-wide records from the delta of
+    // the proxy's stats frame across the run (warmup traffic included —
+    // the throughput is an over-the-whole-run average)
+    if let (Some(c), Some(before)) = (&stats_client, &stats_before) {
+        let after = c.stats()?;
+        let wall = run_start.elapsed().as_secs_f64().max(1e-9);
+        let kernel_name = args.get("kernel");
+        let dtype_name = args.get("dtype");
+        let clients: usize = args.get_as("clients");
+        let nb = stat(&after, "proxy.backends") as usize;
+        let mut total_elems = 0u64;
+        for i in 0..nb {
+            let delta = |key: &str| {
+                let k = format!("backend{i}.{key}");
+                stat(&after, &k).saturating_sub(stat(before, &k))
+            };
+            let elems = delta("elems");
+            total_elems += elems;
+            // the proxy's per-backend histogram is cumulative, so the
+            // percentiles are whole-lifetime; a backend that served
+            // nothing records the positive-throughput floor
+            let p50 = stat(&after, &format!("backend{i}.p50_us")).max(1) as f64;
+            let s = Stats::from_sorted_us(&format!("cluster-backend{i}"), &[p50]);
+            let melems = (elems as f64 / wall / 1e6).max(f64::MIN_POSITIVE);
+            out.push(
+                BenchRecord::serving(
+                    "cluster-backend",
+                    &kernel_name,
+                    1,
+                    1,
+                    &dtype_name,
+                    clients,
+                    s,
+                    melems,
+                )
+                .with_extra("backend_index", i as f64)
+                .with_extra("forwarded", delta("forwarded") as f64)
+                .with_extra("responses", delta("responses") as f64)
+                .with_extra("p90_us", stat(&after, &format!("backend{i}.p90_us")) as f64)
+                .with_extra("p99_us", stat(&after, &format!("backend{i}.p99_us")) as f64),
+            );
+        }
+        fleet_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let s = if fleet_latencies.is_empty() {
+            Stats::from_sorted_us("cluster-fleet", &[1.0])
+        } else {
+            Stats::from_sorted_us("cluster-fleet", &fleet_latencies)
+        };
+        let melems = (total_elems as f64 / wall / 1e6).max(f64::MIN_POSITIVE);
+        let pdelta =
+            |key: &str| stat(&after, key).saturating_sub(stat(before, key)) as f64;
+        out.push(
+            BenchRecord::serving(
+                "cluster-fleet",
+                &kernel_name,
+                1,
+                1,
+                &dtype_name,
+                clients,
+                s,
+                melems,
+            )
+            .with_extra("cluster_backends", nb as f64)
+            .with_extra("cluster_forwarded", pdelta("proxy.forwarded"))
+            .with_extra("cluster_retries", pdelta("proxy.retries"))
+            .with_extra("cluster_deferrals", pdelta("proxy.deferrals"))
+            .with_extra("cluster_busy_out", pdelta("proxy.busy_out"))
+            .with_extra("cluster_responses", pdelta("proxy.responses")),
+        );
+        println!("{}", after.report.trim_end());
+    }
+
+    let mut json_path = args.get("json");
+    if cluster_mode && json_path == "BENCH_PR7.json" {
+        // the flag default is the single-server trajectory; cluster runs
+        // feed their own file unless the user pointed somewhere explicit
+        json_path = "BENCH_PR9.json".to_string();
+    }
+    let path = BenchJson::output_path(&json_path);
     let count = out.write(&path).map_err(|e| anyhow::anyhow!(e))?;
     println!("wrote {count} loadgen records to {path}");
 
+    drop(stats_client);
+    if let Some(handle) = proxy {
+        handle.shutdown();
+    }
+    for (coord, handle) in fleet {
+        handle.shutdown();
+        coord.drain();
+    }
     if let Some((coord, handle)) = selfhost {
         handle.shutdown();
         coord.drain();

@@ -12,12 +12,15 @@
 //! [`Client::stats`]) are submit-then-wait; [`Reply`] exposes the
 //! protocol-level outcomes (`Busy` is data, not a transport error — an
 //! open-loop load generator counts it, a latency-sensitive caller backs
-//! off and retries).
+//! off and retries). Submission failures are the typed [`ClientError`]:
+//! callers building retry/failover logic (the cluster proxy, loadgen)
+//! branch on [`ClientError::is_retriable`] and the carried
+//! `retry_after_us` hint instead of parsing error strings.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -54,6 +57,93 @@ pub enum Reply {
     Disconnected,
 }
 
+/// Typed failure surface of [`Client::submit`] / [`Client::transform`].
+///
+/// The distinction that matters to callers is *retriability*: a shed
+/// (`Busy`), a draining server, and a dead connection are all safe to
+/// retry — the transform is a pure function, so resubmitting (here or
+/// on another backend) can never double-apply — while a rejection or
+/// execution failure is deterministic and retrying it is futile. The
+/// cluster proxy's failover path is built directly on this split.
+///
+/// `ClientError` implements [`std::error::Error`], so it converts into
+/// the crate-wide [`anyhow::Error`](crate::util::error::Error) via `?`
+/// at call sites that don't care about the distinction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientError {
+    /// The request (or, for an id-0 frame, the whole connection) was
+    /// shed by admission control. Retriable after the server's hint.
+    Busy {
+        /// Server-suggested backoff before retrying.
+        retry_after_us: u32,
+    },
+    /// The server answered an error frame. Retriable only when the
+    /// code is [`ErrorCode::Draining`](super::wire::ErrorCode) — the
+    /// backend is going away gracefully and another shard can serve
+    /// the request.
+    Server {
+        /// Machine-readable class tag.
+        code: super::wire::ErrorCode,
+        /// Human-readable detail.
+        msg: String,
+    },
+    /// The connection cannot carry (or no longer carries) the request:
+    /// the reader exited, the write failed, or the reply never arrived.
+    /// Retriable on a fresh connection.
+    Closed {
+        /// What happened, for diagnostics.
+        detail: String,
+    },
+    /// The server answered something protocol-legal but senseless for
+    /// the call (e.g. a `Pong` for a transform). Not retriable.
+    Unexpected {
+        /// Debug rendering of the surprise reply.
+        detail: String,
+    },
+}
+
+impl ClientError {
+    /// True when resubmitting the same request — to this server or a
+    /// different shard — can succeed: shed, draining, or a dead
+    /// connection. False for deterministic rejections.
+    pub fn is_retriable(&self) -> bool {
+        match self {
+            ClientError::Busy { .. } | ClientError::Closed { .. } => true,
+            ClientError::Server { code, .. } => {
+                *code == super::wire::ErrorCode::Draining
+            }
+            ClientError::Unexpected { .. } => false,
+        }
+    }
+
+    /// The server's backoff hint, when it sent one.
+    pub fn retry_after_us(&self) -> Option<u32> {
+        match self {
+            ClientError::Busy { retry_after_us } => Some(*retry_after_us),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Busy { retry_after_us } => {
+                write!(f, "server busy (retry after {retry_after_us}us)")
+            }
+            ClientError::Server { code, msg } => {
+                write!(f, "server error ({code:?}): {msg}")
+            }
+            ClientError::Closed { detail } => write!(f, "{detail}"),
+            ClientError::Unexpected { detail } => {
+                write!(f, "unexpected reply {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
 /// Handle to one in-flight submission.
 pub struct PendingReply {
     /// The id the client assigned to this submission.
@@ -88,6 +178,13 @@ pub struct Client {
     /// stream): the connection can no longer deliver replies, so new
     /// submissions must fail instead of waiting forever.
     dead: Arc<AtomicBool>,
+    /// Nonzero once the acceptor shed the *connection* (`Busy` with
+    /// id 0): the value is the retry hint in µs. New submissions fail
+    /// fast with a typed retriable [`ClientError::Busy`]; requests
+    /// already in flight are left to resolve on their own (the server
+    /// closes the socket after the shed frame, so they surface as
+    /// `Disconnected` at EOF — never silently swallowed as busy).
+    shed: Arc<AtomicU32>,
     next_id: AtomicU64,
     reader: Option<JoinHandle<()>>,
 }
@@ -114,17 +211,22 @@ impl Client {
             .map_err(|e| anyhow!("clone stream: {e}"))?;
         let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
         let dead = Arc::new(AtomicBool::new(false));
+        let shed = Arc::new(AtomicU32::new(0));
         let reader_map = Arc::clone(&pending);
         let reader_dead = Arc::clone(&dead);
+        let reader_shed = Arc::clone(&shed);
         let reader = std::thread::Builder::new()
             .name("hadacore-client-reader".to_string())
-            .spawn(move || reader_loop(read_half, &reader_map, &reader_dead, max_frame_bytes))
+            .spawn(move || {
+                reader_loop(read_half, &reader_map, &reader_dead, &reader_shed, max_frame_bytes)
+            })
             .map_err(|e| anyhow!("spawn reader: {e}"))?;
         Ok(Client {
             writer: Mutex::new(writer),
             stream,
             pending,
             dead,
+            shed,
             next_id: AtomicU64::new(1),
             reader: Some(reader),
         })
@@ -135,7 +237,20 @@ impl Client {
         self.dead.load(Ordering::Acquire)
     }
 
-    fn register(&self) -> anyhow::Result<(u64, PendingReply)> {
+    /// The retry hint from a connection-level shed (`Busy` id 0), if
+    /// the acceptor sent one. A shed connection is about to close; the
+    /// caller should reconnect (or fail over) after the hint.
+    pub fn shed_retry_us(&self) -> Option<u32> {
+        match self.shed.load(Ordering::Acquire) {
+            0 => None,
+            us => Some(us),
+        }
+    }
+
+    fn register(&self) -> Result<(u64, PendingReply), ClientError> {
+        if let Some(retry_after_us) = self.shed_retry_us() {
+            return Err(ClientError::Busy { retry_after_us });
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         self.pending.lock().unwrap().insert(id, tx);
@@ -145,21 +260,24 @@ impl Client {
         // leaves a waiter stranded
         if self.is_dead() {
             self.pending.lock().unwrap().remove(&id);
-            return Err(anyhow!("connection closed"));
+            return Err(ClientError::Closed { detail: "connection closed".to_string() });
         }
         Ok((id, PendingReply { id, rx }))
     }
 
-    fn write(&self, frame: &Frame) -> anyhow::Result<()> {
+    fn write(&self, frame: &Frame) -> Result<(), ClientError> {
         let mut w = self.writer.lock().unwrap();
-        write_frame(&mut *w, frame).map_err(|e| anyhow!("write frame: {e}"))?;
-        w.flush().map_err(|e| anyhow!("flush: {e}"))
+        write_frame(&mut *w, frame)
+            .map_err(|e| ClientError::Closed { detail: format!("write frame: {e}") })?;
+        w.flush()
+            .map_err(|e| ClientError::Closed { detail: format!("flush: {e}") })
     }
 
     /// Pipeline one request; the client overwrites `req.id` with a
     /// connection-unique id (echoed on the returned handle). Fails fast
-    /// once the connection is dead.
-    pub fn submit(&self, mut req: WireRequest) -> anyhow::Result<PendingReply> {
+    /// — with a typed, retriable error — once the connection is dead or
+    /// was shed by the acceptor.
+    pub fn submit(&self, mut req: WireRequest) -> Result<PendingReply, ClientError> {
         let (id, reply) = self.register()?;
         req.id = id;
         match self.write(&Frame::Request(req)) {
@@ -171,18 +289,20 @@ impl Client {
         }
     }
 
-    /// Submit and block; `Busy` and error frames surface as `Err` with a
-    /// recognisable message (use [`Client::submit`] + [`Reply`] to
-    /// branch on them programmatically).
-    pub fn transform(&self, req: WireRequest) -> anyhow::Result<WireResponse> {
+    /// Submit and block. Failures are the typed [`ClientError`]:
+    /// `Busy` replies become [`ClientError::Busy`] carrying the
+    /// server's `retry_after_us` hint (use
+    /// [`ClientError::is_retriable`] to branch), error frames become
+    /// [`ClientError::Server`] with their [`ErrorCode`](super::wire::ErrorCode).
+    pub fn transform(&self, req: WireRequest) -> Result<WireResponse, ClientError> {
         match self.submit(req)?.wait() {
             Reply::Response(r) => Ok(r),
-            Reply::Busy { retry_after_us } => {
-                Err(anyhow!("server busy (retry after {retry_after_us}us)"))
+            Reply::Busy { retry_after_us } => Err(ClientError::Busy { retry_after_us }),
+            Reply::Error { code, msg } => Err(ClientError::Server { code, msg }),
+            Reply::Disconnected => {
+                Err(ClientError::Closed { detail: "connection closed".to_string() })
             }
-            Reply::Error { code, msg } => Err(anyhow!("server error ({code:?}): {msg}")),
-            Reply::Disconnected => Err(anyhow!("connection closed")),
-            other => Err(anyhow!("unexpected reply {other:?}")),
+            other => Err(ClientError::Unexpected { detail: format!("{other:?}") }),
         }
     }
 
@@ -234,6 +354,7 @@ fn reader_loop(
     mut stream: TcpStream,
     pending: &PendingMap,
     dead: &Arc<AtomicBool>,
+    shed: &Arc<AtomicU32>,
     max_frame_bytes: u32,
 ) {
     // Incremental framing, mirroring the server's connection reader: one
@@ -262,11 +383,17 @@ fn reader_loop(
                 // id 0 is never assigned by a client: a Busy carrying
                 // it is the acceptor's *connection-level* shed (the
                 // handler pool is full and the server is closing this
-                // socket). Surface it as a retriable Busy to every
-                // waiter — not as an anonymous disconnect — and stop.
+                // socket). Record the hint so new submits fail fast
+                // with a typed retriable Busy — but do NOT fail the
+                // in-flight waiters: their requests were accepted (or
+                // not) independently of this connection's admission,
+                // and the EOF that follows the shed frame resolves
+                // whatever is still pending as `Disconnected`, which
+                // is the honest outcome for a request the server never
+                // answered.
                 Frame::Busy { id: 0, retry_after_us } => {
-                    fail_all(pending, dead, &Reply::Busy { retry_after_us });
-                    return;
+                    shed.store(retry_after_us.max(1), Ordering::Release);
+                    continue;
                 }
                 Frame::Busy { retry_after_us, .. } => Reply::Busy { retry_after_us },
                 Frame::Error(e) => Reply::Error { code: e.code, msg: e.msg },

@@ -1,0 +1,1096 @@
+//! Cluster tier: a zero-dependency TCP routing proxy over N backend
+//! `hadacore serve` processes.
+//!
+//! One process — one listener, one batcher — is not a "millions of
+//! users" story. This module is the scale-out shape production
+//! inference stacks use: a routing front-end that keeps each shard's
+//! batches **homogeneous** by routing on the batcher's own bucket
+//! coordinates, with health checking, retriable failover, and
+//! drain/restart of individual backends without dropping traffic.
+//!
+//! ```text
+//!                        ┌────────────────────────────┐
+//! client ── Request ───> │ proxy: conn reader + relay │ ── pipelined ──> backend 0
+//!   ^                    │   route(n, dtype,          │ ── upstream  ──> backend 1
+//!   └─── Response ────── │         epilogue, prologue)│ ── clients   ──> backend 2
+//!        (demuxed by id) └────────────────────────────┘      (serve/client.rs)
+//! ```
+//!
+//! Design notes:
+//!
+//! * **Routing key** = `(n, dtype, epilogue, prologue)` — exactly the
+//!   wire-visible part of the batcher's `BucketKey`. Two requests with
+//!   the same key land on the same shard (rendezvous hashing, below),
+//!   so a shard's batcher sees deep homogeneous buckets instead of N
+//!   shards each seeing a shallow slice of every bucket. Kernel choice
+//!   and scale are deliberately *not* in the key: they don't change
+//!   which bucket a request batches into on the shard.
+//! * **Rendezvous (HRW) hashing** with a deterministic tie-break:
+//!   every backend gets a score `mix(hash(key), backend)`; the highest
+//!   eligible (healthy, not draining) score wins, an exact score tie
+//!   falls to the least-loaded then lowest-index backend. Rendezvous
+//!   hashing means removing a backend only remaps *its* keys — the
+//!   others keep their shard (and their warm batches) through any
+//!   failure or drain.
+//! * **Pipelining**: one upstream [`Client`] per backend carries every
+//!   proxied request; the wire protocol already streams responses out
+//!   of order by id, so the proxy demuxes per upstream connection and
+//!   per client connection without head-of-line coupling.
+//! * **Failover**: an upstream `Busy`, a `Draining` error, or a dead
+//!   upstream connection are all *retriable by contract*
+//!   ([`ClientError::is_retriable`](super::client::ClientError) — the
+//!   transform is pure, resubmitting cannot double-apply). The relay
+//!   resubmits to the next backend in rendezvous order, up to
+//!   [`ClusterConfig::max_attempts`] submissions; when no alternative
+//!   shard is eligible it defers the retry by the server's
+//!   `retry_after_us` hint instead of hot-spinning. Only when the
+//!   attempt budget is spent does the client see a `Busy` (still
+//!   retriable — the proxy never converts retriable into fatal).
+//! * **Health**: a background prober pings every backend over the
+//!   existing `Ping` frame each [`ClusterConfig::health_interval`];
+//!   an unreachable backend is routed around until it answers again.
+//!   A relay that observes a dead upstream marks the backend unhealthy
+//!   immediately — feedback is not gated on the next probe tick.
+//! * **Drain**: [`ClusterHandle::drain_backend`] stops *new* traffic
+//!   to a shard while its in-flight requests complete normally;
+//!   combined with the backend's own `Coordinator::drain` (whose
+//!   `Draining` rejections the relay fails over), a backend restarts
+//!   under load without a dropped request.
+//!
+//! The proxy data path allocates (frame clones for retries, per-entry
+//! bookkeeping) — the zero-alloc contract lives on the *backends*,
+//! whose serve path is unchanged. The proxy is I/O-bound fan-out; the
+//! compute-bound work it routes is what the pooled path optimises.
+
+use std::collections::HashSet;
+use std::io::Write;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Histogram;
+use crate::hadamard::Prologue;
+use crate::quant::Epilogue;
+use crate::util::error::{self as anyhow, anyhow};
+use crate::util::f16::DType;
+
+use super::client::{Client, PendingReply, Reply};
+use super::wire::{
+    decode_frame, write_frame, ErrorCode, Frame, WireError, WireRequest, WireStats,
+    DEFAULT_MAX_FRAME_BYTES,
+};
+
+/// Cluster-proxy configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Proxy bind address (`127.0.0.1:0` picks an ephemeral port — the
+    /// bound address is on [`ClusterHandle::addr`]).
+    pub addr: String,
+    /// Backend `hadacore serve` addresses, in shard order.
+    pub backends: Vec<String>,
+    /// Client-facing connection bound; further connections get a
+    /// connection-level `Busy` (id 0) and are closed — the same
+    /// contract as the single-process server.
+    pub max_conns: usize,
+    /// Proxy-wide in-flight request cap (admitted to a backend,
+    /// terminal reply not yet written back).
+    pub max_inflight: usize,
+    /// Frame-size cap for both client-facing and upstream frames.
+    pub max_frame_bytes: u32,
+    /// Client-conn reader poll quantum (shutdown-notice latency).
+    pub poll_interval: Duration,
+    /// Relay poll cadence while replies are in flight.
+    pub relay_poll: Duration,
+    /// Client-facing socket write timeout (a non-reading client cannot
+    /// pin a relay thread past this).
+    pub write_timeout: Duration,
+    /// Backend health-probe period.
+    pub health_interval: Duration,
+    /// Total submission budget per request across all backends (first
+    /// attempt + failovers + deferred retries). Spending it answers
+    /// the client with a retriable `Busy`.
+    pub max_attempts: usize,
+    /// Backoff hint on proxy-originated `Busy` frames, and the floor
+    /// of the deferred-retry wait.
+    pub busy_retry_us: u32,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backends: Vec::new(),
+            max_conns: 64,
+            max_inflight: 1024,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            poll_interval: Duration::from_millis(50),
+            relay_poll: Duration::from_micros(200),
+            write_timeout: Duration::from_secs(5),
+            health_interval: Duration::from_millis(50),
+            max_attempts: 6,
+            busy_retry_us: 1000,
+        }
+    }
+}
+
+/// The shard-routing key: the wire-visible coordinates of the
+/// backend batcher's bucket. Requests with equal keys route to the
+/// same healthy shard, so no shard ever assembles a mixed bucket from
+/// proxy traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RouteKey {
+    /// Transform size.
+    pub n: u32,
+    /// Payload dtype.
+    pub dtype: DType,
+    /// Fused rotate→quantize epilogue (tag + group).
+    pub epilogue: Epilogue,
+    /// Fused rotation prologue (seed included: rotated batches bucket
+    /// per seed on the shard, so the route must too).
+    pub prologue: Prologue,
+}
+
+impl RouteKey {
+    /// The key of a wire request.
+    pub fn of(req: &WireRequest) -> RouteKey {
+        RouteKey {
+            n: req.n,
+            dtype: req.dtype,
+            epilogue: req.epilogue,
+            prologue: req.prologue,
+        }
+    }
+}
+
+/// Proxy-level counters (exposed through the proxy's `Stats` frame and
+/// [`ClusterHandle::counters`]).
+#[derive(Debug, Default)]
+pub struct ClusterCounters {
+    /// Client connections admitted.
+    pub conns_accepted: AtomicU64,
+    /// Client connections shed at the pool bound.
+    pub conns_rejected: AtomicU64,
+    /// Currently open client connections.
+    pub conns_active: AtomicUsize,
+    /// Requests currently in flight through the proxy.
+    pub inflight: AtomicUsize,
+    /// Requests forwarded to a backend (first attempts + retries).
+    pub forwarded: AtomicU64,
+    /// Failover resubmissions (a retriable upstream outcome answered
+    /// by submitting to another shard). The non-vacuity signal of the
+    /// failover tests.
+    pub retries: AtomicU64,
+    /// Retries the relay parked on a backoff hint because no
+    /// alternative shard was eligible at that instant.
+    pub deferrals: AtomicU64,
+    /// Responses relayed back to clients.
+    pub responses: AtomicU64,
+    /// `Busy` frames the proxy answered on its own authority
+    /// (admission shed, no eligible backend, attempt budget spent).
+    pub busy_out: AtomicU64,
+    /// Error frames relayed or originated toward clients.
+    pub errors_out: AtomicU64,
+    /// Health probes sent.
+    pub health_probes: AtomicU64,
+    /// Health probes that failed (backend marked unhealthy).
+    pub health_failures: AtomicU64,
+    /// Malformed client frames observed.
+    pub protocol_errors: AtomicU64,
+}
+
+/// Point-in-time view of one backend, for stats frames, bench records,
+/// and tests.
+#[derive(Clone, Debug)]
+pub struct BackendSnapshot {
+    /// Current upstream address.
+    pub addr: String,
+    /// Last health-probe verdict.
+    pub healthy: bool,
+    /// Whether new traffic is being routed away.
+    pub draining: bool,
+    /// Requests in flight on this shard right now.
+    pub inflight: usize,
+    /// Requests ever forwarded to this shard.
+    pub forwarded: u64,
+    /// Responses this shard returned.
+    pub responses: u64,
+    /// Elements transformed by those responses.
+    pub elems: u64,
+    /// Upstream latency percentiles in µs (submit → reply, proxy-side).
+    pub p50_us: u64,
+    /// 90th percentile, µs.
+    pub p90_us: u64,
+    /// 99th percentile, µs.
+    pub p99_us: u64,
+}
+
+struct Backend {
+    addr: Mutex<String>,
+    client: Mutex<Option<Arc<Client>>>,
+    healthy: AtomicBool,
+    draining: AtomicBool,
+    inflight: AtomicUsize,
+    forwarded: AtomicU64,
+    responses: AtomicU64,
+    elems: AtomicU64,
+    latency: Histogram,
+    /// Route keys this shard has ever been handed (homogeneity
+    /// bookkeeping: while the fleet is healthy, key sets are pairwise
+    /// disjoint across shards — asserted by `cluster_e2e`).
+    keys: Mutex<HashSet<RouteKey>>,
+}
+
+impl Backend {
+    fn new(addr: String) -> Backend {
+        Backend {
+            addr: Mutex::new(addr),
+            client: Mutex::new(None),
+            healthy: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            forwarded: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            elems: AtomicU64::new(0),
+            latency: Histogram::new(),
+            keys: Mutex::new(HashSet::new()),
+        }
+    }
+
+    /// A usable upstream connection: the cached one if it can still
+    /// carry traffic, else a fresh connect. `None` when the backend is
+    /// unreachable. In-flight requests keep the old connection alive
+    /// through their own `Arc`s, so replacing it never strands them.
+    fn alive_client(&self, max_frame_bytes: u32) -> Option<Arc<Client>> {
+        let mut slot = self.client.lock().unwrap();
+        if let Some(c) = slot.as_ref() {
+            if !c.is_dead() && c.shed_retry_us().is_none() {
+                return Some(Arc::clone(c));
+            }
+        }
+        *slot = None;
+        let addr = self.addr.lock().unwrap().clone();
+        match Client::connect_with(&addr, max_frame_bytes) {
+            Ok(c) => {
+                let c = Arc::new(c);
+                *slot = Some(Arc::clone(&c));
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    fn snapshot(&self) -> BackendSnapshot {
+        BackendSnapshot {
+            addr: self.addr.lock().unwrap().clone(),
+            healthy: self.healthy.load(Ordering::Acquire),
+            draining: self.draining.load(Ordering::Acquire),
+            inflight: self.inflight.load(Ordering::Acquire),
+            forwarded: self.forwarded.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            elems: self.elems.load(Ordering::Relaxed),
+            p50_us: self.latency.percentile_us(50.0),
+            p90_us: self.latency.percentile_us(90.0),
+            p99_us: self.latency.percentile_us(99.0),
+        }
+    }
+}
+
+struct ClusterState {
+    cfg: ClusterConfig,
+    backends: Vec<Backend>,
+    shutdown: AtomicBool,
+    counters: ClusterCounters,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+// ---------------------------------------------------------------------
+// Rendezvous routing.
+
+/// SplitMix64 finaliser: a cheap, well-mixed 64-bit permutation.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn key_hash(key: &RouteKey) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    h.finish()
+}
+
+/// The rendezvous score of `backend` for a key hash: deterministic, so
+/// the healthy-fleet key→shard map is a pure function (what the
+/// homogeneity test pins), and independent per backend, so removing
+/// one shard only remaps the keys it owned.
+fn rendezvous_score(kh: u64, backend: usize) -> u64 {
+    mix64(kh ^ mix64(backend as u64 + 1))
+}
+
+/// Highest-scoring eligible backend for `key`, excluding `exclude`.
+/// Exact score ties (2^-64-rare, but the contract is deterministic)
+/// break toward the least-loaded, then the lowest index.
+fn route(state: &ClusterState, key: &RouteKey, exclude: &[usize]) -> Option<usize> {
+    let kh = key_hash(key);
+    let mut best: Option<(u64, usize)> = None;
+    for (i, b) in state.backends.iter().enumerate() {
+        if exclude.contains(&i)
+            || !b.healthy.load(Ordering::Acquire)
+            || b.draining.load(Ordering::Acquire)
+        {
+            continue;
+        }
+        let score = rendezvous_score(kh, i);
+        best = Some(match best {
+            None => (score, i),
+            Some((bs, bi)) => {
+                if score > bs {
+                    (score, i)
+                } else if score == bs
+                    && b.inflight.load(Ordering::Acquire)
+                        < state.backends[bi].inflight.load(Ordering::Acquire)
+                {
+                    (score, i)
+                } else {
+                    (bs, bi)
+                }
+            }
+        });
+    }
+    best.map(|(_, i)| i)
+}
+
+/// Submit `req` to the best eligible backend not yet in `tried`,
+/// walking down the rendezvous order past unreachable shards. Returns
+/// the shard index and the in-flight handle; `None` when no eligible
+/// shard accepted.
+fn try_submit(
+    state: &ClusterState,
+    key: &RouteKey,
+    req: &WireRequest,
+    tried: &mut Vec<usize>,
+) -> Option<(usize, PendingReply)> {
+    loop {
+        let i = route(state, key, tried)?;
+        let backend = &state.backends[i];
+        let Some(client) = backend.alive_client(state.cfg.max_frame_bytes) else {
+            // connect refused: don't wait for the prober to notice
+            backend.healthy.store(false, Ordering::Release);
+            tried.push(i);
+            continue;
+        };
+        match client.submit(req.clone()) {
+            Ok(pending) => {
+                backend.inflight.fetch_add(1, Ordering::AcqRel);
+                backend.forwarded.fetch_add(1, Ordering::Relaxed);
+                backend.keys.lock().unwrap().insert(*key);
+                state.counters.forwarded.fetch_add(1, Ordering::Relaxed);
+                return Some((i, pending));
+            }
+            Err(_) => {
+                // retriable or not, this shard can't take the request
+                // right now — fail sideways and let the relay (or the
+                // attempt budget) decide how hard to keep trying
+                tried.push(i);
+                continue;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The per-connection relay.
+
+/// Where one proxied request currently is.
+enum Leg {
+    /// Submitted upstream; the reply will surface on `pending`.
+    InFlight {
+        backend: usize,
+        pending: PendingReply,
+        sent: Instant,
+    },
+    /// Parked on a backoff hint; re-routed when `at` passes.
+    Deferred { at: Instant },
+}
+
+struct RelayEntry {
+    /// The id the *client* used (restored onto every reply frame).
+    client_id: u64,
+    key: RouteKey,
+    /// Retained clone for failover resubmission.
+    req: WireRequest,
+    /// Submissions + deferral cycles consumed so far.
+    attempts: usize,
+    /// Shards already tried this routing round.
+    tried: Vec<usize>,
+    leg: Leg,
+}
+
+type Entries = Arc<Mutex<Vec<RelayEntry>>>;
+
+fn send_locked(half: &Mutex<TcpStream>, frame: &Frame) -> std::io::Result<()> {
+    let mut s = half.lock().unwrap();
+    write_frame(&mut *s, frame)?;
+    s.flush()
+}
+
+/// Terminal-answer helper: write `frame` to the client unless the
+/// connection already died; returns the updated deadness.
+fn answer(write_half: &Mutex<TcpStream>, dead: bool, frame: &Frame) -> bool {
+    if dead {
+        return true;
+    }
+    if send_locked(write_half, frame).is_err() {
+        let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
+        return true;
+    }
+    false
+}
+
+fn relay_loop(
+    state: &Arc<ClusterState>,
+    write_half: &Arc<Mutex<TcpStream>>,
+    entries: &Entries,
+    reader_done: &Arc<AtomicBool>,
+) {
+    let mut dead = false;
+    loop {
+        // pull one actionable entry out of the list (reply arrived, or
+        // a deferred retry came due), release the lock, then act — the
+        // client write under `answer` can block up to the write
+        // timeout and must not hold up the reader's submissions
+        let entry = {
+            let mut list = entries.lock().unwrap();
+            let now = Instant::now();
+            let mut found: Option<(usize, Option<Reply>)> = None;
+            for (i, e) in list.iter().enumerate() {
+                match &e.leg {
+                    Leg::InFlight { pending, .. } => {
+                        if let Some(r) = pending.try_wait() {
+                            found = Some((i, Some(r)));
+                            break;
+                        }
+                    }
+                    Leg::Deferred { at } => {
+                        if now >= *at {
+                            found = Some((i, None));
+                            break;
+                        }
+                    }
+                }
+            }
+            found.map(|(i, reply)| (list.swap_remove(i), reply))
+        };
+
+        let Some((mut entry, reply)) = entry else {
+            let idle = entries.lock().unwrap().is_empty();
+            if idle && reader_done.load(Ordering::Acquire) {
+                return;
+            }
+            if state.shutdown.load(Ordering::Acquire) {
+                // teardown: resolve the books for whatever is still
+                // parked; upstream replies for dropped entries are
+                // discarded by the upstream client reader
+                let drained: Vec<RelayEntry> =
+                    entries.lock().unwrap().drain(..).collect();
+                for e in drained {
+                    if let Leg::InFlight { backend, .. } = e.leg {
+                        state.backends[backend].inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    state.counters.inflight.fetch_sub(1, Ordering::AcqRel);
+                }
+                return;
+            }
+            std::thread::sleep(state.cfg.relay_poll);
+            continue;
+        };
+
+        match reply {
+            // a deferred retry came due: clear the tried set (the
+            // backoff is what made revisiting legitimate) and re-route
+            None => {
+                entry.tried.clear();
+                dead = resubmit_or_fail(state, write_half, entries, entry, dead, 0);
+            }
+            Some(reply) => {
+                let (backend, sent) = match entry.leg {
+                    Leg::InFlight { backend, sent, .. } => (backend, sent),
+                    Leg::Deferred { .. } => unreachable!("deferred legs carry no reply"),
+                };
+                state.backends[backend].inflight.fetch_sub(1, Ordering::AcqRel);
+                match reply {
+                    Reply::Response(mut r) => {
+                        let us = sent.elapsed().as_micros() as u64;
+                        let b = &state.backends[backend];
+                        b.latency.record(us);
+                        b.responses.fetch_add(1, Ordering::Relaxed);
+                        b.elems.fetch_add(r.rows as u64 * r.n as u64, Ordering::Relaxed);
+                        r.id = entry.client_id;
+                        dead = answer(write_half, dead, &Frame::Response(r));
+                        state.counters.responses.fetch_add(1, Ordering::Relaxed);
+                        state.counters.inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    // the retriable trio: per-request shed, graceful
+                    // drain, dead upstream — fail over to another shard
+                    Reply::Busy { retry_after_us } => {
+                        entry.tried.push(backend);
+                        dead = resubmit_or_fail(
+                            state, write_half, entries, entry, dead, retry_after_us,
+                        );
+                    }
+                    Reply::Error { code: ErrorCode::Draining, .. } => {
+                        entry.tried.push(backend);
+                        dead = resubmit_or_fail(state, write_half, entries, entry, dead, 0);
+                    }
+                    Reply::Disconnected => {
+                        // dead upstream: route around it *now*, before
+                        // the next probe tick confirms
+                        state.backends[backend].healthy.store(false, Ordering::Release);
+                        entry.tried.push(backend);
+                        dead = resubmit_or_fail(state, write_half, entries, entry, dead, 0);
+                    }
+                    Reply::Error { code, msg } => {
+                        dead = answer(
+                            write_half,
+                            dead,
+                            &Frame::Error(WireError { id: entry.client_id, code, msg }),
+                        );
+                        state.counters.errors_out.fetch_add(1, Ordering::Relaxed);
+                        state.counters.inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                    Reply::Pong | Reply::Stats(_) => {
+                        dead = answer(
+                            write_half,
+                            dead,
+                            &Frame::Error(WireError {
+                                id: entry.client_id,
+                                code: ErrorCode::ExecFailed,
+                                msg: "unexpected upstream reply".to_string(),
+                            }),
+                        );
+                        state.counters.errors_out.fetch_add(1, Ordering::Relaxed);
+                        state.counters.inflight.fetch_sub(1, Ordering::AcqRel);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Failover step: resubmit to the next shard in rendezvous order, park
+/// on the backoff hint when no shard is eligible, or — once the attempt
+/// budget is spent — answer the client with a retriable `Busy`.
+/// Returns the updated client-connection deadness.
+fn resubmit_or_fail(
+    state: &Arc<ClusterState>,
+    write_half: &Arc<Mutex<TcpStream>>,
+    entries: &Entries,
+    mut entry: RelayEntry,
+    dead: bool,
+    hint_us: u32,
+) -> bool {
+    let hint = hint_us.max(state.cfg.busy_retry_us);
+    if entry.attempts >= state.cfg.max_attempts {
+        state.counters.busy_out.fetch_add(1, Ordering::Relaxed);
+        state.counters.inflight.fetch_sub(1, Ordering::AcqRel);
+        return answer(
+            write_half,
+            dead,
+            &Frame::Busy { id: entry.client_id, retry_after_us: hint },
+        );
+    }
+    entry.attempts += 1;
+    match try_submit(state, &entry.key, &entry.req, &mut entry.tried) {
+        Some((backend, pending)) => {
+            state.counters.retries.fetch_add(1, Ordering::Relaxed);
+            entry.leg = Leg::InFlight { backend, pending, sent: Instant::now() };
+            entries.lock().unwrap().push(entry);
+            dead
+        }
+        None => {
+            state.counters.deferrals.fetch_add(1, Ordering::Relaxed);
+            entry.leg = Leg::Deferred {
+                at: Instant::now() + Duration::from_micros(u64::from(hint)),
+            };
+            entries.lock().unwrap().push(entry);
+            dead
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client-facing connection handling.
+
+fn stats_frame(state: &ClusterState, id: u64) -> Frame {
+    let c = &state.counters;
+    let mut counters: Vec<(String, u64)> = vec![
+        ("proxy.backends".to_string(), state.backends.len() as u64),
+        ("proxy.conns_active".to_string(), c.conns_active.load(Ordering::Acquire) as u64),
+        ("proxy.inflight".to_string(), c.inflight.load(Ordering::Acquire) as u64),
+        ("proxy.forwarded".to_string(), c.forwarded.load(Ordering::Relaxed)),
+        ("proxy.retries".to_string(), c.retries.load(Ordering::Relaxed)),
+        ("proxy.deferrals".to_string(), c.deferrals.load(Ordering::Relaxed)),
+        ("proxy.responses".to_string(), c.responses.load(Ordering::Relaxed)),
+        ("proxy.busy_out".to_string(), c.busy_out.load(Ordering::Relaxed)),
+        ("proxy.errors_out".to_string(), c.errors_out.load(Ordering::Relaxed)),
+        ("proxy.health_probes".to_string(), c.health_probes.load(Ordering::Relaxed)),
+        ("proxy.health_failures".to_string(), c.health_failures.load(Ordering::Relaxed)),
+    ];
+    let mut report = String::from("cluster proxy\n");
+    for (i, b) in state.backends.iter().enumerate() {
+        let s = b.snapshot();
+        counters.push((format!("backend{i}.healthy"), u64::from(s.healthy)));
+        counters.push((format!("backend{i}.draining"), u64::from(s.draining)));
+        counters.push((format!("backend{i}.inflight"), s.inflight as u64));
+        counters.push((format!("backend{i}.forwarded"), s.forwarded));
+        counters.push((format!("backend{i}.responses"), s.responses));
+        counters.push((format!("backend{i}.elems"), s.elems));
+        counters.push((format!("backend{i}.p50_us"), s.p50_us));
+        counters.push((format!("backend{i}.p90_us"), s.p90_us));
+        counters.push((format!("backend{i}.p99_us"), s.p99_us));
+        report.push_str(&format!(
+            "backend {i} {} healthy={} draining={} inflight={} forwarded={} \
+             responses={} p50={}us p90={}us p99={}us\n",
+            s.addr,
+            s.healthy,
+            s.draining,
+            s.inflight,
+            s.forwarded,
+            s.responses,
+            s.p50_us,
+            s.p90_us,
+            s.p99_us,
+        ));
+    }
+    Frame::Stats(WireStats { id, counters, report })
+}
+
+fn handle_conn(state: &Arc<ClusterState>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(state.cfg.poll_interval));
+    let _ = stream.set_write_timeout(Some(state.cfg.write_timeout));
+    if let Ok(write_stream) = stream.try_clone() {
+        let write_half = Arc::new(Mutex::new(write_stream));
+        conn_loop(state, stream, &write_half);
+    }
+    state.counters.conns_active.fetch_sub(1, Ordering::AcqRel);
+}
+
+fn conn_loop(
+    state: &Arc<ClusterState>,
+    mut reader: TcpStream,
+    write_half: &Arc<Mutex<TcpStream>>,
+) {
+    let entries: Entries = Arc::new(Mutex::new(Vec::new()));
+    let reader_done = Arc::new(AtomicBool::new(false));
+    let relay = {
+        let state = Arc::clone(state);
+        let write_half = Arc::clone(write_half);
+        let entries = Arc::clone(&entries);
+        let reader_done = Arc::clone(&reader_done);
+        std::thread::Builder::new()
+            .name("hadacore-cluster-relay".to_string())
+            .spawn(move || relay_loop(&state, &write_half, &entries, &reader_done))
+    };
+    let relay = match relay {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+
+    // incremental framing, exactly like the single-process server: the
+    // read timeout is the shutdown-poll quantum and consumes nothing
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    'conn: loop {
+        loop {
+            match decode_frame(&buf, state.cfg.max_frame_bytes) {
+                Ok(Some((frame, used))) => {
+                    buf.drain(..used);
+                    if !handle_frame(state, write_half, &entries, frame) {
+                        break 'conn;
+                    }
+                }
+                Ok(None) => break,
+                Err(msg) => {
+                    state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = send_locked(
+                        write_half,
+                        &Frame::Error(WireError { id: 0, code: ErrorCode::Malformed, msg }),
+                    );
+                    break 'conn;
+                }
+            }
+        }
+        if state.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        use std::io::Read;
+        match reader.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    reader_done.store(true, Ordering::Release);
+    let _ = reader.shutdown(Shutdown::Both);
+    let _ = relay.join();
+}
+
+/// Dispatch one client frame; `false` ends the connection.
+fn handle_frame(
+    state: &Arc<ClusterState>,
+    write_half: &Arc<Mutex<TcpStream>>,
+    entries: &Entries,
+    frame: Frame,
+) -> bool {
+    match frame {
+        Frame::Ping { id } => send_locked(write_half, &Frame::Pong { id }).is_ok(),
+        Frame::StatsRequest { id } => {
+            send_locked(write_half, &stats_frame(state, id)).is_ok()
+        }
+        Frame::Request(req) => {
+            let client_id = req.id;
+            if state.counters.inflight.load(Ordering::Acquire) >= state.cfg.max_inflight {
+                state.counters.busy_out.fetch_add(1, Ordering::Relaxed);
+                return send_locked(
+                    write_half,
+                    &Frame::Busy { id: client_id, retry_after_us: state.cfg.busy_retry_us },
+                )
+                .is_ok();
+            }
+            let key = RouteKey::of(&req);
+            let mut tried = Vec::new();
+            match try_submit(state, &key, &req, &mut tried) {
+                Some((backend, pending)) => {
+                    state.counters.inflight.fetch_add(1, Ordering::AcqRel);
+                    entries.lock().unwrap().push(RelayEntry {
+                        client_id,
+                        key,
+                        req,
+                        attempts: 1,
+                        tried,
+                        leg: Leg::InFlight { backend, pending, sent: Instant::now() },
+                    });
+                    true
+                }
+                None => {
+                    // no shard reachable right now: still a retriable
+                    // outcome from where the client stands
+                    state.counters.busy_out.fetch_add(1, Ordering::Relaxed);
+                    send_locked(
+                        write_half,
+                        &Frame::Busy {
+                            id: client_id,
+                            retry_after_us: state.cfg.busy_retry_us,
+                        },
+                    )
+                    .is_ok()
+                }
+            }
+        }
+        // server-to-client frames arriving from a client are protocol
+        // violations; drop the connection like the server would
+        Frame::Response(_)
+        | Frame::Error(_)
+        | Frame::Busy { .. }
+        | Frame::Pong { .. }
+        | Frame::Stats(_) => {
+            state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptor + health prober + handle.
+
+fn accept_loop(listener: TcpListener, state: &Arc<ClusterState>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if state.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if state.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        {
+            let mut threads = state.conn_threads.lock().unwrap();
+            let mut live = Vec::with_capacity(threads.len());
+            for h in threads.drain(..) {
+                if h.is_finished() {
+                    let _ = h.join();
+                } else {
+                    live.push(h);
+                }
+            }
+            *threads = live;
+        }
+        if state.counters.conns_active.load(Ordering::Acquire) >= state.cfg.max_conns {
+            state.counters.conns_rejected.fetch_add(1, Ordering::Relaxed);
+            let mut s = stream;
+            let busy = Frame::Busy { id: 0, retry_after_us: state.cfg.busy_retry_us };
+            let _ = s.write_all(&busy.encode());
+            let _ = s.shutdown(Shutdown::Both);
+            continue;
+        }
+        state.counters.conns_active.fetch_add(1, Ordering::AcqRel);
+        state.counters.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        let conn_state = Arc::clone(state);
+        match std::thread::Builder::new()
+            .name("hadacore-cluster-conn".to_string())
+            .spawn(move || handle_conn(&conn_state, stream))
+        {
+            Ok(h) => state.conn_threads.lock().unwrap().push(h),
+            Err(_) => {
+                state.counters.conns_active.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+}
+
+/// One probe sweep over the fleet: ping each backend over its upstream
+/// connection (reconnecting if needed) and set its health bit.
+fn probe_all(state: &ClusterState) {
+    for b in &state.backends {
+        state.counters.health_probes.fetch_add(1, Ordering::Relaxed);
+        let ok = b
+            .alive_client(state.cfg.max_frame_bytes)
+            .map(|c| c.ping().is_ok())
+            .unwrap_or(false);
+        let was = b.healthy.swap(ok, Ordering::AcqRel);
+        if !ok && was {
+            state.counters.health_failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn health_loop(state: &Arc<ClusterState>) {
+    while !state.shutdown.load(Ordering::Acquire) {
+        probe_all(state);
+        // sleep in poll-sized steps so shutdown isn't gated on a full
+        // health interval
+        let mut left = state.cfg.health_interval;
+        while left > Duration::ZERO && !state.shutdown.load(Ordering::Acquire) {
+            let step = left.min(Duration::from_millis(10));
+            std::thread::sleep(step);
+            left = left.saturating_sub(step);
+        }
+    }
+}
+
+/// Handle to a running cluster proxy; dropping it shuts the proxy
+/// down (backends are *not* owned and keep running).
+pub struct ClusterHandle {
+    addr: SocketAddr,
+    state: Arc<ClusterState>,
+    accept_thread: Option<JoinHandle<()>>,
+    health_thread: Option<JoinHandle<()>>,
+}
+
+/// Bind the proxy and start routing to `cfg.backends`. Probes every
+/// backend once before returning, so a healthy fleet routes from the
+/// first request.
+pub fn cluster(cfg: ClusterConfig) -> anyhow::Result<ClusterHandle> {
+    if cfg.backends.is_empty() {
+        return Err(anyhow!("cluster needs at least one backend"));
+    }
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
+    let backends = cfg.backends.iter().cloned().map(Backend::new).collect();
+    let state = Arc::new(ClusterState {
+        cfg,
+        backends,
+        shutdown: AtomicBool::new(false),
+        counters: ClusterCounters::default(),
+        conn_threads: Mutex::new(Vec::new()),
+    });
+    probe_all(&state);
+    let accept_state = Arc::clone(&state);
+    let accept_thread = std::thread::Builder::new()
+        .name("hadacore-cluster-acceptor".to_string())
+        .spawn(move || accept_loop(listener, &accept_state))
+        .map_err(|e| anyhow!("spawn acceptor: {e}"))?;
+    let health_state = Arc::clone(&state);
+    let health_thread = std::thread::Builder::new()
+        .name("hadacore-cluster-health".to_string())
+        .spawn(move || health_loop(&health_state))
+        .map_err(|e| anyhow!("spawn health prober: {e}"))?;
+    Ok(ClusterHandle {
+        addr,
+        state,
+        accept_thread: Some(accept_thread),
+        health_thread: Some(health_thread),
+    })
+}
+
+impl ClusterHandle {
+    /// The proxy's bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Proxy counters.
+    pub fn counters(&self) -> &ClusterCounters {
+        &self.state.counters
+    }
+
+    /// Number of configured backends.
+    pub fn backend_count(&self) -> usize {
+        self.state.backends.len()
+    }
+
+    /// Point-in-time view of backend `i`.
+    pub fn backend(&self, i: usize) -> BackendSnapshot {
+        self.state.backends[i].snapshot()
+    }
+
+    /// Stop routing *new* requests to backend `i`; in-flight requests
+    /// complete normally. Safe to call repeatedly.
+    pub fn drain_backend(&self, i: usize) {
+        self.state.backends[i].draining.store(true, Ordering::Release);
+    }
+
+    /// Re-admit backend `i` to routing (after a drain).
+    pub fn undrain_backend(&self, i: usize) {
+        self.state.backends[i].draining.store(false, Ordering::Release);
+    }
+
+    /// Point backend `i` at a new address (a restarted shard rarely
+    /// comes back on the same ephemeral port) and probe it once; the
+    /// slot rejoins routing as soon as it answers a ping — here, or on
+    /// a later health tick.
+    pub fn replace_backend(&self, i: usize, addr: &str) {
+        let b = &self.state.backends[i];
+        *b.addr.lock().unwrap() = addr.to_string();
+        b.healthy.store(false, Ordering::Release);
+        *b.client.lock().unwrap() = None;
+        let ok = b
+            .alive_client(self.state.cfg.max_frame_bytes)
+            .map(|c| c.ping().is_ok())
+            .unwrap_or(false);
+        b.healthy.store(ok, Ordering::Release);
+    }
+
+    /// Route keys shard `i` has been handed since the last
+    /// [`ClusterHandle::reset_route_keys`] — the homogeneity
+    /// bookkeeping the cluster tests assert on.
+    pub fn route_keys(&self, i: usize) -> Vec<RouteKey> {
+        self.state.backends[i].keys.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Clear every shard's route-key bookkeeping (e.g. between a
+    /// failover phase and a homogeneity phase of a test).
+    pub fn reset_route_keys(&self) {
+        for b in &self.state.backends {
+            b.keys.lock().unwrap().clear();
+        }
+    }
+
+    /// Stop accepting, resolve relay bookkeeping, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.state.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake {
+                SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let woke = TcpStream::connect_timeout(&wake, Duration::from_secs(1)).is_ok();
+        if let Some(h) = self.accept_thread.take() {
+            if woke {
+                let _ = h.join();
+            }
+        }
+        let conns: Vec<JoinHandle<()>> =
+            self.state.conn_threads.lock().unwrap().drain(..).collect();
+        for h in conns {
+            let _ = h.join();
+        }
+        if let Some(h) = self.health_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ClusterHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: u32) -> RouteKey {
+        RouteKey {
+            n,
+            dtype: DType::F32,
+            epilogue: Epilogue::None,
+            prologue: Prologue::None,
+        }
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_spreads() {
+        let kh = key_hash(&key(1024));
+        assert_eq!(rendezvous_score(kh, 0), rendezvous_score(kh, 0));
+        assert_ne!(rendezvous_score(kh, 0), rendezvous_score(kh, 1));
+        // different keys land on different winners often enough to
+        // actually shard: over many sizes, a 3-way fleet must see every
+        // backend win at least once
+        let mut winners = HashSet::new();
+        for n in (0..64u32).map(|i| 256 << (i % 8)).chain(1..64) {
+            let kh = key_hash(&key(n));
+            let best = (0..3).max_by_key(|&b| rendezvous_score(kh, b)).unwrap();
+            winners.insert(best);
+        }
+        assert_eq!(winners.len(), 3, "all shards must own some keys");
+    }
+
+    #[test]
+    fn route_key_includes_the_bucket_coordinates() {
+        let mut req = WireRequest::from_f32(
+            7,
+            1024,
+            &vec![0.0f32; 1024],
+            crate::hadamard::KernelKind::HadaCore,
+            DType::F32,
+        );
+        let a = RouteKey::of(&req);
+        req.epilogue = Epilogue::QuantInt8 { group: 64 };
+        let b = RouteKey::of(&req);
+        assert_ne!(a, b, "epilogue must discriminate the route");
+        req.prologue = Prologue::SignFlip { seed: 0x5EED };
+        let c = RouteKey::of(&req);
+        assert_ne!(b, c, "prologue must discriminate the route");
+        // id and scale must NOT discriminate: same bucket, same shard
+        req.id = 99;
+        req.scale = Some(2.0);
+        let d = RouteKey::of(&req);
+        assert_eq!(c, d, "id/scale are not bucket coordinates");
+    }
+}

@@ -20,7 +20,16 @@
 //!   responses back out of order by request id — framing the *same*
 //!   buffer the transform ran in (vectored header + payload write, no
 //!   gather or encode copy).
-//! * [`client`] — the sync pipelining client (tests, examples, loadgen).
+//! * [`client`] — the sync pipelining client (tests, examples, loadgen),
+//!   with the typed retriable/fatal error split ([`client::ClientError`])
+//!   the failover logic above it branches on.
+//! * [`cluster`] — the scale-out tier: a routing proxy over N backend
+//!   serve processes. Routes on the batcher's bucket coordinates
+//!   `(n, dtype, epilogue, prologue)` via rendezvous hashing so shard
+//!   batches stay homogeneous, health-checks backends over `Ping`,
+//!   fails retriable outcomes (`Busy`, `Draining`, dead upstream) over
+//!   to another shard, and drains/restarts individual backends without
+//!   dropping traffic.
 //! * [`loadgen`] — the open-loop QPS load generator over the traffic
 //!   mixes of [`crate::harness::workload`], feeding the
 //!   `BENCH_PR7.json` perf trajectory; with the `count-alloc` feature it
@@ -34,11 +43,15 @@
 //! heap allocations end to end.
 
 pub mod client;
+pub mod cluster;
 pub mod loadgen;
 pub mod server;
 pub mod wire;
 
-pub use client::{Client, PendingReply, Reply};
+pub use client::{Client, ClientError, PendingReply, Reply};
+pub use cluster::{
+    cluster, BackendSnapshot, ClusterConfig, ClusterCounters, ClusterHandle, RouteKey,
+};
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use server::{serve, ServeConfig, ServeCounters, ServeHandle};
 pub use wire::{Frame, WireRequest, WireResponse, WireStats};

@@ -65,11 +65,11 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::{Coordinator, ReplyRing, ReplyTx, ResponseTx};
-use crate::quant::Epilogue;
+use crate::quant::{Epilogue, QuantScales};
 use crate::util::alloc::track_current_thread;
 use crate::util::error::{self as anyhow, anyhow};
 use crate::util::f16::DType;
-use crate::util::pool::serve_pool;
+use crate::util::pool::{scale_pool, serve_pool};
 
 use super::wire::{
     decode_server_frame, write_frame_parts, ErrorCode, Frame, ResponseFramer,
@@ -572,21 +572,46 @@ fn writer_loop(
     let mut dead = false;
     while let Some((id, result)) = ring.recv() {
         let entry = meta.lock().unwrap().remove(&id);
-        if !dead {
-            if let Some((dtype, n)) = entry {
-                let ok = match result {
-                    Ok(resp) => {
+        match result {
+            Ok(mut resp) => {
+                if !dead {
+                    if let Some((dtype, n)) = entry {
                         // zero-copy response: the header is framed next
                         // to a raw byte view of the transformed request
                         // buffer and both hit the socket in one vectored
                         // write — the payload is never re-encoded.
                         // `resp` (and its pooled buffer) drops right
                         // after, returning the buffer to the pool.
-                        let (header, payload) = framer.frame(&resp, n, dtype);
-                        let mut s = write_half.lock().unwrap();
-                        write_frame_parts(&mut *s, header, payload).is_ok()
+                        let ok = {
+                            let (header, payload) = framer.frame(&resp, n, dtype);
+                            let mut s = write_half.lock().unwrap();
+                            write_frame_parts(&mut *s, header, payload).is_ok()
+                        };
+                        if !ok {
+                            // timeout or reset: a partially written
+                            // frame cannot resync, so the connection is
+                            // done — close it to unblock the (possibly
+                            // stalled) peer-facing reader
+                            dead = true;
+                            let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
+                        }
                     }
-                    Err(e) => send_locked(
+                }
+                // the grouped-INT8 scale vector's last reader was the
+                // framer (it copies the scales into the retained header
+                // scratch): recycle it on every path — written, dead
+                // connection, or missing meta — so steady INT8 traffic
+                // allocates no scales (the payload buffer still returns
+                // via PooledBuf's own Drop)
+                if let QuantScales::PerGroup(v) =
+                    std::mem::replace(&mut resp.scales, QuantScales::None)
+                {
+                    scale_pool().put(v);
+                }
+            }
+            Err(e) => {
+                if !dead && entry.is_some() {
+                    let ok = send_locked(
                         write_half,
                         &Frame::Error(WireError {
                             id,
@@ -594,14 +619,11 @@ fn writer_loop(
                             msg: e.to_string(),
                         }),
                     )
-                    .is_ok(),
-                };
-                if !ok {
-                    // timeout or reset: a partially written frame cannot
-                    // resync, so the connection is done — close it to
-                    // unblock the (possibly stalled) peer-facing reader
-                    dead = true;
-                    let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
+                    .is_ok();
+                    if !ok {
+                        dead = true;
+                        let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
+                    }
                 }
             }
         }

@@ -238,6 +238,100 @@ pub fn serve_pool() -> &'static BufferPool {
     &SERVE_POOL
 }
 
+// ---------------------------------------------------------------------
+// Grouped-INT8 scale-vector recycler.
+
+/// Free-list recycler for the grouped-INT8 epilogue's per-response
+/// scale vectors (`rows * n / group` f32s, carried in
+/// [`QuantScales::PerGroup`](crate::quant::QuantScales)).
+///
+/// The payload buffers are pooled ([`BufferPool`]), but until this
+/// recycler existed every grouped-INT8 response allocated its scale
+/// vector fresh — the last per-request allocation on the serve path.
+/// The engine draws vectors from here ([`ScaleVecPool::get_zeroed`]),
+/// and the server's writer thread returns them after the response
+/// frame hits the socket ([`ScaleVecPool::put`]): in steady state a
+/// traffic mix's scale shapes are all resident and the path allocates
+/// nothing (asserted by the grouped-INT8 mix in the
+/// `--assert-zero-alloc` loadgen gate).
+///
+/// The `Vec<f32>` type is unchanged end to end — `QuantScales` and the
+/// wire encoding are untouched; recycling is purely a lifecycle hookup
+/// at the two ends of the response's life.
+pub struct ScaleVecPool {
+    shelf: Mutex<Vec<Vec<f32>>>,
+    cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScaleVecPool {
+    /// A recycler keeping at most `cap` idle vectors (the shelf is
+    /// pre-reserved, so returns never allocate).
+    pub fn new(cap: usize) -> ScaleVecPool {
+        ScaleVecPool {
+            shelf: Mutex::new(Vec::with_capacity(cap)),
+            cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A zero-filled vector of exactly `len` elements. Reuses a shelved
+    /// vector whose capacity suffices (clear + in-capacity resize — no
+    /// heap traffic); falls back to a fresh allocation on a miss.
+    pub fn get_zeroed(&self, len: usize) -> Vec<f32> {
+        if len > 0 {
+            let mut shelf = self.shelf.lock().unwrap();
+            if let Some(i) = shelf.iter().position(|v| v.capacity() >= len) {
+                let mut v = shelf.swap_remove(i);
+                drop(shelf);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v.resize(len, 0.0);
+                return v;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        vec![0.0f32; len]
+    }
+
+    /// Shelve a spent scale vector for reuse. A return to a full shelf
+    /// (or of an empty vector) frees it instead.
+    pub fn put(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut shelf = self.shelf.lock().unwrap();
+        if shelf.len() < self.cap {
+            shelf.push(v);
+        }
+    }
+
+    /// Reuse count (gets served from the shelf).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Fresh-allocation count (first use of a shape, or shelf pressure).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+/// Idle-shelf bound of the process-wide [`scale_pool`]: comfortably
+/// above any realistic (mix shapes × in-flight responses) working set,
+/// small enough that pathological shape churn cannot pin memory.
+const SCALE_POOL_CAP: usize = 128;
+
+static SCALE_POOL: Lazy<ScaleVecPool> = Lazy::new(|| ScaleVecPool::new(SCALE_POOL_CAP));
+
+/// The process-wide grouped-INT8 scale-vector recycler (engine draws,
+/// serve writer returns).
+pub fn scale_pool() -> &'static ScaleVecPool {
+    &SCALE_POOL
+}
+
 /// An owned f32 payload buffer, optionally affiliated with a
 /// [`BufferPool`] it returns to on `Drop`. Derefs to `Vec<f32>`, so all
 /// existing `&resp.data` / `resp.data.len()` call sites compile
@@ -502,5 +596,54 @@ mod tests {
         let a = serve_pool();
         let b = serve_pool();
         assert!(std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn scale_pool_recycles_and_zeroes() {
+        let pool = ScaleVecPool::new(4);
+        let mut v = pool.get_zeroed(64);
+        assert_eq!(v, vec![0.0f32; 64]);
+        assert_eq!(pool.misses(), 1);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        pool.put(v);
+
+        // same shape again: served from the shelf, zero-filled, and —
+        // the zero-alloc contract — the very same heap block
+        let v2 = pool.get_zeroed(64);
+        assert_eq!(pool.hits(), 1);
+        assert_eq!(v2, vec![0.0f32; 64]);
+        assert_eq!(v2.capacity(), cap);
+        assert_eq!(v2.as_ptr(), ptr);
+
+        // a smaller request also fits the shelved capacity
+        pool.put(v2);
+        let v3 = pool.get_zeroed(16);
+        assert_eq!(pool.hits(), 2);
+        assert_eq!(v3.len(), 16);
+
+        // a larger one is an honest miss
+        let v4 = pool.get_zeroed(4096);
+        assert_eq!(pool.misses(), 2);
+        assert_eq!(v4.len(), 4096);
+    }
+
+    #[test]
+    fn scale_pool_shelf_is_bounded() {
+        let pool = ScaleVecPool::new(2);
+        for _ in 0..5 {
+            pool.put(vec![0.0f32; 32]);
+        }
+        // only two shelved: the rest were freed, so only two hits follow
+        let _a = pool.get_zeroed(32);
+        let _b = pool.get_zeroed(32);
+        let _c = pool.get_zeroed(32);
+        assert_eq!(pool.hits(), 2);
+        assert_eq!(pool.misses(), 1);
+        // empty vectors are never shelved
+        pool.put(Vec::new());
+        let _d = pool.get_zeroed(8);
+        assert_eq!(pool.misses(), 2);
     }
 }

@@ -1,0 +1,479 @@
+//! End-to-end tests of the cluster tier (`serve/cluster.rs`) — the
+//! `cluster-e2e` CI gate.
+//!
+//! Acceptance contract (ISSUE 9):
+//!
+//! * a 3-backend fleet behind the routing proxy answers **byte-identical**
+//!   to direct `Coordinator::submit` across sizes × dtypes × epilogues ×
+//!   prologues;
+//! * routing is homogeneous: while the fleet is healthy, no two shards
+//!   ever see the same `(n, dtype, epilogue, prologue)` bucket;
+//! * killing a backend mid-traffic loses zero requests — in-flight work
+//!   fails over (exercised non-vacuously: the proxy's retry counter must
+//!   move) and the restarted backend rejoins the fleet;
+//! * draining a backend under load moves new traffic off it without a
+//!   dropped request, and undraining hands its keys back.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hadacore::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, TransformRequest,
+};
+use hadacore::hadamard::{KernelKind, Prologue};
+use hadacore::quant::Epilogue;
+use hadacore::serve::wire::{decode_elems, encode_elems, WireRequest, WireResponse};
+use hadacore::serve::{
+    cluster, serve, Client, ClusterConfig, ClusterHandle, ServeConfig, ServeHandle,
+};
+use hadacore::util::f16::DType;
+use hadacore::util::rng::Rng;
+
+fn start_coordinator(workers: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(
+            None,
+            CoordinatorConfig {
+                workers,
+                batcher: BatcherConfig {
+                    max_delay: Duration::from_micros(200),
+                    work_conserving: true,
+                },
+                idle_timeout: Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    )
+}
+
+/// One fleet shard: its coordinator and TCP front-end. The pipelining
+/// cap is raised well past the defaults because the proxy multiplexes
+/// every downstream client over a single upstream connection.
+fn start_backend() -> (Arc<Coordinator>, ServeHandle) {
+    let coord = start_coordinator(2);
+    let handle = serve(
+        Arc::clone(&coord),
+        ServeConfig {
+            pipeline_depth: 256,
+            max_inflight: 1024,
+            poll_interval: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (coord, handle)
+}
+
+struct Fleet {
+    /// `None` where a backend was taken (killed) by a test.
+    backends: Vec<Option<(Arc<Coordinator>, ServeHandle)>>,
+    proxy: ClusterHandle,
+    /// Reference coordinator for byte-identity: the transform is a pure
+    /// deterministic function, so a fourth, independent coordinator must
+    /// agree bit-for-bit with whatever shard served the request.
+    reference: Arc<Coordinator>,
+}
+
+fn start_fleet(n: usize) -> Fleet {
+    let backends: Vec<_> = (0..n).map(|_| start_backend()).collect();
+    let proxy = cluster(ClusterConfig {
+        backends: backends.iter().map(|(_, h)| h.addr().to_string()).collect(),
+        health_interval: Duration::from_millis(25),
+        poll_interval: Duration::from_millis(10),
+        ..Default::default()
+    })
+    .unwrap();
+    for i in 0..n {
+        assert!(proxy.backend(i).healthy, "backend {i} must probe healthy at start");
+    }
+    Fleet {
+        backends: backends.into_iter().map(Some).collect(),
+        proxy,
+        reference: start_coordinator(2),
+    }
+}
+
+impl Fleet {
+    fn teardown(self) {
+        drop(self.proxy);
+        for (coord, handle) in self.backends.into_iter().flatten() {
+            handle.shutdown();
+            coord.drain();
+        }
+        self.reference.drain();
+    }
+}
+
+/// One request shape = one routing key.
+#[derive(Clone)]
+struct Case {
+    n: usize,
+    rows: usize,
+    kernel: KernelKind,
+    dtype: DType,
+    epilogue: Epilogue,
+    prologue: Prologue,
+    seed: u64,
+}
+
+fn case_grid() -> Vec<Case> {
+    let mut cases = Vec::new();
+    let mut seed = 0x0C10_5EED;
+    for &n in &[256usize, 512, 1024, 2048, 4096, 14336] {
+        for (epilogue, prologue) in [
+            (Epilogue::None, Prologue::None),
+            (Epilogue::QuantInt8 { group: 64 }, Prologue::None),
+            (Epilogue::None, Prologue::SignFlip { seed: 0x5EED_0909 }),
+        ] {
+            seed += 1;
+            cases.push(Case {
+                n,
+                rows: 1 + (seed as usize % 3),
+                kernel: KernelKind::HadaCore,
+                dtype: DType::F32,
+                epilogue,
+                prologue,
+                seed,
+            });
+        }
+    }
+    for &dtype in &[DType::F16, DType::BF16] {
+        seed += 1;
+        cases.push(Case {
+            n: 1024,
+            rows: 2,
+            kernel: KernelKind::HadaCore,
+            dtype,
+            epilogue: Epilogue::None,
+            prologue: Prologue::None,
+            seed,
+        });
+    }
+    cases
+}
+
+/// The canonical f32 payload a case's wire bytes decode to server-side.
+fn canonical_payload(case: &Case) -> Vec<f32> {
+    let mut rng = Rng::new(case.seed);
+    let raw = rng.normal_vec(case.rows * case.n);
+    decode_elems(&encode_elems(&raw, case.dtype), case.dtype).unwrap()
+}
+
+fn wire_request(case: &Case) -> WireRequest {
+    let data = canonical_payload(case);
+    let mut wire = WireRequest::from_f32(0, case.n, &data, case.kernel, case.dtype);
+    wire.epilogue = case.epilogue;
+    wire.prologue = case.prologue;
+    wire
+}
+
+/// Byte-identity oracle: direct submit of the identical canonical
+/// payload on the reference coordinator.
+fn assert_identical(reference: &Coordinator, case: &Case, resp: &WireResponse) {
+    let mut req = TransformRequest::new(1, case.n, canonical_payload(case));
+    req.kernel = case.kernel;
+    req.epilogue = case.epilogue;
+    req.prologue = case.prologue;
+    let direct = reference.transform(req).unwrap();
+    assert_eq!(
+        resp.payload,
+        encode_elems(&direct.data, case.dtype),
+        "case n={} {:?} {:?} {:?}: proxied bytes must be bit-identical \
+         to direct submit",
+        case.n,
+        case.dtype,
+        case.epilogue,
+        case.prologue,
+    );
+    assert_eq!(resp.scales, direct.scales, "case n={}: scales must match", case.n);
+    assert_eq!(resp.n as usize, case.n);
+    assert_eq!(resp.rows as usize, case.rows);
+}
+
+/// Drive one request to completion through the proxy, retrying the
+/// retriable outcomes (`Busy`, a dead proxy connection never happens in
+/// these tests) — the loop every real cluster client runs.
+fn transform_retrying(client: &Client, req: &WireRequest) -> WireResponse {
+    for _ in 0..100 {
+        match client.transform(req.clone()) {
+            Ok(r) => return r,
+            Err(e) if e.is_retriable() => {
+                let us = u64::from(e.retry_after_us().unwrap_or(500));
+                std::thread::sleep(Duration::from_micros(us.min(5_000)));
+            }
+            Err(e) => panic!("non-retriable cluster error: {e}"),
+        }
+    }
+    panic!("request did not complete in 100 attempts");
+}
+
+/// Which shard owns `case`'s routing key right now: send one probe
+/// request and watch whose forwarded counter moves.
+fn owner_of(fleet: &Fleet, client: &Client, case: &Case) -> usize {
+    let before: Vec<u64> =
+        (0..fleet.proxy.backend_count()).map(|i| fleet.proxy.backend(i).forwarded).collect();
+    let resp = transform_retrying(client, &wire_request(case));
+    assert_identical(&fleet.reference, case, &resp);
+    for i in 0..fleet.proxy.backend_count() {
+        if fleet.proxy.backend(i).forwarded > before[i] {
+            return i;
+        }
+    }
+    panic!("no backend's forwarded counter moved");
+}
+
+#[test]
+fn fleet_is_byte_identical_and_routing_stays_homogeneous() {
+    let fleet = start_fleet(3);
+    let addr = fleet.proxy.addr().to_string();
+    let cases = case_grid();
+    assert!(cases.len() >= 18, "grid must stay meaningful");
+
+    // two concurrent pipelining clients, each sending the whole grid
+    // twice — so every key arrives repeatedly, from both connections
+    let mut threads = Vec::new();
+    for _ in 0..2 {
+        let addr = addr.clone();
+        let cases = cases.clone();
+        let reference = Arc::clone(&fleet.reference);
+        threads.push(std::thread::spawn(move || {
+            let client = Client::connect(&addr).unwrap();
+            for _ in 0..2 {
+                let pending: Vec<_> = cases
+                    .iter()
+                    .map(|c| client.submit(wire_request(c)).unwrap())
+                    .collect();
+                for (case, p) in cases.iter().zip(pending) {
+                    match p.wait() {
+                        hadacore::serve::Reply::Response(r) => {
+                            assert_identical(&reference, case, &r)
+                        }
+                        other => panic!("case n={}: unexpected reply {other:?}", case.n),
+                    }
+                }
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    // nothing failed over (the fleet was healthy throughout), so the
+    // route-key bookkeeping is exactly the rendezvous map...
+    assert_eq!(fleet.proxy.counters().retries.load(Ordering::Relaxed), 0);
+
+    // ...and it must be homogeneous: no key on two shards, every shard
+    // sharing the work (the grid is far larger than the fleet)
+    let keysets: Vec<Vec<hadacore::serve::RouteKey>> =
+        (0..3).map(|i| fleet.proxy.route_keys(i)).collect();
+    for i in 0..3 {
+        for j in (i + 1)..3 {
+            for k in &keysets[i] {
+                assert!(
+                    !keysets[j].contains(k),
+                    "key {k:?} routed to both shard {i} and shard {j}"
+                );
+            }
+        }
+        assert!(
+            !keysets[i].is_empty(),
+            "shard {i} must own some keys of a {}-key grid",
+            cases.len()
+        );
+    }
+    let total: usize = keysets.iter().map(Vec::len).sum();
+    assert!(total >= cases.len(), "every distinct key must be accounted for");
+
+    fleet.teardown();
+}
+
+#[test]
+fn killed_backend_fails_over_with_zero_lost_requests_and_rejoins() {
+    let mut fleet = start_fleet(3);
+    let client = Client::connect(&fleet.proxy.addr().to_string()).unwrap();
+
+    // a deliberately slow case (large scalar batch, native-forced) so the
+    // victim shard still has requests queued or executing when it dies
+    let slow = Case {
+        n: 32768,
+        rows: 8,
+        kernel: KernelKind::Scalar,
+        dtype: DType::F32,
+        epilogue: Epilogue::None,
+        prologue: Prologue::None,
+        seed: 0xDEAD,
+    };
+    let victim = owner_of(&fleet, &client, &slow);
+
+    // pipeline a burst of slow requests at the victim's key, then kill
+    // the victim while they are still being served
+    let mut slow_wire = wire_request(&slow);
+    slow_wire.force_native = true;
+    let pending: Vec<_> =
+        (0..8).map(|_| client.submit(slow_wire.clone()).unwrap()).collect();
+    std::thread::sleep(Duration::from_millis(5));
+    // kill = full backend teardown, exactly what a crashed process
+    // looks like from the proxy's side of the sockets
+    let (coord, handle) = fleet.backends[victim].take().unwrap();
+    handle.shutdown();
+    coord.drain();
+
+    // zero lost: every pipelined request resolves as a Response — the
+    // in-flight ones through failover, never an error or a hang
+    let deadline = Instant::now() + Duration::from_secs(60);
+    for p in pending {
+        let resp = loop {
+            match p.try_wait() {
+                Some(hadacore::serve::Reply::Response(r)) => break Some(r),
+                Some(hadacore::serve::Reply::Busy { .. }) => break None,
+                Some(other) => panic!("lost a request to {other:?}"),
+                None => {
+                    assert!(Instant::now() < deadline, "a request hung — lost");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        };
+        match resp {
+            Some(r) => assert_identical(&fleet.reference, &slow, &r),
+            // an attempt-budget Busy is retriable by contract; drive the
+            // retry to completion — still nothing lost
+            None => {
+                let r = transform_retrying(&client, &slow_wire);
+                assert_identical(&fleet.reference, &slow, &r);
+            }
+        }
+    }
+    // ...and the failover was exercised non-vacuously
+    let retries = fleet.proxy.counters().retries.load(Ordering::Relaxed);
+    assert!(retries > 0, "killing a loaded backend must force failover retries");
+
+    // follow-up traffic on the dead shard's key keeps working (routed
+    // around the corpse), and the fleet of two still covers the grid
+    for case in case_grid().iter().take(6) {
+        let r = transform_retrying(&client, &wire_request(case));
+        assert_identical(&fleet.reference, case, &r);
+    }
+
+    // restart: a fresh backend on a fresh port takes the dead slot and
+    // the proxy re-probes it back into the routing set
+    let (new_coord, new_handle) = start_backend();
+    fleet.proxy.replace_backend(victim, &new_handle.addr().to_string());
+    let t0 = Instant::now();
+    while !fleet.proxy.backend(victim).healthy {
+        assert!(t0.elapsed() < Duration::from_secs(5), "restart must re-probe healthy");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the restarted shard owns its rendezvous keys again: the slow key
+    // routes straight back to the same slot
+    let before = fleet.proxy.backend(victim).forwarded;
+    let r = transform_retrying(&client, &wire_request(&slow));
+    assert_identical(&fleet.reference, &slow, &r);
+    assert!(
+        fleet.proxy.backend(victim).forwarded > before,
+        "the restarted backend must win its keys back"
+    );
+
+    drop(client);
+    new_handle.shutdown();
+    new_coord.drain();
+    fleet.teardown();
+}
+
+#[test]
+fn drain_moves_new_traffic_off_a_backend_without_dropping_any() {
+    let fleet = start_fleet(3);
+    let client = Client::connect(&fleet.proxy.addr().to_string()).unwrap();
+
+    let case = Case {
+        n: 1024,
+        rows: 2,
+        kernel: KernelKind::HadaCore,
+        dtype: DType::F32,
+        epilogue: Epilogue::None,
+        prologue: Prologue::None,
+        seed: 0xD4A1,
+    };
+    let owner = owner_of(&fleet, &client, &case);
+
+    // load the owner, then drain it while its queue is non-empty
+    let pending: Vec<_> =
+        (0..8).map(|_| client.submit(wire_request(&case)).unwrap()).collect();
+    fleet.proxy.drain_backend(owner);
+    // in-flight work completes normally — drain is not a kill
+    for p in pending {
+        match p.wait() {
+            hadacore::serve::Reply::Response(r) => {
+                assert_identical(&fleet.reference, &case, &r)
+            }
+            other => panic!("drain dropped a request: {other:?}"),
+        }
+    }
+
+    // new traffic on the drained shard's key re-routes — served fine,
+    // by someone else
+    let drained_forwarded = fleet.proxy.backend(owner).forwarded;
+    for _ in 0..5 {
+        let r = transform_retrying(&client, &wire_request(&case));
+        assert_identical(&fleet.reference, &case, &r);
+    }
+    assert_eq!(
+        fleet.proxy.backend(owner).forwarded,
+        drained_forwarded,
+        "a draining backend must receive no new traffic"
+    );
+    assert!(fleet.proxy.backend(owner).draining);
+
+    // undrain: the shard wins its rendezvous keys straight back
+    fleet.proxy.undrain_backend(owner);
+    let before = fleet.proxy.backend(owner).forwarded;
+    let r = transform_retrying(&client, &wire_request(&case));
+    assert_identical(&fleet.reference, &case, &r);
+    assert!(
+        fleet.proxy.backend(owner).forwarded > before,
+        "an undrained backend must rejoin the routing set"
+    );
+
+    drop(client);
+    fleet.teardown();
+}
+
+#[test]
+fn proxy_answers_ping_and_fleet_stats() {
+    let fleet = start_fleet(3);
+    let client = Client::connect(&fleet.proxy.addr().to_string()).unwrap();
+
+    let case = case_grid().remove(0);
+    for _ in 0..4 {
+        let r = transform_retrying(&client, &wire_request(&case));
+        assert_identical(&fleet.reference, &case, &r);
+    }
+    assert!(client.ping().unwrap() < Duration::from_secs(5));
+
+    let stats = client.stats().unwrap();
+    let get = |k: &str| {
+        stats
+            .counters
+            .iter()
+            .find(|(key, _)| key == k)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("proxy stats must carry '{k}'"))
+    };
+    assert_eq!(get("proxy.backends"), 3);
+    assert!(get("proxy.forwarded") >= 4);
+    assert!(get("proxy.responses") >= 4);
+    assert_eq!(
+        get("backend0.healthy") + get("backend1.healthy") + get("backend2.healthy"),
+        3,
+        "all shards healthy: {}",
+        stats.report
+    );
+    let fwd: u64 =
+        (0..3).map(|i| get(&format!("backend{i}.forwarded"))).sum();
+    assert!(fwd >= 4, "per-backend counters must account for the traffic");
+    assert!(stats.report.contains("cluster proxy"), "got: {}", stats.report);
+
+    drop(client);
+    fleet.teardown();
+}

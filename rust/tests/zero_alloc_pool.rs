@@ -107,6 +107,16 @@ fn shape_grid() -> Vec<(usize, usize, DType, Epilogue, Prologue)> {
             Prologue::SignFlip { seed: 0x5EED_0202 },
         ),
         (512, 2, DType::F16, Epilogue::None, Prologue::SignFlip { seed: 0x5EED_0303 }),
+        // grouped INT8: the per-response scale vector must come from
+        // the scale recycler, not a fresh allocation per response
+        (1024, 2, DType::F32, Epilogue::QuantInt8 { group: 64 }, Prologue::None),
+        (
+            512,
+            4,
+            DType::F32,
+            Epilogue::QuantInt8 { group: 32 },
+            Prologue::SignFlip { seed: 0x5EED_0404 },
+        ),
     ]
 }
 
