@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Join the measured fusion sweep against the roofline model's picks.
+
+Usage:
+    python3 bench/roofline_report.py BENCH_PR4.json [--tolerance PCT]
+                                     [--strict]
+
+Reads a ``hadacore-bench-v1`` document whose ``fusion_sweep`` /
+``hadacore`` entries carry the ``model_depth`` extra (the fusion depth
+``gpu_model::roofline::recommend_fusion_depth_for_lanes`` recommended
+for that size and the active SIMD table — recorded by
+``cargo bench --bench exec_engine`` alongside each measured depth).
+For every (n, rows) sweep group it finds the empirically best depth
+(max ``melems_per_s``), looks up the throughput at the model's pick,
+and reports how much the model's choice costs relative to the best
+measured depth.
+
+Agreement means the model's depth is within the tolerance (default
+10%) of the best measured throughput — the model does not have to name
+the exact argmax depth, it has to land on the flat part of the curve.
+
+By default the report only *warns* (exit 0): fusion-depth curves are
+shallow near the optimum and CI runners are noisy, so the roofline
+check rides along as an artifact rather than a gate. Pass ``--strict``
+to exit non-zero when any sweep group disagrees beyond tolerance.
+
+Zero dependencies beyond the Python 3 standard library, mirroring the
+repo's no-deps policy.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "hadacore-bench-v1"
+
+
+def load(path: Path) -> list[dict]:
+    doc = json.loads(path.read_text())
+    if doc.get("schema") != SCHEMA:
+        sys.exit(f"error: {path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        sys.exit(f"error: {path}: no entries")
+    return entries
+
+
+def main(argv: list[str]) -> int:
+    strict = "--strict" in argv
+    argv = [a for a in argv if a != "--strict"]
+    tolerance = 10.0
+    if "--tolerance" in argv:
+        i = argv.index("--tolerance")
+        tolerance = float(argv[i + 1])
+        del argv[i : i + 2]
+    if len(argv) != 1:
+        sys.exit(__doc__)
+
+    entries = load(Path(argv[0]))
+    sweep = [
+        e
+        for e in entries
+        if e.get("bench") == "fusion_sweep"
+        and e.get("kernel") == "hadacore"
+        and isinstance(e.get("model_depth"), (int, float))
+        and isinstance(e.get("melems_per_s"), (int, float))
+    ]
+    if not sweep:
+        # older records (pre model_depth) are not an error: the report
+        # becomes meaningful once the bench re-runs with the extra
+        print(
+            "roofline_report: no fusion_sweep/hadacore entries with a "
+            "model_depth extra — nothing to join"
+        )
+        return 0
+
+    groups: dict[tuple, list[dict]] = {}
+    for e in sweep:
+        groups.setdefault((e.get("n"), e.get("rows")), []).append(e)
+
+    print(
+        f"{'n':>8} {'rows':>5} {'best':>5} {'model':>6} "
+        f"{'best ME/s':>10} {'model ME/s':>10} {'cost':>7}  verdict"
+    )
+    disagreements = []
+    for (n, rows), grp in sorted(groups.items(), key=repr):
+        best = max(grp, key=lambda e: e["melems_per_s"])
+        model_depth = int(grp[0]["model_depth"])
+        at_model = next(
+            (e for e in grp if e.get("fusion_depth") == model_depth), None
+        )
+        if at_model is None:
+            # the model recommended a depth the sweep did not measure
+            # (clamped sweeps); count it as a disagreement with the
+            # whole best throughput as the cost
+            disagreements.append((n, rows))
+            print(
+                f"{n:>8} {rows:>5} {best['fusion_depth']:>5} {model_depth:>6} "
+                f"{best['melems_per_s']:>10.1f} {'-':>10} {'-':>7}  DISAGREE "
+                "(depth not in sweep)"
+            )
+            continue
+        cost_pct = (
+            (best["melems_per_s"] - at_model["melems_per_s"])
+            / best["melems_per_s"]
+            * 100.0
+        )
+        agree = cost_pct <= tolerance
+        if not agree:
+            disagreements.append((n, rows))
+        print(
+            f"{n:>8} {rows:>5} {best['fusion_depth']:>5} {model_depth:>6} "
+            f"{best['melems_per_s']:>10.1f} {at_model['melems_per_s']:>10.1f} "
+            f"{cost_pct:>6.1f}%  {'ok' if agree else 'DISAGREE'}"
+        )
+
+    total = len(groups)
+    print(
+        f"roofline_report: {total - len(disagreements)}/{total} sweep "
+        f"group(s) within {tolerance:.0f}% of the measured best at the "
+        "model's pick"
+    )
+    if disagreements and strict:
+        return 1
+    if disagreements:
+        print(
+            "roofline_report: warning only (pass --strict to fail the "
+            "build on disagreements)"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

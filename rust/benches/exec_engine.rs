@@ -78,7 +78,16 @@ fn fusion_sweep(
             ));
         }
 
-        // hadacore at every fusion depth
+        // hadacore at every fusion depth; each record carries the
+        // roofline model's recommended depth for this (n, lanes) so
+        // bench/roofline_report.py can join prediction against the
+        // measured sweep
+        let model_depth = hadacore::gpu_model::roofline::recommend_fusion_depth_for_lanes(
+            &plan,
+            hadacore::exec::tune::FUSION_CACHE_BUDGET,
+            hadacore::hadamard::simd::active().lanes(),
+        )
+        .min(plan.max_fusion_depth());
         let mut depth1_ns = 0.0f64;
         for depth in 1..=plan.max_fusion_depth() {
             let b = base.clone();
@@ -103,16 +112,23 @@ fn fusion_sweep(
                     hadacore::gpu_model::roofline::fusion_speedup_bound(n, depth),
                 );
             }
-            out.push(BenchRecord::new(
-                "fusion_sweep",
-                "hadacore",
-                n,
-                rows,
-                DType::F32.name(),
-                depth,
-                0,
-                s,
-            ));
+            out.push(
+                BenchRecord::new(
+                    "fusion_sweep",
+                    "hadacore",
+                    n,
+                    rows,
+                    DType::F32.name(),
+                    depth,
+                    0,
+                    s,
+                )
+                .with_extra("model_depth", model_depth as f64)
+                .with_extra(
+                    "simd_lanes",
+                    hadacore::hadamard::simd::active().lanes() as f64,
+                ),
+            );
         }
 
         // the tuned engine end to end (whatever depth the tuner picked)

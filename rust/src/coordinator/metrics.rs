@@ -5,6 +5,7 @@
 //! skew is bounded by in-flight work).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Log-spaced latency histogram: 1us .. ~17min in 48 buckets
 /// (geometric, x2 per bucket after the first 16 linear us buckets).
@@ -50,10 +51,50 @@ impl Histogram {
 
     /// Record one latency observation in microseconds.
     pub fn record(&self, us: u64) {
-        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.record_n(us, 1);
+    }
+
+    /// Record `n` observations of the same value — the bulk form used by
+    /// the exposition parser to reconstruct a histogram from bucket
+    /// counts ([`crate::obs::registry::parse_histogram`]).
+    pub fn record_n(&self, us: u64, n: u64) {
+        self.buckets[bucket_index(us)].fetch_add(n, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum_us.fetch_add(us * n, Ordering::Relaxed);
         self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Add every observation of `other` into `self`, bucket for bucket.
+    /// Merging per-shard histograms this way is exactly equivalent to
+    /// one histogram fed the union of the samples (same fixed bounds on
+    /// both sides — the property the registry's exposition and the
+    /// cluster's fleet-wide percentiles rely on, pinned by tests in
+    /// [`crate::obs::registry`]).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (i, b) in other.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                self.buckets[i].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// `(bucket upper bound µs, observations in that bucket)` for every
+    /// bucket, in ascending bound order — the exposition's raw material.
+    pub fn bucket_bounds_counts(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| (bucket_upper(i), b.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Sum of all observed values in µs.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
     }
 
     /// Number of observations.
@@ -116,36 +157,96 @@ impl Default for Histogram {
     }
 }
 
-/// All coordinator metrics.
-#[derive(Debug, Default)]
+/// All coordinator metrics — a thin view over handles registered in the
+/// process-wide [`crate::obs::registry`]: each field is an `Arc` into
+/// the registry's `hadacore_*` namespace, so the hot path bumps the same
+/// atomics the `/metrics` exposition reads (through `Deref`, pre-registry
+/// call sites like `metrics.submitted.fetch_add(1, _)` are unchanged).
+/// A process may hold several coordinators (the self-hosted cluster
+/// fleet does); each `Metrics` keeps exact per-instance counts while the
+/// exposition sums the instances into the process-wide series.
+#[derive(Debug)]
 pub struct Metrics {
-    /// Requests accepted by the router.
-    pub submitted: AtomicU64,
+    /// Requests accepted by the router (`hadacore_requests_total`).
+    pub submitted: Arc<AtomicU64>,
     /// Requests completed (responses delivered — successes *and* errors;
     /// `completed - failed` counts the successes).
-    pub completed: AtomicU64,
+    pub completed: Arc<AtomicU64>,
     /// Requests rejected at admission.
-    pub rejected: AtomicU64,
+    pub rejected: Arc<AtomicU64>,
     /// Requests that received an error response (batch execution failed
     /// or the executor was unavailable). Error responses still record
     /// queue/e2e latency.
-    pub failed: AtomicU64,
+    pub failed: Arc<AtomicU64>,
     /// Batches executed.
-    pub batches: AtomicU64,
+    pub batches: Arc<AtomicU64>,
     /// Total data rows executed (excluding padding).
-    pub rows: AtomicU64,
+    pub rows: Arc<AtomicU64>,
     /// Padding rows added to fill PJRT bucket shapes.
-    pub padded_rows: AtomicU64,
+    pub padded_rows: Arc<AtomicU64>,
     /// Batches executed on the native backend.
-    pub native_batches: AtomicU64,
+    pub native_batches: Arc<AtomicU64>,
     /// Batches executed on the PJRT backend.
-    pub pjrt_batches: AtomicU64,
-    /// Queue-wait latency.
-    pub queue: Histogram,
-    /// Kernel execution latency (per batch).
-    pub exec: Histogram,
-    /// End-to-end request latency.
-    pub e2e: Histogram,
+    pub pjrt_batches: Arc<AtomicU64>,
+    /// Queue-wait latency (`hadacore_queue_us`).
+    pub queue: Arc<Histogram>,
+    /// Kernel execution latency per batch (`hadacore_exec_us`).
+    pub exec: Arc<Histogram>,
+    /// End-to-end request latency (`hadacore_e2e_us`).
+    pub e2e: Arc<Histogram>,
+}
+
+impl Metrics {
+    /// Fresh metrics, registered under the `hadacore_*` namespace of the
+    /// process-wide registry. Registration happens here — coordinator
+    /// construction — never on the request path.
+    pub fn new() -> Metrics {
+        let r = crate::obs::registry();
+        Metrics {
+            submitted: r.counter(
+                "hadacore_requests_total",
+                "requests accepted by the coordinator router",
+            ),
+            completed: r.counter(
+                "hadacore_requests_completed_total",
+                "responses delivered (successes and errors)",
+            ),
+            rejected: r.counter(
+                "hadacore_requests_rejected_total",
+                "requests rejected at admission",
+            ),
+            failed: r.counter(
+                "hadacore_requests_failed_total",
+                "requests answered with an error response",
+            ),
+            batches: r.counter("hadacore_batches_total", "batches executed"),
+            rows: r.counter(
+                "hadacore_batch_rows_total",
+                "data rows executed (excluding padding)",
+            ),
+            padded_rows: r.counter(
+                "hadacore_padded_rows_total",
+                "padding rows added to fill PJRT bucket shapes",
+            ),
+            native_batches: r.counter(
+                "hadacore_batches_native_total",
+                "batches executed on the native backend",
+            ),
+            pjrt_batches: r.counter(
+                "hadacore_batches_pjrt_total",
+                "batches executed on the PJRT backend",
+            ),
+            queue: r.histogram_us("hadacore_queue_us", "queue-wait latency"),
+            exec: r.histogram_us("hadacore_exec_us", "batch execution latency"),
+            e2e: r.histogram_us("hadacore_e2e_us", "end-to-end request latency"),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
 }
 
 /// Point-in-time copy of the counters for reporting.

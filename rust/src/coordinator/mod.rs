@@ -35,6 +35,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::hadamard::{KernelKind, Prologue};
+use crate::obs::TraceCtx;
 use crate::quant::{Epilogue, QuantScales};
 use crate::util::error as anyhow;
 use crate::util::pool::PooledBuf;
@@ -91,6 +92,12 @@ pub struct TransformRequest {
     pub epilogue: Epilogue,
     /// Force the native backend even when an artifact exists.
     pub force_native: bool,
+    /// Span-tracing context ([`TraceCtx::NONE`] = unsampled, the
+    /// default). Stamped at conn-reader admission (or adopted from the
+    /// wire), carried by value through batching into the engine's
+    /// `JobSpec`, so one sampled request's lifecycle is reconstructable
+    /// from the flight recorder ([`crate::obs::trace`]).
+    pub trace: TraceCtx,
 }
 
 impl TransformRequest {
@@ -110,6 +117,7 @@ impl TransformRequest {
             prologue: Prologue::None,
             epilogue: Epilogue::None,
             force_native: false,
+            trace: TraceCtx::NONE,
         }
     }
 }

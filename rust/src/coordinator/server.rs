@@ -209,6 +209,7 @@ impl Coordinator {
         }
         let route = self.router.route(&req);
         let key = BucketKey::of(&req, &route);
+        crate::obs::trace::event(req.trace, crate::obs::Stage::Enqueued, req.rows as u32);
         // the batcher itself refuses work once shutdown has begun (the
         // check is atomic with the flag), so a submit racing drain() can
         // never strand a Pending behind the already-exited workers
@@ -673,10 +674,25 @@ fn execute_native_batch(
     let Batch { key, mut items, rows, .. } = batch;
     let n = key.n;
     let t0 = Instant::now();
+    // every member request records the seal; the engine call below runs
+    // under the first sampled member's trace so its chunk spans attach
+    // to a real request chain (chunks are batch-scoped, not per-item)
+    let mut batch_trace = crate::obs::TraceCtx::NONE;
+    for p in items.iter() {
+        crate::obs::trace::event(
+            p.req.trace,
+            crate::obs::Stage::BatchSealed,
+            rows as u32,
+        );
+        if batch_trace.0 == 0 && p.req.trace.is_sampled() {
+            batch_trace = p.req.trace;
+        }
+    }
     let opts = match items[0].req.scale {
         Some(s) => FwhtOptions::with_scale(s),
         None => FwhtOptions::normalized(n),
     };
+    crate::obs::trace::set_current(batch_trace);
     run_native_stages(
         engine,
         key.kernel,
@@ -687,6 +703,7 @@ fn execute_native_batch(
         &mut items,
         scratch,
     );
+    crate::obs::trace::set_current(crate::obs::TraceCtx::NONE);
     let exec_us = t0.elapsed().as_micros() as u64;
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -746,6 +763,13 @@ fn execute_pjrt_batch(
     }
 
     let Batch { key, items, rows, .. } = batch;
+    for p in items.iter() {
+        crate::obs::trace::event(
+            p.req.trace,
+            crate::obs::Stage::BatchSealed,
+            rows as u32,
+        );
+    }
     // the router never routes prologue/epilogue requests to PJRT
     debug_assert!(key.prologue.is_none(), "prologue batch reached pjrt");
     debug_assert!(key.epilogue.is_none(), "epilogue batch reached pjrt");

@@ -226,25 +226,88 @@ pub(crate) enum ChunkStage {
     QuantFp8 { scale: f32, fmt: Fp8Format },
 }
 
-/// Engine counters (all monotonically increasing).
-#[derive(Debug, Default)]
+/// Engine counters (all monotonically increasing) — registry-backed
+/// handles into the `hadacore_exec_*` namespace, so every engine's
+/// counts also render in the `/metrics` exposition (summed when a
+/// process runs several engines).
+#[derive(Debug)]
 pub struct ExecStats {
     /// Batches sharded across the worker pool.
-    pub jobs: AtomicU64,
+    pub jobs: Arc<AtomicU64>,
     /// Batches executed inline on the submitting thread (too small to
     /// shard, or a single-threaded engine).
-    pub inline_runs: AtomicU64,
+    pub inline_runs: Arc<AtomicU64>,
     /// Chunks executed (an inline run counts as one chunk).
-    pub chunks: AtomicU64,
+    pub chunks: Arc<AtomicU64>,
     /// Growth events of the reusable f32 workspaces. Flat counter ==
     /// zero-allocation steady state on the 16-bit path.
-    pub scratch_grows: AtomicU64,
+    pub scratch_grows: Arc<AtomicU64>,
     /// Runs that executed a fused quantize epilogue (inline or sharded).
-    pub epilogue_runs: AtomicU64,
+    pub epilogue_runs: Arc<AtomicU64>,
     /// Runs that executed a fused sign-flip prologue (inline or sharded).
-    pub prologue_runs: AtomicU64,
+    pub prologue_runs: Arc<AtomicU64>,
     /// Runs whose tuned fusion depth was > 1 (multi-round tiles).
-    pub fused_runs: AtomicU64,
+    pub fused_runs: Arc<AtomicU64>,
+    /// Per-chunk execution latency (`hadacore_exec_chunk_us`) — the
+    /// paper-motivated stage-level measurement: batch latency tells you
+    /// *that* a batch was slow, chunk latency tells you *which shard*.
+    pub chunk_us: Arc<crate::coordinator::metrics::Histogram>,
+}
+
+impl Default for ExecStats {
+    fn default() -> Self {
+        let r = crate::obs::registry();
+        // process-wide computed series whose sources of truth predate
+        // the registry (SIMD dispatch tables, tuner provenance counts):
+        // registered once, with the first engine — sampled at render
+        // time, so those hot paths stay untouched
+        static PROCESS_SERIES: std::sync::Once = std::sync::Once::new();
+        PROCESS_SERIES.call_once(|| {
+            for b in crate::hadamard::simd::Backend::all() {
+                r.labeled_counter_fn(
+                    "hadacore_simd_dispatch_total",
+                    "kernel dispatches served, per SIMD backend",
+                    "backend",
+                    b.name(),
+                    move || crate::hadamard::simd::dispatch_count(b),
+                );
+            }
+            for s in tune::TuneSource::ALL {
+                r.labeled_counter_fn(
+                    "hadacore_tune_decisions_total",
+                    "resolved tuning decisions, per provenance",
+                    "source",
+                    s.name(),
+                    move || tune::decision_count(s),
+                );
+            }
+        });
+        ExecStats {
+            jobs: r.counter("hadacore_exec_jobs_total", "batches sharded across the pool"),
+            inline_runs: r.counter(
+                "hadacore_exec_inline_total",
+                "batches executed inline on the submitting thread",
+            ),
+            chunks: r.counter("hadacore_exec_chunks_total", "chunks executed"),
+            scratch_grows: r.counter(
+                "hadacore_exec_scratch_grows_total",
+                "growth events of the reusable f32 workspaces",
+            ),
+            epilogue_runs: r.counter(
+                "hadacore_exec_epilogue_runs_total",
+                "runs with a fused quantize epilogue",
+            ),
+            prologue_runs: r.counter(
+                "hadacore_exec_prologue_runs_total",
+                "runs with a fused sign-flip prologue",
+            ),
+            fused_runs: r.counter(
+                "hadacore_exec_fused_runs_total",
+                "runs whose tuned fusion depth was > 1",
+            ),
+            chunk_us: r.histogram_us("hadacore_exec_chunk_us", "per-chunk execution latency"),
+        }
+    }
 }
 
 /// Point-in-time copy of [`ExecStats`], plus the process-wide SIMD
@@ -519,6 +582,7 @@ impl ExecEngine {
         match &self.pool {
             Some(pool) if chunks > 1 => {
                 self.stats.jobs.fetch_add(1, Ordering::Relaxed);
+                let trace = crate::obs::trace::current().0;
                 let spec = |stage: ChunkStage| JobSpec {
                     payload,
                     rows,
@@ -531,6 +595,7 @@ impl ExecEngine {
                     signs: signs.clone(),
                     stage,
                     regions: None,
+                    trace,
                 };
                 // SAFETY (all submissions below): `data` is a `&mut`
                 // borrow we hold for the whole call, covering exactly
@@ -590,7 +655,14 @@ impl ExecEngine {
             }
             _ => {
                 self.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
-                match payload {
+                // the inline path is "one chunk on the submitting
+                // thread": it still lands in the chunk-latency histogram
+                // and the span chain, so traces and the exec_chunk_us
+                // metric look the same whether or not a pool ran
+                let trace = crate::obs::trace::current();
+                crate::obs::trace::event(trace, crate::obs::Stage::ExecStart, 0);
+                let chunk_start = std::time::Instant::now();
+                let scales = match payload {
                     // f32 never touches scratch — no workspace borrow
                     Payload::F32(_) => {
                         let mut unused = Vec::new();
@@ -637,7 +709,12 @@ impl ExecEngine {
                         }
                         scales
                     }),
-                }
+                };
+                self.stats
+                    .chunk_us
+                    .record(chunk_start.elapsed().as_micros() as u64);
+                crate::obs::trace::event(trace, crate::obs::Stage::ExecEnd, 0);
+                scales
             }
         }
     }
@@ -756,10 +833,14 @@ impl ExecEngine {
                         base: regions.as_ptr(),
                         len: regions.len(),
                     }),
+                    trace: crate::obs::trace::current().0,
                 });
             }
             _ => {
                 self.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
+                let trace = crate::obs::trace::current();
+                crate::obs::trace::event(trace, crate::obs::Stage::ExecStart, 0);
+                let chunk_start = std::time::Instant::now();
                 // SAFETY: whole logical batch as one chunk, under the
                 // caller's exclusive borrow of every region.
                 execute_regions_range(
@@ -774,6 +855,10 @@ impl ExecEngine {
                     signs.as_deref().map(Vec::as_slice),
                     &self.stats,
                 );
+                self.stats
+                    .chunk_us
+                    .record(chunk_start.elapsed().as_micros() as u64);
+                crate::obs::trace::event(trace, crate::obs::Stage::ExecEnd, 0);
             }
         }
     }

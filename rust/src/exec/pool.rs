@@ -70,6 +70,9 @@ pub(crate) struct JobSpec {
     /// concatenation of these regions instead of `payload` (which is
     /// then ignored). Regions-jobs only support [`ChunkStage::Rotate`].
     pub regions: Option<RegionsRef>,
+    /// Span-trace id of the request this batch serves (0 = untraced;
+    /// workers record per-chunk exec-start/end spans against it).
+    pub trace: u64,
 }
 
 struct Job {
@@ -159,6 +162,7 @@ struct Claim {
     signs: Option<Arc<Vec<f32>>>,
     stage: ChunkStage,
     regions: Option<RegionsRef>,
+    trace: u64,
     done: Arc<Latch>,
 }
 
@@ -265,6 +269,7 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
                         signs: front.spec.signs.clone(),
                         stage: front.spec.stage.clone(),
                         regions: front.spec.regions,
+                        trace: front.spec.trace,
                         done: Arc::clone(&front.done),
                     };
                     front.next_chunk += 1;
@@ -280,6 +285,9 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
+        let trace = crate::obs::TraceCtx(claim.trace);
+        crate::obs::trace::event(trace, crate::obs::Stage::ExecStart, claim.index as u32);
+        let chunk_start = std::time::Instant::now();
         let panicked = catch_unwind(AssertUnwindSafe(|| {
             let start_row = claim.index * claim.chunk_rows;
             let rows_here = claim.chunk_rows.min(claim.rows - start_row);
@@ -326,6 +334,13 @@ fn worker_loop(shared: &Shared, stats: &ExecStats) {
             }
         }))
         .is_err();
+        // stage-level measurement (the paper's per-stage claim): every
+        // chunk lands in the hadacore_exec_chunk_us histogram — atomics
+        // only, so the zero-alloc steady state holds
+        stats
+            .chunk_us
+            .record(chunk_start.elapsed().as_micros() as u64);
+        crate::obs::trace::event(trace, crate::obs::Stage::ExecEnd, claim.index as u32);
         claim.done.finish_one(panicked);
     }
 }

@@ -50,6 +50,7 @@
 //! config, so two engines with different lane counts never poison each
 //! other's decisions.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::gpu_model::roofline::recommend_fusion_depth_for_lanes;
@@ -142,6 +143,39 @@ pub enum TuneSource {
     Model,
     /// Model seed refined by the one-shot micro-measurement.
     Measured,
+}
+
+impl TuneSource {
+    /// Every variant, in discriminant order (indexes [`decision_count`]).
+    pub const ALL: [TuneSource; 4] =
+        [TuneSource::Env, TuneSource::Config, TuneSource::Model, TuneSource::Measured];
+
+    /// Stable lowercase label (the `source` label of
+    /// `hadacore_tune_decisions_total`).
+    pub fn name(self) -> &'static str {
+        match self {
+            TuneSource::Env => "env",
+            TuneSource::Config => "config",
+            TuneSource::Model => "model",
+            TuneSource::Measured => "measured",
+        }
+    }
+}
+
+/// Per-provenance decision counts (indexed by `TuneSource`
+/// discriminant). Process-wide and monotone; sampled at render time by
+/// the registry's computed `hadacore_tune_decisions_total` series.
+static DECISIONS: [AtomicU64; 4] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// How many resolved tuning decisions carried this provenance so far in
+/// this process.
+pub fn decision_count(source: TuneSource) -> u64 {
+    DECISIONS[source as usize].load(Ordering::Relaxed)
 }
 
 /// Resolve the tuning decision for one batch shape under an engine's
@@ -254,12 +288,9 @@ pub fn tuning_for_plan(
         ),
     };
 
-    Tuning {
-        fusion_depth,
-        chunk_rows,
-        chunk_pinned,
-        source: if env.chunk.is_some() { TuneSource::Env } else { depth_source },
-    }
+    let source = if env.chunk.is_some() { TuneSource::Env } else { depth_source };
+    DECISIONS[source as usize].fetch_add(1, Ordering::Relaxed);
+    Tuning { fusion_depth, chunk_rows, chunk_pinned, source }
 }
 
 fn env_usize(key: &str) -> Option<usize> {

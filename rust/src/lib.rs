@@ -31,6 +31,7 @@
 //! | [`runtime`] | PJRT wrapper: load AOT HLO-text artifacts, compile, execute |
 //! | [`coordinator`] | request router, bucketed dynamic batcher, metrics, server loop |
 //! | [`serve`] | TCP serving layer: wire protocol, bounded-handler server with load shedding, pipelining client, open-loop load generator |
+//! | [`obs`] | unified observability: process-wide metrics registry with text exposition, request-scoped span tracing, per-thread flight-recorder rings |
 //! | [`harness`] | workload generation + table/figure regeneration |
 //! | [`util`] | std-only support: JSON, f16/bf16 bits, PRNG, CLI, micro-bench, mini-proptest, mini-anyhow |
 //!
@@ -56,6 +57,7 @@ pub mod exec;
 pub mod gpu_model;
 pub mod hadamard;
 pub mod harness;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -22,6 +22,10 @@
 //!                 `--cluster` self-hosts a whole fleet behind the
 //!                 routing proxy instead and emits fleet-wide plus
 //!                 per-backend records (`BENCH_PR9.json`).
+//! * `stats`     — fetch a running server's (or proxy's) metrics
+//!                 registry as Prometheus-style text over the wire
+//!                 protocol (`StatsText` frame), or dump buffered
+//!                 flight-recorder spans (`--trace`).
 //! * `tables`    — regenerate the paper's evaluation tables from the GPU
 //!                 model (see also `examples/paper_tables.rs`).
 
@@ -36,9 +40,10 @@ use hadacore::hadamard::KernelKind;
 use hadacore::harness::tables::{format_runtime_table, format_speedup_table};
 use hadacore::harness::workload::{traffic_mix, TRAFFIC_MIXES};
 use hadacore::runtime::Runtime;
+use hadacore::obs::{serve_metrics, MetricsHandle};
 use hadacore::serve::{
-    cluster as cluster_tier, loadgen as lg, serve as serve_tcp, Client, ClusterConfig,
-    ClusterHandle, LoadgenConfig, ServeConfig, ServeHandle, WireStats,
+    cluster as cluster_tier, loadgen as lg, serve as serve_tcp, supervise, Client,
+    ClusterConfig, ClusterHandle, LoadgenConfig, ServeConfig, ServeHandle, WireStats,
 };
 use hadacore::util::bench::{BenchJson, BenchRecord, Stats};
 use hadacore::util::cli::Args;
@@ -66,11 +71,12 @@ fn main() -> anyhow::Result<()> {
         "serve" => serve(argv),
         "cluster" => cluster_cmd(argv),
         "loadgen" => loadgen(argv),
+        "stats" => stats_cmd(argv),
         "tables" => tables(argv),
         _ => {
             println!(
                 "hadacore {} — matrix-unit-accelerated Hadamard transform server\n\n\
-                 usage: hadacore <info|transform|serve|cluster|loadgen|tables> [flags]\n\
+                 usage: hadacore <info|transform|serve|cluster|loadgen|stats|tables> [flags]\n\
                  run `hadacore <cmd> --help` for per-command flags",
                 hadacore::VERSION
             );
@@ -162,6 +168,37 @@ fn exec_config(args: &Args) -> ExecConfig {
     ExecConfig::with_lanes(args.get_as("exec-threads"))
 }
 
+/// Start the optional HTTP `/metrics` listener (`--metrics-addr`); the
+/// returned handle must stay alive for the command's lifetime.
+fn metrics_listener(args: &Args) -> anyhow::Result<Option<MetricsHandle>> {
+    let addr = args.get("metrics-addr");
+    if addr.is_empty() {
+        return Ok(None);
+    }
+    let handle = serve_metrics(&addr)?;
+    println!("metrics exposition on http://{}/metrics", handle.addr());
+    Ok(Some(handle))
+}
+
+/// Plain-sockets `GET /metrics` against our own listener: the loadgen
+/// smoke proves the HTTP path end to end, not just the registry render.
+fn http_get_metrics(addr: &str) -> anyhow::Result<String> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    s.write_all(b"GET /metrics HTTP/1.1\r\nhost: hadacore\r\nconnection: close\r\n\r\n")
+        .map_err(|e| anyhow::anyhow!("write: {e}"))?;
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).map_err(|e| anyhow::anyhow!("read: {e}"))?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("malformed http response"))?;
+    if !head.starts_with("HTTP/1.1 200") {
+        anyhow::bail!("GET /metrics: {}", head.lines().next().unwrap_or(""));
+    }
+    Ok(body.to_string())
+}
+
 fn serve(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("hadacore serve", "TCP transform server (wire protocol v1)")
         .opt("addr", "127.0.0.1:7380", "bind address (port 0 = ephemeral)")
@@ -172,6 +209,7 @@ fn serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("max-inflight", "256", "global in-flight request cap")
         .opt("pipeline", "32", "per-connection pipelining cap")
         .opt("max-queued-rows", "8192", "shed (Busy) when the batcher queues more rows")
+        .opt("metrics-addr", "", "HTTP GET /metrics listener address ('' = off)")
         .opt("duration", "0", "seconds to serve (0 = until killed)")
         .parse_from(argv)
         .map_err(|e| anyhow::anyhow!(e))?;
@@ -197,6 +235,7 @@ fn serve(argv: Vec<String>) -> anyhow::Result<()> {
         },
     )?;
     println!("hadacore serving on {} ({backend})", handle.addr());
+    let _metrics = metrics_listener(&args)?;
 
     let secs: u64 = args.get_as("duration");
     if secs == 0 {
@@ -294,6 +333,7 @@ fn cluster_cmd(argv: Vec<String>) -> anyhow::Result<()> {
          backend, so this should exceed the expected fleet in-flight",
     )
     .opt("max-inflight", "1024", "proxy-wide in-flight request cap")
+    .opt("metrics-addr", "", "HTTP GET /metrics listener address ('' = off)")
     .opt("duration", "0", "seconds to run (0 = until killed)")
     .parse_from(argv)
     .map_err(|e| anyhow::anyhow!(e))?;
@@ -337,6 +377,53 @@ fn cluster_cmd(argv: Vec<String>) -> anyhow::Result<()> {
         backends.len(),
         backends.join(", ")
     );
+    let _metrics = metrics_listener(&args)?;
+
+    // self-healing supervisor over the *owned* children: a child that
+    // exits (crash, OOM kill) is respawned on a fresh ephemeral port and
+    // handed back to routing via replace_backend. Externally-managed
+    // --backends slots are left alone.
+    let handle = Arc::new(handle);
+    let children = Arc::new(std::sync::Mutex::new(children));
+    let supervisor = if spawn > 0 {
+        let owned_from = backends.len() - spawn;
+        let alive_children = Arc::clone(&children);
+        let respawn_children = Arc::clone(&children);
+        let (workers, exec_threads, pipeline) =
+            (args.get("workers"), args.get("exec-threads"), args.get("pipeline"));
+        Some(supervise(
+            &handle,
+            Duration::from_millis(500),
+            move |i| {
+                if i < owned_from {
+                    return true;
+                }
+                // try_wait: Ok(None) = still running; an exited or
+                // unwaitable child is dead either way
+                let mut kids = alive_children.lock().unwrap();
+                matches!(kids[i - owned_from].try_wait(), Ok(None))
+            },
+            move |i| match spawn_backend(i, &workers, &exec_threads, &pipeline) {
+                Ok((child, addr)) => {
+                    println!("supervisor: respawned backend {i} on {addr}");
+                    let mut kids = respawn_children.lock().unwrap();
+                    let mut old = std::mem::replace(&mut kids[i - owned_from], child);
+                    drop(kids);
+                    // reap the corpse (it already exited; kill is a no-op
+                    // that tolerates the race where it hasn't quite)
+                    let _ = old.kill();
+                    let _ = old.wait();
+                    Some(addr)
+                }
+                Err(e) => {
+                    eprintln!("supervisor: respawn backend {i} failed: {e}");
+                    None
+                }
+            },
+        )?)
+    } else {
+        None
+    };
 
     let secs: u64 = args.get_as("duration");
     if secs == 0 {
@@ -346,10 +433,16 @@ fn cluster_cmd(argv: Vec<String>) -> anyhow::Result<()> {
     }
     std::thread::sleep(Duration::from_secs(secs));
 
-    // stop the proxy first (relays flush their in-flight replies), then
-    // the owned children
-    handle.shutdown();
-    for mut c in children {
+    // stop the supervisor first (no respawns during teardown), then the
+    // proxy (relays flush their in-flight replies), then the owned
+    // children
+    if let Some(s) = supervisor {
+        s.shutdown();
+    }
+    if let Ok(h) = Arc::try_unwrap(handle) {
+        h.shutdown();
+    }
+    for c in children.lock().unwrap().iter_mut() {
         let _ = c.kill();
         let _ = c.wait();
     }
@@ -395,6 +488,18 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
              Emits fleet-wide and per-backend records",
         )
         .opt("cluster-backends", "3", "--cluster self-host: backend count")
+        .opt(
+            "metrics-addr",
+            "",
+            "HTTP GET /metrics listener ('' = off); the run self-scrapes \
+             it afterwards and prints the exposition (the CI smoke grep)",
+        )
+        .opt(
+            "trace-every",
+            "0",
+            "stamp a span-trace id on every Nth request per connection \
+             (0 = off); buffered spans are dumped after the run",
+        )
         .switch("smoke", "tiny CI run (few requests, unpaced)")
         .switch(
             "assert-zero-alloc",
@@ -436,6 +541,9 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
             );
         }
     }
+
+    let metrics = metrics_listener(&args)?;
+    let trace_every: usize = args.get_as("trace-every");
 
     // '' = self-host: bind an ephemeral in-process server (or, with
     // --cluster, a whole fleet behind the routing proxy) so one command
@@ -522,6 +630,7 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
             requests,
             clients: args.get_as("clients"),
             dtype,
+            trace_every,
             ..Default::default()
         };
         // warmup pass: populate the buffer-pool shelves, batcher spare
@@ -638,6 +747,30 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
         println!("{}", after.report.trim_end());
     }
 
+    // observability smoke: prove the HTTP scrape path end to end and
+    // print buffered span chains, so CI can grep both from one run
+    if let Some(m) = &metrics {
+        let body = http_get_metrics(m.addr())?;
+        println!("--- metrics scrape ({} bytes) ---", body.len());
+        print!("{body}");
+        println!("--- end metrics scrape ---");
+    }
+    if trace_every > 0 {
+        let c = Client::connect(&addr)?;
+        let events = c.trace_dump(0)?;
+        println!("--- trace dump: {} span events ---", events.len());
+        for e in &events {
+            println!(
+                "trace {:#018x} span {:<12} arg={} t={}us",
+                e.trace,
+                e.stage.name(),
+                e.arg,
+                e.t_us
+            );
+        }
+        println!("--- end trace dump ---");
+    }
+
     let mut json_path = args.get("json");
     if cluster_mode && json_path == "BENCH_PR7.json" {
         // the flag default is the single-server trajectory; cluster runs
@@ -660,6 +793,61 @@ fn loadgen(argv: Vec<String>) -> anyhow::Result<()> {
         handle.shutdown();
         coord.drain();
         println!("{}", coord.metrics().snapshot().report());
+    }
+    Ok(())
+}
+
+fn stats_cmd(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new(
+        "hadacore stats <addr>",
+        "scrape a running server or cluster proxy over the wire protocol",
+    )
+    .opt("addr", "", "target address (or pass it as the positional argument)")
+    .opt(
+        "trace",
+        "",
+        "dump buffered span events instead of metrics: a trace id \
+         (decimal or 0x-hex) or 'all'",
+    )
+    .parse_from(argv)
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let addr = {
+        let a = args.get("addr");
+        if !a.is_empty() {
+            a
+        } else if let Some(p) = args.positional().first() {
+            p.clone()
+        } else {
+            anyhow::bail!("usage: hadacore stats <addr> [--trace <id|all>]");
+        }
+    };
+    let client = Client::connect(&addr)
+        .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let trace = args.get("trace");
+    if trace.is_empty() {
+        print!("{}", client.stats_text()?);
+        return Ok(());
+    }
+    let want: u64 = if trace == "all" {
+        0
+    } else if let Some(hex) = trace.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16)
+            .map_err(|e| anyhow::anyhow!("bad --trace {trace:?}: {e}"))?
+    } else {
+        trace
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --trace {trace:?}: {e}"))?
+    };
+    let events = client.trace_dump(want)?;
+    println!("{} span events", events.len());
+    for e in &events {
+        println!(
+            "trace {:#018x} span {:<12} arg={} t={}us",
+            e.trace,
+            e.stage.name(),
+            e.arg,
+            e.t_us
+        );
     }
     Ok(())
 }

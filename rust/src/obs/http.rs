@@ -1,0 +1,189 @@
+//! Minimal read-only HTTP listener for `GET /metrics`.
+//!
+//! `hadacore serve --metrics-addr 127.0.0.1:9100` (and the cluster
+//! proxy's equivalent) binds this next to the binary wire listener so
+//! any Prometheus-compatible scraper — or plain `curl` — can read the
+//! process-wide [`crate::obs::registry`] exposition without speaking
+//! the hadacore protocol. It is deliberately not a web server: one
+//! accept thread, blocking I/O, `GET /metrics` → `200 text/plain`,
+//! anything else → `404`, connection closed after every response.
+//! Requests are bounded (header read capped, short read timeout) so a
+//! stuck scraper cannot pin the thread forever.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::error as anyhow;
+use crate::util::error::Context;
+
+/// Cap on the request head we are willing to read before answering.
+const MAX_REQUEST_BYTES: usize = 4096;
+
+/// Handle to a running metrics listener; shuts it down on drop.
+pub struct MetricsHandle {
+    /// Actual bound address (useful when the caller asked for port 0).
+    addr: String,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsHandle {
+    /// The address the listener actually bound.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop the listener and join its thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway self-connection.
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MetricsHandle {
+    fn drop(&mut self) {
+        if self.thread.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+/// Bind `addr` and serve `GET /metrics` from the process registry until
+/// the returned handle is shut down or dropped.
+pub fn serve_metrics(addr: &str) -> anyhow::Result<MetricsHandle> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("bind metrics listener on {addr}"))?;
+    let bound = listener
+        .local_addr()
+        .context("metrics listener local_addr")?
+        .to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let thread = std::thread::Builder::new()
+        .name("hadacore-metrics".into())
+        .spawn(move || accept_loop(listener, stop2))
+        .context("spawn metrics listener thread")?;
+    Ok(MetricsHandle {
+        addr: bound,
+        stop,
+        thread: Some(thread),
+    })
+}
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
+    loop {
+        let conn = match listener.accept() {
+            Ok((conn, _)) => conn,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // Scrapers are rare and sequential; serving inline on the accept
+        // thread keeps this a single extra thread per process.
+        let _ = serve_one(conn);
+    }
+}
+
+fn serve_one(mut conn: TcpStream) -> std::io::Result<()> {
+    conn.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut head = [0u8; MAX_REQUEST_BYTES];
+    let mut filled = 0;
+    // Read until the end of the request head (blank line) or the cap.
+    while filled < head.len() {
+        let n = conn.read(&mut head[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+        if head[..filled].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let request_line = head[..filled]
+        .split(|&b| b == b'\r' || b == b'\n')
+        .next()
+        .unwrap_or(&[]);
+    let response = if is_get_metrics(request_line) {
+        let body = crate::obs::registry().render();
+        format!(
+            "HTTP/1.1 200 OK\r\ncontent-type: text/plain; version=0.0.4\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    } else {
+        let body = "not found; try GET /metrics\n";
+        format!(
+            "HTTP/1.1 404 Not Found\r\ncontent-type: text/plain\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    };
+    conn.write_all(response.as_bytes())?;
+    let _ = conn.shutdown(Shutdown::Both);
+    Ok(())
+}
+
+fn is_get_metrics(request_line: &[u8]) -> bool {
+    // "GET /metrics HTTP/1.1" — accept any (or no) HTTP version suffix.
+    let Ok(line) = std::str::from_utf8(request_line) else {
+        return false;
+    };
+    let mut parts = line.split_whitespace();
+    parts.next() == Some("GET")
+        && matches!(parts.next(), Some(p) if p == "/metrics" || p.starts_with("/metrics?"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: &str, path: &str) -> String {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(format!("GET {path} HTTP/1.1\r\nhost: x\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_registry_exposition_on_get_metrics() {
+        let c = crate::obs::registry().counter("hadacore_http_test_total", "test series");
+        c.fetch_add(3, Ordering::Relaxed);
+        let handle = serve_metrics("127.0.0.1:0").unwrap();
+        let resp = http_get(handle.addr(), "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("hadacore_http_test_total"), "{resp}");
+        let resp = http_get(handle.addr(), "/other");
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn request_line_matching() {
+        assert!(is_get_metrics(b"GET /metrics HTTP/1.1"));
+        assert!(is_get_metrics(b"GET /metrics?ts=1 HTTP/1.0"));
+        assert!(is_get_metrics(b"GET /metrics"));
+        assert!(!is_get_metrics(b"POST /metrics HTTP/1.1"));
+        assert!(!is_get_metrics(b"GET /metricsx HTTP/1.1"));
+        assert!(!is_get_metrics(b"GET / HTTP/1.1"));
+    }
+}

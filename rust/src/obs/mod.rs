@@ -1,0 +1,53 @@
+//! Unified observability layer: metrics registry, request-scoped span
+//! tracing, and the flight-recorder event ring (ISSUE 10).
+//!
+//! The reproduction spans four layers (kernel → engine → serve →
+//! cluster) and, before this module, each kept its own telemetry:
+//! [`crate::coordinator::metrics::Metrics`] counters, the engine's
+//! `ExecStatsSnapshot`, ad-hoc `proxy.*`/`backend{i}.*` strings in the
+//! `Stats` wire frame, and loadgen-side percentiles. Nobody could answer
+//! "where did request #4711 spend its 2 ms" or scrape the fleet with one
+//! tool. This module unifies all of it, zero-dep and with the same
+//! hot-path discipline as the serve path (atomics only; **zero
+//! steady-state allocation** with tracing at the default sample rate):
+//!
+//! * [`registry`] — the process-wide metrics registry. Counters, gauges
+//!   and log-spaced histograms are registered once by name (subsystems
+//!   keep `Arc` handles and bump plain atomics on the hot path) and
+//!   rendered as Prometheus-style text exposition, served through the
+//!   `StatsText` wire frame, the read-only HTTP `GET /metrics` listener
+//!   ([`http`]), and the `hadacore stats` CLI. The pre-existing
+//!   per-subsystem structs (`Metrics`, `ExecStats`, `ServeCounters`,
+//!   `ClusterCounters`) are thin views over registry handles, not a
+//!   parallel system.
+//! * [`trace`] — request-scoped span tracing. A [`trace::TraceCtx`]
+//!   (u64 trace id; zero = unsampled) is stamped at conn-reader
+//!   admission (or adopted from the wire when the cluster proxy — or a
+//!   tracing client — forwarded one), carried through
+//!   `TransformRequest` → batcher bucket → `JobSpec` → chunk execution,
+//!   and span events (decode, admitted, enqueued, batch-sealed,
+//!   exec-start/end per chunk, framed, written) land in lock-free
+//!   per-thread flight-recorder rings: fixed capacity, overwrite-oldest,
+//!   snapshot-drained on demand via the `TraceDump` wire frame. Slow
+//!   requests are reconstructable postmortem without a logging pipeline.
+//! * [`http`] — the minimal read-only HTTP listener for `GET /metrics`
+//!   (`hadacore serve --metrics-addr`), so any Prometheus-compatible
+//!   scraper can watch a backend or the cluster proxy without speaking
+//!   the binary wire protocol.
+//!
+//! Cross-process: the proxy forwards the trace id in a flag-gated wire
+//! extension (`FLAG_HAS_TRACE`, the same backward-compatible trick as
+//! `prologue_seed`) and merges backend span dumps into its own on a
+//! `TraceDump` request, so one request is traceable proxy → backend →
+//! engine chunk. Span timestamps are microseconds since *that process's*
+//! epoch: ordering is exact within a process and merely indicative
+//! across machines (the e2e gate runs the whole fleet in one process,
+//! where the chain is strictly ordered).
+
+pub mod http;
+pub mod registry;
+pub mod trace;
+
+pub use http::{serve_metrics, MetricsHandle};
+pub use registry::{registry, Registry};
+pub use trace::{SpanEvent, Stage, TraceCtx};

@@ -1,0 +1,540 @@
+//! The process-wide metrics registry + Prometheus-style text exposition.
+//!
+//! Design (mirrors the serve path's zero-alloc discipline):
+//!
+//! * **Registration is cold, observation is hot.** A subsystem registers
+//!   each metric once at construction ([`Registry::counter`] /
+//!   [`Registry::gauge`] / [`Registry::histogram_us`]) and keeps the
+//!   returned `Arc` handle. The handles are plain [`AtomicU64`]s and
+//!   [`Histogram`]s — the hot path bumps them directly (through `Deref`,
+//!   so pre-registry call sites like `self.submitted.fetch_add(1, _)`
+//!   compile unchanged); the registry is only locked at registration and
+//!   exposition time.
+//! * **Instances, not uniqueness.** Registering the same name twice
+//!   returns a *new* instance appended to that name's family (one
+//!   process can run several coordinators — the self-hosted cluster
+//!   fleet does). Per-instance reads stay exact (each owner holds its
+//!   own handle); the exposition **sums instances per label set**, which
+//!   for counters is the process-lifetime total (instances are
+//!   monotone and never removed — dropped owners stop bumping, their
+//!   contribution remains, exactly a cumulative counter's contract) and
+//!   for histograms is the bucket-wise merge ([`Histogram::merge_from`],
+//!   whose merge-equals-union property is pinned by tests here).
+//! * **Computed series.** Metrics whose source of truth predates the
+//!   registry (SIMD dispatch counters, the counting allocator) register
+//!   a closure ([`Registry::counter_fn`]) sampled at render time — no
+//!   rewiring of their hot paths.
+//!
+//! The exposition format is the Prometheus text format restricted to
+//! what this crate emits: `# HELP`/`# TYPE` headers, optional single
+//! `key="value"` label, `_bucket{le="..."}`/`_sum`/`_count` histogram
+//! series with **microsecond** bounds (latency unit of the whole crate;
+//! the `_us` name suffix makes the unit explicit — deliberately not the
+//! base-unit-seconds convention, which would put every bucket bound in
+//! the 1e-6 decade for no information gain). [`parse_exposition`] reads
+//! the subset back — the round-trip gate for remote percentile
+//! reconstruction (`hadacore stats` of a live server must agree with
+//! the in-process `Histogram::report`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Histogram;
+use crate::util::lazy::Lazy;
+
+/// Metric family kind; fixes the `# TYPE` line and the render shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn type_name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One registered handle (or computed closure) within a family.
+enum Instance {
+    Value(Arc<AtomicU64>),
+    Hist(Arc<Histogram>),
+    Computed(Box<dyn Fn() -> u64 + Send + Sync>),
+}
+
+struct Member {
+    /// Rendered label, e.g. `backend="2"`; empty = unlabeled series.
+    label: String,
+    instance: Instance,
+}
+
+struct Family {
+    name: String,
+    help: &'static str,
+    kind: Kind,
+    members: Vec<Member>,
+}
+
+/// The process-wide registry; obtain it via [`registry`].
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+static REGISTRY: Lazy<Registry> = Lazy::new(|| {
+    let r = Registry { families: Mutex::new(Vec::new()) };
+    // the counting allocator predates the registry; sample it at render
+    // time (plain zeros on builds without --features count-alloc)
+    r.counter_fn(
+        "hadacore_tracked_allocs_total",
+        "heap allocation calls observed on tracked serving threads \
+         (count-alloc builds; 0 otherwise)",
+        || crate::util::alloc::tracked().allocs,
+    );
+    r.counter_fn(
+        "hadacore_tracked_alloc_bytes_total",
+        "bytes requested by tracked-thread allocation calls \
+         (count-alloc builds; 0 otherwise)",
+        || crate::util::alloc::tracked().bytes,
+    );
+    r
+});
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    &REGISTRY
+}
+
+/// Render one `key="value"` label pair (values are escaped per the
+/// exposition format: backslash, double-quote, newline).
+fn format_label(key: &str, value: &str) -> String {
+    let mut escaped = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '\\' => escaped.push_str("\\\\"),
+            '"' => escaped.push_str("\\\""),
+            '\n' => escaped.push_str("\\n"),
+            c => escaped.push(c),
+        }
+    }
+    format!("{key}=\"{escaped}\"")
+}
+
+impl Registry {
+    fn register(
+        &self,
+        name: &str,
+        help: &'static str,
+        kind: Kind,
+        label: String,
+        instance: Instance,
+    ) {
+        let mut families = self.families.lock().unwrap();
+        match families.iter_mut().find(|f| f.name == name) {
+            Some(family) => {
+                assert_eq!(
+                    family.kind, kind,
+                    "metric {name:?} registered as both {:?} and {kind:?}",
+                    family.kind
+                );
+                family.members.push(Member { label, instance });
+            }
+            None => families.push(Family {
+                name: name.to_string(),
+                help,
+                kind,
+                members: vec![Member { label, instance }],
+            }),
+        }
+    }
+
+    /// Register a counter (monotone) and return its handle.
+    pub fn counter(&self, name: &str, help: &'static str) -> Arc<AtomicU64> {
+        let c = Arc::new(AtomicU64::new(0));
+        self.register(name, help, Kind::Counter, String::new(), Instance::Value(Arc::clone(&c)));
+        c
+    }
+
+    /// Register a labeled counter (one `key="value"` pair).
+    pub fn labeled_counter(
+        &self,
+        name: &str,
+        help: &'static str,
+        key: &'static str,
+        value: &str,
+    ) -> Arc<AtomicU64> {
+        let c = Arc::new(AtomicU64::new(0));
+        self.register(
+            name,
+            help,
+            Kind::Counter,
+            format_label(key, value),
+            Instance::Value(Arc::clone(&c)),
+        );
+        c
+    }
+
+    /// Register a gauge (goes up and down) and return its handle.
+    pub fn gauge(&self, name: &str, help: &'static str) -> Arc<AtomicU64> {
+        let g = Arc::new(AtomicU64::new(0));
+        self.register(name, help, Kind::Gauge, String::new(), Instance::Value(Arc::clone(&g)));
+        g
+    }
+
+    /// Register a labeled gauge (one `key="value"` pair).
+    pub fn labeled_gauge(
+        &self,
+        name: &str,
+        help: &'static str,
+        key: &'static str,
+        value: &str,
+    ) -> Arc<AtomicU64> {
+        let g = Arc::new(AtomicU64::new(0));
+        self.register(
+            name,
+            help,
+            Kind::Gauge,
+            format_label(key, value),
+            Instance::Value(Arc::clone(&g)),
+        );
+        g
+    }
+
+    /// Register a log-spaced microsecond histogram and return its handle.
+    pub fn histogram_us(&self, name: &str, help: &'static str) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.register(
+            name,
+            help,
+            Kind::Histogram,
+            String::new(),
+            Instance::Hist(Arc::clone(&h)),
+        );
+        h
+    }
+
+    /// Register a labeled microsecond histogram (one `key="value"` pair).
+    pub fn labeled_histogram_us(
+        &self,
+        name: &str,
+        help: &'static str,
+        key: &'static str,
+        value: &str,
+    ) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.register(
+            name,
+            help,
+            Kind::Histogram,
+            format_label(key, value),
+            Instance::Hist(Arc::clone(&h)),
+        );
+        h
+    }
+
+    /// Register a computed counter: `f` is sampled at render time. For
+    /// sources of truth that predate the registry (SIMD dispatch tables,
+    /// the counting allocator) — their hot paths stay untouched.
+    pub fn counter_fn(
+        &self,
+        name: &str,
+        help: &'static str,
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.register(name, help, Kind::Counter, String::new(), Instance::Computed(Box::new(f)));
+    }
+
+    /// [`Registry::counter_fn`] with one `key="value"` label pair.
+    pub fn labeled_counter_fn(
+        &self,
+        name: &str,
+        help: &'static str,
+        key: &'static str,
+        value: &str,
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.register(
+            name,
+            help,
+            Kind::Counter,
+            format_label(key, value),
+            Instance::Computed(Box::new(f)),
+        );
+    }
+
+    /// Render the whole registry in the Prometheus text exposition
+    /// format. Instances sharing a family and label set are summed
+    /// (counters/gauges) or bucket-merged (histograms); families render
+    /// in registration order, label sets in first-seen order.
+    pub fn render(&self) -> String {
+        let families = self.families.lock().unwrap();
+        let mut out = String::with_capacity(4096);
+        for family in families.iter() {
+            out.push_str(&format!("# HELP {} {}\n", family.name, family.help));
+            out.push_str(&format!("# TYPE {} {}\n", family.name, family.kind.type_name()));
+            // group members by label set, preserving first-seen order
+            let mut label_order: Vec<&str> = Vec::new();
+            for m in &family.members {
+                if !label_order.iter().any(|&l| l == m.label) {
+                    label_order.push(&m.label);
+                }
+            }
+            for label in label_order {
+                let members = family.members.iter().filter(|m| m.label == label);
+                match family.kind {
+                    Kind::Counter | Kind::Gauge => {
+                        let total: u64 = members
+                            .map(|m| match &m.instance {
+                                Instance::Value(v) => v.load(Ordering::Relaxed),
+                                Instance::Computed(f) => f(),
+                                Instance::Hist(_) => unreachable!("kind checked at register"),
+                            })
+                            .sum();
+                        out.push_str(&render_sample(&family.name, label, total));
+                    }
+                    Kind::Histogram => {
+                        let merged = Histogram::new();
+                        for m in members {
+                            if let Instance::Hist(h) = &m.instance {
+                                merged.merge_from(h);
+                            }
+                        }
+                        render_histogram(&mut out, &family.name, label, &merged);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn render_sample(name: &str, label: &str, value: u64) -> String {
+    if label.is_empty() {
+        format!("{name} {value}\n")
+    } else {
+        format!("{name}{{{label}}} {value}\n")
+    }
+}
+
+/// Histogram series: cumulative `_bucket{le="<upper-µs>"}` samples over
+/// the log-spaced bounds, the standard `+Inf` bucket, `_sum` (µs) and
+/// `_count`.
+fn render_histogram(out: &mut String, name: &str, label: &str, h: &Histogram) {
+    let sep = if label.is_empty() { "" } else { "," };
+    let mut cumulative = 0u64;
+    for (upper_us, count) in h.bucket_bounds_counts() {
+        cumulative += count;
+        out.push_str(&format!(
+            "{name}_bucket{{{label}{sep}le=\"{upper_us}\"}} {cumulative}\n"
+        ));
+    }
+    out.push_str(&format!("{name}_bucket{{{label}{sep}le=\"+Inf\"}} {cumulative}\n"));
+    out.push_str(&render_sample(&format!("{name}_sum"), label, h.sum_us()));
+    out.push_str(&render_sample(&format!("{name}_count"), label, h.count()));
+}
+
+/// One series parsed back from the exposition text.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParsedSample {
+    /// Metric name (including any `_bucket`/`_sum`/`_count` suffix).
+    pub name: String,
+    /// Raw label block without braces (`backend="2",le="32"`); empty
+    /// when the sample has no labels.
+    pub labels: String,
+    pub value: f64,
+}
+
+/// Parse the subset of the text exposition format this registry emits:
+/// comment lines are skipped, every other line is
+/// `name[{labels}] value`. Malformed lines are skipped rather than
+/// failing the whole scrape (the CLI renders best-effort).
+pub fn parse_exposition(text: &str) -> Vec<ParsedSample> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = match line.rsplit_once(' ') {
+            Some(parts) => parts,
+            None => continue,
+        };
+        let value: f64 = match value.parse() {
+            Ok(v) => v,
+            Err(_) => continue,
+        };
+        let (name, labels) = match series.split_once('{') {
+            Some((n, rest)) => match rest.strip_suffix('}') {
+                Some(l) => (n, l),
+                None => continue,
+            },
+            None => (series, ""),
+        };
+        out.push(ParsedSample {
+            name: name.to_string(),
+            labels: labels.to_string(),
+            value,
+        });
+    }
+    out
+}
+
+/// Reconstruct a [`Histogram`] for `name` (and an optional label
+/// substring filter) from parsed exposition samples — the remote side of
+/// the percentile round-trip. Returns `None` when no `_bucket` series
+/// for `name` is present.
+pub fn parse_histogram(samples: &[ParsedSample], name: &str, label: &str) -> Option<Histogram> {
+    let bucket_name = format!("{name}_bucket");
+    let mut bounds: Vec<(u64, u64)> = Vec::new(); // (upper_us, cumulative)
+    for s in samples {
+        if s.name != bucket_name || !s.labels.contains(label) {
+            continue;
+        }
+        let le = s
+            .labels
+            .split(',')
+            .find_map(|l| l.trim().strip_prefix("le=\""))
+            .and_then(|v| v.strip_suffix('"'))?;
+        if le == "+Inf" {
+            continue; // always equals the last finite cumulative bucket here
+        }
+        bounds.push((le.parse().ok()?, s.value as u64));
+    }
+    if bounds.is_empty() {
+        return None;
+    }
+    bounds.sort_unstable();
+    let h = Histogram::new();
+    let mut prev = 0u64;
+    for (upper_us, cumulative) in bounds {
+        let here = cumulative.saturating_sub(prev);
+        prev = cumulative;
+        if here > 0 {
+            // `upper - 1` lands back in exactly the bucket whose upper
+            // bound is `upper` (pinned by the round-trip test below)
+            h.record_n(upper_us - 1, here);
+        }
+    }
+    Some(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counters_sum_instances_and_render_labels() {
+        let a = registry().counter("obs_test_family_total", "test counter");
+        let b = registry().counter("obs_test_family_total", "test counter");
+        a.fetch_add(3, Ordering::Relaxed);
+        b.fetch_add(4, Ordering::Relaxed);
+        let l = registry().labeled_counter("obs_test_labeled_total", "t", "shard", "2");
+        l.fetch_add(9, Ordering::Relaxed);
+        let text = registry().render();
+        assert!(text.contains("# TYPE obs_test_family_total counter"), "{text}");
+        assert!(text.contains("obs_test_family_total 7"), "{text}");
+        assert!(text.contains("obs_test_labeled_total{shard=\"2\"} 9"), "{text}");
+    }
+
+    #[test]
+    fn computed_counters_sample_at_render_time() {
+        use std::sync::atomic::AtomicU64;
+        static SOURCE: AtomicU64 = AtomicU64::new(0);
+        registry().counter_fn("obs_test_computed_total", "t", || {
+            SOURCE.load(Ordering::Relaxed)
+        });
+        SOURCE.store(41, Ordering::Relaxed);
+        assert!(registry().render().contains("obs_test_computed_total 41"));
+        SOURCE.store(42, Ordering::Relaxed);
+        assert!(registry().render().contains("obs_test_computed_total 42"));
+    }
+
+    #[test]
+    fn exposition_round_trip_reconstructs_percentiles() {
+        // the satellite gate: render a histogram, parse the text back,
+        // and the reconstructed p50/p90/p99 must equal the in-process
+        // Histogram's — for a distribution spanning the linear and the
+        // geometric bucket regions
+        let h = registry().histogram_us("obs_test_roundtrip_us", "t");
+        let mut rng = Rng::new(0x0B5E_0B5E);
+        for _ in 0..500 {
+            h.record(rng.next_u64() % 14); // linear region
+        }
+        for _ in 0..400 {
+            h.record(100 + rng.next_u64() % 4000); // geometric region
+        }
+        for _ in 0..7 {
+            h.record(2_000_000); // far tail
+        }
+        let text = registry().render();
+        let samples = parse_exposition(&text);
+        let parsed = parse_histogram(&samples, "obs_test_roundtrip_us", "")
+            .expect("bucket series present");
+        assert_eq!(parsed.count(), h.count());
+        for p in [50.0, 90.0, 99.0] {
+            assert_eq!(
+                parsed.percentile_us(p),
+                h.percentile_us(p),
+                "p{p} must survive the text round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn merged_instances_equal_histogram_of_the_union() {
+        // the satellite gate: the exposition merges N per-backend
+        // histograms; the merge must equal one histogram fed the union
+        // of the samples, bucket for bucket
+        // same label set on every instance => the exposition merges them
+        let shards: Vec<_> = (0..3)
+            .map(|_| {
+                registry().labeled_histogram_us("obs_test_merge_us", "t", "kind", "all")
+            })
+            .collect();
+        let union = Histogram::new();
+        let mut rng = Rng::new(0x3E27_11AA);
+        for (i, shard) in shards.iter().enumerate() {
+            for _ in 0..(50 + i * 37) {
+                let us = rng.next_u64() % 1_000_000;
+                shard.record(us);
+                union.record(us);
+            }
+        }
+        let samples = parse_exposition(&registry().render());
+        let merged = parse_histogram(&samples, "obs_test_merge_us", "kind=\"all\"")
+            .expect("merged series present");
+        assert_eq!(merged.count(), union.count());
+        for p in [50.0, 75.0, 90.0, 99.0, 99.9] {
+            assert_eq!(merged.percentile_us(p), union.percentile_us(p), "p{p}");
+        }
+        assert_eq!(
+            merged.bucket_bounds_counts(),
+            union.bucket_bounds_counts(),
+            "merge must equal the union bucket-for-bucket, not just at \
+             the reported percentiles"
+        );
+    }
+
+    #[test]
+    fn parser_skips_malformed_lines() {
+        let text = "# HELP x y\nbad line with spaces but no value x\n\
+                    ok_metric 5\nok_labeled{a=\"b\"} 6.5\n";
+        let samples = parse_exposition(text);
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].name, "ok_metric");
+        assert_eq!(samples[1].labels, "a=\"b\"");
+        assert_eq!(samples[1].value, 6.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as both")]
+    fn kind_conflicts_are_programming_errors() {
+        registry().counter("obs_test_kind_conflict", "t");
+        registry().gauge("obs_test_kind_conflict", "t");
+    }
+}

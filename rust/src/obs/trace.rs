@@ -1,0 +1,423 @@
+//! Request-scoped span tracing into per-thread flight-recorder rings.
+//!
+//! A [`TraceCtx`] is a u64 trace id; zero means *unsampled* and every
+//! recording call early-returns on it, so the default configuration
+//! (`HADACORE_TRACE_SAMPLE` unset → sample rate 0) costs one branch per
+//! call site and allocates nothing — the `--assert-zero-alloc` loadgen
+//! gate runs with tracing in exactly this state.
+//!
+//! Sampled requests record [`SpanEvent`]s (stage + small argument +
+//! microsecond timestamp) into a fixed-capacity ring owned by the
+//! recording thread. Rings overwrite oldest: a recorder that nobody
+//! drains stays O(1) memory forever, and a postmortem drain sees the
+//! most recent `CAPACITY` events per thread. Each slot is a tiny seqlock
+//! (all-atomic fields guarded by a sequence word) so [`drain_all`] can
+//! snapshot live rings from another thread without stopping writers;
+//! a slot caught mid-write is simply skipped — flight recorders prefer
+//! dropping one event over blocking the hot path.
+//!
+//! Rings are allocated lazily, once, on a thread's *first sampled*
+//! event (leaked to `'static` and registered in a global list), never
+//! on the steady-state path. Timestamps are microseconds since this
+//! process's [`now_us`] epoch: totally ordered within a process, only
+//! indicative across processes.
+
+use std::cell::Cell;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::lazy::Lazy;
+
+/// Events retained per recording thread before overwrite-oldest kicks
+/// in. 1024 × 32 B = 32 KiB per thread that ever recorded a span.
+pub const RING_CAPACITY: usize = 1024;
+
+/// A request's trace identity: a u64 id where zero means "not sampled".
+///
+/// Stamped at conn-reader admission (or adopted from the wire when a
+/// proxy or tracing client forwarded one) and carried by value through
+/// `TransformRequest` → batch → `JobSpec` → chunk execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx(pub u64);
+
+impl TraceCtx {
+    /// The unsampled context; recording against it is a no-op.
+    pub const NONE: TraceCtx = TraceCtx(0);
+
+    /// Whether span events for this request are recorded.
+    #[inline]
+    pub fn is_sampled(self) -> bool {
+        self.0 != 0
+    }
+}
+
+/// Where in the request lifecycle a span event was recorded.
+///
+/// The discriminants are the wire encoding (`TraceDump` frame), so they
+/// are append-only: new stages take fresh numbers at the end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// Cluster proxy accepted the request and chose a backend leg.
+    ProxyAdmit = 0,
+    /// Server conn-reader finished decoding the request frame.
+    Decode = 1,
+    /// Router admission accepted the request (`arg` = rows).
+    Admitted = 2,
+    /// Request entered its batcher bucket.
+    Enqueued = 3,
+    /// Batch sealed for dispatch (`arg` = batch rows).
+    BatchSealed = 4,
+    /// Engine chunk began executing (`arg` = chunk index).
+    ExecStart = 5,
+    /// Engine chunk finished (`arg` = chunk index).
+    ExecEnd = 6,
+    /// Response frame assembled (`arg` = payload bytes, saturated).
+    Framed = 7,
+    /// Response bytes handed to the socket writer.
+    Written = 8,
+}
+
+impl Stage {
+    /// Stable lowercase name used in text renderings (`hadacore stats
+    /// --trace`, test assertions).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::ProxyAdmit => "proxy-admit",
+            Stage::Decode => "decode",
+            Stage::Admitted => "admitted",
+            Stage::Enqueued => "enqueued",
+            Stage::BatchSealed => "batch-sealed",
+            Stage::ExecStart => "exec-start",
+            Stage::ExecEnd => "exec-end",
+            Stage::Framed => "framed",
+            Stage::Written => "written",
+        }
+    }
+
+    /// Wire decoding; `None` for discriminants from a newer peer.
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            0 => Stage::ProxyAdmit,
+            1 => Stage::Decode,
+            2 => Stage::Admitted,
+            3 => Stage::Enqueued,
+            4 => Stage::BatchSealed,
+            5 => Stage::ExecStart,
+            6 => Stage::ExecEnd,
+            7 => Stage::Framed,
+            8 => Stage::Written,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded span event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Trace id this event belongs to (never zero in a drained event).
+    pub trace: u64,
+    /// Lifecycle stage.
+    pub stage: Stage,
+    /// Small per-stage argument (rows, chunk index, bytes).
+    pub arg: u32,
+    /// Microseconds since the recording process's epoch.
+    pub t_us: u64,
+}
+
+/// Microseconds since this process's trace epoch (first use).
+pub fn now_us() -> u64 {
+    static EPOCH: Lazy<Instant> = Lazy::new(Instant::now);
+    EPOCH.elapsed().as_micros() as u64
+}
+
+// ---------------------------------------------------------------------
+// Sampling
+// ---------------------------------------------------------------------
+
+/// `HADACORE_TRACE_SAMPLE` parsed once: a rate in `0.0..=1.0` mapped to
+/// a threshold over the low 32 bits of the mixed admission counter.
+static SAMPLE_THRESHOLD: Lazy<u64> = Lazy::new(|| {
+    let rate = std::env::var("HADACORE_TRACE_SAMPLE")
+        .ok()
+        .and_then(|s| parse_rate(&s))
+        .unwrap_or(0.0);
+    (rate * (1u64 << 32) as f64) as u64
+});
+
+/// Parse a sample rate, clamped to `0.0..=1.0`; `None` if malformed.
+pub fn parse_rate(s: &str) -> Option<f64> {
+    let f = s.trim().parse::<f64>().ok()?;
+    if f.is_nan() {
+        return None;
+    }
+    Some(f.clamp(0.0, 1.0))
+}
+
+static NEXT_SEED: AtomicU64 = AtomicU64::new(0);
+
+/// SplitMix64 finalizer: cheap, well-distributed id from a counter.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A fresh trace id, unconditionally sampled. Used when the caller has
+/// already decided to trace (loadgen `--trace-every`, `stats --trace`).
+pub fn next_trace_id() -> u64 {
+    let h = mix(NEXT_SEED.fetch_add(1, Ordering::Relaxed));
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+/// Admission-time sampling decision: a sampled [`TraceCtx`] with
+/// probability `HADACORE_TRACE_SAMPLE`, else [`TraceCtx::NONE`].
+pub fn sample() -> TraceCtx {
+    let threshold = *SAMPLE_THRESHOLD;
+    if threshold == 0 {
+        return TraceCtx::NONE;
+    }
+    let h = mix(NEXT_SEED.fetch_add(1, Ordering::Relaxed));
+    if (h & 0xffff_ffff) < threshold {
+        TraceCtx(if h == 0 { 1 } else { h })
+    } else {
+        TraceCtx::NONE
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flight-recorder ring
+// ---------------------------------------------------------------------
+
+/// One ring slot: a seqlock over three payload words.
+///
+/// The writer (the owning thread) stores `seq = 0`, the payload, then
+/// `seq = write_index + 1` (Release). A concurrent drainer reads `seq`
+/// (Acquire), the payload, fences, re-reads `seq`, and discards the
+/// slot if the two reads disagree or are zero. All fields are atomics,
+/// so a torn read is merely stale data, never UB.
+struct Slot {
+    seq: AtomicU64,
+    trace: AtomicU64,
+    t_us: AtomicU64,
+    /// Stage in bits 0..8, arg in bits 8..40.
+    meta: AtomicU64,
+}
+
+/// A per-thread flight-recorder ring: single writer, any-thread reader.
+struct Ring {
+    slots: Vec<Slot>,
+    /// Total events ever written to this ring (monotonic).
+    written: AtomicU64,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring {
+            slots: (0..RING_CAPACITY)
+                .map(|_| Slot {
+                    seq: AtomicU64::new(0),
+                    trace: AtomicU64::new(0),
+                    t_us: AtomicU64::new(0),
+                    meta: AtomicU64::new(0),
+                })
+                .collect(),
+            written: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one event; only ever called by the owning thread.
+    fn push(&self, trace: u64, stage: Stage, arg: u32, t_us: u64) {
+        let n = self.written.load(Ordering::Relaxed);
+        let slot = &self.slots[(n as usize) % RING_CAPACITY];
+        slot.seq.store(0, Ordering::Release);
+        slot.trace.store(trace, Ordering::Relaxed);
+        slot.t_us.store(t_us, Ordering::Relaxed);
+        slot.meta
+            .store(stage as u64 | ((arg as u64) << 8), Ordering::Relaxed);
+        slot.seq.store(n + 1, Ordering::Release);
+        self.written.store(n + 1, Ordering::Relaxed);
+    }
+
+    /// Snapshot every consistent slot into `out`.
+    fn drain_into(&self, out: &mut Vec<SpanEvent>) {
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 {
+                continue; // never written
+            }
+            let trace = slot.trace.load(Ordering::Relaxed);
+            let t_us = slot.t_us.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            let s2 = slot.seq.load(Ordering::Relaxed);
+            if s1 != s2 {
+                continue; // torn: writer lapped us mid-read
+            }
+            let stage = match Stage::from_u8((meta & 0xff) as u8) {
+                Some(s) => s,
+                None => continue,
+            };
+            out.push(SpanEvent {
+                trace,
+                stage,
+                arg: ((meta >> 8) & 0xffff_ffff) as u32,
+                t_us,
+            });
+        }
+    }
+}
+
+/// Every ring ever created, for [`drain_all`]. Rings are leaked to
+/// `'static` (bounded: one per recording thread for process lifetime).
+static RINGS: Lazy<Mutex<Vec<&'static Ring>>> = Lazy::new(|| Mutex::new(Vec::new()));
+
+thread_local! {
+    /// This thread's ring, if it ever recorded a sampled event.
+    static THREAD_RING: Cell<Option<&'static Ring>> = const { Cell::new(None) };
+
+    /// The trace context of the work this thread is currently executing.
+    /// The coordinator sets it around engine calls so the exec pool can
+    /// attribute chunk spans without threading a parameter through every
+    /// public `run_*` signature (the engine is also a direct library
+    /// API, where no trace exists).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Set the calling thread's current trace context; returns the previous
+/// one so nested scopes can restore it.
+pub fn set_current(trace: TraceCtx) -> TraceCtx {
+    CURRENT.with(|c| TraceCtx(c.replace(trace.0)))
+}
+
+/// The calling thread's current trace context ([`TraceCtx::NONE`] when
+/// outside any traced scope).
+pub fn current() -> TraceCtx {
+    TraceCtx(CURRENT.with(|c| c.get()))
+}
+
+fn thread_ring() -> &'static Ring {
+    THREAD_RING.with(|cell| match cell.get() {
+        Some(r) => r,
+        None => {
+            let ring: &'static Ring = Box::leak(Box::new(Ring::new()));
+            RINGS.lock().unwrap().push(ring);
+            cell.set(Some(ring));
+            ring
+        }
+    })
+}
+
+/// Record a span event for `trace`; no-op when unsampled.
+#[inline]
+pub fn event(trace: TraceCtx, stage: Stage, arg: u32) {
+    if !trace.is_sampled() {
+        return;
+    }
+    thread_ring().push(trace.0, stage, arg, now_us());
+}
+
+/// Snapshot every thread's ring into one list, sorted by timestamp
+/// (ties broken by stage order so same-microsecond chains stay in
+/// lifecycle order).
+pub fn drain_all() -> Vec<SpanEvent> {
+    let mut out = Vec::new();
+    for ring in RINGS.lock().unwrap().iter() {
+        ring.drain_into(&mut out);
+    }
+    out.sort_by_key(|e| (e.t_us, e.stage));
+    out
+}
+
+/// [`drain_all`] filtered to one trace id; `trace == 0` keeps all.
+pub fn drain_trace(trace: u64) -> Vec<SpanEvent> {
+    let mut events = drain_all();
+    if trace != 0 {
+        events.retain(|e| e.trace == trace);
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsampled_records_nothing() {
+        event(TraceCtx::NONE, Stage::Decode, 0);
+        // No assertion on ring contents (other tests share the global
+        // rings) — this is a does-not-allocate/does-not-crash check;
+        // the zero-alloc property itself is gated by loadgen.
+        assert!(!TraceCtx::NONE.is_sampled());
+    }
+
+    #[test]
+    fn events_round_trip_through_the_ring() {
+        let trace = next_trace_id();
+        event(TraceCtx(trace), Stage::Decode, 7);
+        event(TraceCtx(trace), Stage::Admitted, 64);
+        event(TraceCtx(trace), Stage::Written, 0);
+        let got = drain_trace(trace);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].stage, Stage::Decode);
+        assert_eq!(got[0].arg, 7);
+        assert_eq!(got[1].stage, Stage::Admitted);
+        assert_eq!(got[1].arg, 64);
+        assert_eq!(got[2].stage, Stage::Written);
+        assert!(got[0].t_us <= got[1].t_us && got[1].t_us <= got[2].t_us);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let trace = next_trace_id();
+        // Overfill one thread's ring; only the newest CAPACITY survive.
+        for i in 0..(RING_CAPACITY as u32 + 10) {
+            event(TraceCtx(trace), Stage::ExecStart, i);
+        }
+        let got = drain_trace(trace);
+        assert!(got.len() <= RING_CAPACITY);
+        let args: Vec<u32> = got.iter().map(|e| e.arg).collect();
+        // The very first events must have been overwritten...
+        assert!(!args.contains(&0));
+        // ...and the newest must still be present.
+        assert!(args.contains(&(RING_CAPACITY as u32 + 9)));
+    }
+
+    #[test]
+    fn stage_names_and_wire_codes_round_trip() {
+        for v in 0u8..=8 {
+            let s = Stage::from_u8(v).unwrap();
+            assert_eq!(s as u8, v);
+            assert!(!s.name().is_empty());
+        }
+        assert_eq!(Stage::from_u8(9), None);
+        assert_eq!(Stage::ProxyAdmit.name(), "proxy-admit");
+        assert_eq!(Stage::Written.name(), "written");
+    }
+
+    #[test]
+    fn rate_parsing_clamps_and_rejects_garbage() {
+        assert_eq!(parse_rate("0"), Some(0.0));
+        assert_eq!(parse_rate("1"), Some(1.0));
+        assert_eq!(parse_rate(" 0.25 "), Some(0.25));
+        assert_eq!(parse_rate("7"), Some(1.0));
+        assert_eq!(parse_rate("-1"), Some(0.0));
+        assert_eq!(parse_rate("lots"), None);
+        assert_eq!(parse_rate("NaN"), None);
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+}

@@ -53,6 +53,10 @@ pub enum Reply {
     Pong,
     /// Stats snapshot.
     Stats(WireStats),
+    /// Prometheus-style text exposition of the server's registry.
+    StatsText(String),
+    /// Flight-recorder span events drained from the server.
+    TraceDump(Vec<crate::obs::SpanEvent>),
     /// The connection died before the reply arrived.
     Disconnected,
 }
@@ -326,6 +330,29 @@ impl Client {
             other => Err(anyhow!("unexpected stats reply {other:?}")),
         }
     }
+
+    /// Fetch the server's metrics registry as Prometheus-style text
+    /// exposition — the same bytes its HTTP `/metrics` endpoint serves.
+    pub fn stats_text(&self) -> anyhow::Result<String> {
+        let (id, reply) = self.register()?;
+        self.write(&Frame::StatsTextRequest { id })?;
+        match reply.wait() {
+            Reply::StatsText(text) => Ok(text),
+            other => Err(anyhow!("unexpected stats-text reply {other:?}")),
+        }
+    }
+
+    /// Drain the server's flight-recorder rings: events for `trace`
+    /// only, or every buffered event when `trace` is 0. Draining is
+    /// destructive server-side (the rings empty as they are read).
+    pub fn trace_dump(&self, trace: u64) -> anyhow::Result<Vec<crate::obs::SpanEvent>> {
+        let (id, reply) = self.register()?;
+        self.write(&Frame::TraceRequest { id, trace })?;
+        match reply.wait() {
+            Reply::TraceDump(events) => Ok(events),
+            other => Err(anyhow!("unexpected trace reply {other:?}")),
+        }
+    }
 }
 
 impl Drop for Client {
@@ -399,10 +426,14 @@ fn reader_loop(
                 Frame::Error(e) => Reply::Error { code: e.code, msg: e.msg },
                 Frame::Pong { .. } => Reply::Pong,
                 Frame::Stats(s) => Reply::Stats(s),
+                Frame::StatsText { text, .. } => Reply::StatsText(text),
+                Frame::TraceDump { events, .. } => Reply::TraceDump(events),
                 // a server never sends these; drop silently
-                Frame::Request(_) | Frame::Ping { .. } | Frame::StatsRequest { .. } => {
-                    continue
-                }
+                Frame::Request(_)
+                | Frame::Ping { .. }
+                | Frame::StatsRequest { .. }
+                | Frame::StatsTextRequest { .. }
+                | Frame::TraceRequest { .. } => continue,
             };
             if let Some(tx) = pending.lock().unwrap().remove(&id) {
                 let _ = tx.send(reply);

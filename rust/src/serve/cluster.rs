@@ -65,13 +65,14 @@
 use std::collections::HashSet;
 use std::io::Write;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::Histogram;
 use crate::hadamard::Prologue;
+use crate::obs::trace::{self, Stage, TraceCtx};
 use crate::quant::Epilogue;
 use crate::util::error::{self as anyhow, anyhow};
 use crate::util::f16::DType;
@@ -79,7 +80,7 @@ use crate::util::f16::DType;
 use super::client::{Client, PendingReply, Reply};
 use super::wire::{
     decode_frame, write_frame, ErrorCode, Frame, WireError, WireRequest, WireStats,
-    DEFAULT_MAX_FRAME_BYTES,
+    DEFAULT_MAX_FRAME_BYTES, MAX_TRACE_EVENTS,
 };
 
 /// Cluster-proxy configuration.
@@ -164,40 +165,109 @@ impl RouteKey {
     }
 }
 
-/// Proxy-level counters (exposed through the proxy's `Stats` frame and
-/// [`ClusterHandle::counters`]).
-#[derive(Debug, Default)]
+/// Proxy-level counters (exposed through the proxy's `Stats` frame,
+/// [`ClusterHandle::counters`], and — since every handle is a registered
+/// [`crate::obs`] metric — the `hadacore_cluster_*` series of the text
+/// exposition). Constructing one registers its metrics; stats frames and
+/// `/metrics` scrapes read the same atomics.
+#[derive(Debug)]
 pub struct ClusterCounters {
     /// Client connections admitted.
-    pub conns_accepted: AtomicU64,
+    pub conns_accepted: Arc<AtomicU64>,
     /// Client connections shed at the pool bound.
-    pub conns_rejected: AtomicU64,
+    pub conns_rejected: Arc<AtomicU64>,
     /// Currently open client connections.
-    pub conns_active: AtomicUsize,
+    pub conns_active: Arc<AtomicU64>,
     /// Requests currently in flight through the proxy.
-    pub inflight: AtomicUsize,
+    pub inflight: Arc<AtomicU64>,
     /// Requests forwarded to a backend (first attempts + retries).
-    pub forwarded: AtomicU64,
+    pub forwarded: Arc<AtomicU64>,
     /// Failover resubmissions (a retriable upstream outcome answered
     /// by submitting to another shard). The non-vacuity signal of the
     /// failover tests.
-    pub retries: AtomicU64,
+    pub retries: Arc<AtomicU64>,
     /// Retries the relay parked on a backoff hint because no
     /// alternative shard was eligible at that instant.
-    pub deferrals: AtomicU64,
+    pub deferrals: Arc<AtomicU64>,
     /// Responses relayed back to clients.
-    pub responses: AtomicU64,
+    pub responses: Arc<AtomicU64>,
     /// `Busy` frames the proxy answered on its own authority
     /// (admission shed, no eligible backend, attempt budget spent).
-    pub busy_out: AtomicU64,
+    pub busy_out: Arc<AtomicU64>,
     /// Error frames relayed or originated toward clients.
-    pub errors_out: AtomicU64,
+    pub errors_out: Arc<AtomicU64>,
     /// Health probes sent.
-    pub health_probes: AtomicU64,
+    pub health_probes: Arc<AtomicU64>,
     /// Health probes that failed (backend marked unhealthy).
-    pub health_failures: AtomicU64,
+    pub health_failures: Arc<AtomicU64>,
     /// Malformed client frames observed.
-    pub protocol_errors: AtomicU64,
+    pub protocol_errors: Arc<AtomicU64>,
+    /// Dead spawned backends the supervisor respawned.
+    pub restarts: Arc<AtomicU64>,
+}
+
+impl Default for ClusterCounters {
+    fn default() -> Self {
+        let r = crate::obs::registry();
+        ClusterCounters {
+            conns_accepted: r.counter(
+                "hadacore_cluster_conns_accepted_total",
+                "Client connections the proxy admitted.",
+            ),
+            conns_rejected: r.counter(
+                "hadacore_cluster_conns_rejected_total",
+                "Client connections shed at the proxy's pool bound.",
+            ),
+            conns_active: r.gauge(
+                "hadacore_cluster_conns_active",
+                "Currently open proxy client connections.",
+            ),
+            inflight: r.gauge(
+                "hadacore_cluster_inflight",
+                "Requests currently in flight through the proxy.",
+            ),
+            forwarded: r.counter(
+                "hadacore_cluster_forwarded_total",
+                "Requests forwarded to a backend (first attempts + retries).",
+            ),
+            retries: r.counter(
+                "hadacore_cluster_retries_total",
+                "Failover resubmissions to an alternative shard.",
+            ),
+            deferrals: r.counter(
+                "hadacore_cluster_deferrals_total",
+                "Retries parked on a backoff hint (no eligible shard).",
+            ),
+            responses: r.counter(
+                "hadacore_cluster_responses_total",
+                "Responses relayed back to proxy clients.",
+            ),
+            busy_out: r.counter(
+                "hadacore_cluster_busy_out_total",
+                "Busy frames the proxy answered on its own authority.",
+            ),
+            errors_out: r.counter(
+                "hadacore_cluster_errors_out_total",
+                "Error frames relayed or originated toward clients.",
+            ),
+            health_probes: r.counter(
+                "hadacore_cluster_health_probes_total",
+                "Backend health probes sent.",
+            ),
+            health_failures: r.counter(
+                "hadacore_cluster_health_failures_total",
+                "Health probes that marked a backend unhealthy.",
+            ),
+            protocol_errors: r.counter(
+                "hadacore_cluster_protocol_errors_total",
+                "Malformed client frames the proxy observed.",
+            ),
+            restarts: r.counter(
+                "hadacore_cluster_restarts_total",
+                "Dead spawned backends the supervisor respawned.",
+            ),
+        }
+    }
 }
 
 /// Point-in-time view of one backend, for stats frames, bench records,
@@ -231,11 +301,11 @@ struct Backend {
     client: Mutex<Option<Arc<Client>>>,
     healthy: AtomicBool,
     draining: AtomicBool,
-    inflight: AtomicUsize,
-    forwarded: AtomicU64,
-    responses: AtomicU64,
-    elems: AtomicU64,
-    latency: Histogram,
+    inflight: Arc<AtomicU64>,
+    forwarded: Arc<AtomicU64>,
+    responses: Arc<AtomicU64>,
+    elems: Arc<AtomicU64>,
+    latency: Arc<Histogram>,
     /// Route keys this shard has ever been handed (homogeneity
     /// bookkeeping: while the fleet is healthy, key sets are pairwise
     /// disjoint across shards — asserted by `cluster_e2e`).
@@ -243,17 +313,48 @@ struct Backend {
 }
 
 impl Backend {
-    fn new(addr: String) -> Backend {
+    /// `index` labels this shard's registry series
+    /// (`hadacore_cluster_backend_*{backend="index"}`); the label
+    /// survives `replace_backend`, so a respawned shard keeps its
+    /// series.
+    fn new(index: usize, addr: String) -> Backend {
+        let r = crate::obs::registry();
+        let idx = index.to_string();
         Backend {
             addr: Mutex::new(addr),
             client: Mutex::new(None),
             healthy: AtomicBool::new(false),
             draining: AtomicBool::new(false),
-            inflight: AtomicUsize::new(0),
-            forwarded: AtomicU64::new(0),
-            responses: AtomicU64::new(0),
-            elems: AtomicU64::new(0),
-            latency: Histogram::new(),
+            inflight: r.labeled_gauge(
+                "hadacore_cluster_backend_inflight",
+                "Requests in flight on this shard.",
+                "backend",
+                &idx,
+            ),
+            forwarded: r.labeled_counter(
+                "hadacore_cluster_backend_forwarded_total",
+                "Requests ever forwarded to this shard.",
+                "backend",
+                &idx,
+            ),
+            responses: r.labeled_counter(
+                "hadacore_cluster_backend_responses_total",
+                "Responses this shard returned.",
+                "backend",
+                &idx,
+            ),
+            elems: r.labeled_counter(
+                "hadacore_cluster_backend_elems_total",
+                "Elements transformed by this shard's responses.",
+                "backend",
+                &idx,
+            ),
+            latency: r.labeled_histogram_us(
+                "hadacore_cluster_backend_us",
+                "Proxy-side upstream latency (submit to reply).",
+                "backend",
+                &idx,
+            ),
             keys: Mutex::new(HashSet::new()),
         }
     }
@@ -286,7 +387,7 @@ impl Backend {
             addr: self.addr.lock().unwrap().clone(),
             healthy: self.healthy.load(Ordering::Acquire),
             draining: self.draining.load(Ordering::Acquire),
-            inflight: self.inflight.load(Ordering::Acquire),
+            inflight: self.inflight.load(Ordering::Acquire) as usize,
             forwarded: self.forwarded.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
             elems: self.elems.load(Ordering::Relaxed),
@@ -563,7 +664,10 @@ fn relay_loop(
                         state.counters.errors_out.fetch_add(1, Ordering::Relaxed);
                         state.counters.inflight.fetch_sub(1, Ordering::AcqRel);
                     }
-                    Reply::Pong | Reply::Stats(_) => {
+                    Reply::Pong
+                    | Reply::Stats(_)
+                    | Reply::StatsText(_)
+                    | Reply::TraceDump(_) => {
                         dead = answer(
                             write_half,
                             dead,
@@ -630,8 +734,8 @@ fn stats_frame(state: &ClusterState, id: u64) -> Frame {
     let c = &state.counters;
     let mut counters: Vec<(String, u64)> = vec![
         ("proxy.backends".to_string(), state.backends.len() as u64),
-        ("proxy.conns_active".to_string(), c.conns_active.load(Ordering::Acquire) as u64),
-        ("proxy.inflight".to_string(), c.inflight.load(Ordering::Acquire) as u64),
+        ("proxy.conns_active".to_string(), c.conns_active.load(Ordering::Acquire)),
+        ("proxy.inflight".to_string(), c.inflight.load(Ordering::Acquire)),
         ("proxy.forwarded".to_string(), c.forwarded.load(Ordering::Relaxed)),
         ("proxy.retries".to_string(), c.retries.load(Ordering::Relaxed)),
         ("proxy.deferrals".to_string(), c.deferrals.load(Ordering::Relaxed)),
@@ -640,6 +744,7 @@ fn stats_frame(state: &ClusterState, id: u64) -> Frame {
         ("proxy.errors_out".to_string(), c.errors_out.load(Ordering::Relaxed)),
         ("proxy.health_probes".to_string(), c.health_probes.load(Ordering::Relaxed)),
         ("proxy.health_failures".to_string(), c.health_failures.load(Ordering::Relaxed)),
+        ("proxy.restarts".to_string(), c.restarts.load(Ordering::Relaxed)),
     ];
     let mut report = String::from("cluster proxy\n");
     for (i, b) in state.backends.iter().enumerate() {
@@ -757,9 +862,46 @@ fn handle_frame(
         Frame::StatsRequest { id } => {
             send_locked(write_half, &stats_frame(state, id)).is_ok()
         }
-        Frame::Request(req) => {
+        Frame::StatsTextRequest { id } => {
+            // the proxy's own registry: cluster counters, per-backend
+            // series, plus whatever else lives in this process
+            let text = crate::obs::registry().render();
+            send_locked(write_half, &Frame::StatsText { id, text }).is_ok()
+        }
+        Frame::TraceRequest { id, trace: want } => {
+            // merge this process's rings with every reachable backend's,
+            // re-sorted so the cross-process chain reads in event order.
+            // Drains are snapshots, so a backend sharing this process
+            // (the self-hosted fleet) reports the same rings again —
+            // dedup identical events after the full-key sort
+            let mut events = trace::drain_trace(want);
+            for b in &state.backends {
+                if let Some(client) = b.alive_client(state.cfg.max_frame_bytes) {
+                    if let Ok(mut evs) = client.trace_dump(want) {
+                        events.append(&mut evs);
+                    }
+                }
+            }
+            events.sort_by_key(|e| (e.t_us, e.stage as u8, e.trace, e.arg));
+            events.dedup();
+            events.truncate(MAX_TRACE_EVENTS);
+            send_locked(write_half, &Frame::TraceDump { id, events }).is_ok()
+        }
+        Frame::Request(mut req) => {
             let client_id = req.id;
-            if state.counters.inflight.load(Ordering::Acquire) >= state.cfg.max_inflight {
+            // adopt the client's trace id or sample one here; the id
+            // rides the flag-gated wire extension on every forwarded
+            // attempt, so backend spans join this request's chain
+            let trace_ctx = if req.trace != 0 {
+                TraceCtx(req.trace)
+            } else {
+                trace::sample()
+            };
+            req.trace = trace_ctx.0;
+            trace::event(trace_ctx, Stage::ProxyAdmit, req.rows);
+            if state.counters.inflight.load(Ordering::Acquire)
+                >= state.cfg.max_inflight as u64
+            {
                 state.counters.busy_out.fetch_add(1, Ordering::Relaxed);
                 return send_locked(
                     write_half,
@@ -803,7 +945,9 @@ fn handle_frame(
         | Frame::Error(_)
         | Frame::Busy { .. }
         | Frame::Pong { .. }
-        | Frame::Stats(_) => {
+        | Frame::Stats(_)
+        | Frame::StatsText { .. }
+        | Frame::TraceDump { .. } => {
             state.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
             false
         }
@@ -840,7 +984,9 @@ fn accept_loop(listener: TcpListener, state: &Arc<ClusterState>) {
             }
             *threads = live;
         }
-        if state.counters.conns_active.load(Ordering::Acquire) >= state.cfg.max_conns {
+        if state.counters.conns_active.load(Ordering::Acquire)
+            >= state.cfg.max_conns as u64
+        {
             state.counters.conns_rejected.fetch_add(1, Ordering::Relaxed);
             let mut s = stream;
             let busy = Frame::Busy { id: 0, retry_after_us: state.cfg.busy_retry_us };
@@ -912,7 +1058,12 @@ pub fn cluster(cfg: ClusterConfig) -> anyhow::Result<ClusterHandle> {
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
     let addr = listener.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
-    let backends = cfg.backends.iter().cloned().map(Backend::new).collect();
+    let backends = cfg
+        .backends
+        .iter()
+        .enumerate()
+        .map(|(i, addr)| Backend::new(i, addr.clone()))
+        .collect();
     let state = Arc::new(ClusterState {
         cfg,
         backends,
@@ -1039,6 +1190,83 @@ impl Drop for ClusterHandle {
     fn drop(&mut self) {
         self.stop();
     }
+}
+
+// ---------------------------------------------------------------------
+// Self-healing supervisor.
+
+/// Handle to a running [`supervise`] loop; [`SupervisorHandle::shutdown`]
+/// (or drop) stops and joins it.
+pub struct SupervisorHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl SupervisorHandle {
+    /// Stop the loop and join its thread.
+    pub fn shutdown(mut self) {
+        self.stop_join();
+    }
+
+    fn stop_join(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SupervisorHandle {
+    fn drop(&mut self) {
+        self.stop_join();
+    }
+}
+
+/// Self-healing loop for *owned* backends: every `interval`, poll each
+/// slot's liveness; a dead slot is respawned and handed back to routing
+/// via [`ClusterHandle::replace_backend`] (counted on
+/// `hadacore_cluster_restarts_total`). Liveness and respawning are
+/// closures, so `hadacore cluster --spawn` (child processes,
+/// `try_wait`) and in-process tests (serve handles behind a flag) drive
+/// the same loop. A slot whose respawn fails (`None`) stays dead and is
+/// retried next sweep; routing keeps failing over around it meanwhile.
+pub fn supervise(
+    handle: &Arc<ClusterHandle>,
+    interval: Duration,
+    mut alive: impl FnMut(usize) -> bool + Send + 'static,
+    mut respawn: impl FnMut(usize) -> Option<String> + Send + 'static,
+) -> anyhow::Result<SupervisorHandle> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = Arc::clone(&stop);
+    let handle = Arc::clone(handle);
+    let thread = std::thread::Builder::new()
+        .name("hadacore-cluster-supervisor".to_string())
+        .spawn(move || {
+            let n = handle.backend_count();
+            while !stop_flag.load(Ordering::Acquire) {
+                for i in 0..n {
+                    if stop_flag.load(Ordering::Acquire) {
+                        return;
+                    }
+                    if alive(i) {
+                        continue;
+                    }
+                    if let Some(addr) = respawn(i) {
+                        handle.counters().restarts.fetch_add(1, Ordering::Relaxed);
+                        handle.replace_backend(i, &addr);
+                    }
+                }
+                // poll-sized sleeps so shutdown isn't gated on a sweep
+                let mut left = interval;
+                while left > Duration::ZERO && !stop_flag.load(Ordering::Acquire) {
+                    let step = left.min(Duration::from_millis(10));
+                    std::thread::sleep(step);
+                    left = left.saturating_sub(step);
+                }
+            }
+        })
+        .map_err(|e| anyhow!("spawn supervisor: {e}"))?;
+    Ok(SupervisorHandle { stop, thread: Some(thread) })
 }
 
 #[cfg(test)]

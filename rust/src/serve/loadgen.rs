@@ -52,6 +52,11 @@ pub struct LoadgenConfig {
     /// Per-connection outstanding-reply window (memory bound; large
     /// enough to never pace an honest server).
     pub max_outstanding: usize,
+    /// Stamp a fresh span-trace id onto every `trace_every`-th request
+    /// per connection (0 = never): deterministic trace coverage for the
+    /// observability smoke paths, independent of the server-side
+    /// `HADACORE_TRACE_SAMPLE` rate.
+    pub trace_every: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -67,6 +72,7 @@ impl Default for LoadgenConfig {
             // stays under the server's default per-connection pipelining
             // cap (32) so an honest run never sheds on the window itself
             max_outstanding: 24,
+            trace_every: 0,
         }
     }
 }
@@ -346,6 +352,9 @@ fn client_thread(
         wire.epilogue = req.epilogue;
         wire.scale = req.scale;
         wire.force_native = req.force_native;
+        if cfg.trace_every > 0 && i % cfg.trace_every == 0 {
+            wire.trace = crate::obs::trace::next_trace_id();
+        }
         // paced runs charge latency from the *scheduled* send time, so a
         // send delayed by the outstanding window (or a slow submit) shows
         // up as latency instead of silently shifting the schedule — the

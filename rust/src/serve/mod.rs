@@ -50,7 +50,8 @@ pub mod wire;
 
 pub use client::{Client, ClientError, PendingReply, Reply};
 pub use cluster::{
-    cluster, BackendSnapshot, ClusterConfig, ClusterCounters, ClusterHandle, RouteKey,
+    cluster, supervise, BackendSnapshot, ClusterConfig, ClusterCounters, ClusterHandle,
+    RouteKey, SupervisorHandle,
 };
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use server::{serve, ServeConfig, ServeCounters, ServeHandle};

@@ -65,6 +65,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::{Coordinator, ReplyRing, ReplyTx, ResponseTx};
+use crate::obs::trace::{self, Stage, TraceCtx};
 use crate::quant::{Epilogue, QuantScales};
 use crate::util::alloc::track_current_thread;
 use crate::util::error::{self as anyhow, anyhow};
@@ -127,23 +128,63 @@ impl Default for ServeConfig {
 }
 
 /// Serve-layer counters (exposed through the `Stats` frame next to the
-/// coordinator metrics).
-#[derive(Debug, Default)]
+/// coordinator metrics) — registry-backed handles, so the same atomics
+/// render in the `/metrics` exposition under `hadacore_*` names.
+#[derive(Debug)]
 pub struct ServeCounters {
     /// Connections admitted to the handler pool.
-    pub conns_accepted: AtomicU64,
+    pub conns_accepted: Arc<AtomicU64>,
     /// Connections shed at the pool bound.
-    pub conns_rejected: AtomicU64,
+    pub conns_rejected: Arc<AtomicU64>,
     /// Currently open connections.
-    pub conns_active: AtomicUsize,
+    pub conns_active: Arc<AtomicU64>,
     /// Requests currently in flight (admitted, response not yet written).
-    pub inflight: AtomicUsize,
+    pub inflight: Arc<AtomicU64>,
     /// Requests shed with a `Busy` frame.
-    pub busy_shed: AtomicU64,
+    pub busy_shed: Arc<AtomicU64>,
     /// Malformed frames / protocol violations observed.
-    pub protocol_errors: AtomicU64,
+    pub protocol_errors: Arc<AtomicU64>,
     /// Requests forwarded to the coordinator.
-    pub requests: AtomicU64,
+    pub requests: Arc<AtomicU64>,
+}
+
+impl ServeCounters {
+    fn new() -> ServeCounters {
+        let r = crate::obs::registry();
+        ServeCounters {
+            conns_accepted: r.counter(
+                "hadacore_conns_accepted_total",
+                "connections admitted to the handler pool",
+            ),
+            conns_rejected: r.counter(
+                "hadacore_conns_rejected_total",
+                "connections shed at the pool bound",
+            ),
+            conns_active: r.gauge("hadacore_conns_active", "currently open connections"),
+            inflight: r.gauge(
+                "hadacore_inflight",
+                "admitted requests whose response is not yet written",
+            ),
+            busy_shed: r.counter(
+                "hadacore_busy_shed_total",
+                "requests shed with a Busy frame",
+            ),
+            protocol_errors: r.counter(
+                "hadacore_protocol_errors_total",
+                "malformed frames and protocol violations",
+            ),
+            requests: r.counter(
+                "hadacore_serve_requests_total",
+                "requests forwarded to the coordinator",
+            ),
+        }
+    }
+}
+
+impl Default for ServeCounters {
+    fn default() -> Self {
+        ServeCounters::new()
+    }
 }
 
 struct ServeState {
@@ -273,7 +314,7 @@ fn accept_loop(listener: TcpListener, state: &Arc<ServeState>) {
             }
             *threads = live;
         }
-        if state.counters.conns_active.load(Ordering::Acquire) >= state.cfg.max_conns {
+        if state.counters.conns_active.load(Ordering::Acquire) >= state.cfg.max_conns as u64 {
             state.counters.conns_rejected.fetch_add(1, Ordering::Relaxed);
             let mut s = stream;
             let busy =
@@ -325,8 +366,9 @@ fn handle_conn(state: &Arc<ServeState>, stream: TcpStream) {
 }
 
 /// Per-request bookkeeping the writer needs to encode the response in
-/// the dtype the request arrived with.
-type InflightMeta = Arc<Mutex<HashMap<u64, (DType, u32)>>>;
+/// the dtype the request arrived with (plus the trace context, so the
+/// writer can record the framed/written spans).
+type InflightMeta = Arc<Mutex<HashMap<u64, (DType, u32, TraceCtx)>>>;
 
 fn conn_loop(
     state: &Arc<ServeState>,
@@ -435,8 +477,25 @@ fn handle_frame(
             let stats = build_stats(state, id);
             send_locked(write_half, &Frame::Stats(stats)).is_ok()
         }
+        ServerFrame::Control(Frame::StatsTextRequest { id }) => {
+            let text = crate::obs::registry().render();
+            send_locked(write_half, &Frame::StatsText { id, text }).is_ok()
+        }
+        ServerFrame::Control(Frame::TraceRequest { id, trace: want }) => {
+            let events = trace::drain_trace(want);
+            send_locked(write_half, &Frame::TraceDump { id, events }).is_ok()
+        }
         ServerFrame::Request(pr) => {
             let id = pr.id;
+            // adopt the wire's trace id (proxy / tracing client) or make
+            // the sampling decision here, at conn-reader admission; with
+            // sampling off (the default) this is one branch and no event
+            let trace_ctx = if pr.trace != 0 {
+                TraceCtx(pr.trace)
+            } else {
+                trace::sample()
+            };
+            trace::event(trace_ctx, Stage::Decode, pr.rows);
             if state.shutdown.load(Ordering::Acquire) || state.coord.is_draining() {
                 return send_locked(
                     write_half,
@@ -453,7 +512,7 @@ fn handle_frame(
             let shed = conn_inflight.load(Ordering::Acquire)
                 >= state.cfg.pipeline_depth
                 || state.counters.inflight.load(Ordering::Acquire)
-                    >= state.cfg.max_inflight
+                    >= state.cfg.max_inflight as u64
                 || state.coord.queued_rows() > state.cfg.max_queued_rows;
             if shed {
                 state.counters.busy_shed.fetch_add(1, Ordering::Relaxed);
@@ -509,12 +568,14 @@ fn handle_frame(
                     .is_ok();
                 }
                 Entry::Vacant(v) => {
-                    v.insert((pr.dtype, pr.n));
+                    v.insert((pr.dtype, pr.n, trace_ctx));
                 }
             }
             // infallible: decode already enforced the strict shape check,
             // and the pooled buffer moves straight into the request
-            let req = pr.into_transform();
+            let mut req = pr.into_transform();
+            req.trace = trace_ctx;
+            trace::event(trace_ctx, Stage::Admitted, req.rows as u32);
             conn_inflight.fetch_add(1, Ordering::AcqRel);
             state.counters.inflight.fetch_add(1, Ordering::AcqRel);
             match state.coord.submit_to(req, ResponseTx::Ring(tx.clone())) {
@@ -575,7 +636,7 @@ fn writer_loop(
         match result {
             Ok(mut resp) => {
                 if !dead {
-                    if let Some((dtype, n)) = entry {
+                    if let Some((dtype, n, trace_ctx)) = entry {
                         // zero-copy response: the header is framed next
                         // to a raw byte view of the transformed request
                         // buffer and both hit the socket in one vectored
@@ -584,9 +645,17 @@ fn writer_loop(
                         // after, returning the buffer to the pool.
                         let ok = {
                             let (header, payload) = framer.frame(&resp, n, dtype);
+                            trace::event(
+                                trace_ctx,
+                                Stage::Framed,
+                                payload.len().min(u32::MAX as usize) as u32,
+                            );
                             let mut s = write_half.lock().unwrap();
                             write_frame_parts(&mut *s, header, payload).is_ok()
                         };
+                        if ok {
+                            trace::event(trace_ctx, Stage::Written, 0);
+                        }
                         if !ok {
                             // timeout or reset: a partially written
                             // frame cannot resync, so the connection is

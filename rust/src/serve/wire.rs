@@ -18,12 +18,19 @@
 //! | 6 | `Pong` | `id u64` |
 //! | 7 | `StatsRequest` | `id u64` |
 //! | 8 | `Stats` | `id u64, n u32, n x {key_len u8, key, value u64}, report_len u32, report` |
+//! | 9 | `StatsTextRequest` | `id u64` |
+//! | 10 | `StatsText` | `id u64, text_len u32, text` |
+//! | 11 | `TraceRequest` | `id u64, trace u64` |
+//! | 12 | `TraceDump` | `id u64, n u32, n x {trace u64, stage u8, arg u32, t_us u64}` |
 //!
 //! Request `flags`: bit 0 = custom scale present (the `scale` field is
 //! its bits; otherwise the field must be zero), bit 1 = force the native
 //! backend, bit 2 = sign-flip prologue present (a `seed u64` field
 //! follows `scale`; without the flag the field is absent, keeping
-//! plain frames byte-identical to their pre-prologue encoding); all
+//! plain frames byte-identical to their pre-prologue encoding), bit 3 =
+//! span-trace id present (a nonzero `trace u64` field follows the seed —
+//! or `scale` when no seed — propagating the sampling decision across
+//! processes, same backward-compatible trick as the seed); all
 //! other bits must be zero. `epilogue`: 0 none, 1 FP8 e4m3,
 //! 2 FP8 e5m2, 3 grouped INT8 (`group` must be nonzero exactly for
 //! INT8). Response `scales`: `tag u8` = 0 none | 1 per-tensor (`f32`)
@@ -44,6 +51,7 @@
 
 use crate::coordinator::{TransformRequest, TransformResponse};
 use crate::hadamard::{KernelKind, Prologue};
+use crate::obs::{SpanEvent, Stage, TraceCtx};
 use crate::quant::{Epilogue, Fp8Format, QuantScales};
 use crate::util::f16::{DType, Element, BF16, F16};
 use crate::util::pool::{BufferPool, PooledBuf};
@@ -60,6 +68,11 @@ pub const DEFAULT_MAX_FRAME_BYTES: u32 = 1 << 26;
 /// Hard cap on `Stats` counter entries (a frame claiming more is
 /// malformed).
 pub const MAX_STATS_COUNTERS: u32 = 4096;
+
+/// Hard cap on `TraceDump` events (a frame claiming more is malformed).
+/// Generous: a fleet drains at most `threads x RING_CAPACITY` events,
+/// far below this for any realistic thread count.
+pub const MAX_TRACE_EVENTS: u32 = 1 << 20;
 
 /// Machine-readable error classes carried by [`Frame::Error`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -119,6 +132,9 @@ pub struct WireRequest {
     pub prologue: Prologue,
     /// Fused rotate→quantize epilogue.
     pub epilogue: Epilogue,
+    /// Span-trace id (0 = unsampled; nonzero values travel under
+    /// `FLAG_HAS_TRACE` so plain frames keep the v1 layout).
+    pub trace: u64,
     /// Row-major payload bytes in `dtype`.
     pub payload: Vec<u8>,
 }
@@ -206,6 +222,34 @@ pub enum Frame {
     },
     /// Server → client metrics snapshot.
     Stats(WireStats),
+    /// Client → server request for the Prometheus-style text exposition
+    /// of the process-wide [`crate::obs::registry`].
+    StatsTextRequest {
+        /// Echo id.
+        id: u64,
+    },
+    /// Server → client registry exposition.
+    StatsText {
+        /// Echoed request id.
+        id: u64,
+        /// The rendered exposition (`# HELP` / `# TYPE` / samples).
+        text: String,
+    },
+    /// Client → server request to drain the flight recorder.
+    TraceRequest {
+        /// Echo id.
+        id: u64,
+        /// Trace id to filter to (0 = every recorded event).
+        trace: u64,
+    },
+    /// Server → client flight-recorder drain (the cluster proxy merges
+    /// its own events with its backends' before replying).
+    TraceDump {
+        /// Echoed request id.
+        id: u64,
+        /// Recorded span events, timestamp-sorted per process.
+        events: Vec<SpanEvent>,
+    },
 }
 
 // ---------------------------------------------------------------------
@@ -295,6 +339,7 @@ impl WireRequest {
             force_native: false,
             prologue: Prologue::None,
             epilogue: Epilogue::None,
+            trace: 0,
             payload: encode_elems(data, dtype),
         }
     }
@@ -325,6 +370,7 @@ impl WireRequest {
             prologue: self.prologue,
             epilogue: self.epilogue,
             force_native: self.force_native,
+            trace: TraceCtx(self.trace),
         })
     }
 }
@@ -432,10 +478,15 @@ const TAG_PING: u8 = 5;
 const TAG_PONG: u8 = 6;
 const TAG_STATS_REQUEST: u8 = 7;
 const TAG_STATS: u8 = 8;
+const TAG_STATS_TEXT_REQUEST: u8 = 9;
+const TAG_STATS_TEXT: u8 = 10;
+const TAG_TRACE_REQUEST: u8 = 11;
+const TAG_TRACE_DUMP: u8 = 12;
 
 const FLAG_HAS_SCALE: u8 = 1 << 0;
 const FLAG_FORCE_NATIVE: u8 = 1 << 1;
 const FLAG_HAS_PROLOGUE_SEED: u8 = 1 << 2;
+const FLAG_HAS_TRACE: u8 = 1 << 3;
 
 fn put_u16(out: &mut Vec<u8>, v: u16) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -476,15 +527,22 @@ impl Frame {
                 if !r.prologue.is_none() {
                     flags |= FLAG_HAS_PROLOGUE_SEED;
                 }
+                if r.trace != 0 {
+                    flags |= FLAG_HAS_TRACE;
+                }
                 body.push(flags);
                 let (etag, group) = epilogue_tags(r.epilogue);
                 body.push(etag);
                 put_u32(&mut body, group);
                 put_f32(&mut body, r.scale.unwrap_or(0.0));
-                // the seed field only exists under its flag, so plain
-                // frames stay byte-identical to the pre-prologue layout
+                // the seed and trace fields only exist under their
+                // flags, so plain frames stay byte-identical to the
+                // pre-prologue / pre-trace layouts
                 if let Prologue::SignFlip { seed } = r.prologue {
                     put_u64(&mut body, seed);
+                }
+                if r.trace != 0 {
+                    put_u64(&mut body, r.trace);
                 }
                 body.extend_from_slice(&r.payload);
             }
@@ -561,6 +619,33 @@ impl Frame {
                 put_u32(&mut body, rb.len() as u32);
                 body.extend_from_slice(rb);
             }
+            Frame::StatsTextRequest { id } => {
+                body.push(TAG_STATS_TEXT_REQUEST);
+                put_u64(&mut body, *id);
+            }
+            Frame::StatsText { id, text } => {
+                body.push(TAG_STATS_TEXT);
+                put_u64(&mut body, *id);
+                let tb = text.as_bytes();
+                put_u32(&mut body, tb.len() as u32);
+                body.extend_from_slice(tb);
+            }
+            Frame::TraceRequest { id, trace } => {
+                body.push(TAG_TRACE_REQUEST);
+                put_u64(&mut body, *id);
+                put_u64(&mut body, *trace);
+            }
+            Frame::TraceDump { id, events } => {
+                body.push(TAG_TRACE_DUMP);
+                put_u64(&mut body, *id);
+                put_u32(&mut body, events.len() as u32);
+                for e in events {
+                    put_u64(&mut body, e.trace);
+                    body.push(e.stage as u8);
+                    put_u32(&mut body, e.arg);
+                    put_u64(&mut body, e.t_us);
+                }
+            }
         }
         let mut out = Vec::with_capacity(4 + body.len());
         put_u32(&mut out, body.len() as u32);
@@ -577,7 +662,11 @@ impl Frame {
             Frame::Busy { id, .. }
             | Frame::Ping { id }
             | Frame::Pong { id }
-            | Frame::StatsRequest { id } => *id,
+            | Frame::StatsRequest { id }
+            | Frame::StatsTextRequest { id }
+            | Frame::StatsText { id, .. }
+            | Frame::TraceRequest { id, .. }
+            | Frame::TraceDump { id, .. } => *id,
             Frame::Stats(s) => s.id,
         }
     }
@@ -666,6 +755,7 @@ struct ReqHeader {
     force_native: bool,
     prologue: Prologue,
     epilogue: Epilogue,
+    trace: u64,
 }
 
 /// Parse a request body's header fields and validate that exactly
@@ -677,7 +767,8 @@ fn parse_request_header(c: &mut Cursor) -> Result<ReqHeader, String> {
     let kernel = kernel_from_tag(c.u8()?)?;
     let dtype = dtype_from_tag(c.u8()?)?;
     let flags = c.u8()?;
-    if flags & !(FLAG_HAS_SCALE | FLAG_FORCE_NATIVE | FLAG_HAS_PROLOGUE_SEED) != 0 {
+    if flags & !(FLAG_HAS_SCALE | FLAG_FORCE_NATIVE | FLAG_HAS_PROLOGUE_SEED | FLAG_HAS_TRACE) != 0
+    {
         return Err(format!("unknown request flags {flags:#x}"));
     }
     let etag = c.u8()?;
@@ -697,6 +788,15 @@ fn parse_request_header(c: &mut Cursor) -> Result<ReqHeader, String> {
     } else {
         Prologue::None
     };
+    let trace = if flags & FLAG_HAS_TRACE != 0 {
+        let t = c.u64()?;
+        if t == 0 {
+            return Err("zero trace id under the trace flag".to_string());
+        }
+        t
+    } else {
+        0
+    };
     let want = (rows as u64) * (n as u64) * dtype.size_bytes() as u64;
     if c.remaining() as u64 != want {
         return Err(format!(
@@ -715,6 +815,7 @@ fn parse_request_header(c: &mut Cursor) -> Result<ReqHeader, String> {
         force_native: flags & FLAG_FORCE_NATIVE != 0,
         prologue,
         epilogue,
+        trace,
     })
 }
 
@@ -742,6 +843,7 @@ pub fn parse_body(body: &[u8]) -> Result<Frame, String> {
                 force_native: h.force_native,
                 prologue: h.prologue,
                 epilogue: h.epilogue,
+                trace: h.trace,
                 payload,
             })
         }
@@ -851,6 +953,50 @@ pub fn parse_body(body: &[u8]) -> Result<Frame, String> {
             c.finish()?;
             Frame::Stats(WireStats { id, counters, report })
         }
+        TAG_STATS_TEXT_REQUEST => {
+            let id = c.u64()?;
+            c.finish()?;
+            Frame::StatsTextRequest { id }
+        }
+        TAG_STATS_TEXT => {
+            let id = c.u64()?;
+            let tlen = c.u32()? as usize;
+            if tlen > c.remaining() {
+                return Err(format!("stats text length {tlen} exceeds frame"));
+            }
+            let text = c.utf8(tlen)?;
+            c.finish()?;
+            Frame::StatsText { id, text }
+        }
+        TAG_TRACE_REQUEST => {
+            let id = c.u64()?;
+            let trace = c.u64()?;
+            c.finish()?;
+            Frame::TraceRequest { id, trace }
+        }
+        TAG_TRACE_DUMP => {
+            let id = c.u64()?;
+            let count = c.u32()?;
+            if count > MAX_TRACE_EVENTS {
+                return Err(format!("trace event count {count} exceeds cap"));
+            }
+            // 21 bytes per event; reject before allocating on a lying
+            // count (same discipline as the per-group scales above)
+            if (count as usize) * 21 > c.remaining() {
+                return Err(format!("trace event count {count} exceeds frame"));
+            }
+            let mut events = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                let trace = c.u64()?;
+                let stage = Stage::from_u8(c.u8()?)
+                    .ok_or_else(|| "unknown trace stage".to_string())?;
+                let arg = c.u32()?;
+                let t_us = c.u64()?;
+                events.push(SpanEvent { trace, stage, arg, t_us });
+            }
+            c.finish()?;
+            Frame::TraceDump { id, events }
+        }
         _ => return Err(format!("unknown frame tag {tag}")),
     };
     Ok(frame)
@@ -914,6 +1060,9 @@ pub struct PooledRequest {
     pub prologue: Prologue,
     /// Fused quantize epilogue.
     pub epilogue: Epilogue,
+    /// Span-trace id from the wire (0 = none; the conn reader may still
+    /// sample a fresh one at admission).
+    pub trace: u64,
     /// The decoded f32 payload, pool-affiliated: it travels into the
     /// coordinator, is transformed in place, comes back in the response,
     /// is framed from directly, and returns to the pool on drop.
@@ -934,6 +1083,7 @@ impl PooledRequest {
             prologue: self.prologue,
             epilogue: self.epilogue,
             force_native: self.force_native,
+            trace: TraceCtx(self.trace),
         }
     }
 }
@@ -1003,6 +1153,7 @@ pub fn decode_server_frame(
             force_native: h.force_native,
             prologue: h.prologue,
             epilogue: h.epilogue,
+            trace: h.trace,
             data,
         }),
         total,
@@ -1243,6 +1394,21 @@ mod tests {
                 counters: vec![("submitted".into(), 10), ("e2e_p99_us".into(), 800)],
                 report: "requests: 10 submitted\n".to_string(),
             }),
+            Frame::StatsTextRequest { id: 6 },
+            Frame::StatsText {
+                id: 6,
+                text: "# TYPE hadacore_requests_total counter\nhadacore_requests_total 10\n"
+                    .to_string(),
+            },
+            Frame::TraceRequest { id: 12, trace: 0xFACE },
+            Frame::TraceDump {
+                id: 12,
+                events: vec![
+                    SpanEvent { trace: 0xFACE, stage: Stage::Decode, arg: 4, t_us: 10 },
+                    SpanEvent { trace: 0xFACE, stage: Stage::Written, arg: 0, t_us: 95 },
+                ],
+            },
+            Frame::TraceDump { id: 13, events: vec![] },
         ];
         for frame in frames {
             let bytes = frame.encode();
@@ -1306,6 +1472,52 @@ mod tests {
         r.prologue = Prologue::SignFlip { seed: 7 };
         let rotated = Frame::Request(r).encode();
         assert_eq!(rotated.len(), plain.len() + 8);
+    }
+
+    #[test]
+    fn trace_flag_roundtrips_and_plain_frames_keep_the_v1_layout() {
+        // nonzero trace ids round-trip, alone and alongside a seed
+        for (trace, seed) in [(1u64, None), (u64::MAX, None), (0x7ACE, Some(9u64))] {
+            let mut r = match req_frame() {
+                Frame::Request(r) => r,
+                _ => unreachable!(),
+            };
+            r.trace = trace;
+            if let Some(s) = seed {
+                r.prologue = Prologue::SignFlip { seed: s };
+            }
+            let frame = Frame::Request(r);
+            let bytes = frame.encode();
+            let (decoded, _) = decode_frame(&bytes, DEFAULT_MAX_FRAME_BYTES)
+                .unwrap()
+                .unwrap();
+            assert_eq!(decoded, frame, "trace={trace:#x}");
+            match decoded {
+                Frame::Request(d) => {
+                    assert_eq!(d.to_transform().unwrap().trace, TraceCtx(trace));
+                }
+                _ => unreachable!(),
+            }
+        }
+        // the trace field only exists under its flag: an untraced
+        // request is exactly 8 bytes shorter and stays decodable by a
+        // pre-trace peer (same backward-compatible trick as the seed)
+        let plain = req_frame().encode();
+        let mut r = match req_frame() {
+            Frame::Request(r) => r,
+            _ => unreachable!(),
+        };
+        r.trace = 0x7ACE;
+        let traced = Frame::Request(r).encode();
+        assert_eq!(traced.len(), plain.len() + 8);
+        // a zero trace id under the flag is malformed (it would decode
+        // as "sampled" with the unsampled sentinel)
+        let mut b = traced;
+        let flags_at = 4 + 2 + 8 + 4 + 4 + 1 + 1; // prefix,ver+tag,id,n,rows,kernel,dtype
+        assert_eq!(b[flags_at] & FLAG_HAS_TRACE, FLAG_HAS_TRACE);
+        let trace_at = flags_at + 1 + 1 + 4 + 4; // flags,epilogue,group,scale
+        b[trace_at..trace_at + 8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(decode_frame(&b, DEFAULT_MAX_FRAME_BYTES).is_err());
     }
 
     #[test]

@@ -25,7 +25,8 @@ use hadacore::hadamard::{KernelKind, Prologue};
 use hadacore::quant::Epilogue;
 use hadacore::serve::wire::{decode_elems, encode_elems, WireRequest, WireResponse};
 use hadacore::serve::{
-    cluster, serve, Client, ClusterConfig, ClusterHandle, ServeConfig, ServeHandle,
+    cluster, serve, supervise, Client, ClusterConfig, ClusterHandle, ServeConfig,
+    ServeHandle,
 };
 use hadacore::util::f16::DType;
 use hadacore::util::rng::Rng;
@@ -437,6 +438,126 @@ fn drain_moves_new_traffic_off_a_backend_without_dropping_any() {
 
     drop(client);
     fleet.teardown();
+}
+
+#[test]
+fn supervisor_respawns_a_dead_backend_which_re_serves_its_old_keys() {
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Mutex;
+
+    // built by hand (not `start_fleet`) because the supervisor API
+    // shares the proxy handle: `supervise` takes an `Arc<ClusterHandle>`
+    let mut backends: Vec<Option<(Arc<Coordinator>, ServeHandle)>> =
+        (0..3).map(|_| Some(start_backend())).collect();
+    let proxy = Arc::new(
+        cluster(ClusterConfig {
+            backends: backends
+                .iter()
+                .map(|b| b.as_ref().unwrap().1.addr().to_string())
+                .collect(),
+            health_interval: Duration::from_millis(25),
+            poll_interval: Duration::from_millis(10),
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let reference = start_coordinator(2);
+    let client = Client::connect(&proxy.addr().to_string()).unwrap();
+
+    let case = Case {
+        n: 2048,
+        rows: 2,
+        kernel: KernelKind::HadaCore,
+        dtype: DType::F32,
+        epilogue: Epilogue::None,
+        prologue: Prologue::None,
+        seed: 0x5AFE,
+    };
+    // whose key is it: probe once and watch the forwarded counters
+    let before: Vec<u64> = (0..3).map(|i| proxy.backend(i).forwarded).collect();
+    let r = transform_retrying(&client, &wire_request(&case));
+    assert_identical(&reference, &case, &r);
+    let victim = (0..3)
+        .find(|&i| proxy.backend(i).forwarded > before[i])
+        .expect("some backend must have served the probe");
+
+    // the in-process analogues of `Child::try_wait` (a shared liveness
+    // flag) and of re-spawning the child process (starting a fresh serve
+    // backend, parked in `replacements` for teardown)
+    let dead = Arc::new(AtomicBool::new(false));
+    let replacements: Arc<Mutex<Vec<(Arc<Coordinator>, ServeHandle)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let alive_dead = Arc::clone(&dead);
+    let respawn_dead = Arc::clone(&dead);
+    let respawn_repl = Arc::clone(&replacements);
+    let supervisor = supervise(
+        &proxy,
+        Duration::from_millis(20),
+        move |i| i != victim || !alive_dead.load(Ordering::Acquire),
+        move |_| {
+            let (coord, handle) = start_backend();
+            let addr = handle.addr().to_string();
+            respawn_repl.lock().unwrap().push((coord, handle));
+            respawn_dead.store(false, Ordering::Release);
+            Some(addr)
+        },
+    )
+    .unwrap();
+    assert_eq!(proxy.counters().restarts.load(Ordering::Relaxed), 0);
+
+    // kill the victim — full teardown, then raise the liveness flag the
+    // supervisor polls
+    let (coord, handle) = backends[victim].take().unwrap();
+    handle.shutdown();
+    coord.drain();
+    dead.store(true, Ordering::Release);
+
+    // the supervisor must notice, respawn, and hand the replacement back
+    // to routing; the proxy re-probes it healthy
+    let t0 = Instant::now();
+    while proxy.counters().restarts.load(Ordering::Relaxed) == 0
+        || !proxy.backend(victim).healthy
+    {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "supervisor must respawn the dead backend (restarts={}, healthy={})",
+            proxy.counters().restarts.load(Ordering::Relaxed),
+            proxy.backend(victim).healthy,
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(proxy.counters().restarts.load(Ordering::Relaxed), 1);
+
+    // the respawned slot re-serves its old keys: the probe case routes
+    // straight back to the same index, bit-identically
+    let before = proxy.backend(victim).forwarded;
+    for _ in 0..3 {
+        let r = transform_retrying(&client, &wire_request(&case));
+        assert_identical(&reference, &case, &r);
+    }
+    assert!(
+        proxy.backend(victim).forwarded > before,
+        "the respawned backend must win its rendezvous keys back"
+    );
+
+    // no flapping: a healthy fleet is left alone
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(proxy.counters().restarts.load(Ordering::Relaxed), 1);
+
+    drop(client);
+    supervisor.shutdown();
+    if let Ok(p) = Arc::try_unwrap(proxy) {
+        p.shutdown();
+    }
+    for (coord, handle) in replacements.lock().unwrap().drain(..) {
+        handle.shutdown();
+        coord.drain();
+    }
+    for (coord, handle) in backends.into_iter().flatten() {
+        handle.shutdown();
+        coord.drain();
+    }
+    reference.drain();
 }
 
 #[test]

@@ -1,0 +1,328 @@
+//! End-to-end tests of the observability layer (`obs/`) — the ISSUE 10
+//! acceptance gate.
+//!
+//! Acceptance contract:
+//!
+//! * driving loadgen through the cluster proxy with span tracing on
+//!   yields, for at least one traced request, the **full ordered span
+//!   chain** proxy-admit → decode → admitted → enqueued → batch-sealed →
+//!   exec-start/exec-end → framed → written, with non-decreasing
+//!   timestamps (the whole fleet runs in one process, so the clock is
+//!   shared and the ordering is exact);
+//! * a single traced request dumped by its own id carries the same
+//!   chain — the `TraceRequest`/`TraceDump` wire round trip through the
+//!   proxy, which merges backend rings into its own;
+//! * the `StatsText` frame exposes the unified registry through the
+//!   proxy: coordinator (`hadacore_requests_total`), engine
+//!   (`hadacore_exec_chunk_us`), and cluster
+//!   (`hadacore_cluster_*_total`) series all render in one scrape, and
+//!   the exposition parses back ([`hadacore::obs::registry`]);
+//! * the HTTP `GET /metrics` listener serves the same exposition to a
+//!   plain-sockets client.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use hadacore::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig};
+use hadacore::hadamard::KernelKind;
+use hadacore::harness::workload::traffic_mix;
+use hadacore::obs::registry::parse_exposition;
+use hadacore::obs::trace::next_trace_id;
+use hadacore::obs::{serve_metrics, SpanEvent, Stage};
+use hadacore::serve::wire::WireRequest;
+use hadacore::serve::{
+    cluster, loadgen, serve, Client, ClusterConfig, ClusterHandle, LoadgenConfig,
+    ServeConfig, ServeHandle,
+};
+use hadacore::util::f16::DType;
+use hadacore::util::rng::Rng;
+
+fn start_backend() -> (Arc<Coordinator>, ServeHandle) {
+    let coord = Arc::new(
+        Coordinator::start(
+            None,
+            CoordinatorConfig {
+                workers: 2,
+                batcher: BatcherConfig {
+                    max_delay: Duration::from_micros(200),
+                    work_conserving: true,
+                },
+                idle_timeout: Duration::from_millis(10),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let handle = serve(
+        Arc::clone(&coord),
+        ServeConfig {
+            pipeline_depth: 256,
+            max_inflight: 1024,
+            poll_interval: Duration::from_millis(10),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (coord, handle)
+}
+
+struct Fleet {
+    backends: Vec<(Arc<Coordinator>, ServeHandle)>,
+    proxy: ClusterHandle,
+}
+
+fn start_fleet(n: usize) -> Fleet {
+    let backends: Vec<_> = (0..n).map(|_| start_backend()).collect();
+    let proxy = cluster(ClusterConfig {
+        backends: backends.iter().map(|(_, h)| h.addr().to_string()).collect(),
+        health_interval: Duration::from_millis(25),
+        poll_interval: Duration::from_millis(10),
+        ..Default::default()
+    })
+    .unwrap();
+    Fleet { backends, proxy }
+}
+
+impl Fleet {
+    fn teardown(self) {
+        drop(self.proxy);
+        for (coord, handle) in self.backends {
+            handle.shutdown();
+            coord.drain();
+        }
+    }
+}
+
+/// The stages every traced request must pass through, in lifecycle
+/// order (exec-start/exec-end may repeat per chunk; the chain check uses
+/// the first start and the last end).
+const CHAIN: [Stage; 9] = [
+    Stage::ProxyAdmit,
+    Stage::Decode,
+    Stage::Admitted,
+    Stage::Enqueued,
+    Stage::BatchSealed,
+    Stage::ExecStart,
+    Stage::ExecEnd,
+    Stage::Framed,
+    Stage::Written,
+];
+
+/// True when `events` (one trace's, any order) contain the full chain.
+fn has_full_chain(events: &[SpanEvent]) -> bool {
+    CHAIN.iter().all(|&s| events.iter().any(|e| e.stage == s))
+}
+
+/// Assert the chain's timestamps are non-decreasing in lifecycle order:
+/// the first occurrence of each leading stage, the *last* exec-end (a
+/// sharded batch interleaves chunk spans), then framed and written.
+fn assert_ordered_chain(trace: u64, events: &[SpanEvent]) {
+    let first = |s: Stage| {
+        events
+            .iter()
+            .filter(|e| e.stage == s)
+            .map(|e| e.t_us)
+            .min()
+            .unwrap_or_else(|| panic!("trace {trace:#x}: stage {} missing", s.name()))
+    };
+    let last_exec_end = events
+        .iter()
+        .filter(|e| e.stage == Stage::ExecEnd)
+        .map(|e| e.t_us)
+        .max()
+        .unwrap();
+    let checkpoints = [
+        ("proxy-admit", first(Stage::ProxyAdmit)),
+        ("decode", first(Stage::Decode)),
+        ("admitted", first(Stage::Admitted)),
+        ("enqueued", first(Stage::Enqueued)),
+        ("batch-sealed", first(Stage::BatchSealed)),
+        ("exec-start", first(Stage::ExecStart)),
+        ("exec-end", last_exec_end),
+        ("framed", first(Stage::Framed)),
+        ("written", first(Stage::Written)),
+    ];
+    for pair in checkpoints.windows(2) {
+        assert!(
+            pair[0].1 <= pair[1].1,
+            "trace {trace:#x}: {} (t={}us) must not follow {} (t={}us)",
+            pair[0].0,
+            pair[0].1,
+            pair[1].0,
+            pair[1].1,
+        );
+    }
+}
+
+/// Group a merged dump by trace id.
+fn by_trace(events: &[SpanEvent]) -> Vec<(u64, Vec<SpanEvent>)> {
+    let mut out: Vec<(u64, Vec<SpanEvent>)> = Vec::new();
+    for e in events {
+        match out.iter_mut().find(|(t, _)| *t == e.trace) {
+            Some((_, v)) => v.push(*e),
+            None => out.push((e.trace, vec![*e])),
+        }
+    }
+    out
+}
+
+#[test]
+fn loadgen_through_the_proxy_yields_full_ordered_span_chains() {
+    let fleet = start_fleet(2);
+
+    // every request traced: the loadgen client stamps a fresh id, the
+    // proxy adopts it, the backend joins the chain via the wire extension
+    let mut workload = traffic_mix("interactive").unwrap();
+    workload.kernel = KernelKind::HadaCore;
+    let report = loadgen::run(&LoadgenConfig {
+        addr: fleet.proxy.addr().to_string(),
+        mix: "interactive".to_string(),
+        workload,
+        qps: 0.0,
+        requests: 60,
+        clients: 2,
+        dtype: DType::F32,
+        trace_every: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(report.ok > 0, "loadgen must complete requests: {}", report.line());
+    assert_eq!(report.errors + report.disconnects, 0, "{}", report.line());
+
+    let client = Client::connect(&fleet.proxy.addr().to_string()).unwrap();
+    let events = client.trace_dump(0).unwrap();
+    assert!(!events.is_empty(), "traced traffic must leave span events");
+
+    // every batch's first sampled member carries the exec spans, so a
+    // 60-request run must yield at least one complete chain — and every
+    // complete chain must be correctly ordered
+    let traces = by_trace(&events);
+    let complete: Vec<_> =
+        traces.iter().filter(|(_, evs)| has_full_chain(evs)).collect();
+    assert!(
+        !complete.is_empty(),
+        "no trace out of {} carried the full span chain",
+        traces.len()
+    );
+    for (trace, evs) in &complete {
+        assert_ordered_chain(*trace, evs);
+    }
+
+    drop(client);
+    fleet.teardown();
+}
+
+#[test]
+fn one_traced_request_dumped_by_id_carries_the_full_chain() {
+    let fleet = start_fleet(2);
+    let client = Client::connect(&fleet.proxy.addr().to_string()).unwrap();
+
+    let n = 1024;
+    let rows = 2;
+    let mut rng = Rng::new(0x0B5E_E2E);
+    let data = rng.normal_vec(rows * n);
+    let mut wire = WireRequest::from_f32(7, n, &data, KernelKind::HadaCore, DType::F32);
+    let trace = next_trace_id();
+    wire.trace = trace;
+    let resp = client.transform(wire).unwrap();
+    assert_eq!(resp.rows as usize, rows);
+
+    // dump exactly this trace through the proxy (which merges its own
+    // rings with the backends'); a single idle-fleet request is its
+    // batch's only member, so its chain must be complete
+    let events = client.trace_dump(trace).unwrap();
+    assert!(events.iter().all(|e| e.trace == trace));
+    assert!(
+        has_full_chain(&events),
+        "single traced request must carry the full chain, got: {:?}",
+        events.iter().map(|e| e.stage.name()).collect::<Vec<_>>()
+    );
+    assert_ordered_chain(trace, &events);
+    // arg plausibility: decode/admitted carry the row count
+    assert!(events
+        .iter()
+        .any(|e| e.stage == Stage::Decode && e.arg == rows as u32));
+
+    // an id nobody traced dumps empty
+    assert!(client.trace_dump(0xDEAD_BEEF_0000_0001).unwrap().is_empty());
+
+    drop(client);
+    fleet.teardown();
+}
+
+#[test]
+fn stats_text_through_the_proxy_unifies_all_layers() {
+    let fleet = start_fleet(2);
+    let client = Client::connect(&fleet.proxy.addr().to_string()).unwrap();
+
+    // traffic first, so the counters are non-vacuous
+    let n = 512;
+    let mut rng = Rng::new(0x57A7);
+    for i in 0..8u64 {
+        let data = rng.normal_vec(2 * n);
+        let wire = WireRequest::from_f32(i, n, &data, KernelKind::HadaCore, DType::F32);
+        client.transform(wire).unwrap();
+    }
+
+    let text = client.stats_text().unwrap();
+    let samples = parse_exposition(&text);
+    let value = |name: &str| {
+        samples
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.value)
+            .sum::<f64>()
+    };
+    // one scrape spans all layers: coordinator, engine, serve, cluster
+    assert!(value("hadacore_requests_total") >= 8.0, "coordinator series:\n{text}");
+    assert!(value("hadacore_serve_requests_total") >= 8.0, "serve series:\n{text}");
+    assert!(value("hadacore_exec_chunk_us_count") >= 1.0, "engine series:\n{text}");
+    assert!(
+        value("hadacore_cluster_forwarded_total") >= 8.0,
+        "cluster series:\n{text}"
+    );
+    // present-at-zero: eagerly registered names render before ever firing
+    assert!(
+        text.contains("hadacore_cluster_retries_total"),
+        "retries must render at 0:\n{text}"
+    );
+    // the computed series sample their pre-registry sources of truth
+    assert!(
+        samples
+            .iter()
+            .any(|s| s.name == "hadacore_simd_dispatch_total" && s.value >= 1.0),
+        "simd dispatch series:\n{text}"
+    );
+    assert!(text.contains("hadacore_tune_decisions_total"), "tuner series:\n{text}");
+    assert!(text.contains("hadacore_tracked_allocs_total"), "alloc series:\n{text}");
+
+    drop(client);
+    fleet.teardown();
+}
+
+#[test]
+fn http_metrics_listener_serves_the_exposition() {
+    // cold registry is fine: the listener renders whatever is registered
+    let handle = serve_metrics("127.0.0.1:0").unwrap();
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    assert!(head.starts_with("HTTP/1.1 200"), "got: {head}");
+    assert!(head.to_ascii_lowercase().contains("content-type: text/plain"));
+    // the alloc series registers with the registry itself, so even a
+    // scrape before any traffic carries it
+    assert!(body.contains("hadacore_tracked_allocs_total"), "got: {body}");
+
+    // anything but GET /metrics is a 404, and the listener survives it
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    s.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 404"), "got: {raw}");
+
+    handle.shutdown();
+}

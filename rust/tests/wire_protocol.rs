@@ -73,6 +73,8 @@ fn random_frame(rng: &mut Rng) -> Frame {
                     Prologue::None
                 },
                 epilogue: random_epilogue(rng),
+                // 0 = untraced (no wire field); nonzero travels flagged
+                trace: if rng.chance(0.5) { rng.next_u64() | 1 } else { 0 },
                 payload: random_bytes(rng, rows * n * dtype.size_bytes()),
             })
         }
